@@ -1,0 +1,28 @@
+"""Shared benchmark utilities."""
+
+import sys
+import time
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+EXPERIMENTS = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def timeit(fn, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"

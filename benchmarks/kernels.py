@@ -1,0 +1,96 @@
+"""Kernel benchmarks: Pallas (interpret-mode, correctness-representative)
+vs pure-jnp oracle, plus the XLA-path attention.  On this CPU container
+interpret-mode timings measure the *interpreter*, not the TPU — the CSV's
+value is the allclose check + the roofline-relevant shapes; real timing
+happens on hardware.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+
+
+def bench_flash_attention(out_dir: Path):
+    from repro.kernels.ops import flash_attention_op
+    from repro.kernels.ref import ref_attention
+    B, S, HQ, HKV, D = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, HQ, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, HKV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, HKV, D), jnp.float32)
+
+    def pallas():
+        return flash_attention_op(q, k, v, causal=True, window=64,
+                                  softcap=50.0, block_q=64, block_k=64,
+                                  interpret=True).block_until_ready()
+
+    def ref():
+        return ref_attention(q, k, v, causal=True, window=64,
+                             softcap=50.0).block_until_ready()
+
+    err = float(jnp.max(jnp.abs(pallas() - ref())))
+    return [
+        row("kernels.flash_attention.pallas_interp", timeit(pallas),
+            f"err_vs_ref={err:.1e}"),
+        row("kernels.flash_attention.jnp_ref", timeit(ref),
+            f"B{B}S{S}H{HQ}D{D}"),
+    ]
+
+
+def bench_ssd(out_dir: Path):
+    from repro.kernels.ops import ssd_op
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N, Q = 1, 256, 4, 32, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, H))
+    bm = jax.random.normal(ks[2], (B, S, N)) * 0.3
+    cm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+
+    def pallas():
+        y, h = ssd_op(x, dt, a_log, bm, cm, chunk=Q, interpret=True)
+        return y.block_until_ready()
+
+    def ref():
+        y, h = jax.jit(ssd_chunked, static_argnums=5)(
+            x, dt, a_log, bm, cm, Q)
+        return y.block_until_ready()
+
+    err = float(jnp.max(jnp.abs(pallas() - ref())))
+    return [
+        row("kernels.ssd.pallas_interp", timeit(pallas),
+            f"err_vs_ref={err:.1e}"),
+        row("kernels.ssd.jnp_ref", timeit(ref), f"B{B}S{S}H{H}N{N}"),
+    ]
+
+
+def bench_xla_attention_paths(out_dir: Path):
+    """Direct vs chunked(flash-vjp) XLA attention — the fallback the
+    dry-run prices."""
+    from repro.models.attention import attend
+    B, S, HQ, HKV, D = 2, 512, 8, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, HQ, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, HKV, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, HKV, D), jnp.bfloat16)
+    pos = jnp.arange(S)
+
+    direct = jax.jit(lambda q, k, v: attend(q, k, v, pos, pos,
+                                            causal=True, chunk=0))
+    chunked = jax.jit(lambda q, k, v: attend(q, k, v, pos, pos,
+                                             causal=True, chunk=128))
+    d_us = timeit(lambda: direct(q, k, v).block_until_ready())
+    c_us = timeit(lambda: chunked(q, k, v).block_until_ready())
+    err = float(jnp.max(jnp.abs(direct(q, k, v).astype(jnp.float32)
+                                - chunked(q, k, v).astype(jnp.float32))))
+    return [
+        row("attention.direct_xla", d_us, f"S{S}"),
+        row("attention.chunked_flashvjp_xla", c_us, f"err={err:.1e}"),
+    ]

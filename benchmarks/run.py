@@ -1,0 +1,58 @@
+"""Benchmark driver — one benchmark per paper table/figure/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes rendered
+dashboards under experiments/dashboards/.
+
+  data_volume   — paper §5 log-volume table
+  overhead      — paper §4 negligible-overhead claim
+  roofline_view — paper Fig. 2
+  job_view      — paper Fig. 3
+  detectors     — paper §4.4 specialized views / §5 case studies
+  splunklite    — analysis-layer query latency
+  transport     — rsyslog-analog throughput
+  kernels.*     — Pallas kernels vs jnp oracles (interpret mode)
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import EXPERIMENTS  # noqa: E402
+
+
+def main() -> None:
+    from benchmarks import kernels as kbench
+    from benchmarks import monitoring as mbench
+    out = EXPERIMENTS
+    out.mkdir(parents=True, exist_ok=True)
+    benches = [
+        mbench.bench_data_volume,
+        mbench.bench_overhead,
+        mbench.bench_roofline_view,
+        mbench.bench_job_view,
+        mbench.bench_detectors,
+        mbench.bench_anomaly,
+        mbench.bench_splunklite,
+        mbench.bench_transport,
+        kbench.bench_flash_attention,
+        kbench.bench_ssd,
+        kbench.bench_xla_attention_paths,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        try:
+            for line in bench(out):
+                print(line, flush=True)
+        except Exception as exc:  # noqa: BLE001
+            failures += 1
+            print(f"{bench.__name__},ERROR,{type(exc).__name__}: {exc}",
+                  flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

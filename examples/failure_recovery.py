@@ -1,0 +1,35 @@
+"""Fault tolerance demo: the elastic supervisor restarts a crashed
+training job from its last committed checkpoint.
+
+A deliberate failure is injected at step 6; the supervisor restarts the
+child with --resume, which restores step 4's checkpoint and completes.
+
+    PYTHONPATH=src python examples/failure_recovery.py
+"""
+
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def main() -> None:
+    workdir = tempfile.mkdtemp(prefix="repro-elastic-")
+    cmd = [sys.executable, "-m", "repro.launch.elastic",
+           "--workdir", workdir, "--max-restarts", "2", "--",
+           "--arch", "qwen3-8b", "--reduced",
+           "--steps", "12", "--seq-len", "32", "--batch", "4",
+           "--checkpoint-every", "4", "--fail-at-step", "6",
+           "--monitor-interval", "0.5", "--job-id", "demo.recovery"]
+    env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin",
+           "HOME": str(Path.home())}
+    print("launching supervisor (failure injected at step 6)...")
+    out = subprocess.run(cmd, text=True, env=env, timeout=600)
+    print(f"supervisor exit code: {out.returncode} "
+          f"(0 = recovered and completed)")
+
+
+if __name__ == "__main__":
+    main()

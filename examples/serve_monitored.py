@@ -1,0 +1,56 @@
+"""Monitored serving: batched greedy decoding with hpcmd metrics.
+
+    PYTHONPATH=src python examples/serve_monitored.py
+"""
+
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core import Aggregator, JobManifest, TrainMonitor, query
+from repro.core.transport import Shipper, StreamFileSink
+from repro.models import Model, ModelOptions
+from repro.train.serve import ServeEngine, ServeRequest
+
+
+def main() -> None:
+    workdir = Path(tempfile.mkdtemp(prefix="repro-serve-"))
+    cfg = reduced(get_arch("gemma3-4b"))
+    model = Model(cfg, options=ModelOptions(attn_chunk=32))
+    params = model.init(jax.random.PRNGKey(0))
+
+    manifest = JobManifest(job_id="serve.1", app=cfg.name, num_hosts=1,
+                           num_chips=1, shape="decode")
+    monitor = TrainMonitor(workdir, manifest, interval_s=0.25,
+                           align_to_clock=False)
+    engine = ServeEngine(model, params, batch_size=4, max_len=96,
+                         monitor=monitor)
+
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        engine.submit(ServeRequest(
+            prompt=rng.integers(0, cfg.vocab_size, 8 + i,
+                                dtype=np.int64).astype(np.int32),
+            max_new_tokens=16))
+    done = engine.run()
+    monitor.stop()
+    for i, r in enumerate(done):
+        print(f"request {i}: prompt[{len(r.prompt)}] -> {r.out.tolist()}")
+
+    agg = Aggregator(workdir / "inbox")
+    Shipper(monitor.daemon.spool.root,
+            StreamFileSink(workdir / "inbox" / "host0.log")).ship_once()
+    agg.pump()
+    rows = query(agg.store, "search kind=perf "
+                            "| stats max(steps_per_s) max(tokens_per_s)")
+    print("decode throughput (monitor):", rows[0])
+
+
+if __name__ == "__main__":
+    main()

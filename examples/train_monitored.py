@@ -1,0 +1,43 @@
+"""End-to-end training driver: ~100M-parameter model, monitored, with
+checkpointing — the deliverable-(b) driver.  Thin wrapper over the
+production launcher (repro.launch.train).
+
+Demo size (CPU-friendly, ~2 min):
+    PYTHONPATH=src python examples/train_monitored.py
+
+Full 100M x 200 steps (same code, bigger knobs):
+    PYTHONPATH=src python examples/train_monitored.py --full
+"""
+
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.train import main as train_main
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    workdir = tempfile.mkdtemp(prefix="repro-train100m-")
+    args = [
+        "--arch", "qwen3-8b",
+        "--preset-100m",
+        "--steps", "200" if full else "20",
+        "--seq-len", "256" if full else "64",
+        "--batch", "8" if full else "4",
+        "--workdir", workdir,
+        "--checkpoint-every", "50" if full else "10",
+        "--monitor-interval", "2.0",
+        "--microbatches", "2",
+        "--remat", "full",
+        "--report",
+        "--job-id", "train100m.demo",
+    ]
+    print(f"workdir: {workdir}")
+    raise SystemExit(train_main(args))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Fault-tolerant checkpointing."""
+from repro.checkpoint.checkpoint import CheckpointManager

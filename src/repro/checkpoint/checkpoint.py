@@ -1,0 +1,167 @@
+"""Fault-tolerant checkpointing: sharded .npz + manifest, atomic commit,
+retention, auto-resume.
+
+Layout::
+
+    <root>/step_000000400/
+        manifest.json            # tree structure, shapes, dtypes, step
+        shard_00000.npz          # flat {leaf_path: array} for this host
+        COMMITTED                # atomic completion marker (written last)
+
+Writes go to ``.tmp-step_*`` and are renamed into place only after the
+marker file is in the directory, so a crash mid-save can never produce a
+checkpoint that restore() would accept.  ``restore_latest`` walks
+checkpoints newest-first and skips uncommitted/corrupt ones — the
+restart path after a node failure (launch/elastic.py) leans on this.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MARKER = "COMMITTED"
+
+
+def _flatten_with_paths(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten_with_paths(
+                tree[k], f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (tuple, list)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten_with_paths(v, f"{prefix}/{i}"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for name in tree._fields:
+            out.update(_flatten_with_paths(
+                getattr(tree, name), f"{prefix}/{name}"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _tree_structure(tree):
+    if isinstance(tree, dict):
+        return {k: _tree_structure(v) for k, v in sorted(tree.items())}
+    if hasattr(tree, "_fields"):
+        return {"__namedtuple__": type(tree).__name__,
+                "fields": {n: _tree_structure(getattr(tree, n))
+                           for n in tree._fields}}
+    if isinstance(tree, (tuple, list)):
+        return [_tree_structure(v) for v in tree]
+    return None  # leaf
+
+
+def _rebuild(structure, flat: Dict[str, np.ndarray], prefix="",
+             namedtuple_types: Optional[Dict[str, Any]] = None):
+    if isinstance(structure, dict):
+        if "__namedtuple__" in structure:
+            fields = structure["fields"]
+            vals = {n: _rebuild(fields[n], flat,
+                                f"{prefix}/{n}" if prefix else n,
+                                namedtuple_types)
+                    for n in fields}
+            tname = structure["__namedtuple__"]
+            if namedtuple_types and tname in namedtuple_types:
+                return namedtuple_types[tname](**vals)
+            import collections
+            nt = collections.namedtuple(tname, list(vals))
+            return nt(**vals)
+        return {k: _rebuild(v, flat, f"{prefix}/{k}" if prefix else k,
+                            namedtuple_types)
+                for k, v in structure.items()}
+    if isinstance(structure, list):
+        return tuple(_rebuild(v, flat, f"{prefix}/{i}", namedtuple_types)
+                     for i, v in enumerate(structure))
+    return flat[prefix]
+
+
+class CheckpointManager:
+    def __init__(self, root: os.PathLike, keep: int = 3,
+                 host_id: int = 0) -> None:
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.host_id = host_id
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any,
+             extra_meta: Optional[Dict] = None) -> Path:
+        name = f"step_{step:09d}"
+        tmp = self.root / f".tmp-{name}-{self.host_id}"
+        final = self.root / name
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten_with_paths(tree)
+        arrays = {k: np.asarray(v) for k, v in flat.items()}
+        np.savez(tmp / f"shard_{self.host_id:05d}.npz", **arrays)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "structure": _tree_structure(tree),
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in arrays.items()},
+            "meta": extra_meta or {},
+        }
+        with open(tmp / "manifest.json", "w", encoding="utf-8") as f:
+            json.dump(manifest, f)
+        (tmp / MARKER).write_text(str(step))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        ckpts = self.list_steps()
+        for step in ckpts[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.root / f"step_{step:09d}",
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def list_steps(self) -> List[int]:
+        steps = []
+        for p in self.root.glob("step_*"):
+            if (p / MARKER).exists():
+                try:
+                    steps.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(steps)
+
+    def restore(self, step: int,
+                namedtuple_types: Optional[Dict[str, Any]] = None
+                ) -> Tuple[int, Any, Dict]:
+        path = self.root / f"step_{step:09d}"
+        if not (path / MARKER).exists():
+            raise FileNotFoundError(f"checkpoint {path} not committed")
+        with open(path / "manifest.json", encoding="utf-8") as f:
+            manifest = json.load(f)
+        flat: Dict[str, np.ndarray] = {}
+        for shard in sorted(path.glob("shard_*.npz")):
+            with np.load(shard) as z:
+                for k in z.files:
+                    flat[k] = z[k]
+        tree = _rebuild(manifest["structure"], flat,
+                        namedtuple_types=namedtuple_types)
+        return manifest["step"], tree, manifest.get("meta", {})
+
+    def restore_latest(self,
+                       namedtuple_types: Optional[Dict[str, Any]] = None
+                       ) -> Optional[Tuple[int, Any, Dict]]:
+        for step in reversed(self.list_steps()):
+            try:
+                return self.restore(step, namedtuple_types)
+            except (OSError, KeyError, ValueError):
+                continue  # corrupt — fall back to the previous one
+        return None

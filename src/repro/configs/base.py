@@ -1,0 +1,236 @@
+"""Architecture configuration schema and registry.
+
+Every assigned architecture lives in its own module (``configs/<id>.py``)
+holding the exact published configuration, registered under its public id
+(e.g. ``gemma2-27b``).  ``reduced()`` derives a family-preserving small
+variant used by the per-arch CPU smoke tests; the full configs are only
+ever lowered abstractly via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """A complete, family-generic model description.
+
+    The ``family`` tag selects the block structure in
+    ``repro.models.transformer``; unused fields are zero/None for
+    families that do not need them.
+    """
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int  # 0 for attention-free (SSM) architectures
+    num_kv_heads: int
+    d_ff: int  # per-expert FFN dim for MoE archs
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- attention features -------------------------------------------------
+    # layer pattern: "global" | "local_global_1_1" | "local_global_5_1"
+    #              | "swa_mostly" (hybrid: global only at a few anchor layers)
+    attn_pattern: str = "global"
+    window_size: int = 4096
+    attn_logit_softcap: float = 0.0  # 0 -> disabled
+    final_logit_softcap: float = 0.0
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_global: float = 0.0  # 0 -> same as rope_theta
+
+    # --- MoE -----------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    shared_expert: bool = False  # Llama-4 style always-on shared expert
+
+    # --- SSM (Mamba-2 SSD) ---------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+
+    # --- hybrid (Hymba) ------------------------------------------------------
+    parallel_ssm: bool = False  # attention + SSM heads fused in one block
+    num_meta_tokens: int = 0
+
+    # --- modality frontends (stubs per task spec) ----------------------------
+    frontend: str = "tokens"  # tokens | audio_frames | image_patches
+    cross_attn_every: int = 0  # vlm: every k-th layer is a cross-attn layer
+    num_image_tokens: int = 0
+
+    # --- misc ----------------------------------------------------------------
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    scale_embed: bool = False     # gemma-style sqrt(d_model) embedding scale
+    query_scale: float = 0.0      # 0 -> head_dim**-0.5
+    post_norms: bool = False      # gemma-2/3 sandwich (post-block) norms
+    source: str = ""  # provenance note from the assignment table
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_state else 0
+
+    @property
+    def has_attention(self) -> bool:
+        return self.num_heads > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when long_500k is runnable: SSM/hybrid or sliding-window
+        local layers dominate (gemma-style local:global alternation)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.attn_pattern.startswith("local_global")
+
+    def layer_kinds(self) -> List[str]:
+        """Per-layer attention kind: 'global' | 'local' | 'ssm' | 'hybrid'."""
+        n = self.num_layers
+        if self.family == "ssm":
+            return ["ssm"] * n
+        if self.family == "hybrid":
+            return ["hybrid"] * n
+        if self.attn_pattern == "global":
+            return ["global"] * n
+        if self.attn_pattern == "local_global_1_1":
+            # gemma-2: alternate local, global, local, global, ...
+            return ["local" if i % 2 == 0 else "global" for i in range(n)]
+        if self.attn_pattern == "local_global_5_1":
+            # gemma-3: every 6th layer is global
+            return ["global" if (i + 1) % 6 == 0 else "local" for i in range(n)]
+        if self.attn_pattern == "swa_mostly":
+            anchors = {0, n // 2, n - 1}
+            return ["global" if i in anchors else "local" for i in range(n)]
+        raise ValueError(f"unknown attn_pattern {self.attn_pattern!r}")
+
+    def cross_attn_layers(self) -> List[int]:
+        if not self.cross_attn_every:
+            return []
+        return [i for i in range(self.num_layers)
+                if (i + 1) % self.cross_attn_every == 0]
+
+    def param_count(self) -> int:
+        """Exact parameter count of the model as built by models/transformer.py."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = self.vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            total += self.vocab_size * d  # lm head
+        total += d  # final norm
+        per_layer = 0
+        if self.has_attention:
+            attn = d * n_q * hd + 2 * d * n_kv * hd + n_q * hd * d
+            if self.qk_norm:
+                attn += 2 * hd
+            per_layer += attn + d  # + input norm
+        if self.family in ("ssm", "hybrid"):
+            di, st, nh = self.d_inner, self.ssm_state, self.ssm_heads
+            # in_proj -> (z, x, B, C, dt) ; conv on (x,B,C); out_proj
+            ssm = d * (2 * di + 2 * st + nh)
+            ssm += self.conv_width * (di + 2 * st)
+            ssm += nh * 2  # A_log, D
+            ssm += di * d  # out_proj
+            ssm += d  # norm
+            per_layer += ssm
+        if self.is_moe:
+            per_layer += d * self.num_experts  # router
+            per_layer += self.num_experts * 3 * d * self.d_ff
+            if self.shared_expert:
+                per_layer += 3 * d * self.d_ff
+            per_layer += d  # pre-FFN norm
+        elif self.d_ff:
+            per_layer += 3 * d * self.d_ff + d  # gated MLP + norm
+        total += per_layer * self.num_layers
+        if self.cross_attn_every:
+            xattn = d * n_q * hd + 2 * d * n_kv * hd + n_q * hd * d + d
+            total += xattn * len(self.cross_attn_layers())
+        if self.num_meta_tokens:
+            total += self.num_meta_tokens * d
+        return total
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed experts count)."""
+        if not self.is_moe:
+            return self.param_count()
+        dense_like = self.param_count()
+        skipped = (self.num_experts - self.experts_per_token)
+        per_layer_expert = 3 * self.d_model * self.d_ff
+        return dense_like - skipped * per_layer_expert * self.num_layers
+
+
+# --------------------------------------------------------------------------
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    if cfg.name in _REGISTRY:
+        raise ValueError(f"duplicate arch {cfg.name}")
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    from repro import configs  # noqa: F401  (triggers per-arch module imports)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> List[str]:
+    from repro import configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """Family-preserving tiny variant for CPU smoke tests."""
+    n_q = min(cfg.num_heads, 4) if cfg.num_heads else 0
+    n_kv = 0
+    if n_q:
+        n_kv = max(1, min(cfg.num_kv_heads, 2))
+        while n_q % n_kv:
+            n_kv -= 1
+    updates = dict(
+        name=cfg.name + "-smoke",
+        num_layers=min(cfg.num_layers, 4),
+        d_model=128,
+        num_heads=n_q,
+        num_kv_heads=n_kv,
+        head_dim=32 if n_q else 0,
+        d_ff=(64 if cfg.is_moe else 256) if cfg.d_ff else 0,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 4),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        ssm_state=min(cfg.ssm_state, 16),
+        ssm_headdim=32 if cfg.ssm_state else 64,
+        ssm_chunk=32,
+        num_meta_tokens=min(cfg.num_meta_tokens, 8),
+        cross_attn_every=2 if cfg.cross_attn_every else 0,
+        num_image_tokens=min(cfg.num_image_tokens, 16) if cfg.num_image_tokens else 0,
+        window_size=min(cfg.window_size, 16),
+        dtype="float32",
+    )
+    return dataclasses.replace(cfg, **updates)

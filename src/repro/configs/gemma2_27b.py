@@ -1,0 +1,28 @@
+"""Gemma-2 27B: dense, alternating local(SWA)/global attention, logit softcaps.
+
+[arXiv:2408.00118; hf]  46L d_model=4608 32H (GQA kv=16) d_ff=36864
+vocab=256000.  head_dim=128 (decoupled from d_model/num_heads).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma2-27b",
+    family="dense",
+    num_layers=46,
+    d_model=4608,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256000,
+    attn_pattern="local_global_1_1",
+    window_size=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    tie_embeddings=True,
+    scale_embed=True,
+    query_scale=0.08838834764831845,  # (d_model/num_heads)**-0.5 = 144**-0.5
+    post_norms=True,
+    source="arXiv:2408.00118; hf",
+))

@@ -1,0 +1,27 @@
+"""Gemma-2 9B: dense, alternating local(SWA)/global attention, logit softcaps.
+
+[arXiv:2408.00118; hf]  42L d_model=3584 16H (GQA kv=8) d_ff=14336
+vocab=256000.  head_dim=256.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma2-9b",
+    family="dense",
+    num_layers=42,
+    d_model=3584,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=14336,
+    vocab_size=256000,
+    attn_pattern="local_global_1_1",
+    window_size=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    tie_embeddings=True,
+    scale_embed=True,
+    post_norms=True,
+    source="arXiv:2408.00118; hf",
+))

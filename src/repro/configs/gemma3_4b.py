@@ -1,0 +1,28 @@
+"""Gemma-3 4B: dense, 5:1 local:global attention, qk-norm, 128k context.
+
+[hf:google/gemma-3-1b-pt; unverified]  34L d_model=2560 8H (GQA kv=4)
+d_ff=10240 vocab=262144.  head_dim=256; global layers use rope theta 1M.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma3-4b",
+    family="dense",
+    num_layers=34,
+    d_model=2560,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    attn_pattern="local_global_5_1",
+    window_size=1024,
+    qk_norm=True,
+    rope_theta=10_000.0,
+    rope_theta_global=1_000_000.0,
+    tie_embeddings=True,
+    scale_embed=True,
+    post_norms=True,
+    source="hf:google/gemma-3-1b-pt; unverified",
+))

@@ -1,0 +1,22 @@
+"""IBM Granite MoE 3b-a800m: fine-grained MoE, 40 experts, top-8 routing.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]  32L d_model=1536 24H
+(GQA kv=8) d_ff=512 (per expert) vocab=49155, MoE 40e top-8.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    num_experts=40,
+    experts_per_token=8,
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base; hf",
+))

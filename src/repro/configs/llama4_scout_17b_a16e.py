@@ -1,0 +1,24 @@
+"""Llama-4 Scout 17B-active / 16 experts: MoE with top-1 routing and an
+always-on shared expert (early fusion backbone; text path only here).
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]  48L d_model=5120 40H
+(GQA kv=8) d_ff=8192 (per expert) vocab=202048, MoE 16e top-1.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    num_experts=16,
+    experts_per_token=1,
+    shared_expert=True,
+    rope_theta=500_000.0,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+))

@@ -1,0 +1,28 @@
+"""Llama-3.2 Vision 11B: dense text backbone with cross-attention image
+layers every 5th layer.  The vision tower is a stub per the task spec:
+``input_specs()`` provides precomputed patch embeddings already projected
+to d_model.
+
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]  40L d_model=4096 32H
+(GQA kv=8) d_ff=14336 vocab=128256.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    attn_pattern="global",
+    rope_theta=500_000.0,
+    frontend="image_patches",
+    cross_attn_every=5,
+    num_image_tokens=1600,
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+))

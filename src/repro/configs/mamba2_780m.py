@@ -1,0 +1,25 @@
+"""Mamba-2 780m: attention-free SSM with state-space duality (SSD).
+
+[arXiv:2405.21060; unverified]  48L d_model=1536 (attn-free) vocab=50280,
+ssm_state=128.  expand=2 -> d_inner=3072, headdim=64 -> 48 SSD heads.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_chunk=256,
+    conv_width=4,
+    tie_embeddings=True,
+    source="arXiv:2405.21060; unverified",
+))

@@ -1,0 +1,22 @@
+"""MusicGen-medium: decoder-only transformer over EnCodec audio tokens.
+
+[arXiv:2306.05284; hf]  48L d_model=1536 24H (GQA kv=24 == MHA) d_ff=6144
+vocab=2048.  The EnCodec frontend is a stub per the task spec:
+``input_specs()`` provides precomputed frame embeddings.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    attn_pattern="global",
+    frontend="audio_frames",
+    source="arXiv:2306.05284; hf",
+))

@@ -1,0 +1,60 @@
+"""Assigned input-shape set for the LM-family architectures.
+
+``train_*`` lowers ``train_step``; ``prefill_*`` lowers the serving prefill
+pass; ``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against
+a KV/SSM state of length ``seq_len``).  ``long_500k`` requires sub-quadratic
+attention and is skipped (per task spec, documented in DESIGN.md §4) for
+pure full-attention architectures.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def applicable(arch: ArchConfig, shape: ShapeConfig) -> bool:
+    """Shape applicability per DESIGN.md §4."""
+    if shape.name == "long_500k":
+        return arch.sub_quadratic
+    return True
+
+
+def skip_reason(arch: ArchConfig, shape: ShapeConfig) -> str:
+    if applicable(arch, shape):
+        return ""
+    return (f"{arch.name} is pure full-attention; long_500k needs "
+            "sub-quadratic attention (DESIGN.md §4)")
+
+
+def cells(archs: List[ArchConfig]) -> List[tuple]:
+    """All (arch, shape) cells, including inapplicable ones (with reason)."""
+    out = []
+    for a in archs:
+        for s in SHAPES.values():
+            out.append((a, s, skip_reason(a, s)))
+    return out

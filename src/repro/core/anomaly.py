@@ -1,0 +1,143 @@
+"""Streaming statistical anomaly detection — the paper's §4.6 outlook
+("automatic analysis using machine learning techniques is under
+development", citing Borghesi et al. online anomaly detection), built out.
+
+Two O(1)-memory detectors per (job, host, metric) stream:
+
+* :class:`EwmaDetector` — exponentially-weighted mean/variance; flags
+  samples with |z| above a threshold after a warmup period.  Catches
+  sudden regressions (a node whose GFLOP/s halves after a failover).
+* :class:`CusumDetector` — two-sided CUSUM changepoint statistic on the
+  EWMA-normalized residuals; catches slow drifts that never produce a
+  single outlier sample (e.g. creeping input-pipeline stalls).
+
+:class:`AnomalyBank` attaches to the aggregator like the rule-based
+:class:`~repro.core.detectors.DetectorBank` and emits the same
+:class:`DetectorEvent` records, so the elastic supervisor and the reports
+consume both uniformly.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.detectors import DetectorEvent
+from repro.core.schema import MetricRecord
+
+
+class EwmaDetector:
+    """Per-stream EWMA mean/var with z-score alarms."""
+
+    __slots__ = ("alpha", "z_thresh", "warmup", "n", "mean", "var")
+
+    def __init__(self, alpha: float = 0.15, z_thresh: float = 4.0,
+                 warmup: int = 8) -> None:
+        self.alpha = alpha
+        self.z_thresh = z_thresh
+        self.warmup = warmup
+        self.n = 0
+        self.mean = 0.0
+        self.var = 0.0
+
+    def update(self, x: float) -> Optional[float]:
+        """Feed one sample; returns the z-score if anomalous else None."""
+        self.n += 1
+        if self.n == 1:
+            self.mean = x
+            return None
+        resid = x - self.mean
+        std = math.sqrt(self.var) if self.var > 0 else 0.0
+        z = resid / std if std > 1e-12 else 0.0
+        # update AFTER scoring so the anomaly does not mask itself
+        self.mean += self.alpha * resid
+        self.var = (1 - self.alpha) * (self.var + self.alpha * resid ** 2)
+        if self.n > self.warmup and abs(z) >= self.z_thresh:
+            return z
+        return None
+
+
+class CusumDetector:
+    """Two-sided CUSUM on standardized residuals (drift detection)."""
+
+    __slots__ = ("k", "h", "pos", "neg", "ewma")
+
+    def __init__(self, k: float = 0.5, h: float = 8.0,
+                 alpha: float = 0.1) -> None:
+        self.k = k          # slack (in std units)
+        self.h = h          # alarm threshold (in std units)
+        self.pos = 0.0
+        self.neg = 0.0
+        self.ewma = EwmaDetector(alpha=alpha, z_thresh=float("inf"))
+
+    def update(self, x: float) -> Optional[str]:
+        e = self.ewma
+        e.n += 1
+        if e.n == 1:
+            e.mean = x
+            return None
+        std = math.sqrt(e.var) if e.var > 0 else 0.0
+        z = (x - e.mean) / std if std > 1e-12 else 0.0
+        resid = x - e.mean
+        e.mean += e.alpha * resid
+        e.var = (1 - e.alpha) * (e.var + e.alpha * resid ** 2)
+        if e.n <= 8:
+            return None
+        self.pos = max(0.0, self.pos + z - self.k)
+        self.neg = max(0.0, self.neg - z - self.k)
+        if self.pos > self.h:
+            self.pos = 0.0
+            return "upward-drift"
+        if self.neg > self.h:
+            self.neg = 0.0
+            return "downward-drift"
+        return None
+
+
+DEFAULT_METRICS = ("gflops", "step_time_s", "hbm_gbs", "input_stall_frac")
+
+
+@dataclass
+class AnomalyBank:
+    """Streaming per-(job, host, metric) anomaly detection."""
+
+    metrics: Tuple[str, ...] = DEFAULT_METRICS
+    z_thresh: float = 4.0
+    events: List[DetectorEvent] = field(default_factory=list)
+    _ewma: Dict[Tuple[str, str, str], EwmaDetector] = field(
+        default_factory=dict)
+    _cusum: Dict[Tuple[str, str, str], CusumDetector] = field(
+        default_factory=dict)
+
+    def feed(self, rec: MetricRecord) -> List[DetectorEvent]:
+        out: List[DetectorEvent] = []
+        for metric in self.metrics:
+            v = rec.get(metric)
+            if not isinstance(v, (int, float)):
+                continue
+            key = (rec.job, rec.host, metric)
+            ew = self._ewma.setdefault(
+                key, EwmaDetector(z_thresh=self.z_thresh))
+            z = ew.update(float(v))
+            if z is not None:
+                out.append(DetectorEvent(
+                    ts=rec.ts, job=rec.job, detector="ewma_anomaly",
+                    severity="warning",
+                    message=(f"{metric} on {rec.host} deviates "
+                             f"{z:+.1f} sigma from its EWMA baseline "
+                             f"(value {v:.4g}, mean {ew.mean:.4g})"),
+                    fields={"host": rec.host, "metric": metric,
+                            "z": round(z, 2), "value": float(v)}))
+            cs = self._cusum.setdefault(key, CusumDetector())
+            drift = cs.update(float(v))
+            if drift is not None:
+                out.append(DetectorEvent(
+                    ts=rec.ts, job=rec.job, detector="cusum_drift",
+                    severity="info",
+                    message=(f"{metric} on {rec.host} shows sustained "
+                             f"{drift} vs its baseline"),
+                    fields={"host": rec.host, "metric": metric,
+                            "direction": drift}))
+        self.events.extend(out)
+        return out

@@ -1,0 +1,352 @@
+"""Dashboards — the Splunk-dashboard analog (paper §4.4), rendered to SVG.
+
+Three views, exactly as in the paper:
+
+* **Roofline view** (Fig. 2): every finished job in a time window as a
+  circle on log-log (arithmetic intensity, GFLOP/s-per-chip) axes, sized
+  by device-hours, under the machine roofline.
+* **Detailed job view** (Fig. 3): temporal plots per metric per host,
+  plus a min/median/max statistical aggregation for large jobs.
+* **Specialized views**: top apps by device-hours; accelerators reserved
+  but idle; large-memory underuse; low host participation — implemented
+  as splunklite queries (staff "custom queries" in the paper).
+
+Rendering is dependency-free SVG string building.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.aggregator import MetricStore
+from repro.core.daemon import JobManifest
+from repro.core.derived import HardwareSpec, TPU_V5E
+from repro.core.sketches import QuantileSet
+from repro.core.splunklite import query
+
+# ------------------------------------------------------------ svg helpers ---
+
+_SVG_HEADER = ('<svg xmlns="http://www.w3.org/2000/svg" width="{w}" '
+               'height="{h}" viewBox="0 0 {w} {h}" '
+               'font-family="Helvetica,Arial,sans-serif">')
+
+
+def _esc(s: str) -> str:
+    return (str(s).replace("&", "&amp;").replace("<", "&lt;")
+            .replace(">", "&gt;").replace('"', "&quot;"))
+
+
+class SvgCanvas:
+    def __init__(self, w: int, h: int) -> None:
+        self.w, self.h = w, h
+        self.parts: List[str] = [_SVG_HEADER.format(w=w, h=h),
+                                 f'<rect width="{w}" height="{h}" fill="white"/>']
+
+    def line(self, x1, y1, x2, y2, stroke="#444", width=1.0, dash=""):
+        d = f' stroke-dasharray="{dash}"' if dash else ""
+        self.parts.append(
+            f'<line x1="{x1:.1f}" y1="{y1:.1f}" x2="{x2:.1f}" y2="{y2:.1f}" '
+            f'stroke="{stroke}" stroke-width="{width}"{d}/>')
+
+    def circle(self, cx, cy, r, fill="#1f77b4", opacity=0.6, title=""):
+        t = f"<title>{_esc(title)}</title>" if title else ""
+        self.parts.append(
+            f'<circle cx="{cx:.1f}" cy="{cy:.1f}" r="{r:.1f}" fill="{fill}" '
+            f'fill-opacity="{opacity}" stroke="#333" stroke-width="0.5">{t}'
+            '</circle>')
+
+    def text(self, x, y, s, size=11, anchor="start", fill="#222", rotate=None):
+        rot = (f' transform="rotate({rotate} {x:.1f} {y:.1f})"'
+               if rotate is not None else "")
+        self.parts.append(
+            f'<text x="{x:.1f}" y="{y:.1f}" font-size="{size}" fill="{fill}" '
+            f'text-anchor="{anchor}"{rot}>{_esc(s)}</text>')
+
+    def polyline(self, pts: Sequence[Tuple[float, float]], stroke="#1f77b4",
+                 width=1.5):
+        if len(pts) < 2:
+            return
+        path = " ".join(f"{x:.1f},{y:.1f}" for x, y in pts)
+        self.parts.append(
+            f'<polyline points="{path}" fill="none" stroke="{stroke}" '
+            f'stroke-width="{width}"/>')
+
+    def render(self) -> str:
+        return "\n".join(self.parts + ["</svg>"])
+
+
+_PALETTE = ["#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd",
+            "#8c564b", "#e377c2", "#7f7f7f", "#bcbd22", "#17becf"]
+
+
+# ------------------------------------------------------------ roofline ------
+
+@dataclass
+class JobPoint:
+    job: str
+    app: str
+    ai: float                 # FLOP/byte
+    gflops_per_chip: float
+    device_hours: float
+    mfu: float = 0.0
+
+
+def roofline_points(store: MetricStore,
+                    manifests: Optional[Dict[str, JobManifest]] = None
+                    ) -> List[JobPoint]:
+    """Condense each job into (AI, GFLOP/s-per-chip, device-hours)."""
+    manifests = manifests or {}
+    rows = query(store, "search kind=perf gflops>0 "
+                        "| stats avg(ai) avg(gflops_per_chip) avg(mfu) "
+                        "min(ts) max(ts) by job")
+    app_by_job = {r["job"]: str(r.get("app", "?")) for r in query(
+        store, "search kind=meta | dedup job | fields job app")}
+    points = []
+    for r in rows:
+        job = r["job"]
+        man = manifests.get(job)
+        chips = man.num_chips if man else 1
+        dur_h = max(float(r["max_ts"]) - float(r["min_ts"]), 0.0) / 3600.0
+        points.append(JobPoint(
+            job=job,
+            app=(man.app if man else app_by_job.get(job, "?")),
+            ai=float(r["avg_ai"]),
+            gflops_per_chip=float(r["avg_gflops_per_chip"]),
+            device_hours=max(dur_h * chips, 1e-6),
+            mfu=float(r.get("avg_mfu") or 0.0)))
+    return points
+
+
+def render_roofline_svg(points: Sequence[JobPoint],
+                        hw: HardwareSpec = TPU_V5E,
+                        width: int = 860, height: int = 560,
+                        title: str = "Job roofline overview") -> str:
+    """Fig. 2 analog: log-log roofline with one circle per job."""
+    c = SvgCanvas(width, height)
+    ml, mr, mt, mb = 70, 30, 46, 56
+    pw, ph = width - ml - mr, height - mt - mb
+    # axis ranges (log10)
+    ai_lo, ai_hi = -2.0, 4.0
+    peak_g = hw.peak_flops / 1e9
+    pf_lo, pf_hi = math.log10(peak_g) - 5.0, math.log10(peak_g) + 0.4
+
+    def X(ai: float) -> float:
+        ai = min(max(ai, 10 ** ai_lo), 10 ** ai_hi)
+        return ml + (math.log10(ai) - ai_lo) / (ai_hi - ai_lo) * pw
+
+    def Y(gf: float) -> float:
+        gf = min(max(gf, 10 ** pf_lo), 10 ** pf_hi)
+        return mt + ph - (math.log10(gf) - pf_lo) / (pf_hi - pf_lo) * ph
+
+    c.text(width / 2, 22, title, size=15, anchor="middle")
+    # gridlines + ticks
+    for e in range(int(ai_lo), int(ai_hi) + 1):
+        x = X(10 ** e)
+        c.line(x, mt, x, mt + ph, stroke="#eee")
+        c.text(x, mt + ph + 16, f"1e{e}", size=10, anchor="middle")
+    for e in range(math.ceil(pf_lo), math.floor(pf_hi) + 1):
+        y = Y(10 ** e)
+        c.line(ml, y, ml + pw, y, stroke="#eee")
+        c.text(ml - 6, y + 3, f"1e{e}", size=10, anchor="end")
+    c.line(ml, mt + ph, ml + pw, mt + ph)
+    c.line(ml, mt, ml, mt + ph)
+    c.text(width / 2, height - 14,
+           "arithmetic intensity [FLOP/byte]", size=12, anchor="middle")
+    c.text(16, mt + ph / 2, "GFLOP/s per chip", size=12, anchor="middle",
+           rotate=-90)
+    # roofline: bandwidth slope then flat compute roof
+    ridge = hw.ridge_ai
+    bw_g = hw.hbm_bw / 1e9
+    pts = [(X(10 ** ai_lo), Y(bw_g * 10 ** ai_lo)),
+           (X(ridge), Y(peak_g)), (X(10 ** ai_hi), Y(peak_g))]
+    c.polyline(pts, stroke="#d62728", width=2.0)
+    c.text(X(ridge), Y(peak_g) - 8,
+           f"{hw.name}: {peak_g / 1e3:.0f} TFLOP/s, "
+           f"{bw_g:.0f} GB/s, ridge {ridge:.0f}",
+           size=10, anchor="middle", fill="#d62728")
+    # jobs
+    if points:
+        max_h = max(p.device_hours for p in points)
+        apps = sorted({p.app for p in points})
+        color = {a: _PALETTE[i % len(_PALETTE)] for i, a in enumerate(apps)}
+        for p in points:
+            r = 4 + 14 * math.sqrt(p.device_hours / max_h)
+            c.circle(X(p.ai), Y(max(p.gflops_per_chip, 10 ** pf_lo)), r,
+                     fill=color[p.app],
+                     title=(f"{p.job} ({p.app}) AI={p.ai:.2f} "
+                            f"{p.gflops_per_chip:.1f} GFLOP/s/chip "
+                            f"MFU={p.mfu:.1%} {p.device_hours:.2f} dev-h"))
+        for i, a in enumerate(apps[:12]):
+            c.circle(ml + 10, mt + 12 + 16 * i, 5, fill=color[a])
+            c.text(ml + 20, mt + 16 + 16 * i, a, size=10)
+    return c.render()
+
+
+# ------------------------------------------------------- detailed job view --
+
+def render_timeseries_svg(series: Dict[str, List[Tuple[float, float]]],
+                          title: str, ylabel: str,
+                          width: int = 860, height: int = 300) -> str:
+    """Multi-line temporal plot (one line per host/socket), Fig. 3 style."""
+    c = SvgCanvas(width, height)
+    ml, mr, mt, mb = 64, 120, 34, 40
+    pw, ph = width - ml - mr, height - mt - mb
+    xs = [t for pts in series.values() for t, _ in pts]
+    ys = [v for pts in series.values() for _, v in pts
+          if not (isinstance(v, float) and math.isnan(v))]
+    c.text(width / 2, 20, title, size=13, anchor="middle")
+    if not xs or not ys:
+        c.text(width / 2, height / 2, "(no data)", anchor="middle")
+        return c.render()
+    x0, x1 = min(xs), max(xs)
+    y0, y1 = min(ys + [0.0]), max(ys)
+    if y1 <= y0:
+        y1 = y0 + 1.0
+    if x1 <= x0:
+        x1 = x0 + 1.0
+
+    def X(t): return ml + (t - x0) / (x1 - x0) * pw
+    def Y(v): return mt + ph - (v - y0) / (y1 - y0) * ph
+
+    for i in range(5):
+        yv = y0 + (y1 - y0) * i / 4
+        c.line(ml, Y(yv), ml + pw, Y(yv), stroke="#eee")
+        c.text(ml - 6, Y(yv) + 3, f"{yv:.3g}", size=9, anchor="end")
+    for i in range(5):
+        tv = x0 + (x1 - x0) * i / 4
+        c.text(X(tv), mt + ph + 14, f"+{tv - x0:.0f}s", size=9,
+               anchor="middle")
+    c.line(ml, mt + ph, ml + pw, mt + ph)
+    c.line(ml, mt, ml, mt + ph)
+    c.text(14, mt + ph / 2, ylabel, size=11, anchor="middle", rotate=-90)
+    for i, (name, pts) in enumerate(sorted(series.items())):
+        col = _PALETTE[i % len(_PALETTE)]
+        c.polyline([(X(t), Y(v)) for t, v in pts
+                    if not (isinstance(v, float) and math.isnan(v))],
+                   stroke=col)
+        if i < 14:
+            c.line(ml + pw + 8, mt + 10 + 14 * i, ml + pw + 24,
+                   mt + 10 + 14 * i, stroke=col, width=2)
+            c.text(ml + pw + 28, mt + 14 + 14 * i, name[:14], size=9)
+    return c.render()
+
+
+JOB_VIEW_METRICS = ("gflops", "hbm_gbs", "ai", "mfu", "step_time_s",
+                    "tokens_per_s", "loss")
+
+
+def job_metric_series(store: MetricStore, job: str, metric: str,
+                      kind: str = "perf"
+                      ) -> Dict[str, List[Tuple[float, float]]]:
+    series: Dict[str, List[Tuple[float, float]]] = {}
+    for rec in store.select(job=job, kind=kind):
+        v = rec.get(metric)
+        if isinstance(v, (int, float)):
+            series.setdefault(rec.host, []).append((rec.ts, float(v)))
+    for pts in series.values():
+        pts.sort()
+    return series
+
+
+def job_statistical_view(store: MetricStore, job: str, metric: str,
+                         kind: str = "perf", span_s: float = 60.0
+                         ) -> Dict[str, List[Tuple[float, float]]]:
+    """The paper's second job dashboard: min/median/max curves across all
+    hosts per time bucket, O(1) memory per bucket via sketches."""
+    buckets: Dict[float, QuantileSet] = {}
+    for rec in store.select(job=job, kind=kind):
+        v = rec.get(metric)
+        if isinstance(v, (int, float)):
+            b = math.floor(rec.ts / span_s) * span_s
+            buckets.setdefault(b, QuantileSet()).add(float(v))
+    out: Dict[str, List[Tuple[float, float]]] = {
+        "min": [], "median": [], "max": []}
+    for b in sorted(buckets):
+        s = buckets[b].summary()
+        out["min"].append((b, s["min"]))
+        out["median"].append((b, s["median"]))
+        out["max"].append((b, s["max"]))
+    return out
+
+
+# ------------------------------------------------------- specialized views --
+
+def view_top_apps_by_device_hours(store: MetricStore,
+                                  manifests: Dict[str, JobManifest],
+                                  limit: int = 10) -> List[Dict]:
+    """Paper: 'most executed applications by core hours'."""
+    rows = query(store, "search kind=perf "
+                        "| stats min(ts) max(ts) count by job")
+    acc: Dict[str, float] = {}
+    for r in rows:
+        man = manifests.get(r["job"])
+        if man is None:
+            continue
+        dur_h = max(float(r["max_ts"]) - float(r["min_ts"]), 0.0) / 3600.0
+        acc[man.app] = acc.get(man.app, 0.0) + dur_h * man.num_chips
+    table = [{"app": a, "device_hours": round(h, 4)}
+             for a, h in sorted(acc.items(), key=lambda kv: -kv[1])]
+    return table[:limit]
+
+
+def view_idle_accelerators(store: MetricStore, max_frac: float = 0.05
+                           ) -> List[Dict]:
+    """Paper: 'jobs that reserved GPU nodes without using GPUs'."""
+    return query(store,
+                 "search kind=device "
+                 "| stats max(hbm_frac_used) count by job "
+                 f"| where max_hbm_frac_used<{max_frac} "
+                 "| sort max_hbm_frac_used")
+
+
+def view_memory_underuse(store: MetricStore,
+                         manifests: Dict[str, JobManifest],
+                         max_frac: float = 0.25) -> List[Dict]:
+    """Paper: 'jobs that reserved large memory nodes without using much
+    memory'."""
+    rows = query(store, "search kind=device "
+                        "| stats max(hbm_frac_used) by job")
+    out = []
+    for r in rows:
+        man = manifests.get(r["job"])
+        if man is None or man.extra.get("large_memory") not in ("1", 1, True):
+            continue
+        v = r.get("max_hbm_frac_used")
+        if isinstance(v, (int, float)) and v < max_frac:
+            out.append({"job": r["job"], "peak_frac": v, "app": man.app})
+    return out
+
+
+def view_low_participation(store: MetricStore,
+                           manifests: Dict[str, JobManifest],
+                           min_frac: float = 0.5) -> List[Dict]:
+    """Paper: 'jobs that use less than half of the available CPU cores'."""
+    rows = query(store, "search kind=perf gflops>0 | stats dc(host) by job")
+    out = []
+    for r in rows:
+        man = manifests.get(r["job"])
+        if man is None or man.num_hosts <= 1:
+            continue
+        active = int(r["dc_host"])
+        if active < min_frac * man.num_hosts:
+            out.append({"job": r["job"], "active_hosts": active,
+                        "allocated_hosts": man.num_hosts, "app": man.app})
+    return out
+
+
+def markdown_table(rows: List[Dict], columns: Optional[List[str]] = None
+                   ) -> str:
+    if not rows:
+        return "*(empty)*\n"
+    cols = columns or list(rows[0].keys())
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        return str(v)
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(fmt(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,301 @@
+"""Automatic analytics — the paper's §4.6 ("under development"), built out.
+
+Detectors encode the paper's specialized views (§4.4) and case studies
+(§5) as executable rules:
+
+* :class:`HangDetector`        — "hanging jobs": progress stalls, GFLOP/s≈0
+                                  (paper §5, the livelock/deadlock case)
+* :class:`IdleAcceleratorDetector` — reserved accelerators never used
+                                  (paper: GPU nodes without GPU usage)
+* :class:`MemoryUnderuseDetector` — large-memory allocation, tiny footprint
+* :class:`LowParticipationDetector` — fewer than half the allocated hosts
+                                  ever report work (paper: "<half the cores")
+* :class:`LowMfuDetector`      — running but far from the roofline
+* :class:`StragglerDetector`   — (beyond paper) slow-host step-time outlier;
+                                  events feed the elastic supervisor
+
+All detectors are pure functions of the store (batch ``scan``); the hang
+detector additionally supports streaming ``feed`` for ingest-time alerting.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.aggregator import MetricStore
+from repro.core.daemon import JobManifest
+from repro.core.schema import MetricRecord
+from repro.core.sketches import exact_quantile
+
+
+@dataclass
+class DetectorEvent:
+    ts: float
+    job: str
+    detector: str
+    severity: str  # info | warning | critical
+    message: str
+    fields: Dict[str, object] = field(default_factory=dict)
+
+    def as_record(self) -> MetricRecord:
+        f = {"detector": self.detector, "severity": self.severity,
+             "message": self.message}
+        f.update({k: v for k, v in self.fields.items()})
+        return MetricRecord(ts=self.ts, host="aggregator", job=self.job,
+                            kind="event", fields=f)
+
+
+Manifests = Dict[str, JobManifest]
+
+
+class Detector:
+    name = "base"
+
+    def scan(self, store: MetricStore,
+             manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        raise NotImplementedError
+
+
+class HangDetector(Detector):
+    """Job "runs" but makes no forward progress for >= patience samples."""
+
+    name = "hang"
+
+    def __init__(self, patience: int = 3, min_gflops: float = 1e-3) -> None:
+        self.patience = patience
+        self.min_gflops = min_gflops
+        self._streak: Dict[str, int] = defaultdict(int)
+        self._fired: set = set()
+
+    def _is_stalled(self, rec: MetricRecord) -> bool:
+        return (float(rec.get("steps_per_s", 0.0) or 0.0) <= 0.0
+                and float(rec.get("gflops", 0.0) or 0.0) < self.min_gflops)
+
+    def feed(self, rec: MetricRecord) -> List[DetectorEvent]:
+        """Streaming evaluation at ingest time.  Fires once per
+        (job, host) episode — on multi-host jobs every stalled host is
+        reported (the statistical job view shows whether it is global)."""
+        if rec.kind != "perf":
+            return []
+        key = f"{rec.job}/{rec.host}"
+        if self._is_stalled(rec):
+            self._streak[key] += 1
+            if self._streak[key] == self.patience and key not in self._fired:
+                self._fired.add(key)
+                return [DetectorEvent(
+                    ts=rec.ts, job=rec.job, detector=self.name,
+                    severity="critical",
+                    message=(f"no forward progress on {rec.host} for "
+                             f"{self.patience} consecutive samples "
+                             f"(steps_per_s=0, GFLOP/s<{self.min_gflops})"),
+                    fields={"host": rec.host, "streak": self.patience,
+                            "step": rec.get("step", -1)})]
+        else:
+            self._streak[key] = 0
+            self._fired.discard(key)
+        return []
+
+    def scan(self, store: MetricStore,
+             manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        fresh = HangDetector(self.patience, self.min_gflops)
+        events: List[DetectorEvent] = []
+        for rec in store.select(kind="perf"):
+            events.extend(fresh.feed(rec))
+        return events
+
+
+class IdleAcceleratorDetector(Detector):
+    """Accelerators allocated but (nearly) never used."""
+
+    name = "idle_accelerator"
+
+    def __init__(self, max_frac: float = 0.05, min_samples: int = 2) -> None:
+        self.max_frac = max_frac
+        self.min_samples = min_samples
+
+    def scan(self, store: MetricStore,
+             manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        events = []
+        for job in store.jobs():
+            fracs, ts = [], 0.0
+            for rec in store.select(job=job, kind="device"):
+                v = rec.get("hbm_frac_used")
+                if isinstance(v, (int, float)):
+                    fracs.append(float(v))
+                    ts = rec.ts
+            if len(fracs) >= self.min_samples and max(fracs) < self.max_frac:
+                events.append(DetectorEvent(
+                    ts=ts, job=job, detector=self.name, severity="warning",
+                    message=(f"accelerators allocated but peak HBM use is "
+                             f"{max(fracs):.1%} (<{self.max_frac:.0%})"),
+                    fields={"peak_hbm_frac": max(fracs),
+                            "samples": len(fracs)}))
+        return events
+
+
+class MemoryUnderuseDetector(Detector):
+    """Large-memory allocation whose footprint never grows."""
+
+    name = "memory_underuse"
+
+    def __init__(self, max_frac: float = 0.25) -> None:
+        self.max_frac = max_frac
+
+    def scan(self, store: MetricStore,
+             manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        manifests = manifests or {}
+        events = []
+        for job in store.jobs():
+            man = manifests.get(job)
+            if man is None or man.extra.get("large_memory") not in ("1", 1, True):
+                continue
+            fracs, ts = [], 0.0
+            for rec in store.select(job=job, kind="device"):
+                v = rec.get("hbm_frac_used")
+                if isinstance(v, (int, float)):
+                    fracs.append(float(v))
+                    ts = rec.ts
+            if fracs and max(fracs) < self.max_frac:
+                events.append(DetectorEvent(
+                    ts=ts, job=job, detector=self.name, severity="warning",
+                    message=(f"large-memory allocation but peak memory use "
+                             f"is {max(fracs):.1%} (<{self.max_frac:.0%})"),
+                    fields={"peak_frac": max(fracs)}))
+        return events
+
+
+class LowParticipationDetector(Detector):
+    """Fewer than half of the allocated hosts ever report perf samples."""
+
+    name = "low_participation"
+
+    def __init__(self, min_frac: float = 0.5) -> None:
+        self.min_frac = min_frac
+
+    def scan(self, store: MetricStore,
+             manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        manifests = manifests or {}
+        events = []
+        for job in store.jobs():
+            man = manifests.get(job)
+            if man is None or man.num_hosts <= 1:
+                continue
+            hosts = {r.host for r in store.select(job=job, kind="perf")
+                     if float(r.get("gflops", 0.0) or 0.0) > 0}
+            ts = max((r.ts for r in store.select(job=job)), default=0.0)
+            frac = len(hosts) / man.num_hosts
+            if hosts and frac < self.min_frac:
+                events.append(DetectorEvent(
+                    ts=ts, job=job, detector=self.name, severity="warning",
+                    message=(f"only {len(hosts)}/{man.num_hosts} allocated "
+                             f"hosts report useful work"),
+                    fields={"active_hosts": len(hosts),
+                            "allocated_hosts": man.num_hosts}))
+        return events
+
+
+class LowMfuDetector(Detector):
+    """Job runs but far below roofline — the support-staff outreach case."""
+
+    name = "low_mfu"
+
+    def __init__(self, min_mfu: float = 0.10, min_samples: int = 3) -> None:
+        self.min_mfu = min_mfu
+        self.min_samples = min_samples
+
+    def scan(self, store: MetricStore,
+             manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        events = []
+        for job in store.jobs():
+            mfus, ts = [], 0.0
+            for rec in store.select(job=job, kind="perf"):
+                v = rec.get("mfu")
+                g = rec.get("gflops", 0.0)
+                if isinstance(v, (int, float)) and float(g or 0.0) > 0:
+                    mfus.append(float(v))
+                    ts = rec.ts
+            if len(mfus) >= self.min_samples:
+                avg = sum(mfus) / len(mfus)
+                if avg < self.min_mfu:
+                    events.append(DetectorEvent(
+                        ts=ts, job=job, detector=self.name, severity="info",
+                        message=(f"average MFU {avg:.1%} < {self.min_mfu:.0%}"
+                                 " — candidate for application support"),
+                        fields={"avg_mfu": avg, "samples": len(mfus)}))
+        return events
+
+
+class StragglerDetector(Detector):
+    """(Beyond paper) per-host step-time outliers on multi-host jobs."""
+
+    name = "straggler"
+
+    def __init__(self, ratio: float = 1.5, min_samples: int = 3) -> None:
+        self.ratio = ratio
+        self.min_samples = min_samples
+
+    def scan(self, store: MetricStore,
+             manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        events = []
+        for job in store.jobs():
+            per_host: Dict[str, List[float]] = defaultdict(list)
+            ts = 0.0
+            for rec in store.select(job=job, kind="perf"):
+                v = rec.get("step_time_s")
+                if isinstance(v, (int, float)) and float(v) > 0:
+                    per_host[rec.host].append(float(v))
+                    ts = rec.ts
+            if len(per_host) < 2:
+                continue
+            medians = {h: exact_quantile(v, 0.5) for h, v in per_host.items()
+                       if len(v) >= self.min_samples}
+            if len(medians) < 2:
+                continue
+            overall = exact_quantile(list(medians.values()), 0.5)
+            for host, med in sorted(medians.items()):
+                if med > self.ratio * overall:
+                    events.append(DetectorEvent(
+                        ts=ts, job=job, detector=self.name,
+                        severity="warning",
+                        message=(f"host {host} median step time {med:.3f}s is "
+                                 f"{med / overall:.2f}x the job median "
+                                 f"{overall:.3f}s — straggler"),
+                        fields={"host": host, "host_median_s": med,
+                                "job_median_s": overall}))
+        return events
+
+
+DEFAULT_DETECTORS = (HangDetector, IdleAcceleratorDetector,
+                     MemoryUnderuseDetector, LowParticipationDetector,
+                     LowMfuDetector, StragglerDetector)
+
+
+class DetectorBank:
+    """All detectors together; batch scan plus streaming hang alerts."""
+
+    def __init__(self, detectors: Optional[List[Detector]] = None) -> None:
+        self.detectors = detectors or [cls() for cls in DEFAULT_DETECTORS]
+        self._stream_hang = HangDetector()
+        self.events: List[DetectorEvent] = []
+
+    def feed(self, rec: MetricRecord) -> List[DetectorEvent]:
+        evs = self._stream_hang.feed(rec)
+        self.events.extend(evs)
+        return evs
+
+    def scan(self, store: MetricStore,
+             manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        out: List[DetectorEvent] = []
+        for det in self.detectors:
+            out.extend(det.scan(store, manifests))
+        out.sort(key=lambda e: e.ts)
+        return out
+
+    @staticmethod
+    def write_back(store: MetricStore, events: List[DetectorEvent]) -> None:
+        """Persist events as kind=event records so they are queryable."""
+        for ev in events:
+            store.insert(ev.as_record())

@@ -1,0 +1,149 @@
+"""Metric record schema and the syslog-style ``key=value`` wire format.
+
+The paper's hpcmd writes measured values as single log lines of key-value
+pairs to the local syslog.  We keep exactly that philosophy: one record ==
+one greppable text line, self-describing, order-insensitive, append-only.
+
+Line format (all on one line)::
+
+    hpcmd ts=1726400000.000 host=node0017 job=cobra.4213 kind=perf \
+        step=1200 gflops=812.4 hbm_gbs=410.2 ai=1.98 app="gemma2-27b"
+
+Values: ints and floats are bare; strings are bare when they match
+``[A-Za-z0-9._:/+-]+`` and double-quoted with backslash escaping otherwise.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Iterator, List, Optional, Union
+
+Scalar = Union[int, float, str]
+
+PREFIX = "hpcmd"
+_BARE_RE = re.compile(r"^[A-Za-z0-9._:/+-]+$")
+_KEY_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_.]*$")
+
+# Reserved keys that map to MetricRecord attributes rather than fields.
+_RESERVED = ("ts", "host", "job", "kind")
+
+
+@dataclass
+class MetricRecord:
+    """One sample from one host, attributed to one job."""
+
+    ts: float
+    host: str
+    job: str
+    kind: str  # perf | device | proc | pipeline | net | meta | event
+    fields: Dict[str, Scalar] = field(default_factory=dict)
+
+    def get(self, key: str, default=None):
+        if key in _RESERVED:
+            return getattr(self, key)
+        return self.fields.get(key, default)
+
+    def as_dict(self) -> Dict[str, Scalar]:
+        d = {"ts": self.ts, "host": self.host, "job": self.job,
+             "kind": self.kind}
+        d.update(self.fields)
+        return d
+
+
+def _encode_value(v: Scalar) -> str:
+    if isinstance(v, bool):  # guard: bools are ints in python
+        return "1" if v else "0"
+    if isinstance(v, int):
+        return str(v)
+    if isinstance(v, float):
+        if math.isnan(v):
+            return "nan"
+        if math.isinf(v):
+            return "inf" if v > 0 else "-inf"
+        return repr(v)
+    s = str(v)
+    if s and _BARE_RE.match(s):
+        return s
+    return '"' + s.replace("\\", "\\\\").replace('"', '\\"') + '"'
+
+
+def _decode_value(s: str) -> Scalar:
+    if s.startswith('"'):
+        body = s[1:-1]
+        return body.replace('\\"', '"').replace("\\\\", "\\")
+    try:
+        return int(s)
+    except ValueError:
+        pass
+    try:
+        return float(s)
+    except ValueError:
+        pass
+    return s
+
+
+def encode_line(rec: MetricRecord) -> str:
+    parts = [PREFIX,
+             f"ts={_encode_value(round(float(rec.ts), 6))}",
+             f"host={_encode_value(rec.host)}",
+             f"job={_encode_value(rec.job)}",
+             f"kind={_encode_value(rec.kind)}"]
+    for k in sorted(rec.fields):
+        if not _KEY_RE.match(k):
+            raise ValueError(f"invalid metric key {k!r}")
+        parts.append(f"{k}={_encode_value(rec.fields[k])}")
+    return " ".join(parts)
+
+
+_TOKEN_RE = re.compile(
+    r'([A-Za-z_][A-Za-z0-9_.]*)=("(?:[^"\\]|\\.)*"|[^\s"]*)')
+
+
+def parse_line(line: str) -> Optional[MetricRecord]:
+    """Parse one wire line; returns None for non-hpcmd / corrupt lines.
+
+    Transport is at-least-once over plain text, so parsing must never
+    raise on garbage (truncated writes, interleaved lines).
+    """
+    line = line.strip()
+    if not line.startswith(PREFIX + " "):
+        return None
+    body = line[len(PREFIX) + 1:]
+    fields: Dict[str, Scalar] = {}
+    reserved_raw: Dict[str, str] = {}
+    consumed = 0
+    for m in _TOKEN_RE.finditer(body):
+        key, raw = m.group(1), m.group(2)
+        consumed += 1
+        if key in _RESERVED:
+            # host/job/kind are identifiers: never numeric-decoded
+            # (hostname "001" must stay "001")
+            if raw.startswith('"'):
+                reserved_raw[key] = str(_decode_value(raw))
+            else:
+                reserved_raw[key] = raw
+        else:
+            fields[key] = _decode_value(raw)
+    if consumed == 0:
+        return None
+    try:
+        ts = float(reserved_raw["ts"])
+        host = reserved_raw["host"]
+        job = reserved_raw["job"]
+        kind = reserved_raw["kind"]
+    except (KeyError, ValueError, TypeError):
+        return None
+    return MetricRecord(ts=ts, host=host, job=job, kind=kind, fields=fields)
+
+
+def parse_lines(lines: Iterable[str]) -> Iterator[MetricRecord]:
+    for line in lines:
+        rec = parse_line(line)
+        if rec is not None:
+            yield rec
+
+
+def encode_many(recs: Iterable[MetricRecord]) -> str:
+    return "".join(encode_line(r) + "\n" for r in recs)

@@ -1,0 +1,191 @@
+"""Streaming statistics with O(1) memory.
+
+The paper aggregates large jobs into min/median/max curves inside Splunk;
+PerSyst (cited in the paper's §3) showed quantile aggregation is what makes
+many-node jobs comprehensible.  For 1000+-host fleets we cannot hold raw
+samples, so we provide:
+
+* :class:`StreamStats` — count/mean/std/min/max via Welford.
+* :class:`P2Quantile` — the P² algorithm (Jain & Chlamtac 1985): a single
+  quantile estimate from 5 markers, no stored samples.
+* :class:`QuantileSet` — min/p25/median/p75/max in O(1) memory.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional
+
+
+class StreamStats:
+    """Welford online mean/variance plus min/max."""
+
+    __slots__ = ("n", "mean", "_m2", "min", "max")
+
+    def __init__(self) -> None:
+        self.n = 0
+        self.mean = 0.0
+        self._m2 = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def add(self, x: float) -> None:
+        x = float(x)
+        self.n += 1
+        d = x - self.mean
+        self.mean += d / self.n
+        self._m2 += d * (x - self.mean)
+        if x < self.min:
+            self.min = x
+        if x > self.max:
+            self.max = x
+
+    def extend(self, xs: Iterable[float]) -> "StreamStats":
+        for x in xs:
+            self.add(x)
+        return self
+
+    @property
+    def var(self) -> float:
+        return self._m2 / self.n if self.n > 1 else 0.0
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(self.var)
+
+    def merge(self, other: "StreamStats") -> "StreamStats":
+        """Parallel-merge (Chan et al.) — used by island relays."""
+        if other.n == 0:
+            return self
+        if self.n == 0:
+            self.n, self.mean, self._m2 = other.n, other.mean, other._m2
+            self.min, self.max = other.min, other.max
+            return self
+        n = self.n + other.n
+        d = other.mean - self.mean
+        self._m2 += other._m2 + d * d * self.n * other.n / n
+        self.mean += d * other.n / n
+        self.n = n
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        return self
+
+
+class P2Quantile:
+    """P² single-quantile estimator (no stored samples).
+
+    Error is typically <1% of the value range for unimodal streams, which
+    is ample for dashboard median/p90 curves.
+    """
+
+    __slots__ = ("p", "_n", "_q", "_pos", "_npos", "_dn", "count")
+
+    def __init__(self, p: float) -> None:
+        if not 0.0 < p < 1.0:
+            raise ValueError("p must be in (0,1)")
+        self.p = p
+        self._q: List[float] = []   # marker heights
+        self._pos = [1, 2, 3, 4, 5]  # marker positions (1-based)
+        self._npos = [1.0, 1 + 2 * p, 1 + 4 * p, 3 + 2 * p, 5.0]
+        self._dn = [0.0, p / 2, p, (1 + p) / 2, 1.0]
+        self.count = 0
+
+    def add(self, x: float) -> None:
+        x = float(x)
+        self.count += 1
+        if len(self._q) < 5:
+            self._q.append(x)
+            if len(self._q) == 5:
+                self._q.sort()
+            return
+        q, pos = self._q, self._pos
+        # locate cell
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 0
+            while k < 3 and x >= q[k + 1]:
+                k += 1
+        for i in range(k + 1, 5):
+            pos[i] += 1
+        for i in range(5):
+            self._npos[i] += self._dn[i]
+        # adjust interior markers
+        for i in (1, 2, 3):
+            d = self._npos[i] - pos[i]
+            if ((d >= 1 and pos[i + 1] - pos[i] > 1)
+                    or (d <= -1 and pos[i - 1] - pos[i] < -1)):
+                s = 1 if d >= 0 else -1
+                qn = self._parabolic(i, s)
+                if not (q[i - 1] < qn < q[i + 1]):
+                    qn = self._linear(i, s)
+                q[i] = qn
+                pos[i] += s
+
+    def _parabolic(self, i: int, s: int) -> float:
+        q, n = self._q, self._pos
+        return q[i] + s / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + s) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+
+    def _linear(self, i: int, s: int) -> float:
+        q, n = self._q, self._pos
+        return q[i] + s * (q[i + s] - q[i]) / (n[i + s] - n[i])
+
+    @property
+    def value(self) -> float:
+        if not self._q:
+            return math.nan
+        if len(self._q) < 5:
+            srt = sorted(self._q)
+            idx = self.p * (len(srt) - 1)
+            lo = int(math.floor(idx))
+            hi = min(lo + 1, len(srt) - 1)
+            frac = idx - lo
+            return srt[lo] * (1 - frac) + srt[hi] * frac
+        return self._q[2]
+
+
+class QuantileSet:
+    """min / p25 / median / p75 / max in O(1) memory."""
+
+    def __init__(self) -> None:
+        self.stats = StreamStats()
+        self._p25 = P2Quantile(0.25)
+        self._p50 = P2Quantile(0.50)
+        self._p75 = P2Quantile(0.75)
+
+    def add(self, x: float) -> None:
+        self.stats.add(x)
+        self._p25.add(x)
+        self._p50.add(x)
+        self._p75.add(x)
+
+    def summary(self) -> Dict[str, float]:
+        s = self.stats
+        return {
+            "count": s.n,
+            "min": s.min if s.n else math.nan,
+            "p25": self._p25.value,
+            "median": self._p50.value,
+            "p75": self._p75.value,
+            "max": s.max if s.n else math.nan,
+            "mean": s.mean if s.n else math.nan,
+            "std": s.std,
+        }
+
+
+def exact_quantile(xs: List[float], p: float) -> float:
+    """Exact quantile (linear interpolation) — the test oracle."""
+    if not xs:
+        return math.nan
+    srt = sorted(xs)
+    idx = p * (len(srt) - 1)
+    lo = int(math.floor(idx))
+    hi = min(lo + 1, len(srt) - 1)
+    frac = idx - lo
+    return srt[lo] * (1 - frac) + srt[hi] * frac

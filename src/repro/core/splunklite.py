@@ -1,0 +1,339 @@
+"""splunklite — an SPL-like pipeline query engine over metric records.
+
+The paper's analysis layer is Splunk: "a powerful query language over
+large volumes of temporally ordered log-line data" (§4).  This module is
+the self-contained analog used by dashboards, detectors, reports, and by
+staff directly (the paper's "custom queries" for specialized views).
+
+Supported pipeline, e.g.::
+
+    search kind=perf job=cobra.42 gflops>10 app=gemma*
+      | stats avg(gflops) p90(step_time_s) count by host
+      | sort -avg_gflops | head 5
+
+Commands: ``search``/``where``, ``stats``, ``timechart``, ``sort``,
+``head``, ``fields``, ``dedup``, ``eval``.
+Aggregations: count, dc, sum, avg/mean, min, max, median, p25/p50/p75/p90/
+p95/p99, stdev, range, first, last.
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+import math
+import re
+import shlex
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Union
+
+from repro.core.aggregator import MetricStore
+from repro.core.schema import MetricRecord
+from repro.core.sketches import exact_quantile
+
+Row = Dict[str, Any]
+
+
+class QueryError(ValueError):
+    pass
+
+
+# ----------------------------------------------------------------- search ---
+_CMP_RE = re.compile(r"^([A-Za-z_][A-Za-z0-9_.]*)(!=|>=|<=|=|>|<)(.*)$")
+
+
+def _to_number(s: str) -> Optional[float]:
+    try:
+        return float(s)
+    except ValueError:
+        return None
+
+
+def _match_term(row: Row, term: str) -> bool:
+    m = _CMP_RE.match(term)
+    if not m:
+        # bare word: substring/wildcard match against any string value
+        pat = term if any(ch in term for ch in "*?") else f"*{term}*"
+        return any(isinstance(v, str) and fnmatch.fnmatch(v, pat)
+                   for v in row.values())
+    key, op, raw = m.groups()
+    val = row.get(key)
+    if op in ("=", "!="):
+        if val is None:
+            return op == "!="
+        num = _to_number(raw)
+        if num is not None and isinstance(val, (int, float)):
+            eq = float(val) == num
+        else:
+            eq = fnmatch.fnmatch(str(val), raw) if any(
+                ch in raw for ch in "*?") else str(val) == raw
+        return eq if op == "=" else not eq
+    # numeric comparisons
+    if val is None or not isinstance(val, (int, float)):
+        return False
+    num = _to_number(raw)
+    if num is None:
+        return False
+    v = float(val)
+    return {"<": v < num, "<=": v <= num,
+            ">": v > num, ">=": v >= num}[op]
+
+
+def _cmd_search(rows: Iterable[Row], args: List[str]) -> List[Row]:
+    return [r for r in rows if all(_match_term(r, t) for t in args)]
+
+
+# ------------------------------------------------------------------ stats ---
+_AGG_RE = re.compile(r"^([a-z0-9]+)(?:\(([A-Za-z0-9_.*]*)\))?$")
+
+
+def _agg_fn(name: str) -> Callable[[List[Any]], Any]:
+    def nums(vals):
+        return [float(v) for v in vals
+                if isinstance(v, (int, float)) and not (
+                    isinstance(v, float) and math.isnan(v))]
+
+    if name == "count":
+        return lambda vals: len(vals)
+    if name == "dc":
+        return lambda vals: len(set(map(str, vals)))
+    if name == "sum":
+        return lambda vals: sum(nums(vals))
+    if name in ("avg", "mean"):
+        return lambda vals: (sum(nums(vals)) / len(nums(vals))) if nums(vals) else math.nan
+    if name == "min":
+        return lambda vals: min(nums(vals)) if nums(vals) else math.nan
+    if name == "max":
+        return lambda vals: max(nums(vals)) if nums(vals) else math.nan
+    if name in ("median", "p50"):
+        return lambda vals: exact_quantile(nums(vals), 0.5)
+    if name.startswith("p") and name[1:].isdigit():
+        q = int(name[1:]) / 100.0
+        return lambda vals: exact_quantile(nums(vals), q)
+    if name == "stdev":
+        def _stdev(vals):
+            xs = nums(vals)
+            if len(xs) < 2:
+                return 0.0
+            mu = sum(xs) / len(xs)
+            return math.sqrt(sum((x - mu) ** 2 for x in xs) / (len(xs) - 1))
+        return _stdev
+    if name == "range":
+        return lambda vals: (max(nums(vals)) - min(nums(vals))) if nums(vals) else math.nan
+    if name == "first":
+        return lambda vals: vals[0] if vals else None
+    if name == "last":
+        return lambda vals: vals[-1] if vals else None
+    raise QueryError(f"unknown aggregation {name!r}")
+
+
+def _parse_aggs(tokens: List[str]):
+    """Parse ``agg(field) [as alias] ...`` returning [(fn, field, out)]."""
+    aggs = []
+    i = 0
+    while i < len(tokens):
+        tok = tokens[i]
+        m = _AGG_RE.match(tok)
+        if not m:
+            raise QueryError(f"bad aggregation token {tok!r}")
+        name, fieldname = m.group(1), m.group(2)
+        out = f"{name}_{fieldname}" if fieldname else name
+        if i + 2 < len(tokens) and tokens[i + 1] == "as":
+            out = tokens[i + 2]
+            i += 2
+        aggs.append((_agg_fn(name), fieldname, out))
+        i += 1
+    return aggs
+
+
+def _group_rows(rows: List[Row], by: List[str]):
+    groups: Dict[tuple, List[Row]] = {}
+    for r in rows:
+        key = tuple(str(r.get(b, "")) for b in by)
+        groups.setdefault(key, []).append(r)
+    return groups
+
+
+def _cmd_stats(rows: List[Row], args: List[str]) -> List[Row]:
+    if "by" in args:
+        split = args.index("by")
+        agg_tokens, by = args[:split], args[split + 1:]
+    else:
+        agg_tokens, by = args, []
+    aggs = _parse_aggs(agg_tokens)
+    out: List[Row] = []
+    for key, group in sorted(_group_rows(rows, by).items()):
+        row: Row = dict(zip(by, key))
+        for fn, fieldname, name in aggs:
+            if fieldname:
+                vals = [r[fieldname] for r in group if fieldname in r]
+            else:
+                vals = group
+            row[name] = fn(vals)
+        out.append(row)
+    return out
+
+
+def _cmd_timechart(rows: List[Row], args: List[str]) -> List[Row]:
+    span = 60.0
+    rest: List[str] = []
+    for tok in args:
+        if tok.startswith("span="):
+            span = float(tok[5:])
+        else:
+            rest.append(tok)
+    by: List[str] = []
+    if "by" in rest:
+        split = rest.index("by")
+        rest, by = rest[:split], rest[split + 1:]
+    aggs = _parse_aggs(rest)
+    out: List[Row] = []
+    keyed: Dict[tuple, List[Row]] = {}
+    for r in rows:
+        ts = r.get("ts")
+        if not isinstance(ts, (int, float)):
+            continue
+        bucket = math.floor(float(ts) / span) * span
+        key = (bucket,) + tuple(str(r.get(b, "")) for b in by)
+        keyed.setdefault(key, []).append(r)
+    for key, group in sorted(keyed.items()):
+        row: Row = {"_time": key[0]}
+        row.update(dict(zip(by, key[1:])))
+        for fn, fieldname, name in aggs:
+            vals = ([r[fieldname] for r in group if fieldname in r]
+                    if fieldname else group)
+            row[name] = fn(vals)
+        out.append(row)
+    return out
+
+
+# ------------------------------------------------------------------- eval ---
+_ALLOWED_NODES = (ast.Expression, ast.BinOp, ast.UnaryOp, ast.Name,
+                  ast.Constant, ast.Add, ast.Sub, ast.Mult, ast.Div,
+                  ast.Pow, ast.Mod, ast.USub, ast.UAdd, ast.Call,
+                  ast.Load, ast.IfExp, ast.Compare, ast.Gt, ast.GtE,
+                  ast.Lt, ast.LtE, ast.Eq, ast.NotEq)
+_EVAL_FUNCS = {"abs": abs, "min": min, "max": max, "round": round,
+               "log": math.log, "log2": math.log2, "log10": math.log10,
+               "sqrt": math.sqrt, "exp": math.exp, "floor": math.floor,
+               "ceil": math.ceil}
+
+
+def _safe_eval(expr: str, row: Row) -> Any:
+    tree = ast.parse(expr, mode="eval")
+    for node in ast.walk(tree):
+        if not isinstance(node, _ALLOWED_NODES):
+            raise QueryError(f"eval: disallowed syntax {type(node).__name__}")
+        if isinstance(node, ast.Call):
+            if not (isinstance(node.func, ast.Name)
+                    and node.func.id in _EVAL_FUNCS):
+                raise QueryError("eval: disallowed function")
+    names = {n.id for n in ast.walk(tree) if isinstance(n, ast.Name)}
+    env = dict(_EVAL_FUNCS)
+    for n in names:
+        if n in env:
+            continue
+        v = row.get(n)
+        env[n] = float(v) if isinstance(v, (int, float)) else math.nan
+    return eval(compile(tree, "<eval>", "eval"), {"__builtins__": {}}, env)
+
+
+def _cmd_eval(rows: List[Row], args: List[str]) -> List[Row]:
+    expr = " ".join(args)
+    if "=" not in expr:
+        raise QueryError("eval needs name=expr")
+    name, rhs = expr.split("=", 1)
+    name = name.strip()
+    out = []
+    for r in rows:
+        r = dict(r)
+        try:
+            r[name] = _safe_eval(rhs, r)
+        except QueryError:
+            raise
+        except Exception:  # noqa: BLE001 — eval on missing fields -> nan
+            r[name] = math.nan
+        out.append(r)
+    return out
+
+
+# ------------------------------------------------------------------- misc ---
+def _cmd_sort(rows: List[Row], args: List[str]) -> List[Row]:
+    if not args:
+        return rows
+    keys = []
+    for a in args:
+        desc = a.startswith("-")
+        keys.append((a.lstrip("+-"), desc))
+    out = list(rows)
+    for key, desc in reversed(keys):
+        out.sort(key=lambda r: (
+            (0, float(r[key])) if isinstance(r.get(key), (int, float))
+            and not (isinstance(r.get(key), float) and math.isnan(r[key]))
+            else (1, 0.0) if key in r else (2, 0.0)), reverse=desc)
+    return out
+
+
+def _cmd_head(rows: List[Row], args: List[str]) -> List[Row]:
+    n = int(args[0]) if args else 10
+    return rows[:n]
+
+
+def _cmd_fields(rows: List[Row], args: List[str]) -> List[Row]:
+    return [{k: r[k] for k in args if k in r} for r in rows]
+
+
+def _cmd_dedup(rows: List[Row], args: List[str]) -> List[Row]:
+    seen = set()
+    out = []
+    for r in rows:
+        key = tuple(str(r.get(a, "")) for a in args)
+        if key not in seen:
+            seen.add(key)
+            out.append(r)
+    return out
+
+
+_COMMANDS = {
+    "search": _cmd_search,
+    "where": _cmd_search,
+    "stats": _cmd_stats,
+    "timechart": _cmd_timechart,
+    "sort": _cmd_sort,
+    "head": _cmd_head,
+    "fields": _cmd_fields,
+    "table": _cmd_fields,
+    "dedup": _cmd_dedup,
+    "eval": _cmd_eval,
+}
+
+
+def _split_pipeline(q: str) -> List[List[str]]:
+    stages = []
+    for part in q.split("|"):
+        part = part.strip()
+        if not part:
+            continue
+        toks = shlex.split(part)
+        stages.append(toks)
+    return stages
+
+
+def query(source: Union[MetricStore, Sequence[Row], Sequence[MetricRecord]],
+          q: str) -> List[Row]:
+    """Run an SPL-like pipeline over a store / record list / row list."""
+    if isinstance(source, MetricStore):
+        rows: List[Row] = [r.as_dict() for r in source.records]
+    else:
+        rows = [r.as_dict() if isinstance(r, MetricRecord) else dict(r)
+                for r in source]
+    stages = _split_pipeline(q)
+    if not stages:
+        return rows
+    for i, toks in enumerate(stages):
+        cmd, args = toks[0], toks[1:]
+        if i == 0 and cmd not in _COMMANDS:
+            cmd, args = "search", toks  # leading implicit search
+        if cmd not in _COMMANDS:
+            raise QueryError(f"unknown command {cmd!r}")
+        rows = _COMMANDS[cmd](rows, args)
+    return rows

@@ -1,0 +1,204 @@
+"""Log transport — the rsyslog analog (paper §4.3).
+
+Design goals copied from the paper: deliberately boring, text-based,
+no custom hierarchical agents *required* — but per-"island" relays are
+supported for large systems (the paper deploys intermediate rsyslog
+servers per island).  Properties:
+
+* append-only segment files with size-based rotation on the node side,
+* at-least-once shipping with durable offsets (a shipper crash replays
+  the tail; the aggregator tolerates duplicate lines),
+* strictly line-oriented: a torn final line is never forwarded until the
+  newline arrives.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional
+
+SEGMENT_FMT = "segment-{:08d}.log"
+
+
+class Spool:
+    """Node-local append-only spool with size-based segment rotation."""
+
+    def __init__(self, root: os.PathLike, max_segment_bytes: int = 1 << 20,
+                 fsync: bool = False) -> None:
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.max_segment_bytes = max_segment_bytes
+        self.fsync = fsync
+        self._seq = self._latest_seq()
+        self._fh = None
+        self._open_active()
+
+    def _latest_seq(self) -> int:
+        seqs = [int(p.name.split("-")[1].split(".")[0])
+                for p in self.root.glob("segment-*.log")]
+        return max(seqs) if seqs else 0
+
+    def _active_path(self) -> Path:
+        return self.root / SEGMENT_FMT.format(self._seq)
+
+    def _open_active(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+        self._fh = open(self._active_path(), "a", encoding="utf-8")
+
+    def write_line(self, line: str) -> None:
+        if self._fh.tell() >= self.max_segment_bytes:
+            self._seq += 1
+            self._open_active()
+        self._fh.write(line.rstrip("\n") + "\n")
+        self._fh.flush()
+        if self.fsync:
+            os.fsync(self._fh.fileno())
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def segments(self) -> List[Path]:
+        return sorted(self.root.glob("segment-*.log"))
+
+
+class Shipper:
+    """Ships complete lines from a spool directory to a sink.
+
+    The sink is any ``Callable[[str], None]`` taking one complete line.
+    Offsets are persisted to ``<state_dir>/offsets.json`` after each
+    batch, giving at-least-once delivery across shipper restarts.
+    Fully-shipped, rotated segments are garbage collected.
+    """
+
+    def __init__(self, src_dir: os.PathLike, sink: Callable[[str], None],
+                 state_dir: Optional[os.PathLike] = None,
+                 delete_shipped: bool = True) -> None:
+        self.src = Path(src_dir)
+        self.sink = sink
+        self.state_dir = Path(state_dir) if state_dir else self.src / ".shipper"
+        self.state_dir.mkdir(parents=True, exist_ok=True)
+        self.delete_shipped = delete_shipped
+        self._offsets: Dict[str, int] = self._load_offsets()
+
+    def _offsets_path(self) -> Path:
+        return self.state_dir / "offsets.json"
+
+    def _load_offsets(self) -> Dict[str, int]:
+        try:
+            with open(self._offsets_path(), encoding="utf-8") as f:
+                return {str(k): int(v) for k, v in json.load(f).items()}
+        except (OSError, ValueError):
+            return {}
+
+    def _save_offsets(self) -> None:
+        tmp = self._offsets_path().with_suffix(".tmp")
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(self._offsets, f)
+        os.replace(tmp, self._offsets_path())
+
+    def ship_once(self) -> int:
+        """Forward all new complete lines.  Returns #lines shipped."""
+        segments = sorted(self.src.glob("segment-*.log"))
+        if not segments:
+            return 0
+        active = segments[-1]
+        shipped = 0
+        for seg in segments:
+            offset = self._offsets.get(seg.name, 0)
+            try:
+                size = seg.stat().st_size
+            except OSError:
+                continue
+            if size > offset:
+                with open(seg, "r", encoding="utf-8", errors="replace") as f:
+                    f.seek(offset)
+                    chunk = f.read()
+                # forward only complete lines
+                end = chunk.rfind("\n")
+                if end >= 0:
+                    for line in chunk[: end + 1].splitlines():
+                        if line:
+                            self.sink(line)
+                            shipped += 1
+                    self._offsets[seg.name] = offset + end + 1
+            if (self.delete_shipped and seg != active
+                    and self._offsets.get(seg.name, 0) >= size):
+                try:
+                    seg.unlink()
+                except OSError:
+                    pass
+                self._offsets.pop(seg.name, None)
+        if shipped:
+            self._save_offsets()
+        return shipped
+
+
+class StreamFileSink:
+    """Sink that appends to a single stream file (an aggregator inbox)."""
+
+    def __init__(self, path: os.PathLike) -> None:
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+
+    def __call__(self, line: str) -> None:
+        with open(self.path, "a", encoding="utf-8") as f:
+            f.write(line + "\n")
+
+
+class IslandRelay:
+    """Per-island fan-in: many node spools -> one island stream file.
+
+    Mirrors the paper's intermediate per-island rsyslog servers.  A second
+    Shipper instance then moves the island stream to the central inbox;
+    relays compose arbitrarily deep.
+    """
+
+    def __init__(self, node_spool_dirs: Iterable[os.PathLike],
+                 island_dir: os.PathLike, island_name: str = "island0") -> None:
+        self.island_dir = Path(island_dir)
+        self.island_dir.mkdir(parents=True, exist_ok=True)
+        self.island_spool = Spool(self.island_dir / "spool")
+        self._shippers = [
+            Shipper(d, self.island_spool.write_line,
+                    state_dir=self.island_dir / "state" / Path(d).name)
+            for d in node_spool_dirs
+        ]
+        self.island_name = island_name
+
+    def pump(self) -> int:
+        return sum(s.ship_once() for s in self._shippers)
+
+    def uplink(self, sink: Callable[[str], None]) -> Shipper:
+        return Shipper(self.island_spool.root, sink,
+                       state_dir=self.island_dir / "state" / "_uplink")
+
+
+class TailReader:
+    """Incremental reader of an inbox stream file (aggregator side)."""
+
+    def __init__(self, path: os.PathLike) -> None:
+        self.path = Path(path)
+        self.offset = 0
+
+    def read_new_lines(self) -> List[str]:
+        try:
+            size = self.path.stat().st_size
+        except OSError:
+            return []
+        if size <= self.offset:
+            return []
+        with open(self.path, "r", encoding="utf-8", errors="replace") as f:
+            f.seek(self.offset)
+            chunk = f.read()
+        end = chunk.rfind("\n")
+        if end < 0:
+            return []
+        self.offset += end + 1
+        return [ln for ln in chunk[: end + 1].splitlines() if ln]

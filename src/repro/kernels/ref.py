@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0, softcap: float = 0.0,
+                  scale: Optional[float] = None, q_offset: int = 0,
+                  kv_len: Optional[int] = None) -> jnp.ndarray:
+    """Naive GQA attention.  q [B,Sq,Hq,D]; k/v [B,Skv,Hkv,D]."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kv_len = kv_len if kv_len is not None else skv
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def ref_ssd_intra_chunk(xdt: jnp.ndarray, a_cs: jnp.ndarray,
+                        b_mat: jnp.ndarray, c_mat: jnp.ndarray, chunk: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels.ssd_scan.ssd_intra_chunk (same signature)."""
+    bsz, s, h, p = xdt.shape
+    n = b_mat.shape[-1]
+    nc = s // chunk
+    xc = xdt.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    ac = a_cs.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = b_mat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cc = c_mat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    seg = ac[:, :, :, None, :] - ac[:, :, None, :, :]     # [B,C,Q,Q,H]
+    idx = jnp.arange(chunk)
+    tril = idx[:, None] >= idx[None, :]
+    l_mat = jnp.where(tril[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcln,bcsn->bcls", cc, bc)        # [B,C,Q,Q]
+    y = jnp.einsum("bcls,bclsh,bcshp->bclhp", scores,
+                   l_mat, xc)
+    decay_st = jnp.exp(ac[:, :, -1:, :] - ac)             # [B,C,Q,H]
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchnp", bc, decay_st, xc)
+    return (y.reshape(bsz, s, h, p), states)

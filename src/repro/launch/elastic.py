@@ -1,0 +1,119 @@
+"""Elastic supervisor: fault-tolerant, monitor-driven job control.
+
+The paper's §4.6 automation closed-loop, applied to training:
+
+* runs the training launcher as a child process;
+* restarts it (``--resume``: auto-restore from the latest committed
+  checkpoint) on crashes, up to ``max_restarts``;
+* tails the monitoring inbox while the job runs; a **hang** event from the
+  streaming detector kills and restarts the child (the paper's
+  hanging-job case study, but automated);
+* supports elastic downscaling: on repeated failures the next incarnation
+  can run with fewer simulated hosts (``--shrink-on-failure``), mirroring
+  re-meshing around dead nodes.
+
+This is a control-plane simulation: one host process stands in for the
+fleet, but every code path (checkpoint restore, manifest rewrite, detector
+-> restart wiring) is the real implementation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import List, Optional
+
+from repro.core.aggregator import Aggregator
+from repro.core.detectors import DetectorBank
+
+
+class Supervisor:
+    def __init__(self, train_args: List[str], workdir: Path,
+                 max_restarts: int = 3, hang_poll_s: float = 1.0,
+                 shrink_on_failure: bool = False,
+                 num_hosts: int = 1) -> None:
+        self.train_args = train_args
+        self.workdir = Path(workdir)
+        self.max_restarts = max_restarts
+        self.hang_poll_s = hang_poll_s
+        self.shrink_on_failure = shrink_on_failure
+        self.num_hosts = num_hosts
+        self.restarts = 0
+        self.events: List[str] = []
+
+    def _spawn(self) -> subprocess.Popen:
+        cmd = [sys.executable, "-m", "repro.launch.train",
+               *self.train_args,
+               "--workdir", str(self.workdir),
+               "--num-hosts", str(self.num_hosts),
+               "--resume"]
+        print(f"[elastic] spawn (restart {self.restarts}): "
+              f"{' '.join(cmd[-8:])}", flush=True)
+        return subprocess.Popen(cmd)
+
+    def run(self) -> int:
+        from repro.core.anomaly import AnomalyBank
+        agg = Aggregator(self.workdir / "inbox")
+        bank = DetectorBank()
+        anomalies = AnomalyBank()
+        agg.on_record(bank.feed)
+        agg.on_record(lambda rec: [
+            print(f"[elastic] anomaly: {e.message}", flush=True)
+            for e in anomalies.feed(rec)])
+        while True:
+            child = self._spawn()
+            killed_for_hang = False
+            while child.poll() is None:
+                time.sleep(self.hang_poll_s)
+                agg.pump()
+                hang_events = [e for e in bank.events
+                               if e.detector == "hang"]
+                if hang_events:
+                    self.events.append("hang->restart")
+                    print("[elastic] hang detected by monitor — "
+                          "restarting child", flush=True)
+                    child.kill()
+                    child.wait()
+                    killed_for_hang = True
+                    bank.events.clear()
+                    break
+            rc = child.returncode if not killed_for_hang else -9
+            if rc == 0:
+                print("[elastic] job completed", flush=True)
+                return 0
+            self.restarts += 1
+            self.events.append(f"exit({rc})")
+            if self.restarts > self.max_restarts:
+                print("[elastic] restart budget exhausted", flush=True)
+                return 1
+            if self.shrink_on_failure and self.num_hosts > 1:
+                self.num_hosts -= 1
+                print(f"[elastic] downscaling to {self.num_hosts} hosts",
+                      flush=True)
+            print(f"[elastic] child exited rc={rc}; restarting from "
+                  "latest checkpoint", flush=True)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workdir", required=True)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--num-hosts", type=int, default=1)
+    ap.add_argument("--shrink-on-failure", action="store_true")
+    ap.add_argument("train_args", nargs=argparse.REMAINDER,
+                    help="arguments forwarded to repro.launch.train "
+                         "(prefix with --)")
+    args = ap.parse_args(argv)
+    extra = [a for a in args.train_args if a != "--"]
+    sup = Supervisor(extra, Path(args.workdir),
+                     max_restarts=args.max_restarts,
+                     num_hosts=args.num_hosts,
+                     shrink_on_failure=args.shrink_on_failure)
+    return sup.run()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,140 @@
+"""Aggregate dry-run cell JSONs into the §Roofline / §Dry-run tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh 16x16]
+                                                   [--variants]
+
+Reads experiments/dryrun/<mesh>/*.json, prints a markdown table with the
+three roofline terms per (arch x shape), dominant bottleneck, MODEL_FLOPS
+ratio, HBM fit, and the one-line "what would move the dominant term".
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+ROOT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, include_variants: bool = False) -> List[Dict]:
+    out = []
+    d = ROOT / mesh
+    if not d.exists():
+        return out
+    for p in sorted(d.glob("*.json")):
+        try:
+            rec = json.load(open(p, encoding="utf-8"))
+        except ValueError:
+            continue
+        if not include_variants and rec.get("variant",
+                                            "baseline") != "baseline":
+            continue
+        out.append(rec)
+    out.sort(key=lambda r: (r.get("arch", ""), SHAPE_ORDER.index(
+        r["shape"]) if r.get("shape") in SHAPE_ORDER else 9,
+        r.get("variant", "")))
+    return out
+
+
+def advice(rec: Dict) -> str:
+    dom = rec.get("dominant")
+    tags = rec.get("traffic_by_tag", {})
+    if dom == "memory":
+        if tags.get("attn_scores", 0) > 0.2 * rec.get(
+                "bytes_per_device", 1) :
+            return "flash kernel keeps scores in VMEM"
+        if tags.get("ssd_decay", 0) > 0.1 * rec.get("bytes_per_device", 1):
+            return "SSD Pallas kernel keeps decay tiles in VMEM"
+        return "smaller tiles / fewer saved buffers"
+    if dom == "collective":
+        kinds = rec.get("collective_bytes_by_kind", {})
+        if kinds:
+            top = max(kinds, key=kinds.get)
+            return f"reduce {top} volume (sharding/overlap)"
+        return "resharding"
+    return "near roofline; overlap comm"
+
+
+def fmt_row(rec: Dict) -> str:
+    if rec.get("skipped"):
+        return (f"| {rec['arch']} | {rec['shape']} | — | — | — | — | skip |"
+                f" {rec.get('reason', '')[:48]} |")
+    if not rec.get("ok"):
+        return (f"| {rec['arch']} | {rec['shape']} | — | — | — | — | FAIL |"
+                f" {rec.get('error', '')[:48]} |")
+    c, m, k = rec["compute_s"], rec["memory_s"], rec["collective_s"]
+    mf = rec.get("memory_s_flash", m)
+    fit = f"{rec['hbm_frac_used'] * 100:.0f}%"
+    ratio = rec.get("useful_flops_ratio", 0.0)
+    return (f"| {rec['arch']} | {rec['shape']} | {c * 1e3:.1f} | "
+            f"{m * 1e3:.1f} ({mf * 1e3:.1f}) | {k * 1e3:.1f} | "
+            f"{ratio:.2f} | {rec['dominant'][:4]} {fit} | "
+            f"{advice(rec)} |")
+
+
+def table(mesh: str, include_variants: bool = False) -> str:
+    recs = load(mesh, include_variants)
+    lines = [
+        f"### Mesh {mesh} ({recs[0]['chips'] if recs and recs[0].get('chips') else '?'} chips)",
+        "",
+        "| arch | shape | compute ms | memory ms (flash-adj) | "
+        "collective ms | 6ND/HLO | dominant, HBM | next lever |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        if include_variants or rec.get("variant", "baseline") == "baseline":
+            name = rec["arch"]
+            if rec.get("variant", "baseline") != "baseline":
+                name += f" [{rec['variant']}]"
+                rec = dict(rec, arch=name)
+            lines.append(fmt_row(rec))
+    return "\n".join(lines) + "\n"
+
+
+def variant_table(arch: str, shape: str) -> str:
+    """All variants for one cell — the §Perf iteration log rows."""
+    rows = []
+    for mesh in ("16x16",):
+        d = ROOT / mesh
+        for p in sorted(d.glob(f"{arch}__{shape}*.json")):
+            try:
+                rec = json.load(open(p, encoding="utf-8"))
+            except ValueError:
+                continue
+            if rec.get("ok"):
+                rows.append(rec)
+    rows.sort(key=lambda r: r.get("bound_step_s", 9e9))
+    lines = [f"#### {arch} × {shape} — variants by bound step time",
+             "",
+             "| variant | compute ms | memory ms | collective ms | "
+             "bound ms | HBM |",
+             "|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r.get('variant', 'baseline')} | {r['compute_s'] * 1e3:.1f} "
+            f"| {r['memory_s'] * 1e3:.1f} | {r['collective_s'] * 1e3:.1f} "
+            f"| {r['bound_step_s'] * 1e3:.1f} "
+            f"| {r['hbm_frac_used'] * 100:.0f}% |")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--variants", action="store_true")
+    ap.add_argument("--cell", nargs=2, metavar=("ARCH", "SHAPE"))
+    args = ap.parse_args()
+    if args.cell:
+        print(variant_table(*args.cell))
+        return
+    meshes = [args.mesh] if args.mesh else ["16x16", "2x16x16"]
+    for mesh in meshes:
+        print(table(mesh, args.variants))
+
+
+if __name__ == "__main__":
+    main()

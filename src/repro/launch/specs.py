@@ -1,0 +1,147 @@
+"""Abstract inputs + shardings for every (arch × shape × mesh) cell.
+
+This is the glue the dry-run and the launcher share: ShapeDtypeStruct
+stand-ins for all step arguments (no device allocation) plus the
+NamedShardings that place them on the mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models.modality import batch_specs
+from repro.models.transformer import Model
+from repro.optim.optimizer import AdamW
+from repro.train.sharding import ShardingCtx, param_shardings
+
+
+def batch_axes(ctx: ShardingCtx) -> Tuple[str, ...]:
+    return tuple(a for a in ctx.rules.get("batch", ())
+                 if ctx.mesh is not None and a in ctx.mesh.axis_names)
+
+
+def data_shard_size(ctx: ShardingCtx) -> int:
+    n = 1
+    for a in batch_axes(ctx):
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the model inputs of this cell."""
+    return batch_specs(arch, shape.seq_len, shape.global_batch, shape.kind)
+
+
+def input_shardings(ctx: ShardingCtx,
+                    specs: Dict[str, jax.ShapeDtypeStruct]
+                    ) -> Dict[str, NamedSharding]:
+    """Batch dim over the data axes (replicated if not divisible)."""
+    out = {}
+    dsz = data_shard_size(ctx)
+    baxes = batch_axes(ctx)
+    spec_batch = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    for name, s in specs.items():
+        if s.shape and s.shape[0] % max(dsz, 1) == 0 and dsz > 1:
+            parts = (spec_batch,) + (None,) * (len(s.shape) - 1)
+        else:
+            parts = (None,) * len(s.shape)
+        out[name] = NamedSharding(ctx.mesh, P(*parts))
+    return out
+
+
+def cache_shardings(ctx: ShardingCtx, model: Model, cache_shapes
+                    ) -> Any:
+    """Shardings for the decode-cache pytree.
+
+    KV caches [L, B, S, KV, D]: batch over the data axes when divisible;
+    otherwise (long-context, batch=1) the *sequence* is sharded over the
+    data axes (flash-decoding style — XLA inserts the partial-softmax
+    combines).  KV heads go over "model" when they divide.
+    """
+    mesh = ctx.mesh
+    dsz = data_shard_size(ctx)
+    baxes = batch_axes(ctx)
+    spec_b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    msz = mesh.shape.get("model", 1)
+
+    def leaf(path_key: str, s) -> NamedSharding:
+        shp = s.shape
+        if path_key == "pos" or not shp:
+            return NamedSharding(mesh, P())
+        if path_key in ("k", "v"):
+            l, b, seq, kv, d = shp
+            kv_ax = "model" if kv % msz == 0 and msz > 1 else None
+            # when KV heads don't divide the model axis, shard the cache
+            # SEQUENCE over it instead (flash-decoding style: partial
+            # softmax stats combine via the collectives XLA inserts)
+            seq_ax = None
+            if kv_ax is None and msz > 1 and seq % msz == 0:
+                seq_ax = "model"
+            if b % max(dsz, 1) == 0 and dsz > 1:
+                return NamedSharding(mesh, P(None, spec_b, seq_ax, kv_ax,
+                                             None))
+            # batch unshardable (long-context, B=1): sequence takes both
+            # the data and (if free) the model axes
+            if seq_ax is None:
+                return NamedSharding(mesh, P(None, None, spec_b, kv_ax,
+                                             None))
+            both = tuple([a for a in (baxes if isinstance(
+                baxes, tuple) else ((baxes,) if baxes else ()))] +
+                ["model"])
+            total = 1
+            for a in both:
+                total *= mesh.shape[a]
+            if seq % total == 0:
+                return NamedSharding(mesh, P(None, None, both, None, None))
+            return NamedSharding(mesh, P(None, None, "model", kv_ax,
+                                         None))
+        if path_key == "ssm":
+            l, b, h, p_, n = shp
+            h_ax = "model" if h % msz == 0 and msz > 1 else None
+            if b % max(dsz, 1) == 0 and dsz > 1:
+                return NamedSharding(mesh, P(None, spec_b, h_ax, None,
+                                             None))
+            return NamedSharding(mesh, P(None, None, h_ax, None, None))
+        if path_key == "conv":
+            l, b, w, c = shp
+            c_ax = "model" if c % msz == 0 and msz > 1 else None
+            if b % max(dsz, 1) == 0 and dsz > 1:
+                return NamedSharding(mesh, P(None, spec_b, None, c_ax))
+            return NamedSharding(mesh, P(None, None, None, c_ax))
+        if path_key in ("xk", "xv"):
+            n, b, t, kv, d = shp
+            kv_ax = "model" if kv % msz == 0 and msz > 1 else None
+            if b % max(dsz, 1) == 0 and dsz > 1:
+                return NamedSharding(mesh, P(None, spec_b, None, kv_ax,
+                                             None))
+            return NamedSharding(mesh, P(None, None, None, kv_ax, None))
+        return NamedSharding(mesh, P())
+
+    return {k: leaf(k, v) for k, v in cache_shapes.items()}
+
+
+def abstract_state(model: Model, optimizer: Optional[AdamW] = None):
+    """eval_shape the params (and optimizer state) — no allocation."""
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if optimizer is None:
+        return params, None
+    opt_state = jax.eval_shape(optimizer.init, params)
+    return params, opt_state
+
+
+def opt_state_shardings(ctx: ShardingCtx, params_sh, opt_state_shape):
+    """Optimizer state mirrors params (count replicated)."""
+    from repro.optim.optimizer import OptState
+    mesh = ctx.mesh
+    return OptState(
+        count=NamedSharding(mesh, P()),
+        mu=params_sh,
+        nu=params_sh,
+    )

@@ -1,0 +1,7 @@
+"""Model substrate: family-generic transformer covering all assigned
+architectures."""
+
+from repro.models.modality import batch_specs, make_batch
+from repro.models.transformer import Model, ModelOptions
+
+__all__ = ["Model", "ModelOptions", "batch_specs", "make_batch"]

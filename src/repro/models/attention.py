@@ -1,0 +1,271 @@
+"""Attention: GQA with causal/sliding-window masks, softcap, online-softmax
+chunking, and decode against global or ring (sliding-window) KV caches.
+
+Two execution paths:
+
+* **direct** — one einsum, for short sequences (and smoke tests);
+* **chunked** — ``lax.scan`` over KV blocks with online softmax (running
+  max / normalizer), the XLA-level flash-attention formulation.  This is
+  what keeps prefill_32k temp memory bounded, and its Pallas twin in
+  ``repro.kernels.flash_attention`` is the TPU fast path.
+
+The sliding window is a *traced* scalar so that gemma-style local/global
+alternation can live inside one scanned layer stack (global layers simply
+pass window = 2^30).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap as _softcap
+
+NEG_INF = -1e30
+GLOBAL_WINDOW = jnp.int32(1 << 30)
+
+
+def _mask(q_pos: jnp.ndarray, kv_pos: jnp.ndarray, causal: bool,
+          window) -> jnp.ndarray:
+    """[..., Sq, Skv] boolean validity mask from positions.
+
+    kv_pos < 0 marks invalid (padded / not-yet-filled) slots.
+    """
+    q = q_pos[..., :, None].astype(jnp.int32)
+    k = kv_pos[..., None, :].astype(jnp.int32)
+    valid = k >= 0
+    if causal:
+        valid &= k <= q
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        valid &= (q - k) < w
+    return valid
+
+
+def _direct_attend(q, k, v, q_pos, kv_pos, *, causal, window, cap, scale):
+    b, sq, n_kv, g, d = q.shape
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = _softcap(logits, cap)
+    mask = _mask(q_pos, kv_pos, causal, window)          # [b?, sq, skv]
+    while mask.ndim < logits.ndim:
+        mask = mask[..., None, :, :] if mask.ndim >= 2 else mask
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out
+
+
+def _chunk_kv(k, v, kv_pos, chunk):
+    b, skv, n_kv, d = k.shape
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, pad),), constant_values=-1)
+    k = k.reshape(b, n_chunks, chunk, n_kv, d).transpose(1, 0, 2, 3, 4)
+    v = v.reshape(b, n_chunks, chunk, n_kv, d).transpose(1, 0, 2, 3, 4)
+    kv_pos = kv_pos.reshape(n_chunks, chunk)
+    return k, v, kv_pos, pad
+
+
+def _chunk_logits(q, kc, kp, q_pos, causal, window, cap, scale):
+    """[b, n_kv, g, sq, chunk] masked (soft-capped) logits for one chunk.
+    Also returns the pre-cap scores (needed for the softcap derivative)."""
+    raw = jnp.einsum("bqhgd,bkhd->bhgqk", q, kc,
+                     preferred_element_type=jnp.float32) * scale
+    capped = _softcap(raw, cap)
+    mask = _mask(q_pos, kp, causal, window)              # [sq, chunk]
+    logits = jnp.where(mask[None, None, None], capped, NEG_INF)
+    return logits, capped, mask
+
+
+def _flash_fwd(q, k, v, q_pos, kv_pos, causal, window, cap, scale, chunk):
+    """Online-softmax forward.  Returns (out [b,h,g,sq,d], lse)."""
+    b, sq, n_kv, g, d = q.shape
+    kcs, vcs, kps, _ = _chunk_kv(k, v, kv_pos, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, kp = xs
+        logits, _, _ = _chunk_logits(q, kc, kp, q_pos, causal, window,
+                                     cap, scale)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, n_kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kcs, vcs, kps))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)                            # [b,h,g,sq]
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _flash_attend(q, k, v, q_pos, kv_pos, window, causal, cap, scale,
+                  chunk):
+    """Memory-bounded chunked attention with a flash-style custom VJP.
+
+    Without this, ``jax.lax.scan`` AD saves the per-chunk probability
+    tensors for the backward pass — O(Sq x Skv) per layer.  The custom
+    backward recomputes each chunk's logits from (q, k, lse) instead,
+    exactly like the Pallas/TPU flash backward.  ``window`` is an int32
+    scalar array (may be traced; 2^30 disables), gradient None.
+    """
+    out, _ = _flash_fwd(q, k, v, q_pos, kv_pos, causal, window, cap,
+                        scale, chunk)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+def _flash_attend_fwd(q, k, v, q_pos, kv_pos, window, causal, cap, scale,
+                      chunk):
+    out, lse = _flash_fwd(q, k, v, q_pos, kv_pos, causal, window, cap,
+                          scale, chunk)
+    out_t = out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+    return out_t, (q, k, v, q_pos, kv_pos, window, out, lse)
+
+
+def _flash_attend_bwd(causal, cap, scale, chunk, res, g_out):
+    q, k, v, q_pos, kv_pos, window, out, lse = res
+    b, sq, n_kv, gq, d = q.shape
+    skv = k.shape[1]
+    do = g_out.transpose(0, 2, 3, 1, 4).astype(jnp.float32)  # [b,h,g,sq,d]
+    delta = jnp.sum(do * out, axis=-1)                       # [b,h,g,sq]
+    kcs, vcs, kps, _ = _chunk_kv(k, v, kv_pos, chunk)
+    qf = q.astype(jnp.float32)
+
+    def body(dq_acc, xs):
+        kc, vc, kp = xs
+        logits, capped, mask = _chunk_logits(qf, kc, kp, q_pos, causal,
+                                             window, cap, scale)
+        p = jnp.exp(logits - lse[..., None])                 # [b,h,g,sq,c]
+        dv_c = jnp.einsum("bhgqk,bhgqd->bkhd", p, do)
+        dp = jnp.einsum("bhgqd,bkhd->bhgqk", do,
+                        vc.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])                     # d wrt capped
+        if cap:
+            ds = ds * (1.0 - jnp.square(capped / cap))
+        ds = jnp.where(mask[None, None, None], ds, 0.0) * scale
+        dq_c = jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                          kc.astype(jnp.float32))
+        dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qf)
+        return dq_acc + dq_c, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, sq, n_kv, gq, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kcs, vcs, kps))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, -1, n_kv, d)[:, :skv]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, -1, n_kv, d)[:, :skv]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None, None)
+
+
+_flash_attend.defvjp(_flash_attend_fwd, _flash_attend_bwd)
+
+
+def _chunked_attend(q, k, v, q_pos, kv_pos, *, causal, window, cap, scale,
+                    chunk: int, q_chunk: int = 4096):
+    """Online-softmax attention, blocked over BOTH q and kv, with the
+    flash-style custom VJP.
+
+    KV blocking bounds the per-iteration logits tile; q blocking bounds it
+    again for long prefills (without it a 32k-query prefill materializes a
+    [B,H,32k,chunk] tile per kv step)."""
+    b, sq, n_kv, g, d = q.shape
+    window_arr = (GLOBAL_WINDOW if window is None
+                  else jnp.asarray(window, jnp.int32))
+
+    if sq > q_chunk:
+        nq = -(-sq // q_chunk)
+        pad_q = nq * q_chunk - sq
+        if pad_q:
+            q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+            q_pos = jnp.pad(q_pos, ((0, pad_q),), constant_values=-1)
+        qb = q.reshape(b, nq, q_chunk, n_kv, g, d).transpose(
+            1, 0, 2, 3, 4, 5)
+        qp = q_pos.reshape(nq, q_chunk)
+
+        def qstep(_, xs):
+            qc, qpc = xs
+            out = _flash_attend(qc, k, v, qpc, kv_pos, window_arr, causal,
+                                cap, scale, chunk)
+            return None, out
+
+        _, outs = jax.lax.scan(qstep, None, (qb, qp))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(
+            b, nq * q_chunk, n_kv, g, d)
+        return out[:, :sq]
+    return _flash_attend(q, k, v, q_pos, kv_pos, window_arr, causal, cap,
+                         scale, chunk)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           q_pos: jnp.ndarray, kv_pos: jnp.ndarray, *,
+           causal: bool = True, window=None, cap: float = 0.0,
+           scale: Optional[float] = None, chunk: int = 0,
+           q_chunk: int = 4096) -> jnp.ndarray:
+    """Grouped-query attention.
+
+    q: [B, Sq, Hq, D];  k/v: [B, Skv, Hkv, D];  q_pos: [Sq]; kv_pos: [Skv]
+    (position < 0 == invalid slot).  Returns [B, Sq, Hq, D].
+    """
+    b, sq, hq, d = q.shape
+    n_kv = k.shape[2]
+    g = hq // n_kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, n_kv, g, d)
+    if chunk and k.shape[1] > chunk:
+        out = _chunked_attend(qg, k, v, q_pos, kv_pos, causal=causal,
+                              window=window, cap=cap, scale=scale,
+                              chunk=chunk, q_chunk=q_chunk)
+    else:
+        out = _direct_attend(qg, k, v, q_pos, kv_pos, causal=causal,
+                             window=window, cap=cap, scale=scale)
+    return out.reshape(b, sq, hq, d)
+
+
+# ---------------------------------------------------------------- caches ----
+
+def ring_slot_positions(pos, width: int) -> jnp.ndarray:
+    """Token position stored in each ring-buffer slot after writing
+    position ``pos`` (traced scalar); -1 when the slot is still empty.
+
+    Slot s holds the most recent position p <= pos with p % width == s.
+    """
+    s = jnp.arange(width, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    p = pos - jnp.mod(pos - s, width)
+    return jnp.where(p >= 0, p, -1)
+
+
+def ring_gather_indices(seq_len: int, width: int) -> jnp.ndarray:
+    """Indices into a [S] sequence whose last ``width`` tokens fill the
+    ring buffer slots (static version, used by prefill).  Invalid -> 0 with
+    positions marked -1 separately."""
+    s = jnp.arange(width, dtype=jnp.int32)
+    last = seq_len - 1
+    p = last - jnp.mod(last - s, width)
+    return p  # may be negative if seq_len < width
+
+
+def build_ring_cache(k: jnp.ndarray, v: jnp.ndarray, width: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fill a ring cache from a full prefill sequence [B, S, Hkv, D]."""
+    seq_len = k.shape[1]
+    idx = ring_gather_indices(seq_len, width)
+    safe = jnp.clip(idx, 0, seq_len - 1)
+    kc = jnp.take(k, safe, axis=1)
+    vc = jnp.take(v, safe, axis=1)
+    return kc, vc

@@ -1,0 +1,88 @@
+"""Shared building blocks: norms, rotary embeddings, gated MLP, embedding."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 style logit soft-capping: cap*tanh(x/cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: jnp.ndarray | float = 10_000.0) -> jnp.ndarray:
+    """Rotary position embedding.
+
+    x: [..., S, H, D]; positions: [..., S] (broadcastable).  ``theta`` may
+    be a traced scalar (per-layer theta inside a scanned stack).
+    """
+    d_half = x.shape[-1] // 2
+    freq_exp = jnp.arange(d_half, dtype=jnp.float32) / d_half
+    theta = jnp.asarray(theta, dtype=jnp.float32)
+    inv_freq = theta ** (-freq_exp)                     # [D/2]
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # [...,S,D/2]
+    angles = angles[..., :, None, :]                    # [..., S, 1, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :d_half], x[..., d_half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gated_mlp(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+              w_down: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    """SwiGLU / GeGLU feed-forward."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    if act == "gelu":
+        g = jax.nn.gelu(g, approximate=True)
+    else:
+        g = jax.nn.silu(g)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray,
+                 scale_by_dim: bool = False) -> jnp.ndarray:
+    out = jnp.take(table, tokens, axis=0)
+    if scale_by_dim:
+        out = out * jnp.asarray(math.sqrt(table.shape[1]), out.dtype)
+    return out
+
+
+def unembed(x: jnp.ndarray, table_or_head: jnp.ndarray, tied: bool,
+            final_cap: float = 0.0) -> jnp.ndarray:
+    """Project to vocabulary logits (in f32 for loss stability)."""
+    x = x.astype(jnp.float32)
+    w = table_or_head.astype(jnp.float32)
+    if tied:
+        logits = jnp.einsum("...d,vd->...v", x, w)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, w)
+    return softcap(logits, final_cap)
+
+
+# ------------------------------------------------------------------- inits --
+
+def trunc_normal(key, shape, std: float, dtype) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    return trunc_normal(key, shape, 1.0 / math.sqrt(max(fan, 1)), dtype)

@@ -1,0 +1,63 @@
+"""Modality frontends (stubs, per task spec) and batch construction.
+
+``[audio]``/``[vlm]`` architectures specify the transformer BACKBONE only;
+the EnCodec/vision towers are stubs: ``batch_specs`` (and the synthetic
+``make_batch``) provide precomputed frame/patch embeddings directly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+
+
+def batch_specs(cfg: ArchConfig, seq_len: int, batch: int, kind: str
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run pattern:
+    weak-type-correct, shardable, no device allocation)."""
+    dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    s = seq_len if kind != "decode" else 1
+    if cfg.frontend == "audio_frames":
+        specs["embeds"] = jax.ShapeDtypeStruct((batch, s, cfg.d_model), dt)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, s), jnp.int32)
+    if kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((batch, s), jnp.int32)
+        specs["loss_mask"] = jax.ShapeDtypeStruct((batch, s), jnp.float32)
+    if cfg.frontend == "image_patches" and kind != "decode":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_image_tokens, cfg.d_model), dt)
+    return specs
+
+
+def make_batch(cfg: ArchConfig, seq_len: int, batch: int, kind: str,
+               seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Synthetic batch matching :func:`batch_specs` (smoke tests/examples)."""
+    rng = np.random.default_rng(seed)
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, jnp.ndarray] = {}
+    s = seq_len if kind != "decode" else 1
+    if cfg.frontend == "audio_frames":
+        out["embeds"] = jnp.asarray(
+            rng.standard_normal((batch, s, cfg.d_model), np.float32) * 0.1,
+            dtype=dt)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, s)), dtype=jnp.int32)
+    if kind == "train":
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, s)), dtype=jnp.int32)
+        out["loss_mask"] = jnp.ones((batch, s), jnp.float32)
+    if cfg.frontend == "image_patches" and kind != "decode":
+        out["image_embeds"] = jnp.asarray(
+            rng.standard_normal(
+                (batch, cfg.num_image_tokens, cfg.d_model),
+                np.float32) * 0.1, dtype=dt)
+    return out

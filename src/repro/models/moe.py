@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with GShard-style dense dispatch.
+
+Top-k routing with per-expert capacity; dispatch/combine are one-hot
+einsums, which is the TPU-native formulation (dense matmuls on the MXU,
+no scatter).  Experts are sharded over the ``model`` mesh axis (expert
+parallelism); the dispatched activations [groups, E, capacity, d] carry an
+explicit sharding constraint on E so XLA partitions the expert computation
+instead of replicating it.
+
+Covers both assigned MoE archs: Llama-4-Scout (16e top-1 + shared expert)
+and Granite (40e top-8, fine-grained).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_moe_params(key, cfg, dtype) -> Dict[str, jnp.ndarray]:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 6)
+    params = {
+        "norm_scale": jnp.zeros((d,), dtype),  # pre-FFN norm
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, ff), dtype),
+        "w_up": dense_init(ks[2], (e, d, ff), dtype),
+        "w_down": dense_init(ks[3], (e, ff, d), dtype, fan_in=ff),
+    }
+    if cfg.shared_expert:
+        params["shared_gate"] = dense_init(ks[4], (d, ff), dtype)
+        params["shared_up"] = dense_init(ks[5], (d, ff), dtype)
+        params["shared_down"] = dense_init(
+            jax.random.fold_in(key, 7), (ff, d), dtype, fan_in=ff)
+    return params
+
+
+def _capacity(group_size: int, num_experts: int, k: int, factor: float
+              ) -> int:
+    cap = int(math.ceil(group_size * k / num_experts * factor))
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for lane alignment
+
+
+def apply_moe(params, cfg, x: jnp.ndarray, ctx=None,
+              group_size: int = 2048) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """MoE FFN.  x: [B, S, d].  Returns (y, aux_losses).
+
+    Tokens are processed in groups (capacity is per-group), following
+    GShard; group boundaries follow the batch*seq layout so groups stay
+    aligned with the data shards.
+    """
+    bsz, seq, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    tokens = bsz * seq
+    g_sz = min(group_size, tokens)
+    n_groups = tokens // g_sz
+    assert n_groups * g_sz == tokens, (tokens, g_sz)
+    cap = _capacity(g_sz, e, k, cfg.moe_capacity_factor)
+
+    xt = x.reshape(n_groups, g_sz, d)
+    if ctx is not None:
+        xt = ctx.act(xt, "batch", None, "embed")
+
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        params["router"])                      # [g,s,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)                # [g,s,k]
+    top_w = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert's capacity buffer
+    dispatch = jnp.zeros((n_groups, g_sz, e, cap), x.dtype)
+    combine = jnp.zeros((n_groups, g_sz, e, cap), jnp.float32)
+    prior = jnp.zeros((n_groups, 1, e), jnp.int32)
+    for slot in range(k):
+        onehot = jax.nn.one_hot(top_idx[..., slot], e, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + prior           # [g,s,E]
+        prior = prior + onehot.sum(axis=1, keepdims=True)
+        within = (pos < cap) & (onehot > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(within, pos, -1), cap,
+                                dtype=x.dtype)                 # [g,s,E,cap]
+        dispatch = dispatch + pos_oh
+        combine = combine + pos_oh.astype(jnp.float32) \
+            * top_w[..., slot][..., None, None]
+
+    if ctx is not None:
+        dispatch = ctx.act(dispatch, "batch", None, "experts", None)
+        combine = ctx.act(combine, "batch", None, "experts", None)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xt)            # [g,E,cap,d]
+    if ctx is not None:
+        xe = ctx.act(xe, "batch", "experts", None, "embed")
+    h_gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]))
+    h_up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h_gate * h_up, params["w_down"])
+    if ctx is not None:
+        ye = ctx.act(ye, "batch", "experts", None, "embed")
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+
+    if cfg.shared_expert:
+        sh = jax.nn.silu(jnp.einsum("gsd,df->gsf", xt, params["shared_gate"]))
+        sh = sh * jnp.einsum("gsd,df->gsf", xt, params["shared_up"])
+        y = y + jnp.einsum("gsf,fd->gsd", sh, params["shared_down"])
+
+    # aux losses: load balance (Switch) + router z-loss
+    me = probs.mean(axis=1)                                    # [g,E]
+    ce = jax.nn.one_hot(top_idx[..., 0], e).mean(axis=1)       # [g,E]
+    lb_loss = (me * ce).sum(-1).mean() * e
+    z_loss = jnp.square(jax.nn.logsumexp(logits, axis=-1)).mean()
+    # fraction of tokens dropped (capacity overflow) — a monitoring metric
+    routed = dispatch.sum(axis=(2, 3))                         # [g,s]
+    dropped = 1.0 - (routed.astype(jnp.float32).mean() / k)
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_drop_frac": dropped}
+    return y.reshape(bsz, seq, d), aux

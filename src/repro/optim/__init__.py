@@ -1,0 +1,2 @@
+"""Optimizer substrate: AdamW + schedules + gradient compression."""
+from repro.optim.optimizer import AdamW, OptimizerConfig, OptState, lr_at

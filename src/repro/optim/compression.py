@@ -1,0 +1,77 @@
+"""Gradient compression for cross-pod data parallelism (beyond-paper).
+
+Cross-pod links (DCN class) are the scarcest bandwidth in a multi-pod
+mesh.  We provide int8 error-feedback quantization:
+
+* :func:`quantize` / :func:`dequantize` — per-tensor symmetric int8 with a
+  f32 scale; the quantization residual is carried in an error-feedback
+  buffer so the compression bias vanishes over steps (1-bit-Adam lineage).
+* :func:`compressed_psum` — a ``shard_map``-compatible mean-reduction that
+  sums int8 payloads (as int32 to avoid overflow) over a named axis; on a
+  real fabric only the int8 payload + scale crosses the link (4x fewer
+  bytes than f32, 2x fewer than bf16).
+
+The trainer applies this to the *pod* axis only; within-pod reductions
+stay full precision (ICI is plentiful).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jnp.ndarray, err: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization with error feedback.
+
+    Returns (q int8, scale f32 scalar, new_err f32)."""
+    xf = x.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(xf)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    new_err = xf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, err: jnp.ndarray, axis_name: str
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean-reduce ``x`` over ``axis_name`` with int8 payloads.
+
+    Must run inside shard_map with ``axis_name`` bound.  The scale is
+    max-reduced first so all participants share one grid; payload sums in
+    int32."""
+    xf = x.astype(jnp.float32) + err
+    local_scale = jnp.maximum(jnp.max(jnp.abs(xf)) / 127.0, 1e-12)
+    scale = jax.lax.pmax(local_scale, axis_name)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    new_err = xf - q.astype(jnp.float32) * scale
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+    mean = total.astype(jnp.float32) * scale / n.astype(jnp.float32)
+    return mean.astype(x.dtype), new_err
+
+
+def init_error_buffers(tree) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def compress_tree(grads, errors) -> Tuple[Any, Any]:
+    """Quantize-dequantize every leaf with error feedback (single-process
+    simulation of the wire format; bit-exact with the sharded path when
+    the axis has one participant)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(errors)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = quantize(g, e)
+        out_g.append(dequantize(q, s).astype(g.dtype))
+        out_e.append(ne)
+    return treedef.unflatten(out_g), treedef.unflatten(out_e)

@@ -1,0 +1,3 @@
+"""Training/serving steps and sharding rules."""
+from repro.train.sharding import NULL_CTX, ShardingCtx, param_shardings, param_specs
+from repro.train.step import StepConfig, make_eval_step, make_loss_fn, make_train_step

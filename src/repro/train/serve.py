@@ -1,0 +1,95 @@
+"""Batched serving: prefill + decode engine with monitoring hooks.
+
+``serve_step`` (one decode token for the whole batch against the KV/SSM
+state) is what the ``decode_*`` / ``long_*`` dry-run cells lower.
+:class:`ServeEngine` is the runnable engine used by the serving example:
+continuous batched greedy decode with per-step monitor callbacks.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+
+
+def make_prefill_step(model: Model, extra_slots: int = 0):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, extra_slots=extra_slots)
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """One batched greedy decode step: (params, tokens, cache) ->
+    (next_tokens, cache)."""
+    def serve_step(params, batch, cache):
+        logits, cache = model.decode_step(params, batch, cache)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt, cache
+    return serve_step
+
+
+@dataclass
+class ServeRequest:
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 16
+    out: Optional[np.ndarray] = None
+
+
+class ServeEngine:
+    """Minimal batched engine: collects requests into a fixed batch,
+    prefills once, then decodes greedily; reports steps to the monitor."""
+
+    def __init__(self, model: Model, params, batch_size: int,
+                 max_len: int, monitor=None) -> None:
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.monitor = monitor
+        self._step = jax.jit(make_serve_step(model))
+        self.requests: List[ServeRequest] = []
+        self.steps_done = 0
+
+    def submit(self, req: ServeRequest) -> None:
+        if len(self.requests) >= self.batch_size:
+            raise RuntimeError("batch full")
+        self.requests.append(req)
+
+    def run(self) -> List[ServeRequest]:
+        assert self.requests, "no requests"
+        b = len(self.requests)
+        plen = max(len(r.prompt) for r in self.requests)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(self.requests):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        max_new = max(r.max_new_tokens for r in self.requests)
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.model.cfg.frontend == "image_patches":
+            batch["image_embeds"] = jnp.zeros(
+                (b, self.model.cfg.num_image_tokens,
+                 self.model.cfg.d_model), self.model.dtype)
+        prefill = jax.jit(make_prefill_step(self.model,
+                                            extra_slots=max_new))
+        logits, cache = prefill(self.params, batch)
+        nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+        outs = [[] for _ in range(b)]
+        t_start = time.time()
+        for step in range(max_new):
+            for i in range(b):
+                outs[i].append(int(nxt[i]))
+            nxt, cache = self._step(
+                self.params, {"tokens": nxt[:, None]}, cache)
+            self.steps_done += 1
+            if self.monitor is not None:
+                self.monitor.on_step(self.steps_done, tokens=b)
+        for i, r in enumerate(self.requests):
+            r.out = np.asarray(outs[i][: r.max_new_tokens], np.int32)
+        done, self.requests = self.requests, []
+        return done

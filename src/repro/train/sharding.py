@@ -1,0 +1,206 @@
+"""Logical-axis sharding: how every tensor maps onto the production mesh.
+
+Models annotate tensors with *logical* axes ("batch", "heads", "vocab",
+"experts", ...).  :class:`ShardingCtx` resolves logical axes to mesh axes
+given the actual mesh — including the multi-pod case, where "batch" maps
+to the combined ("pod", "data") axes, and the degenerate cases where an
+axis does not divide (resolved to replication or handled by GSPMD uneven-
+shard padding).
+
+Parameter specs are derived from leaf *paths* by pattern rules
+(:func:`param_logical`), so model code never mentions mesh axes.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Optional[str]
+
+# Default logical->mesh mapping.  ``batch`` spreads over the pure-data axes
+# (pod+data); ``model-ish`` axes go to the tensor axis.  A rule value may be
+# a tuple of mesh axes (tried in order, combined).
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),          # ZeRO-style parameter sharding dim
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "d_ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "inner": ("model",),        # SSM expanded dim
+    "seq_shard": ("data",),     # long-context KV/sequence sharding
+    "embed": (),                # d_model stays replicated by default
+    "seq": (),
+}
+
+
+@dataclass(frozen=True)
+class ShardingCtx:
+    """Resolves logical axes against a concrete mesh.
+
+    ``strict_divisibility``: when a logical axis size is known and does not
+    divide the mesh axis product, fall back to replication for that axis
+    (GSPMD could pad, but padded weight shards waste memory & compute; for
+    activations we prefer explicitness).
+    """
+
+    mesh: Optional[Mesh] = None
+    rules: Dict[str, Tuple[str, ...]] = field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+
+    # ------------------------------------------------------------ resolve
+    def mesh_axes(self, logical: Logical, dim_size: Optional[int] = None
+                  ) -> Union[None, str, Tuple[str, ...]]:
+        if logical is None or self.mesh is None:
+            return None
+        axes = tuple(a for a in self.rules.get(logical, ())
+                     if a in self.mesh.axis_names)
+        if not axes:
+            return None
+        if dim_size is not None:
+            total = 1
+            kept = []
+            for a in axes:
+                n = self.mesh.shape[a]
+                if dim_size % (total * n) == 0:
+                    kept.append(a)
+                    total *= n
+                else:
+                    break
+            axes = tuple(kept)
+            if not axes:
+                return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, logicals: Sequence[Logical],
+             shape: Optional[Sequence[int]] = None) -> P:
+        parts = []
+        used: set = set()
+        for i, lg in enumerate(logicals):
+            dim = shape[i] if shape is not None else None
+            ax = self.mesh_axes(lg, dim)
+            # one mesh axis may shard only one dim
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax if a not in used) or None
+                if isinstance(ax, tuple) and len(ax) == 1:
+                    ax = ax[0]
+            if isinstance(ax, str) and ax in used:
+                ax = None
+            if isinstance(ax, tuple):
+                used.update(ax)
+            elif isinstance(ax, str):
+                used.add(ax)
+            parts.append(ax)
+        return P(*parts)
+
+    def sharding(self, logicals: Sequence[Logical],
+                 shape: Optional[Sequence[int]] = None
+                 ) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logicals, shape))
+
+    # --------------------------------------------------------- activations
+    def act(self, x, *logicals: Logical):
+        """Apply a sharding constraint to an activation (no-op w/o mesh)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(logicals, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def with_rules(self, **updates: Tuple[str, ...]) -> "ShardingCtx":
+        rules = dict(self.rules)
+        rules.update(updates)
+        return replace(self, rules=rules)
+
+
+NULL_CTX = ShardingCtx(mesh=None)
+
+
+# ------------------------------------------------------------- param rules --
+
+# (path regex, logical axes per dim) — first match wins.  Paths look like
+# "embed/table", "blocks/attn/wq", "blocks/moe/experts_in", ...
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Logical, ...]], ...] = (
+    (r"(^|/)embed/table$", ("vocab", "fsdp")),
+    (r"(^|/)lm_head$", ("fsdp", "vocab")),
+    (r"(^|/)meta_tokens$", (None, None)),
+    # attention — stacked per-layer leading dim
+    (r"/attn[^/]*/wq$", (None, "fsdp", "heads", None)),
+    (r"/attn[^/]*/wk$", (None, "fsdp", "kv_heads", None)),
+    (r"/attn[^/]*/wv$", (None, "fsdp", "kv_heads", None)),
+    (r"/attn[^/]*/wo$", (None, "heads", None, "fsdp")),
+    (r"/attn[^/]*/(q_norm|k_norm)$", (None, None)),
+    # mlp
+    (r"/mlp/w_gate$", (None, "fsdp", "d_ff")),
+    (r"/mlp/w_up$", (None, "fsdp", "d_ff")),
+    (r"/mlp/w_down$", (None, "d_ff", "fsdp")),
+    # moe
+    (r"/moe/router$", (None, "fsdp", "experts")),
+    (r"/moe/w_gate$", (None, "experts", "fsdp", None)),
+    (r"/moe/w_up$", (None, "experts", "fsdp", None)),
+    (r"/moe/w_down$", (None, "experts", None, "fsdp")),
+    (r"/moe/shared_(gate|up)$", (None, "fsdp", "d_ff")),
+    (r"/moe/shared_down$", (None, "d_ff", "fsdp")),
+    # ssm
+    (r"/ssm/in_proj$", (None, "fsdp", "inner")),
+    (r"/ssm/conv_w$", (None, None, "inner")),
+    (r"/ssm/out_proj$", (None, "inner", "fsdp")),
+    (r"/ssm/(a_log|d_skip|dt_bias)$", (None, "inner")),
+    (r"/ssm/norm_scale$", (None, "inner")),
+    # norms and everything small: replicated
+    (r".*(norm|scale|bias).*", None),
+)
+
+
+def param_logical(path: str, ndim: int) -> Tuple[Logical, ...]:
+    for pattern, logicals in _PARAM_RULES:
+        if re.search(pattern, path):
+            if logicals is None:
+                return (None,) * ndim
+            if len(logicals) == ndim:
+                return logicals
+            if len(logicals) == ndim + 1 and logicals[0] is None:
+                return logicals[1:]   # non-stacked variant of a stacked rule
+            if len(logicals) == ndim - 1:
+                return (None,) + logicals  # extra stacking dim
+    return (None,) * ndim
+
+
+def tree_paths(tree, prefix: str = ""):
+    """Yield (path, leaf) with '/'-joined dict keys."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from tree_paths(tree[k], f"{prefix}/{k}" if prefix else k)
+    else:
+        yield prefix, tree
+
+
+def param_specs(params, ctx: ShardingCtx):
+    """PartitionSpec pytree matching ``params`` (dict-of-dict-of-arrays)."""
+    def build(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: build(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in tree.items()}
+        logicals = param_logical(prefix, tree.ndim)
+        return ctx.spec(logicals, tree.shape)
+    return build(params)
+
+
+def param_shardings(params, ctx: ShardingCtx):
+    if ctx.mesh is None:
+        return None
+    def build(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: build(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in tree.items()}
+        logicals = param_logical(prefix, tree.ndim)
+        return NamedSharding(ctx.mesh, ctx.spec(logicals, tree.shape))
+    return build(params)

@@ -1,0 +1,70 @@
+"""Streaming anomaly detection (§4.6 outlook): EWMA z-score + CUSUM."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.anomaly import AnomalyBank, CusumDetector, EwmaDetector
+from repro.core.schema import MetricRecord
+
+
+def test_ewma_flags_step_change():
+    det = EwmaDetector(z_thresh=4.0, warmup=5)
+    rng = np.random.default_rng(0)
+    for x in 100 + rng.standard_normal(50):
+        assert det.update(float(x)) is None
+    z = det.update(30.0)  # sudden collapse
+    assert z is not None and z < -4
+
+
+def test_ewma_adapts_to_new_level():
+    """After a (flagged) level shift, the baseline re-converges and stops
+    alarming — no alarm storms."""
+    det = EwmaDetector(z_thresh=4.0, warmup=5)
+    rng = np.random.default_rng(1)
+    for x in 100 + rng.standard_normal(40):
+        det.update(float(x))
+    alarms = sum(det.update(float(x)) is not None
+                 for x in 50 + rng.standard_normal(60))
+    assert 1 <= alarms <= 12  # flags the shift, then re-baselines
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_ewma_quiet_on_stationary_noise(seed):
+    rng = np.random.default_rng(seed)
+    det = EwmaDetector(z_thresh=6.0, warmup=10)
+    alarms = sum(det.update(float(x)) is not None
+                 for x in rng.standard_normal(300))
+    assert alarms <= 3  # ~0 false positives at 6 sigma
+
+
+def test_cusum_catches_slow_drift():
+    """A drift of 0.15 sigma/step never trips a 4-sigma point alarm but
+    must trip CUSUM."""
+    rng = np.random.default_rng(2)
+    ew = EwmaDetector(z_thresh=4.0, warmup=5)
+    cs = CusumDetector(k=0.25, h=6.0, alpha=0.02)
+    point_alarms, drift_alarms = 0, 0
+    for i in range(300):
+        x = float(rng.standard_normal() + (i * 0.05 if i > 100 else 0.0))
+        if ew.update(x) is not None:
+            point_alarms += 1
+        if cs.update(x) is not None:
+            drift_alarms += 1
+    assert drift_alarms >= 1
+
+
+def test_anomaly_bank_end_to_end():
+    bank = AnomalyBank(metrics=("gflops",))
+    rng = np.random.default_rng(3)
+    events = []
+    for i in range(60):
+        g = 800 + rng.standard_normal() * 5 if i < 50 else 100.0
+        events += bank.feed(MetricRecord(
+            1000.0 + i, "n0", "j1", "perf", {"gflops": float(g)}))
+    assert any(e.detector == "ewma_anomaly" for e in events)
+    ev = next(e for e in events if e.detector == "ewma_anomaly")
+    assert ev.job == "j1" and ev.fields["metric"] == "gflops"
+    # streams are independent per host
+    bank.feed(MetricRecord(2000.0, "n1", "j1", "perf", {"gflops": 5.0}))
+    assert ("j1", "n1", "gflops") in bank._ewma

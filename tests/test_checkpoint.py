@@ -1,0 +1,79 @@
+"""Checkpoint manager: roundtrip, atomic commit, corruption tolerance,
+retention — the restart path the elastic supervisor relies on."""
+
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def tree():
+    return {"params": {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+                       "b": {"c": np.ones(5, dtype=np.int32)}},
+            "opt": {"count": np.int32(7),
+                    "mu": {"a": np.zeros((3, 4), np.float32)}}}
+
+
+def assert_tree_equal(a, b):
+    import jax
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_roundtrip(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    cm.save(10, tree(), extra_meta={"arch": "qwen3-8b"})
+    step, got, meta = cm.restore(10)
+    assert step == 10 and meta["arch"] == "qwen3-8b"
+    assert_tree_equal(got, tree())
+
+
+def test_restore_latest_and_retention(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=2)
+    for s in (10, 20, 30):
+        cm.save(s, tree())
+    assert cm.list_steps() == [20, 30]
+    step, _, _ = cm.restore_latest()
+    assert step == 30
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=5)
+    cm.save(10, tree())
+    p = cm.save(20, tree())
+    (p / "COMMITTED").unlink()  # simulate crash before commit marker
+    assert cm.list_steps() == [10]
+    step, _, _ = cm.restore_latest()
+    assert step == 10
+
+
+def test_corrupt_latest_falls_back(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=5)
+    cm.save(10, tree())
+    p = cm.save(20, tree())
+    (p / "manifest.json").write_text("{corrupt")
+    step, _, _ = cm.restore_latest()
+    assert step == 10
+
+
+def test_restore_missing_raises(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        cm.restore(99)
+
+
+def test_namedtuple_roundtrip(tmp_path):
+    from repro.optim.optimizer import OptState
+    import jax.numpy as jnp
+    cm = CheckpointManager(tmp_path)
+    state = OptState(count=jnp.int32(3), mu={"w": jnp.ones((2, 2))},
+                     nu={"w": jnp.zeros((2, 2))})
+    cm.save(1, {"opt": state})
+    _, got, _ = cm.restore(1, namedtuple_types={"OptState": OptState})
+    assert isinstance(got["opt"], OptState)
+    assert int(got["opt"].count) == 3

@@ -1,0 +1,108 @@
+"""Detector tests: each paper case study fires exactly when it should."""
+
+from repro.core.aggregator import MetricStore
+from repro.core.daemon import JobManifest
+from repro.core.detectors import (DetectorBank, HangDetector,
+                                  IdleAcceleratorDetector,
+                                  LowMfuDetector,
+                                  LowParticipationDetector,
+                                  MemoryUnderuseDetector,
+                                  StragglerDetector)
+from repro.core.schema import MetricRecord
+
+
+def perf(ts, host, job, **f):
+    base = {"gflops": 100.0, "steps_per_s": 1.0, "mfu": 0.4,
+            "step_time_s": 1.0}
+    base.update(f)
+    return MetricRecord(ts, host, job, "perf", base)
+
+
+def device(ts, host, job, frac):
+    return MetricRecord(ts, host, job, "device",
+                        {"hbm_frac_used": frac, "local_devices": 4})
+
+
+def test_hang_detector_fires_after_patience():
+    store = MetricStore()
+    for i in range(3):
+        store.insert(perf(float(i), "n0", "j1"))
+    for i in range(3, 8):
+        store.insert(perf(float(i), "n0", "j1", gflops=0.0,
+                          steps_per_s=0.0))
+    events = HangDetector(patience=3).scan(store)
+    assert len(events) == 1
+    assert events[0].detector == "hang" and events[0].severity == "critical"
+
+
+def test_hang_detector_resets_on_progress():
+    store = MetricStore()
+    for i in range(10):
+        # alternating stall/progress never reaches patience=3
+        store.insert(perf(float(i), "n0", "j1",
+                          gflops=0.0 if i % 2 else 50.0,
+                          steps_per_s=0.0 if i % 2 else 1.0))
+    assert HangDetector(patience=3).scan(store) == []
+
+
+def test_idle_accelerator():
+    store = MetricStore()
+    for i in range(4):
+        store.insert(device(float(i), "n0", "jidle", 0.01))
+        store.insert(device(float(i), "n0", "jbusy", 0.8))
+    events = IdleAcceleratorDetector().scan(store)
+    assert [e.job for e in events] == ["jidle"]
+
+
+def test_memory_underuse_requires_large_memory_flag():
+    store = MetricStore()
+    for i in range(3):
+        store.insert(device(float(i), "n0", "j1", 0.05))
+    man_small = {"j1": JobManifest(job_id="j1")}
+    man_large = {"j1": JobManifest(job_id="j1",
+                                   extra={"large_memory": "1"})}
+    assert MemoryUnderuseDetector().scan(store, man_small) == []
+    events = MemoryUnderuseDetector().scan(store, man_large)
+    assert len(events) == 1 and events[0].detector == "memory_underuse"
+
+
+def test_low_participation():
+    store = MetricStore()
+    for i in range(3):
+        store.insert(perf(float(i), "n0", "j1"))  # only 1 of 8 hosts works
+    man = {"j1": JobManifest(job_id="j1", num_hosts=8)}
+    events = LowParticipationDetector().scan(store, man)
+    assert len(events) == 1
+    assert events[0].fields["active_hosts"] == 1
+
+
+def test_low_mfu():
+    store = MetricStore()
+    for i in range(4):
+        store.insert(perf(float(i), "n0", "jslow", mfu=0.02))
+        store.insert(perf(float(i), "n0", "jfast", mfu=0.5))
+    events = LowMfuDetector().scan(store)
+    assert [e.job for e in events] == ["jslow"]
+
+
+def test_straggler():
+    store = MetricStore()
+    for i in range(5):
+        for h in ("n0", "n1", "n2", "n3"):
+            dt = 3.0 if h == "n3" else 1.0
+            store.insert(perf(float(i), h, "j1", step_time_s=dt))
+    events = StragglerDetector(ratio=1.5).scan(store)
+    assert len(events) == 1 and events[0].fields["host"] == "n3"
+
+
+def test_bank_streaming_and_write_back():
+    bank = DetectorBank()
+    store = MetricStore()
+    evs = []
+    for i in range(5):
+        rec = perf(float(i), "n0", "j1", gflops=0.0, steps_per_s=0.0)
+        store.insert(rec)
+        evs.extend(bank.feed(rec))
+    assert any(e.detector == "hang" for e in evs)
+    DetectorBank.write_back(store, evs)
+    assert any(r.kind == "event" for r in store.records)

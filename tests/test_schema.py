@@ -1,0 +1,89 @@
+"""Wire-format tests: the log line is the system's contract."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schema import MetricRecord, encode_line, parse_line
+
+KEY = st.from_regex(r"[a-z_][a-z0-9_]{0,15}", fullmatch=True).filter(
+    lambda k: k not in ("ts", "host", "job", "kind"))
+SCALAR = st.one_of(
+    st.integers(min_value=-2**53, max_value=2**53),
+    st.floats(allow_nan=False, allow_infinity=False, width=64),
+    st.text(min_size=0, max_size=40),
+)
+
+
+def test_basic_roundtrip():
+    rec = MetricRecord(1000.25, "node01", "job.1", "perf",
+                       {"gflops": 12.5, "app": "gemma2 27b", "step": 3})
+    out = parse_line(encode_line(rec))
+    assert out is not None
+    assert out.host == "node01" and out.job == "job.1"
+    assert out.fields == rec.fields
+
+
+def test_quoting_edge_cases():
+    rec = MetricRecord(1.0, "h", "j", "meta", {
+        "cmd": 'python -m x --flag="v"',
+        "path": "/a/b/c.py",
+        "empty": "",
+        "backslash": "a\\b",
+    })
+    out = parse_line(encode_line(rec))
+    assert out.fields == rec.fields
+
+
+def test_non_hpcmd_lines_ignored():
+    assert parse_line("") is None
+    assert parse_line("random syslog garbage") is None
+    assert parse_line("hpcmd ") is None
+    assert parse_line("hpcmd ts=x host=h job=j kind=k") is None  # bad ts
+
+
+def test_torn_line_does_not_crash():
+    rec = MetricRecord(5.0, "h", "j", "perf", {"gflops": 1.0})
+    line = encode_line(rec)
+    for cut in (5, 15, len(line) - 3):
+        parse_line(line[:cut])  # must not raise
+
+
+@given(ts=st.floats(min_value=0, max_value=4e9),
+       host=st.from_regex(r"[a-z0-9.\-]{1,20}", fullmatch=True),
+       job=st.from_regex(r"[a-zA-Z0-9._\-]{1,20}", fullmatch=True),
+       fields=st.dictionaries(KEY, SCALAR, max_size=8))
+@settings(max_examples=200, deadline=None)
+def test_roundtrip_property(ts, host, job, fields):
+    rec = MetricRecord(ts, host, job, "perf", fields)
+    out = parse_line(encode_line(rec))
+    assert out is not None
+    assert out.host == host and out.job == job and out.kind == "perf"
+    assert abs(out.ts - round(ts, 6)) < 1e-6
+    assert set(out.fields) == set(fields)
+    for k, v in fields.items():
+        got = out.fields[k]
+        if isinstance(v, float):
+            assert got == pytest.approx(v, rel=1e-12, abs=1e-12)
+        elif isinstance(v, int):
+            # ints stay ints unless they collide with float repr
+            assert float(got) == float(v)
+        else:
+            # numeric-looking strings legitimately come back as numbers
+            # (kv wire formats are type-ambiguous for bare tokens)
+            try:
+                as_num = float(v)
+                if math.isnan(as_num):
+                    assert isinstance(got, float) and math.isnan(got)
+                else:
+                    assert float(got) == pytest.approx(as_num)
+            except (ValueError, OverflowError):
+                assert str(got) == v
+
+
+def test_record_get_reserved():
+    rec = MetricRecord(1.0, "h", "j", "perf", {"x": 1})
+    assert rec.get("host") == "h"
+    assert rec.get("x") == 1
+    assert rec.get("missing", 42) == 42

@@ -1,0 +1,72 @@
+"""Streaming-sketch accuracy: P2 quantiles vs exact, Welford vs numpy."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sketches import (P2Quantile, QuantileSet, StreamStats,
+                                 exact_quantile)
+
+
+def test_stream_stats_matches_numpy():
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal(1000) * 3 + 7
+    s = StreamStats().extend(xs)
+    assert np.isclose(s.mean, xs.mean())
+    assert np.isclose(s.std, xs.std(ddof=0), rtol=1e-6)
+    assert s.min == xs.min() and s.max == xs.max()
+    assert s.n == 1000
+
+
+def test_stream_stats_merge():
+    rng = np.random.default_rng(1)
+    a, b = rng.standard_normal(500), rng.standard_normal(300) + 2
+    sa = StreamStats().extend(a)
+    sb = StreamStats().extend(b)
+    sa.merge(sb)
+    xs = np.concatenate([a, b])
+    assert np.isclose(sa.mean, xs.mean())
+    assert np.isclose(sa.var, xs.var(ddof=0), rtol=1e-6)
+
+
+def test_p2_median_normal():
+    rng = np.random.default_rng(2)
+    xs = rng.standard_normal(5000)
+    q = P2Quantile(0.5)
+    for x in xs:
+        q.add(x)
+    assert abs(q.value - np.median(xs)) < 0.05
+
+
+def test_p2_small_stream_exact():
+    q = P2Quantile(0.5)
+    for x in [3.0, 1.0, 2.0]:
+        q.add(x)
+    assert q.value == 2.0
+
+
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6), min_size=20,
+                max_size=500),
+       st.sampled_from([0.25, 0.5, 0.75, 0.9]))
+@settings(max_examples=80, deadline=None)
+def test_p2_bounded_error_property(xs, p):
+    q = P2Quantile(p)
+    for x in xs:
+        q.add(x)
+    exact = exact_quantile(xs, p)
+    spread = max(xs) - min(xs)
+    # P2 stays within the sample range and within a loose fraction of
+    # the spread (it is an estimator, not exact)
+    assert min(xs) - 1e-9 <= q.value <= max(xs) + 1e-9
+    if spread > 0:
+        assert abs(q.value - exact) <= 0.35 * spread + 1e-6
+
+
+def test_quantile_set_summary():
+    qs = QuantileSet()
+    xs = list(range(101))
+    for x in xs:
+        qs.add(float(x))
+    s = qs.summary()
+    assert s["min"] == 0 and s["max"] == 100 and s["count"] == 101
+    assert abs(s["median"] - 50) < 5
+    assert abs(s["mean"] - 50) < 1e-9

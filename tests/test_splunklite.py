@@ -1,0 +1,116 @@
+"""Query engine tests: every command vs a numpy oracle + properties."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregator import MetricStore
+from repro.core.schema import MetricRecord
+from repro.core.splunklite import QueryError, query
+
+
+def make_store():
+    store = MetricStore()
+    rng = np.random.default_rng(0)
+    for i in range(60):
+        host = f"node{i % 3}"
+        store.insert(MetricRecord(
+            ts=1000.0 + i, host=host, job="jobA" if i % 2 == 0 else "jobB",
+            kind="perf",
+            fields={"gflops": float(rng.uniform(0, 100)),
+                    "step": i, "app": "gemma" if i % 2 else "qwen"}))
+    return store
+
+
+def test_search_filters():
+    store = make_store()
+    rows = query(store, "search kind=perf job=jobA")
+    assert rows and all(r["job"] == "jobA" for r in rows)
+    rows = query(store, "search gflops>50")
+    assert all(r["gflops"] > 50 for r in rows)
+    rows = query(store, "search job=job* step>=10 step<20")
+    assert all(10 <= r["step"] < 20 for r in rows)
+
+
+def test_search_wildcard_and_negation():
+    store = make_store()
+    rows = query(store, "search app=gem*")
+    assert rows and all(r["app"] == "gemma" for r in rows)
+    rows = query(store, "search app!=gemma")
+    assert rows and all(r["app"] != "gemma" for r in rows)
+
+
+def test_stats_against_numpy():
+    store = make_store()
+    rows = query(store, "search kind=perf | stats avg(gflops) p50(gflops) "
+                        "max(gflops) count by host")
+    assert len(rows) == 3
+    by_host = {}
+    for rec in store.records:
+        by_host.setdefault(rec.host, []).append(rec.fields["gflops"])
+    for r in rows:
+        xs = by_host[r["host"]]
+        assert r["count"] == len(xs)
+        assert r["avg_gflops"] == pytest.approx(np.mean(xs))
+        assert r["max_gflops"] == pytest.approx(np.max(xs))
+        assert r["p50_gflops"] == pytest.approx(
+            np.quantile(xs, 0.5, method="linear"), rel=1e-9)
+
+
+def test_stats_alias_and_dc():
+    store = make_store()
+    rows = query(store, "search kind=perf | stats avg(gflops) as g dc(host)")
+    assert "g" in rows[0] and rows[0]["dc_host"] == 3
+
+
+def test_sort_head_fields_dedup():
+    store = make_store()
+    rows = query(store, "search kind=perf | sort -gflops | head 5")
+    vals = [r["gflops"] for r in rows]
+    assert vals == sorted(vals, reverse=True) and len(rows) == 5
+    rows = query(store, "search kind=perf | fields host gflops | head 3")
+    assert set(rows[0]) == {"host", "gflops"}
+    rows = query(store, "search kind=perf | dedup host")
+    assert len(rows) == 3
+
+
+def test_timechart():
+    store = make_store()
+    rows = query(store, "search kind=perf | timechart span=10 avg(gflops)")
+    assert rows and all("_time" in r for r in rows)
+    assert rows == sorted(rows, key=lambda r: r["_time"])
+
+
+def test_eval():
+    store = make_store()
+    rows = query(store, "search kind=perf "
+                        "| eval tflops=gflops/1000 | head 2")
+    for r in rows:
+        assert r["tflops"] == pytest.approx(r["gflops"] / 1000)
+
+
+def test_eval_rejects_dangerous():
+    store = make_store()
+    with pytest.raises(QueryError):
+        query(store, "search kind=perf | eval "
+                     "x=__import__('os').system('true')")
+
+
+def test_unknown_command():
+    with pytest.raises(QueryError):
+        query(make_store(), "search | frobnicate")
+
+
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6), min_size=1,
+                max_size=50))
+@settings(max_examples=60, deadline=None)
+def test_stats_avg_property(xs):
+    rows = [{"ts": float(i), "host": "h", "job": "j", "kind": "perf",
+             "v": x} for i, x in enumerate(xs)]
+    out = query(rows, "stats avg(v) sum(v) min(v) max(v) count")
+    assert out[0]["count"] == len(xs)
+    assert out[0]["avg_v"] == pytest.approx(np.mean(xs), rel=1e-9,
+                                            abs=1e-9)
+    assert out[0]["min_v"] == min(xs) and out[0]["max_v"] == max(xs)
