@@ -226,7 +226,9 @@ def bench_detectors(out_dir: Path):
 
 
 def bench_splunklite(out_dir: Path):
-    """Query engine latency on a larger store."""
+    """Query engine latency on a larger store: columnar executor vs the
+    legacy row executor on the same query/workload, plus a 100k+-record
+    columnar-only sample."""
     from repro.core.splunklite import query
     store, manifests, _ = _fleet_store(n_jobs=60, hosts_per_job=8,
                                        samples=40)
@@ -234,8 +236,18 @@ def bench_splunklite(out_dir: Path):
          "| stats avg(gflops) p90(step_time_s) count by job "
          "| sort -avg_gflops | head 10")
     us = timeit(lambda: query(store, q), warmup=1, iters=5)
-    return [row("splunklite.fleet_query", us,
-                f"{len(store)}records")]
+    us_rows = timeit(lambda: query(store, q, engine="rows"),
+                     warmup=1, iters=3)
+    rows = [
+        row("splunklite.fleet_query", us, f"{len(store)}records"),
+        row("splunklite.fleet_query_rows", us_rows,
+            f"{len(store)}records,legacy={us_rows / max(us, 1e-9):.1f}x"),
+    ]
+    big, _m, _p = _fleet_store(n_jobs=110, hosts_per_job=8, samples=60)
+    us_big = timeit(lambda: query(big, q), warmup=1, iters=5)
+    rows.append(row("splunklite.fleet_query_100k", us_big,
+                    f"{len(big)}records"))
+    return rows
 
 
 def bench_anomaly(out_dir: Path):

@@ -1,18 +1,21 @@
 """Benchmark driver — one benchmark per paper table/figure/claim.
 
-Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes rendered
-dashboards under experiments/dashboards/.
+Prints ``name,us_per_call,derived`` CSV rows (stdout), writes rendered
+dashboards under experiments/dashboards/, and emits machine-readable
+results to ``experiments/BENCH_splunklite.json`` so the performance
+trajectory is tracked across PRs.
 
   data_volume   — paper §5 log-volume table
   overhead      — paper §4 negligible-overhead claim
   roofline_view — paper Fig. 2
   job_view      — paper Fig. 3
   detectors     — paper §4.4 specialized views / §5 case studies
-  splunklite    — analysis-layer query latency
+  splunklite    — analysis-layer query latency (columnar vs legacy rows)
   transport     — rsyslog-analog throughput
   kernels.*     — Pallas kernels vs jnp oracles (interpret mode)
 """
 
+import json
 import sys
 from pathlib import Path
 
@@ -22,9 +25,19 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks.common import EXPERIMENTS  # noqa: E402
 
 
+def _parse_row(line: str):
+    name, us, derived = line.split(",", 2)
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    return {"name": name, "us_per_call": us_val, "derived": derived}
+
+
 def main() -> None:
     from benchmarks import kernels as kbench
     from benchmarks import monitoring as mbench
+    only = set(sys.argv[1:])
     out = EXPERIMENTS
     out.mkdir(parents=True, exist_ok=True)
     benches = [
@@ -40,16 +53,43 @@ def main() -> None:
         kbench.bench_ssd,
         kbench.bench_xla_attention_paths,
     ]
+    if only:
+        benches = [b for b in benches
+                   if b.__name__.replace("bench_", "") in only]
     print("name,us_per_call,derived")
+    results = []
     failures = 0
     for bench in benches:
         try:
             for line in bench(out):
                 print(line, flush=True)
+                results.append(_parse_row(line))
         except Exception as exc:  # noqa: BLE001
             failures += 1
-            print(f"{bench.__name__},ERROR,{type(exc).__name__}: {exc}",
-                  flush=True)
+            line = f"{bench.__name__},ERROR,{type(exc).__name__}: {exc}"
+            print(line, flush=True)
+            results.append(_parse_row(line))
+    # merge into the tracked results file by row name so filtered runs
+    # (e.g. `run.py splunklite`) update their rows without clobbering
+    # the rest of the trajectory
+    bench_path = out / "BENCH_splunklite.json"
+    merged = {}
+    try:
+        for r in json.loads(bench_path.read_text()).get("rows", []):
+            merged[r["name"]] = r
+    except (OSError, ValueError, KeyError):
+        pass
+    # a bench that ran again supersedes its previous ERROR row (error
+    # rows are keyed by the bench function name)
+    for bench in benches:
+        merged.pop(bench.__name__, None)
+    for r in results:
+        merged[r["name"]] = r
+    stale_failures = sum(1 for r in merged.values()
+                         if r["us_per_call"] is None)
+    bench_path.write_text(json.dumps(
+        {"rows": list(merged.values()), "failures": stale_failures},
+        indent=2) + "\n")
     if failures:
         raise SystemExit(f"{failures} benchmarks failed")
 

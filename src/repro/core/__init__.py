@@ -3,6 +3,7 @@ monitoring (hpcmd middleware + transport + splunklite analysis), adapted
 to JAX/TPU jobs.  See DESIGN.md for the full mapping."""
 
 from repro.core.aggregator import Aggregator, MetricStore
+from repro.core.columnar import ColumnarMetricStore, ColumnScan, Segment
 from repro.core.daemon import DaemonConfig, Hpcmd, JobManifest
 from repro.core.derived import (HardwareSpec, RooflineTerms, TPU_V5E, mfu,
                                 roofline_terms)
@@ -12,7 +13,8 @@ from repro.core.schema import MetricRecord, encode_line, parse_line
 from repro.core.splunklite import query
 
 __all__ = [
-    "Aggregator", "MetricStore", "DaemonConfig", "Hpcmd", "JobManifest",
+    "Aggregator", "MetricStore", "ColumnarMetricStore", "ColumnScan",
+    "Segment", "DaemonConfig", "Hpcmd", "JobManifest",
     "HardwareSpec", "RooflineTerms", "TPU_V5E", "mfu", "roofline_terms",
     "DetectorBank", "DetectorEvent", "TrainMonitor", "load_manifests",
     "MetricRecord", "encode_line", "parse_line", "query",

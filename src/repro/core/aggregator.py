@@ -2,84 +2,29 @@
 
 The aggregator tails inbox stream files (fed by shippers/relays), parses
 wire lines into records, deduplicates (transport is at-least-once), and
-maintains an indexed in-memory store with optional on-disk persistence.
-Detectors can be attached for streaming evaluation on ingest.
+maintains a columnar in-memory store (``repro.core.columnar``) with
+optional on-disk persistence.  Detectors can be attached for streaming
+evaluation on ingest.
 """
 
 from __future__ import annotations
 
-import hashlib
 import os
-from collections import defaultdict
 from pathlib import Path
-from typing import Callable, Dict, Iterable, Iterator, List, Optional, Set
+from typing import Callable, Dict, List, Optional
 
-from repro.core.schema import MetricRecord, encode_line, parse_line
+from repro.core.columnar import ColumnarMetricStore
+from repro.core.schema import MetricRecord, parse_line
 from repro.core.transport import TailReader
 
 
-class MetricStore:
-    """Time-ordered, job/kind-indexed record store."""
+class MetricStore(ColumnarMetricStore):
+    """Time-ordered, columnar metric store (back-compat name).
 
-    def __init__(self) -> None:
-        self.records: List[MetricRecord] = []
-        self._by_job: Dict[str, List[int]] = defaultdict(list)
-        self._by_kind: Dict[str, List[int]] = defaultdict(list)
-        self._seen: Set[bytes] = set()
-        self.duplicates_dropped = 0
-
-    def __len__(self) -> int:
-        return len(self.records)
-
-    def insert(self, rec: MetricRecord) -> bool:
-        key = hashlib.blake2b(encode_line(rec).encode(), digest_size=12).digest()
-        if key in self._seen:
-            self.duplicates_dropped += 1
-            return False
-        self._seen.add(key)
-        idx = len(self.records)
-        self.records.append(rec)
-        self._by_job[rec.job].append(idx)
-        self._by_kind[rec.kind].append(idx)
-        return True
-
-    def ingest_lines(self, lines: Iterable[str]) -> int:
-        n = 0
-        for line in lines:
-            rec = parse_line(line)
-            if rec is not None and self.insert(rec):
-                n += 1
-        return n
-
-    # ---------------------------------------------------------------- query
-    def jobs(self) -> List[str]:
-        return sorted(self._by_job)
-
-    def kinds(self) -> List[str]:
-        return sorted(self._by_kind)
-
-    def select(self, job: Optional[str] = None, kind: Optional[str] = None,
-               since: Optional[float] = None,
-               until: Optional[float] = None) -> Iterator[MetricRecord]:
-        if job is not None and kind is not None:
-            idxs = sorted(set(self._by_job.get(job, ()))
-                          & set(self._by_kind.get(kind, ())))
-        elif job is not None:
-            idxs = self._by_job.get(job, [])
-        elif kind is not None:
-            idxs = self._by_kind.get(kind, [])
-        else:
-            idxs = range(len(self.records))
-        for i in idxs:
-            rec = self.records[i]
-            if since is not None and rec.ts < since:
-                continue
-            if until is not None and rec.ts >= until:
-                continue
-            yield rec
-
-    def hosts(self, job: Optional[str] = None) -> List[str]:
-        return sorted({r.host for r in self.select(job=job)})
+    The seed kept a flat ``records`` list; that survives as a
+    materializing property — dashboards/detectors/splunklite now run on
+    the column arrays instead.
+    """
 
 
 class Aggregator:
@@ -88,14 +33,16 @@ class Aggregator:
     ``inbox_dir`` receives one or more ``*.log`` stream files (one per
     shipper uplink).  ``persist_path`` optionally appends every accepted
     record to a consolidated archive (the "Splunk index" on disk; the
-    paper keeps unlimited retention — so do we).
+    paper keeps unlimited retention — so do we).  Pass a pre-configured
+    ``store`` to control sealing / dedup-eviction behavior.
     """
 
     def __init__(self, inbox_dir: os.PathLike,
-                 persist_path: Optional[os.PathLike] = None) -> None:
+                 persist_path: Optional[os.PathLike] = None,
+                 store: Optional[MetricStore] = None) -> None:
         self.inbox_dir = Path(inbox_dir)
         self.inbox_dir.mkdir(parents=True, exist_ok=True)
-        self.store = MetricStore()
+        self.store = store if store is not None else MetricStore()
         self._readers: Dict[str, TailReader] = {}
         self.persist_path = Path(persist_path) if persist_path else None
         self._on_record: List[Callable[[MetricRecord], None]] = []
@@ -105,22 +52,34 @@ class Aggregator:
         self._on_record.append(cb)
 
     def pump(self) -> int:
-        """Ingest all new lines from all inbox files. Returns #records."""
+        """Batch-ingest all new lines from all inbox files.
+
+        Lines are parsed and appended to the store's columnar buffer in
+        one pass per file.  The archive is opened once per pump (not
+        once per record as in the seed), but each accepted line is
+        written *before* its callbacks run, so a crashing consumer
+        never loses already-ingested records from the archive.
+        """
         n = 0
-        for path in sorted(self.inbox_dir.glob("*.log")):
-            reader = self._readers.get(path.name)
-            if reader is None:
-                reader = self._readers[path.name] = TailReader(path)
-            for line in reader.read_new_lines():
-                rec = parse_line(line)
-                if rec is None or not self.store.insert(rec):
-                    continue
-                n += 1
-                if self.persist_path is not None:
-                    with open(self.persist_path, "a", encoding="utf-8") as f:
-                        f.write(line + "\n")
-                for cb in self._on_record:
-                    cb(rec)
+        archive = (open(self.persist_path, "a", encoding="utf-8")
+                   if self.persist_path is not None else None)
+        try:
+            for path in sorted(self.inbox_dir.glob("*.log")):
+                reader = self._readers.get(path.name)
+                if reader is None:
+                    reader = self._readers[path.name] = TailReader(path)
+                for line in reader.read_new_lines():
+                    rec = parse_line(line)
+                    if rec is None or not self.store.insert(rec):
+                        continue
+                    n += 1
+                    if archive is not None:
+                        archive.write(line + "\n")
+                    for cb in self._on_record:
+                        cb(rec)
+        finally:
+            if archive is not None:
+                archive.close()
         return n
 
     def load_archive(self, path: os.PathLike) -> int:

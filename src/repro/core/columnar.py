@@ -1,0 +1,578 @@
+"""Columnar, time-partitioned metric storage engine.
+
+The paper's analysis layer lives on interactive queries over "large
+volumes of temporally ordered log-line data" (§4).  A flat Python list
+of :class:`MetricRecord` objects cannot serve that interactively at
+fleet scale, so the store keeps data the way an analytics engine does:
+
+* **Segments** — immutable, time-ordered batches of records held as
+  NumPy column arrays: float64 for numeric fields (with presence and
+  int-ness side masks so original values materialize exactly), and
+  dictionary-encoded int32 codes for string fields (``host``/``job``/
+  ``kind``/``app``...).
+* **Zone maps** — per-segment min/max for numeric columns plus the
+  dictionary of every string column, so a query planner can skip whole
+  segments without touching row data (predicate pushdown).
+* **Append buffer** — inserts land in a mutable row buffer that seals
+  into a segment once ``seal_threshold`` records accumulate.  Queries
+  see the buffer through a transient (cached) segment, so results are
+  always complete.
+* **Segment-scoped dedup** — transport is at-least-once, so inserts are
+  deduplicated by content hash.  Keys are owned by the segment they
+  arrived in and evicted once the segment's newest timestamp falls a
+  configurable horizon behind the store watermark, bounding memory
+  (the seed kept one global, unbounded ``_seen`` set).
+
+The vectorized splunklite executor (``repro.core.splunklite``),
+dashboards and detectors all run on the column arrays directly via
+:meth:`ColumnarMetricStore.segments` / :meth:`ColumnarMetricStore.scan`;
+``records`` / ``select`` remain as row-materializing compatibility
+paths.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+from collections import deque
+from typing import Deque, Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.schema import MetricRecord, encode_line
+
+_RESERVED = ("ts", "host", "job", "kind")
+
+
+class _Missing:
+    __slots__ = ()
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return "<missing>"
+
+
+MISSING = _Missing()
+
+
+# ---------------------------------------------------------------- columns ---
+
+class NumColumn:
+    """float64 values; ``present`` marks rows that have the field at all
+    (NaN can be a real value), ``is_int`` marks values that were Python
+    ints so materialization is lossless."""
+
+    kind = "num"
+    __slots__ = ("vals", "present", "is_int")
+
+    def __init__(self, vals: np.ndarray, present: np.ndarray,
+                 is_int: np.ndarray) -> None:
+        self.vals = vals
+        self.present = present
+        self.is_int = is_int
+
+    def take(self, idx: np.ndarray) -> "NumColumn":
+        return NumColumn(self.vals[idx], self.present[idx], self.is_int[idx])
+
+    def value_at(self, i: int):
+        v = self.vals[i]
+        return int(v) if self.is_int[i] else float(v)
+
+    def materialize(self) -> np.ndarray:
+        out = self.vals.astype(object)
+        if self.is_int.any():
+            ints = self.vals[self.is_int].astype(np.int64).astype(object)
+            out[self.is_int] = ints
+        return out
+
+    def present_mask(self) -> np.ndarray:
+        return self.present
+
+
+class StrColumn:
+    """Dictionary-encoded strings: int32 codes into ``vocab``; -1 means
+    the row does not have the field."""
+
+    kind = "str"
+    __slots__ = ("codes", "vocab", "index")
+
+    def __init__(self, codes: np.ndarray, vocab: np.ndarray,
+                 index: Dict[str, int]) -> None:
+        self.codes = codes
+        self.vocab = vocab
+        self.index = index
+
+    def take(self, idx: np.ndarray) -> "StrColumn":
+        return StrColumn(self.codes[idx], self.vocab, self.index)
+
+    def value_at(self, i: int):
+        return self.vocab[self.codes[i]]
+
+    def materialize(self) -> np.ndarray:
+        return self.vocab[np.clip(self.codes, 0, None)]
+
+    def present_mask(self) -> np.ndarray:
+        return self.codes >= 0
+
+
+class ObjColumn:
+    """Fallback for columns that mix strings and numbers."""
+
+    kind = "obj"
+    __slots__ = ("vals", "present")
+
+    def __init__(self, vals: np.ndarray, present: np.ndarray) -> None:
+        self.vals = vals
+        self.present = present
+
+    def take(self, idx: np.ndarray) -> "ObjColumn":
+        return ObjColumn(self.vals[idx], self.present[idx])
+
+    def value_at(self, i: int):
+        return self.vals[i]
+
+    def materialize(self) -> np.ndarray:
+        return self.vals
+
+    def present_mask(self) -> np.ndarray:
+        return self.present
+
+
+def _encode_strs(values: List) -> StrColumn:
+    index: Dict[str, int] = {}
+    codes = np.empty(len(values), np.int32)
+    for i, v in enumerate(values):
+        if v is MISSING:
+            codes[i] = -1
+            continue
+        code = index.get(v)
+        if code is None:
+            code = index[v] = len(index)
+        codes[i] = code
+    vocab = np.array(list(index), dtype=object)
+    return StrColumn(codes, vocab, index)
+
+
+def build_column(values: List):
+    """Classify and build a column from python values (MISSING = absent)."""
+    all_str = True
+    all_num = True
+    for v in values:
+        if v is MISSING:
+            continue
+        if isinstance(v, str):
+            all_num = False
+            if not all_str:
+                break
+        elif isinstance(v, (int, float)):
+            all_str = False
+            if not all_num:
+                break
+        else:
+            all_str = all_num = False
+            break
+    n = len(values)
+    if all_num:
+        vals = np.full(n, np.nan)
+        present = np.zeros(n, bool)
+        is_int = np.zeros(n, bool)
+        for i, v in enumerate(values):
+            if v is MISSING:
+                continue
+            present[i] = True
+            vals[i] = float(v)
+            is_int[i] = isinstance(v, int) or isinstance(v, bool)
+        return NumColumn(vals, present, is_int)
+    if all_str:
+        return _encode_strs(values)
+    vals = np.empty(n, dtype=object)
+    present = np.zeros(n, bool)
+    for i, v in enumerate(values):
+        vals[i] = v
+        present[i] = v is not MISSING
+    return ObjColumn(vals, present)
+
+
+# ---------------------------------------------------------------- segment ---
+
+class Segment:
+    """Immutable, time-ordered batch of records as columns + zone maps.
+
+    ``attrs`` holds the four reserved record attributes (ts/host/job/
+    kind); ``cols`` is the query view — attrs overridden by same-named
+    metric fields, mirroring ``MetricRecord.as_dict()`` — and
+    ``field_names`` lists the actual metric-field columns.
+    """
+
+    __slots__ = ("n", "cols", "attrs", "field_names", "ts_min", "ts_max",
+                 "_zones")
+
+    def __init__(self, n: int, attrs: Dict[str, object],
+                 field_cols: Dict[str, object]) -> None:
+        self.n = n
+        self.attrs = attrs
+        self.field_names = list(field_cols)
+        self.cols = dict(attrs)
+        self.cols.update(field_cols)
+        ts = attrs["ts"].vals
+        self.ts_min = float(ts[0]) if n else math.inf
+        self.ts_max = float(ts[-1]) if n else -math.inf
+        self._zones: Dict[str, Tuple[float, float]] = {}
+
+    def zone(self, name: str) -> Tuple[float, float]:
+        """(min, max) over present non-NaN values; (inf, -inf) if none."""
+        z = self._zones.get(name)
+        if z is None:
+            col = self.cols.get(name)
+            if col is None or col.kind != "num":
+                z = (-math.inf, math.inf)
+            else:
+                m = col.present & ~np.isnan(col.vals)
+                if m.any():
+                    v = col.vals[m]
+                    z = (float(v.min()), float(v.max()))
+                else:
+                    z = (math.inf, -math.inf)
+            self._zones[name] = z
+        return z
+
+
+def columns_from_records(records: List[MetricRecord]) -> Segment:
+    """Build a ts-sorted segment from MetricRecords."""
+    order = sorted(range(len(records)), key=lambda i: float(records[i].ts))
+    recs = [records[i] for i in order]
+    n = len(recs)
+    attrs: Dict[str, object] = {}
+    ts = np.empty(n)
+    ts_int = np.zeros(n, bool)
+    for i, r in enumerate(recs):
+        ts[i] = float(r.ts)
+        ts_int[i] = isinstance(r.ts, int) and not isinstance(r.ts, bool)
+    attrs["ts"] = NumColumn(ts, np.ones(n, bool), ts_int)
+    attrs["host"] = _encode_strs([r.host for r in recs])
+    attrs["job"] = _encode_strs([r.job for r in recs])
+    attrs["kind"] = _encode_strs([r.kind for r in recs])
+    names: Dict[str, None] = {}
+    for r in recs:
+        for k in r.fields:
+            if k not in names:
+                names[k] = None
+    field_cols = {k: build_column([r.fields.get(k, MISSING) for r in recs])
+                  for k in names}
+    return Segment(n, attrs, field_cols)
+
+
+def columns_from_rows(rows: List[Dict]) -> Tuple[int, Dict[str, object]]:
+    """Build columns from row dicts (order preserved, no ts sorting)."""
+    n = len(rows)
+    names: Dict[str, None] = {}
+    for r in rows:
+        for k in r:
+            if k not in names:
+                names[k] = None
+    cols = {k: build_column([r.get(k, MISSING) for r in rows])
+            for k in names}
+    return n, cols
+
+
+def materialize_rows(n: int, cols: Dict[str, object]) -> List[Dict]:
+    """Columns -> row dicts, omitting absent fields per row."""
+    mats = []
+    for name, col in cols.items():
+        mats.append((name, col.materialize().tolist(),
+                     col.present_mask().tolist()))
+    out = []
+    for i in range(n):
+        row = {}
+        for name, vals, present in mats:
+            if present[i]:
+                row[name] = vals[i]
+        out.append(row)
+    return out
+
+
+def _segment_records(seg: Segment, idx: np.ndarray) -> List[MetricRecord]:
+    attrs = {k: seg.attrs[k].take(idx).materialize().tolist()
+             for k in _RESERVED}
+    field_mats = []
+    for name in seg.field_names:
+        col = seg.cols[name].take(idx)
+        field_mats.append((name, col.materialize().tolist(),
+                           col.present_mask().tolist()))
+    recs = []
+    for i in range(len(idx)):
+        fields = {}
+        for name, vals, present in field_mats:
+            if present[i]:
+                fields[name] = vals[i]
+        recs.append(MetricRecord(ts=attrs["ts"][i], host=attrs["host"][i],
+                                 job=attrs["job"][i], kind=attrs["kind"][i],
+                                 fields=fields))
+    return recs
+
+
+# ------------------------------------------------------------------- scan ---
+
+class ColumnScan:
+    """Filtered, merged column view over the store (the fast read path)."""
+
+    __slots__ = ("n", "ts", "host_codes", "host_vocab", "job_codes",
+                 "job_vocab", "_fields")
+
+    def __init__(self, n, ts, host_codes, host_vocab, job_codes, job_vocab,
+                 fields) -> None:
+        self.n = n
+        self.ts = ts
+        self.host_codes = host_codes
+        self.host_vocab = host_vocab
+        self.job_codes = job_codes
+        self.job_vocab = job_vocab
+        self._fields = fields
+
+    def field(self, name: str) -> Tuple[np.ndarray, np.ndarray]:
+        """(float64 values, numeric-present mask) for a requested field."""
+        return self._fields[name]
+
+
+def _empty_scan(fields: Iterable[str]) -> ColumnScan:
+    z = np.empty(0)
+    zi = np.empty(0, np.int32)
+    vocab = np.empty(0, dtype=object)
+    return ColumnScan(0, z, zi, vocab, zi, vocab,
+                      {f: (np.empty(0), np.empty(0, bool)) for f in fields})
+
+
+# -------------------------------------------------------------------- store --
+
+class ColumnarMetricStore:
+    """Time-ordered, columnar metric store (drop-in for the old row list).
+
+    ``seal_threshold`` — records buffered before sealing a segment.
+    ``dedup_horizon_s`` — when set, dedup keys for a sealed segment are
+    evicted once the store watermark moves this far past the segment's
+    newest timestamp, bounding dedup memory.  The default ``None``
+    keeps keys forever (the seed's behavior): eviction is opt-in
+    because an aggregator that replays a multi-day archive and then
+    re-tails its inbox would otherwise re-accept old lines as new.
+    """
+
+    def __init__(self, seal_threshold: int = 4096,
+                 dedup_horizon_s: Optional[float] = None) -> None:
+        self.seal_threshold = int(seal_threshold)
+        self.dedup_horizon_s = dedup_horizon_s
+        self._sealed: List[Segment] = []
+        self._buffer: List[MetricRecord] = []
+        self._buffer_keys: Set[bytes] = set()
+        self._seen: Set[bytes] = set()
+        self._epochs: Deque[Tuple[float, Set[bytes]]] = deque()
+        self._watermark = -math.inf
+        self.duplicates_dropped = 0
+        self.dedup_evicted_keys = 0
+        self._cache: Dict[str, tuple] = {}
+
+    # ------------------------------------------------------------- ingest --
+    def __len__(self) -> int:
+        return sum(s.n for s in self._sealed) + len(self._buffer)
+
+    def _version(self) -> Tuple[int, int]:
+        return (len(self._sealed), len(self._buffer))
+
+    def insert(self, rec: MetricRecord) -> bool:
+        key = hashlib.blake2b(encode_line(rec).encode(),
+                              digest_size=12).digest()
+        if key in self._seen:
+            self.duplicates_dropped += 1
+            return False
+        self._seen.add(key)
+        self._buffer_keys.add(key)
+        self._buffer.append(rec)
+        ts = float(rec.ts)
+        if ts > self._watermark:
+            self._watermark = ts
+        if len(self._buffer) >= self.seal_threshold:
+            self.seal()
+        return True
+
+    def ingest_lines(self, lines: Iterable[str]) -> int:
+        from repro.core.schema import parse_line
+        n = 0
+        for line in lines:
+            rec = parse_line(line)
+            if rec is not None and self.insert(rec):
+                n += 1
+        return n
+
+    def seal(self) -> None:
+        """Freeze the append buffer into an immutable segment."""
+        if not self._buffer:
+            return
+        seg = columns_from_records(self._buffer)
+        self._sealed.append(seg)
+        if self.dedup_horizon_s is not None:
+            self._epochs.append((seg.ts_max, self._buffer_keys))
+        self._buffer = []
+        self._buffer_keys = set()
+        self._evict_dedup()
+
+    def _evict_dedup(self) -> None:
+        if self.dedup_horizon_s is None:
+            return
+        cutoff = self._watermark - self.dedup_horizon_s
+        while self._epochs and self._epochs[0][0] < cutoff:
+            _, keys = self._epochs.popleft()
+            self._seen -= keys
+            self.dedup_evicted_keys += len(keys)
+
+    # -------------------------------------------------------------- reads --
+    def segments(self) -> List[Segment]:
+        """Sealed segments plus a transient segment over the buffer."""
+        segs = list(self._sealed)
+        if self._buffer:
+            v = self._version()
+            cached = self._cache.get("transient")
+            if cached is None or cached[0] != v:
+                cached = (v, columns_from_records(self._buffer))
+                self._cache["transient"] = cached
+            segs.append(cached[1])
+        return segs
+
+    @property
+    def records(self) -> List[MetricRecord]:
+        """Row-materializing compatibility path (segment order)."""
+        v = self._version()
+        cached = self._cache.get("records")
+        if cached is None or cached[0] != v:
+            recs: List[MetricRecord] = []
+            for seg in self.segments():
+                recs.extend(_segment_records(seg, np.arange(seg.n)))
+            cached = (v, recs)
+            self._cache["records"] = cached
+        return cached[1]
+
+    def _segment_mask(self, seg: Segment, job, kind, since, until
+                      ) -> Optional[np.ndarray]:
+        """None = segment fully pruned; else boolean row mask."""
+        if since is not None and seg.ts_max < since:
+            return None
+        if until is not None and seg.ts_min >= until:
+            return None
+        mask = np.ones(seg.n, bool)
+        for key, want in (("job", job), ("kind", kind)):
+            if want is None:
+                continue
+            col = seg.attrs[key]
+            code = col.index.get(want)
+            if code is None:
+                return None
+            mask &= col.codes == code
+        ts = seg.attrs["ts"].vals
+        if since is not None:
+            mask &= ts >= since
+        if until is not None:
+            mask &= ts < until
+        if not mask.any():
+            return None
+        return mask
+
+    def scan(self, job: Optional[str] = None, kind: Optional[str] = None,
+             since: Optional[float] = None, until: Optional[float] = None,
+             fields: Iterable[str] = ()) -> ColumnScan:
+        """Vectorized filtered read: zone-map/dictionary pruning per
+        segment, then a single gather into merged column arrays.
+
+        Results are memoized per store version (dashboards and reports
+        issue the same scan repeatedly for different renderings).
+        """
+        fields = tuple(fields)
+        memo_key = (job, kind, since, until, fields)
+        memo = self._cache.get("scans")
+        if memo is None or memo[0] != self._version():
+            memo = (self._version(), {})
+            self._cache["scans"] = memo
+        hit = memo[1].get(memo_key)
+        if hit is not None:
+            return hit
+        sc = self._scan_uncached(job, kind, since, until, fields)
+        if len(memo[1]) < 64:
+            memo[1][memo_key] = sc
+        return sc
+
+    def _scan_uncached(self, job, kind, since, until,
+                       fields: Tuple[str, ...]) -> ColumnScan:
+        parts: List[Tuple[Segment, np.ndarray]] = []
+        for seg in self.segments():
+            mask = self._segment_mask(seg, job, kind, since, until)
+            if mask is not None:
+                parts.append((seg, np.nonzero(mask)[0]))
+        if not parts:
+            return _empty_scan(fields)
+        n = sum(len(idx) for _, idx in parts)
+        ts = np.empty(n)
+        host_index: Dict[str, int] = {}
+        job_index: Dict[str, int] = {}
+        host_codes = np.empty(n, np.int32)
+        job_codes = np.empty(n, np.int32)
+        fvals = {f: np.full(n, np.nan) for f in fields}
+        fpres = {f: np.zeros(n, bool) for f in fields}
+        pos = 0
+        for seg, idx in parts:
+            m = len(idx)
+            ts[pos:pos + m] = seg.attrs["ts"].vals[idx]
+            for key, codes_out, index in (("host", host_codes, host_index),
+                                          ("job", job_codes, job_index)):
+                col = seg.attrs[key]
+                remap = np.array([index.setdefault(v, len(index))
+                                  for v in col.vocab], np.int32) \
+                    if len(col.vocab) else np.empty(0, np.int32)
+                codes_out[pos:pos + m] = remap[col.codes[idx]]
+            for f in fields:
+                col = seg.cols.get(f)
+                if col is None:
+                    continue
+                if col.kind == "num":
+                    fvals[f][pos:pos + m] = col.vals[idx]
+                    fpres[f][pos:pos + m] = col.present[idx]
+                elif col.kind == "obj":
+                    vv = col.vals[idx]
+                    pp = col.present[idx]
+                    for j in range(m):
+                        v = vv[j]
+                        if pp[j] and isinstance(v, (int, float)):
+                            fvals[f][pos + j] = float(v)
+                            fpres[f][pos + j] = True
+                # str columns: not numeric -> stays absent
+            pos += m
+        return ColumnScan(
+            n, ts, host_codes, np.array(list(host_index), dtype=object),
+            job_codes, np.array(list(job_index), dtype=object),
+            {f: (fvals[f], fpres[f]) for f in fields})
+
+    # -------------------------------------------------- compat query API --
+    def select(self, job: Optional[str] = None, kind: Optional[str] = None,
+               since: Optional[float] = None,
+               until: Optional[float] = None) -> Iterator[MetricRecord]:
+        for seg in self.segments():
+            mask = self._segment_mask(seg, job, kind, since, until)
+            if mask is None:
+                continue
+            yield from _segment_records(seg, np.nonzero(mask)[0])
+
+    def _vocab_union(self, key: str) -> List[str]:
+        out: Dict[str, None] = {}
+        for seg in self.segments():
+            for v in seg.attrs[key].index:
+                out.setdefault(v)
+        return sorted(out)
+
+    def jobs(self) -> List[str]:
+        return self._vocab_union("job")
+
+    def kinds(self) -> List[str]:
+        return self._vocab_union("kind")
+
+    def hosts(self, job: Optional[str] = None) -> List[str]:
+        if job is None:
+            return self._vocab_union("host")
+        sc = self.scan(job=job)
+        if sc.n == 0:
+            return []
+        return sorted(sc.host_vocab[np.unique(sc.host_codes)].tolist())

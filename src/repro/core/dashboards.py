@@ -20,10 +20,11 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.aggregator import MetricStore
 from repro.core.daemon import JobManifest
 from repro.core.derived import HardwareSpec, TPU_V5E
-from repro.core.sketches import QuantileSet
 from repro.core.splunklite import query
 
 # ------------------------------------------------------------ svg helpers ---
@@ -69,6 +70,16 @@ class SvgCanvas:
         if len(pts) < 2:
             return
         path = " ".join(f"{x:.1f},{y:.1f}" for x, y in pts)
+        self.parts.append(
+            f'<polyline points="{path}" fill="none" stroke="{stroke}" '
+            f'stroke-width="{width}"/>')
+
+    def polyline_xy(self, xs, ys, stroke="#1f77b4", width=1.5):
+        """Vectorized variant: pre-scaled coordinate arrays."""
+        if len(xs) < 2:
+            return
+        path = " ".join(map("%.1f,%.1f".__mod__,
+                            zip(xs.tolist(), ys.tolist())))
         self.parts.append(
             f'<polyline points="{path}" fill="none" stroke="{stroke}" '
             f'stroke-width="{width}"/>')
@@ -193,22 +204,27 @@ def render_timeseries_svg(series: Dict[str, List[Tuple[float, float]]],
     c = SvgCanvas(width, height)
     ml, mr, mt, mb = 64, 120, 34, 40
     pw, ph = width - ml - mr, height - mt - mb
-    xs = [t for pts in series.values() for t, _ in pts]
-    ys = [v for pts in series.values() for _, v in pts
-          if not (isinstance(v, float) and math.isnan(v))]
+    raw = {name: np.asarray(pts, dtype=np.float64)
+           for name, pts in series.items() if pts}
+    arrays = {name: a[~np.isnan(a[:, 1])] for name, a in raw.items()}
     c.text(width / 2, 20, title, size=13, anchor="middle")
-    if not xs or not ys:
+    if not arrays or not any(a.size for a in arrays.values()):
         c.text(width / 2, height / 2, "(no data)", anchor="middle")
         return c.render()
-    x0, x1 = min(xs), max(xs)
-    y0, y1 = min(ys + [0.0]), max(ys)
+    x0 = min(float(a[:, 0].min()) for a in raw.values())
+    x1 = max(float(a[:, 0].max()) for a in raw.values())
+    valid = [a for a in arrays.values() if a.size]
+    y0 = min(0.0, min(float(a[:, 1].min()) for a in valid))
+    y1 = max(float(a[:, 1].max()) for a in valid)
     if y1 <= y0:
         y1 = y0 + 1.0
     if x1 <= x0:
         x1 = x0 + 1.0
+    sx = pw / (x1 - x0)
+    sy = ph / (y1 - y0)
 
-    def X(t): return ml + (t - x0) / (x1 - x0) * pw
-    def Y(v): return mt + ph - (v - y0) / (y1 - y0) * ph
+    def X(t): return ml + (t - x0) * sx
+    def Y(v): return mt + ph - (v - y0) * sy
 
     for i in range(5):
         yv = y0 + (y1 - y0) * i / 4
@@ -221,11 +237,12 @@ def render_timeseries_svg(series: Dict[str, List[Tuple[float, float]]],
     c.line(ml, mt + ph, ml + pw, mt + ph)
     c.line(ml, mt, ml, mt + ph)
     c.text(14, mt + ph / 2, ylabel, size=11, anchor="middle", rotate=-90)
-    for i, (name, pts) in enumerate(sorted(series.items())):
+    for i, name in enumerate(sorted(series)):
         col = _PALETTE[i % len(_PALETTE)]
-        c.polyline([(X(t), Y(v)) for t, v in pts
-                    if not (isinstance(v, float) and math.isnan(v))],
-                   stroke=col)
+        arr = arrays.get(name)
+        if arr is not None and arr.size:
+            c.polyline_xy(ml + (arr[:, 0] - x0) * sx,
+                          mt + ph - (arr[:, 1] - y0) * sy, stroke=col)
         if i < 14:
             c.line(ml + pw + 8, mt + 10 + 14 * i, ml + pw + 24,
                    mt + 10 + 14 * i, stroke=col, width=2)
@@ -240,13 +257,24 @@ JOB_VIEW_METRICS = ("gflops", "hbm_gbs", "ai", "mfu", "step_time_s",
 def job_metric_series(store: MetricStore, job: str, metric: str,
                       kind: str = "perf"
                       ) -> Dict[str, List[Tuple[float, float]]]:
+    """Per-host (ts, value) series straight off the column arrays."""
+    sc = store.scan(job=job, kind=kind, fields=(metric,))
+    vals, present = sc.field(metric)
+    idx = np.nonzero(present)[0]
     series: Dict[str, List[Tuple[float, float]]] = {}
-    for rec in store.select(job=job, kind=kind):
-        v = rec.get(metric)
-        if isinstance(v, (int, float)):
-            series.setdefault(rec.host, []).append((rec.ts, float(v)))
-    for pts in series.values():
-        pts.sort()
+    if idx.size == 0:
+        return series
+    hc = sc.host_codes[idx]
+    ts = sc.ts[idx]
+    vs = vals[idx]
+    order = np.lexsort((vs, ts, hc))
+    hc, ts, vs = hc[order], ts[order], vs[order]
+    cuts = np.nonzero(hc[1:] != hc[:-1])[0] + 1
+    starts = np.concatenate([[0], cuts])
+    stops = np.concatenate([cuts, [len(hc)]])
+    for lo, hi in zip(starts, stops):
+        host = str(sc.host_vocab[hc[lo]])
+        series[host] = list(zip(ts[lo:hi].tolist(), vs[lo:hi].tolist()))
     return series
 
 
@@ -254,20 +282,32 @@ def job_statistical_view(store: MetricStore, job: str, metric: str,
                          kind: str = "perf", span_s: float = 60.0
                          ) -> Dict[str, List[Tuple[float, float]]]:
     """The paper's second job dashboard: min/median/max curves across all
-    hosts per time bucket, O(1) memory per bucket via sketches."""
-    buckets: Dict[float, QuantileSet] = {}
-    for rec in store.select(job=job, kind=kind):
-        v = rec.get(metric)
-        if isinstance(v, (int, float)):
-            b = math.floor(rec.ts / span_s) * span_s
-            buckets.setdefault(b, QuantileSet()).add(float(v))
+    hosts per time bucket, computed exactly by a NumPy bucket group-by
+    over the columnar store (the streaming ``QuantileSet`` sketch remains
+    for relays that cannot hold samples)."""
+    sc = store.scan(job=job, kind=kind, fields=(metric,))
+    vals, present = sc.field(metric)
+    valid = present & ~np.isnan(vals)
     out: Dict[str, List[Tuple[float, float]]] = {
         "min": [], "median": [], "max": []}
-    for b in sorted(buckets):
-        s = buckets[b].summary()
-        out["min"].append((b, s["min"]))
-        out["median"].append((b, s["median"]))
-        out["max"].append((b, s["max"]))
+    if not valid.any():
+        return out
+    vs = vals[valid]
+    buckets = np.floor(sc.ts[valid] / span_s) * span_s
+    order = np.lexsort((vs, buckets))  # value-sorted within each bucket
+    buckets, vs = buckets[order], vs[order]
+    cuts = np.nonzero(buckets[1:] != buckets[:-1])[0] + 1
+    starts = np.concatenate([[0], cuts])
+    stops = np.concatenate([cuts, [len(vs)]])
+    counts = stops - starts
+    mins = vs[starts]
+    maxs = vs[stops - 1]
+    med_lo = vs[starts + (counts - 1) // 2]
+    med_hi = vs[starts + counts // 2]
+    medians = 0.5 * (med_lo + med_hi)
+    out["min"] = list(zip(buckets[starts].tolist(), mins.tolist()))
+    out["median"] = list(zip(buckets[starts].tolist(), medians.tolist()))
+    out["max"] = list(zip(buckets[starts].tolist(), maxs.tolist()))
     return out
 
 

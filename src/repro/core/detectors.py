@@ -14,21 +14,24 @@ Detectors encode the paper's specialized views (§4.4) and case studies
 * :class:`StragglerDetector`   — (beyond paper) slow-host step-time outlier;
                                   events feed the elastic supervisor
 
-All detectors are pure functions of the store (batch ``scan``); the hang
-detector additionally supports streaming ``feed`` for ingest-time alerting.
+Batch ``scan`` methods run vectorized over the columnar store's scan API
+(one NumPy pass per detector instead of per-record Python loops); the
+hang detector additionally supports streaming ``feed`` for ingest-time
+alerting.
 """
 
 from __future__ import annotations
 
-import math
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.aggregator import MetricStore
+from repro.core.columnar import ColumnScan
 from repro.core.daemon import JobManifest
 from repro.core.schema import MetricRecord
-from repro.core.sketches import exact_quantile
 
 
 @dataclass
@@ -49,6 +52,20 @@ class DetectorEvent:
 
 
 Manifests = Dict[str, JobManifest]
+
+
+def _jobs_sorted(sc: ColumnScan) -> Iterator[Tuple[str, np.ndarray]]:
+    """Yield (job, row-index array in store order), jobs sorted by name."""
+    if sc.n == 0:
+        return
+    order = np.argsort(sc.job_codes, kind="stable")
+    codes_sorted = sc.job_codes[order]
+    bounds = np.searchsorted(codes_sorted, np.arange(len(sc.job_vocab) + 1))
+    for code in sorted(range(len(sc.job_vocab)),
+                       key=lambda c: sc.job_vocab[c]):
+        idx = order[bounds[code]:bounds[code + 1]]
+        if idx.size:
+            yield str(sc.job_vocab[code]), idx
 
 
 class Detector:
@@ -100,10 +117,52 @@ class HangDetector(Detector):
 
     def scan(self, store: MetricStore,
              manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
-        fresh = HangDetector(self.patience, self.min_gflops)
+        """Vectorized stall-run detection: one pass over the perf scan.
+
+        A "run" of consecutive stalled samples per (job, host) fires one
+        event the moment it reaches ``patience`` — identical to feeding
+        every record through a fresh streaming detector.
+        """
+        sc = store.scan(kind="perf", fields=("steps_per_s", "gflops",
+                                             "step"))
+        if sc.n == 0:
+            return []
+        sps, sps_p = sc.field("steps_per_s")
+        g, g_p = sc.field("gflops")
+        step, step_p = sc.field("step")
+        with np.errstate(invalid="ignore"):
+            stalled = (np.where(sps_p, sps, 0.0) <= 0.0) \
+                & (np.where(g_p, g, 0.0) < self.min_gflops)
+        key = sc.job_codes.astype(np.int64) * max(len(sc.host_vocab), 1) \
+            + sc.host_codes
+        order = np.argsort(key, kind="stable")
+        k_o = key[order]
+        s_o = stalled[order]
+        n = sc.n
+        pos = np.arange(n)
+        boundary = np.empty(n, bool)
+        boundary[0] = True
+        boundary[1:] = k_o[1:] != k_o[:-1]
+        # last reset = previous non-stalled sample or the slot before the
+        # (job, host) group starts; streak = distance from it
+        anchor_seed = np.where(~s_o, pos,
+                               np.where(boundary, pos - 1, -(n + 1)))
+        anchor = np.maximum.accumulate(anchor_seed)
+        fire = s_o & ((pos - anchor) == self.patience)
         events: List[DetectorEvent] = []
-        for rec in store.select(kind="perf"):
-            events.extend(fresh.feed(rec))
+        for orig in sorted(int(i) for i in order[fire]):
+            host = str(sc.host_vocab[sc.host_codes[orig]])
+            step_val = int(step[orig]) if step_p[orig] and not np.isnan(
+                step[orig]) else -1
+            events.append(DetectorEvent(
+                ts=float(sc.ts[orig]),
+                job=str(sc.job_vocab[sc.job_codes[orig]]),
+                detector=self.name, severity="critical",
+                message=(f"no forward progress on {host} for "
+                         f"{self.patience} consecutive samples "
+                         f"(steps_per_s=0, GFLOP/s<{self.min_gflops})"),
+                fields={"host": host, "streak": self.patience,
+                        "step": step_val}))
         return events
 
 
@@ -118,21 +177,23 @@ class IdleAcceleratorDetector(Detector):
 
     def scan(self, store: MetricStore,
              manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        sc = store.scan(kind="device", fields=("hbm_frac_used",))
+        v, p = sc.field("hbm_frac_used")
+        valid = p & ~np.isnan(v)
         events = []
-        for job in store.jobs():
-            fracs, ts = [], 0.0
-            for rec in store.select(job=job, kind="device"):
-                v = rec.get("hbm_frac_used")
-                if isinstance(v, (int, float)):
-                    fracs.append(float(v))
-                    ts = rec.ts
-            if len(fracs) >= self.min_samples and max(fracs) < self.max_frac:
+        for job, idx in _jobs_sorted(sc):
+            vi = idx[valid[idx]]
+            if vi.size < self.min_samples:
+                continue
+            peak = float(v[vi].max())
+            if peak < self.max_frac:
                 events.append(DetectorEvent(
-                    ts=ts, job=job, detector=self.name, severity="warning",
+                    ts=float(sc.ts[vi[-1]]), job=job, detector=self.name,
+                    severity="warning",
                     message=(f"accelerators allocated but peak HBM use is "
-                             f"{max(fracs):.1%} (<{self.max_frac:.0%})"),
-                    fields={"peak_hbm_frac": max(fracs),
-                            "samples": len(fracs)}))
+                             f"{peak:.1%} (<{self.max_frac:.0%})"),
+                    fields={"peak_hbm_frac": peak,
+                            "samples": int(vi.size)}))
         return events
 
 
@@ -147,23 +208,26 @@ class MemoryUnderuseDetector(Detector):
     def scan(self, store: MetricStore,
              manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
         manifests = manifests or {}
+        sc = store.scan(kind="device", fields=("hbm_frac_used",))
+        v, p = sc.field("hbm_frac_used")
+        valid = p & ~np.isnan(v)
         events = []
-        for job in store.jobs():
+        for job, idx in _jobs_sorted(sc):
             man = manifests.get(job)
-            if man is None or man.extra.get("large_memory") not in ("1", 1, True):
+            if man is None or man.extra.get("large_memory") not in ("1", 1,
+                                                                   True):
                 continue
-            fracs, ts = [], 0.0
-            for rec in store.select(job=job, kind="device"):
-                v = rec.get("hbm_frac_used")
-                if isinstance(v, (int, float)):
-                    fracs.append(float(v))
-                    ts = rec.ts
-            if fracs and max(fracs) < self.max_frac:
+            vi = idx[valid[idx]]
+            if vi.size == 0:
+                continue
+            peak = float(v[vi].max())
+            if peak < self.max_frac:
                 events.append(DetectorEvent(
-                    ts=ts, job=job, detector=self.name, severity="warning",
+                    ts=float(sc.ts[vi[-1]]), job=job, detector=self.name,
+                    severity="warning",
                     message=(f"large-memory allocation but peak memory use "
-                             f"is {max(fracs):.1%} (<{self.max_frac:.0%})"),
-                    fields={"peak_frac": max(fracs)}))
+                             f"is {peak:.1%} (<{self.max_frac:.0%})"),
+                    fields={"peak_frac": peak}))
         return events
 
 
@@ -178,21 +242,27 @@ class LowParticipationDetector(Detector):
     def scan(self, store: MetricStore,
              manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
         manifests = manifests or {}
+        sc = store.scan(kind="perf", fields=("gflops",))
+        g, g_p = sc.field("gflops")
+        with np.errstate(invalid="ignore"):
+            working = np.where(g_p, g, 0.0) > 0
+        sc_all = store.scan()
+        last_ts = {job: float(sc_all.ts[idx].max())
+                   for job, idx in _jobs_sorted(sc_all)}
         events = []
-        for job in store.jobs():
+        for job, idx in _jobs_sorted(sc):
             man = manifests.get(job)
             if man is None or man.num_hosts <= 1:
                 continue
-            hosts = {r.host for r in store.select(job=job, kind="perf")
-                     if float(r.get("gflops", 0.0) or 0.0) > 0}
-            ts = max((r.ts for r in store.select(job=job)), default=0.0)
-            frac = len(hosts) / man.num_hosts
-            if hosts and frac < self.min_frac:
+            active = int(np.unique(sc.host_codes[idx[working[idx]]]).size)
+            frac = active / man.num_hosts
+            if active and frac < self.min_frac:
                 events.append(DetectorEvent(
-                    ts=ts, job=job, detector=self.name, severity="warning",
-                    message=(f"only {len(hosts)}/{man.num_hosts} allocated "
+                    ts=last_ts.get(job, 0.0), job=job, detector=self.name,
+                    severity="warning",
+                    message=(f"only {active}/{man.num_hosts} allocated "
                              f"hosts report useful work"),
-                    fields={"active_hosts": len(hosts),
+                    fields={"active_hosts": active,
                             "allocated_hosts": man.num_hosts}))
         return events
 
@@ -208,23 +278,24 @@ class LowMfuDetector(Detector):
 
     def scan(self, store: MetricStore,
              manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        sc = store.scan(kind="perf", fields=("mfu", "gflops"))
+        mfu, mfu_p = sc.field("mfu")
+        g, g_p = sc.field("gflops")
+        with np.errstate(invalid="ignore"):
+            valid = mfu_p & (np.where(g_p, g, 0.0) > 0)
         events = []
-        for job in store.jobs():
-            mfus, ts = [], 0.0
-            for rec in store.select(job=job, kind="perf"):
-                v = rec.get("mfu")
-                g = rec.get("gflops", 0.0)
-                if isinstance(v, (int, float)) and float(g or 0.0) > 0:
-                    mfus.append(float(v))
-                    ts = rec.ts
-            if len(mfus) >= self.min_samples:
-                avg = sum(mfus) / len(mfus)
-                if avg < self.min_mfu:
-                    events.append(DetectorEvent(
-                        ts=ts, job=job, detector=self.name, severity="info",
-                        message=(f"average MFU {avg:.1%} < {self.min_mfu:.0%}"
-                                 " — candidate for application support"),
-                        fields={"avg_mfu": avg, "samples": len(mfus)}))
+        for job, idx in _jobs_sorted(sc):
+            vi = idx[valid[idx]]
+            if vi.size < self.min_samples:
+                continue
+            avg = float(mfu[vi].mean())
+            if avg < self.min_mfu:
+                events.append(DetectorEvent(
+                    ts=float(sc.ts[vi[-1]]), job=job, detector=self.name,
+                    severity="info",
+                    message=(f"average MFU {avg:.1%} < {self.min_mfu:.0%}"
+                             " — candidate for application support"),
+                    fields={"avg_mfu": avg, "samples": int(vi.size)}))
         return events
 
 
@@ -239,22 +310,30 @@ class StragglerDetector(Detector):
 
     def scan(self, store: MetricStore,
              manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        sc = store.scan(kind="perf", fields=("step_time_s",))
+        v, p = sc.field("step_time_s")
+        with np.errstate(invalid="ignore"):
+            valid = p & (v > 0)
         events = []
-        for job in store.jobs():
-            per_host: Dict[str, List[float]] = defaultdict(list)
-            ts = 0.0
-            for rec in store.select(job=job, kind="perf"):
-                v = rec.get("step_time_s")
-                if isinstance(v, (int, float)) and float(v) > 0:
-                    per_host[rec.host].append(float(v))
-                    ts = rec.ts
-            if len(per_host) < 2:
+        for job, idx in _jobs_sorted(sc):
+            vi = idx[valid[idx]]
+            hosts = sc.host_codes[vi]
+            if np.unique(hosts).size < 2:
                 continue
-            medians = {h: exact_quantile(v, 0.5) for h, v in per_host.items()
-                       if len(v) >= self.min_samples}
+            order = np.argsort(hosts, kind="stable")
+            hs = hosts[order]
+            vs = v[vi][order]
+            cuts = np.nonzero(hs[1:] != hs[:-1])[0] + 1
+            medians: Dict[str, float] = {}
+            for chunk, hc in zip(np.split(vs, cuts), np.split(hs, cuts)):
+                if chunk.size >= self.min_samples:
+                    medians[str(sc.host_vocab[hc[0]])] = float(
+                        np.quantile(chunk, 0.5))
             if len(medians) < 2:
                 continue
-            overall = exact_quantile(list(medians.values()), 0.5)
+            overall = float(np.quantile(np.array(list(medians.values())),
+                                        0.5))
+            ts = float(sc.ts[vi[-1]])
             for host, med in sorted(medians.items()):
                 if med > self.ratio * overall:
                     events.append(DetectorEvent(

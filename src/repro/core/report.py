@@ -4,6 +4,10 @@ Users do not get Splunk access (security/data-protection, per the paper);
 they get a static, self-contained report per job.  We render Markdown plus
 embedded SVGs, and a single-file HTML (the "PDF" stand-in: printable,
 self-contained, no external references).
+
+All store reads go through splunklite queries and the dashboard helpers,
+which execute on the columnar engine (``repro.core.columnar``) — report
+generation never materializes row objects from the store.
 """
 
 from __future__ import annotations

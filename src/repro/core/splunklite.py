@@ -15,6 +15,17 @@ Commands: ``search``/``where``, ``stats``, ``timechart``, ``sort``,
 ``head``, ``fields``, ``dedup``, ``eval``.
 Aggregations: count, dc, sum, avg/mean, min, max, median, p25/p50/p75/p90/
 p95/p99, stdev, range, first, last.
+
+Two executors share the surface syntax:
+
+* the **columnar executor** (default for a :class:`ColumnarMetricStore`)
+  compiles ``search``/``where`` predicates to vectorized boolean masks
+  with zone-map segment pruning and dictionary-id equality pushdown,
+  runs ``stats``/``timechart`` through NumPy group-by kernels, and keeps
+  ``eval``/``dedup``/``sort``/``head``/``fields`` on column batches;
+* the **row executor** (used for plain row/record lists, or via
+  ``engine="rows"``) is the original pure-Python implementation and
+  doubles as the parity oracle in tests.
 """
 
 from __future__ import annotations
@@ -24,9 +35,14 @@ import fnmatch
 import math
 import re
 import shlex
+import warnings
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Union
 
-from repro.core.aggregator import MetricStore
+import numpy as np
+
+from repro.core.columnar import (ColumnarMetricStore, MISSING, NumColumn,
+                                 ObjColumn, Segment, StrColumn, build_column,
+                                 columns_from_rows, materialize_rows)
 from repro.core.schema import MetricRecord
 from repro.core.sketches import exact_quantile
 
@@ -85,6 +101,11 @@ def _cmd_search(rows: Iterable[Row], args: List[str]) -> List[Row]:
 # ------------------------------------------------------------------ stats ---
 _AGG_RE = re.compile(r"^([a-z0-9]+)(?:\(([A-Za-z0-9_.*]*)\))?$")
 
+_PCT_RE = re.compile(r"^p(\d+)$")
+
+_KNOWN_AGGS = {"count", "dc", "sum", "avg", "mean", "min", "max", "median",
+               "stdev", "range", "first", "last"}
+
 
 def _agg_fn(name: str) -> Callable[[List[Any]], Any]:
     def nums(vals):
@@ -126,8 +147,16 @@ def _agg_fn(name: str) -> Callable[[List[Any]], Any]:
     raise QueryError(f"unknown aggregation {name!r}")
 
 
+def _check_agg(name: str) -> None:
+    if name in _KNOWN_AGGS:
+        return
+    if _PCT_RE.match(name):
+        return
+    raise QueryError(f"unknown aggregation {name!r}")
+
+
 def _parse_aggs(tokens: List[str]):
-    """Parse ``agg(field) [as alias] ...`` returning [(fn, field, out)]."""
+    """Parse ``agg(field) [as alias] ...`` returning [(name, field, out)]."""
     aggs = []
     i = 0
     while i < len(tokens):
@@ -136,11 +165,12 @@ def _parse_aggs(tokens: List[str]):
         if not m:
             raise QueryError(f"bad aggregation token {tok!r}")
         name, fieldname = m.group(1), m.group(2)
+        _check_agg(name)
         out = f"{name}_{fieldname}" if fieldname else name
         if i + 2 < len(tokens) and tokens[i + 1] == "as":
             out = tokens[i + 2]
             i += 2
-        aggs.append((_agg_fn(name), fieldname, out))
+        aggs.append((name, fieldname, out))
         i += 1
     return aggs
 
@@ -159,16 +189,17 @@ def _cmd_stats(rows: List[Row], args: List[str]) -> List[Row]:
         agg_tokens, by = args[:split], args[split + 1:]
     else:
         agg_tokens, by = args, []
-    aggs = _parse_aggs(agg_tokens)
+    aggs = [(_agg_fn(name), fieldname, outname)
+            for name, fieldname, outname in _parse_aggs(agg_tokens)]
     out: List[Row] = []
     for key, group in sorted(_group_rows(rows, by).items()):
         row: Row = dict(zip(by, key))
-        for fn, fieldname, name in aggs:
+        for fn, fieldname, outname in aggs:
             if fieldname:
                 vals = [r[fieldname] for r in group if fieldname in r]
             else:
                 vals = group
-            row[name] = fn(vals)
+            row[outname] = fn(vals)
         out.append(row)
     return out
 
@@ -185,7 +216,8 @@ def _cmd_timechart(rows: List[Row], args: List[str]) -> List[Row]:
     if "by" in rest:
         split = rest.index("by")
         rest, by = rest[:split], rest[split + 1:]
-    aggs = _parse_aggs(rest)
+    aggs = [(_agg_fn(name), fieldname, outname)
+            for name, fieldname, outname in _parse_aggs(rest)]
     out: List[Row] = []
     keyed: Dict[tuple, List[Row]] = {}
     for r in rows:
@@ -198,10 +230,10 @@ def _cmd_timechart(rows: List[Row], args: List[str]) -> List[Row]:
     for key, group in sorted(keyed.items()):
         row: Row = {"_time": key[0]}
         row.update(dict(zip(by, key[1:])))
-        for fn, fieldname, name in aggs:
+        for fn, fieldname, outname in aggs:
             vals = ([r[fieldname] for r in group if fieldname in r]
                     if fieldname else group)
-            row[name] = fn(vals)
+            row[outname] = fn(vals)
         out.append(row)
     return out
 
@@ -318,15 +350,870 @@ def _split_pipeline(q: str) -> List[List[str]]:
     return stages
 
 
-def query(source: Union[MetricStore, Sequence[Row], Sequence[MetricRecord]],
-          q: str) -> List[Row]:
-    """Run an SPL-like pipeline over a store / record list / row list."""
-    if isinstance(source, MetricStore):
+# ===========================================================================
+# Columnar executor
+# ===========================================================================
+
+class _Fallback(Exception):
+    """Construct the columnar engine does not vectorize; the executor
+    materializes the current batch to rows and continues on the row
+    engine (results stay identical)."""
+
+
+class _Batch:
+    """A set of equal-length columns mid-pipeline."""
+
+    __slots__ = ("n", "cols")
+
+    def __init__(self, n: int, cols: Dict[str, object]) -> None:
+        self.n = n
+        self.cols = cols
+
+    def take(self, idx: np.ndarray) -> "_Batch":
+        return _Batch(int(len(idx)),
+                      {k: c.take(idx) for k, c in self.cols.items()})
+
+
+def _batch_from_rows(rows: List[Row]) -> _Batch:
+    n, cols = columns_from_rows(rows)
+    return _Batch(n, cols)
+
+
+def _rows_from_batch(batch: _Batch) -> List[Row]:
+    return materialize_rows(batch.n, batch.cols)
+
+
+# ------------------------------------------------------------- predicates ---
+
+class _Term:
+    __slots__ = ("key", "op", "raw", "num", "bare_pat", "pat")
+
+    def __init__(self, term: str) -> None:
+        m = _CMP_RE.match(term)
+        if not m:
+            self.key = self.op = self.raw = self.num = self.pat = None
+            self.bare_pat = (term if any(ch in term for ch in "*?")
+                             else f"*{term}*")
+            return
+        self.bare_pat = None
+        self.key, self.op, self.raw = m.groups()
+        self.num = _to_number(self.raw)
+        self.pat = self.raw if any(ch in self.raw for ch in "*?") else None
+
+
+def _vocab_match(col: StrColumn, raw: str, pat: Optional[str]) -> np.ndarray:
+    """Boolean mask over rows whose (present) string matches raw/pat."""
+    if pat is None:
+        code = col.index.get(raw)
+        if code is None:
+            return np.zeros(len(col.codes), bool)
+        return col.codes == code
+    hit = np.array([fnmatch.fnmatch(v, pat) for v in col.vocab], bool)
+    if not hit.any():
+        return np.zeros(len(col.codes), bool)
+    return hit[np.clip(col.codes, 0, None)] & (col.codes >= 0)
+
+
+def _num_label(v: float, is_int: bool) -> str:
+    if is_int:
+        return str(int(v))
+    return str(float(v))
+
+
+def _num_str_match(col: NumColumn, raw: str, pat: Optional[str]
+                   ) -> np.ndarray:
+    """String-compare a numeric column (rare: e.g. ``step=1*``)."""
+    codes, labels = _factorize_num(col)
+    if pat is None:
+        hit = np.array([lab == raw for lab in labels], bool)
+    else:
+        hit = np.array([fnmatch.fnmatch(lab, pat) for lab in labels], bool)
+    return hit[codes] & col.present
+
+
+def _term_mask(cs, t: _Term) -> np.ndarray:
+    """Evaluate one search term against a column set (Segment/_Batch)."""
+    n = cs.n
+    if t.bare_pat is not None:
+        mask = np.zeros(n, bool)
+        for col in cs.cols.values():
+            if col.kind == "str":
+                mask |= _vocab_match(col, "", t.bare_pat)
+            elif col.kind == "obj":
+                vv = col.vals
+                for i in range(n):
+                    v = vv[i]
+                    if isinstance(v, str) and fnmatch.fnmatch(v, t.bare_pat):
+                        mask[i] = True
+        return mask
+    col = cs.cols.get(t.key)
+    if t.op in ("=", "!="):
+        if col is None:
+            eq = np.zeros(n, bool)
+            present = np.zeros(n, bool)
+        elif col.kind == "num":
+            present = col.present
+            if t.num is not None:
+                with np.errstate(invalid="ignore"):
+                    eq = present & (col.vals == t.num)
+            else:
+                eq = _num_str_match(col, t.raw, t.pat)
+        elif col.kind == "str":
+            present = col.codes >= 0
+            if t.num is not None and t.pat is None:
+                # raw parses as a number, but values are strings -> the
+                # row engine falls through to exact string compare
+                eq = _vocab_match(col, t.raw, None)
+            else:
+                eq = _vocab_match(col, t.raw, t.pat)
+        else:  # obj
+            present = col.present
+            eq = np.zeros(n, bool)
+            for i in range(n):
+                if not present[i]:
+                    continue
+                v = col.vals[i]
+                if t.num is not None and isinstance(v, (int, float)):
+                    eq[i] = float(v) == t.num
+                elif t.pat is not None:
+                    eq[i] = fnmatch.fnmatch(str(v), t.pat)
+                else:
+                    eq[i] = str(v) == t.raw
+        return eq if t.op == "=" else (~eq | ~present)
+    # numeric comparisons
+    if col is None or t.num is None:
+        return np.zeros(n, bool)
+    if col.kind == "num":
+        with np.errstate(invalid="ignore"):
+            cmp = {"<": col.vals < t.num, "<=": col.vals <= t.num,
+                   ">": col.vals > t.num, ">=": col.vals >= t.num}[t.op]
+        return col.present & cmp
+    if col.kind == "obj":
+        mask = np.zeros(n, bool)
+        for i in range(n):
+            v = col.vals[i]
+            if col.present[i] and isinstance(v, (int, float)):
+                fv = float(v)
+                mask[i] = {"<": fv < t.num, "<=": fv <= t.num,
+                           ">": fv > t.num, ">=": fv >= t.num}[t.op]
+        return mask
+    return np.zeros(n, bool)  # str column never numeric-compares
+
+
+def _prune_segment(seg: Segment, terms: List[_Term]) -> bool:
+    """Zone-map / dictionary pruning: True = no row can match."""
+    for t in terms:
+        if t.bare_pat is not None:
+            continue
+        col = seg.cols.get(t.key)
+        if col is None:
+            if t.op != "!=":
+                return True
+            continue
+        if col.kind == "num" and t.num is not None and t.op != "!=":
+            lo, hi = seg.zone(t.key)
+            if lo > hi:
+                return True
+            if t.op == "=" and (t.num < lo or t.num > hi):
+                return True
+            if t.op == ">" and not hi > t.num:
+                return True
+            if t.op == ">=" and not hi >= t.num:
+                return True
+            if t.op == "<" and not lo < t.num:
+                return True
+            if t.op == "<=" and not lo <= t.num:
+                return True
+        elif col.kind == "str" and t.op == "=" and t.pat is None:
+            if t.raw not in col.index:
+                return True
+    return False
+
+
+def _merge_parts(parts: List) -> _Batch:
+    """Concatenate (segment, row-idx) gathers into one batch, merging
+    string dictionaries and unioning columns across segments."""
+    total = int(sum(len(idx) for _, idx in parts))
+    names: Dict[str, None] = {}
+    for seg, _ in parts:
+        for k in seg.cols:
+            if k not in names:
+                names[k] = None
+    cols: Dict[str, object] = {}
+    for name in names:
+        kinds = {seg.cols[name].kind for seg, _ in parts if name in seg.cols}
+        if kinds == {"num"}:
+            vals = np.full(total, np.nan)
+            present = np.zeros(total, bool)
+            is_int = np.zeros(total, bool)
+            pos = 0
+            for seg, idx in parts:
+                m = len(idx)
+                col = seg.cols.get(name)
+                if col is not None:
+                    vals[pos:pos + m] = col.vals[idx]
+                    present[pos:pos + m] = col.present[idx]
+                    is_int[pos:pos + m] = col.is_int[idx]
+                pos += m
+            cols[name] = NumColumn(vals, present, is_int)
+        elif kinds == {"str"}:
+            index: Dict[str, int] = {}
+            codes = np.full(total, -1, np.int32)
+            pos = 0
+            for seg, idx in parts:
+                m = len(idx)
+                col = seg.cols.get(name)
+                if col is not None:
+                    remap = np.array(
+                        [index.setdefault(v, len(index)) for v in col.vocab],
+                        np.int32) if len(col.vocab) else np.empty(0, np.int32)
+                    cc = col.codes[idx]
+                    codes[pos:pos + m] = np.where(
+                        cc >= 0, remap[np.clip(cc, 0, None)], -1)
+                pos += m
+            cols[name] = StrColumn(codes, np.array(list(index), dtype=object),
+                                   index)
+        else:
+            vals = np.empty(total, dtype=object)
+            vals[:] = MISSING
+            present = np.zeros(total, bool)
+            pos = 0
+            for seg, idx in parts:
+                m = len(idx)
+                col = seg.cols.get(name)
+                if col is not None:
+                    vals[pos:pos + m] = col.materialize()[idx]
+                    present[pos:pos + m] = col.present_mask()[idx]
+                pos += m
+            vals[~present] = MISSING
+            cols[name] = ObjColumn(vals, present)
+    return _Batch(total, cols)
+
+
+def _batch_from_store(store: ColumnarMetricStore,
+                      terms: List[_Term]) -> _Batch:
+    parts = []
+    for seg in store.segments():
+        if terms and _prune_segment(seg, terms):
+            continue
+        if terms:
+            mask = np.ones(seg.n, bool)
+            for t in terms:
+                mask &= _term_mask(seg, t)
+                if not mask.any():
+                    break
+            if not mask.any():
+                continue
+            idx = np.nonzero(mask)[0]
+        else:
+            idx = np.arange(seg.n)
+        parts.append((seg, idx))
+    if not parts:
+        return _Batch(0, {})
+    return _merge_parts(parts)
+
+
+# ------------------------------------------------------------ factorizing ---
+
+def _factorize_num(col: NumColumn):
+    """Codes + str labels for a numeric column; missing rows get "".
+
+    Values that were ints label as ``str(int(v))`` and floats as
+    ``str(float(v))`` to mirror the row engine's ``str(value)`` keys.
+    """
+    u, inv = np.unique(col.vals, return_inverse=True)
+    raw = np.where(col.present, inv * 2 + col.is_int, -1)
+    u2, codes = np.unique(raw, return_inverse=True)
+    labels = []
+    for token in u2.tolist():
+        if token < 0:
+            labels.append("")
+        else:
+            labels.append(_num_label(u[token >> 1], bool(token & 1)))
+    return codes.astype(np.int64), labels
+
+
+def _factorize(col, n: int):
+    """(codes, labels) for group-by / dedup keys; missing == ""."""
+    if col is None:
+        return np.zeros(n, np.int64), [""]
+    if col.kind == "num":
+        return _factorize_num(col)
+    if col.kind == "str":
+        codes = col.codes.astype(np.int64)
+        labels = list(col.vocab)
+        if (codes < 0).any():
+            mcode = col.index.get("")
+            if mcode is None:
+                mcode = len(labels)
+                labels = labels + [""]
+            codes = np.where(codes >= 0, codes, mcode)
+        return codes, labels
+    # obj
+    index: Dict[str, int] = {}
+    codes = np.empty(n, np.int64)
+    for i in range(n):
+        label = str(col.vals[i]) if col.present[i] else ""
+        codes[i] = index.setdefault(label, len(index))
+    return codes, list(index)
+
+
+def _combine_codes(code_arrays: List[np.ndarray],
+                   sizes: List[int]) -> np.ndarray:
+    combined = code_arrays[0].astype(np.int64)
+    for codes, size in zip(code_arrays[1:], sizes[1:]):
+        combined = combined * size + codes
+    return combined
+
+
+# -------------------------------------------------------------- group/agg ---
+
+class _Grouping:
+    __slots__ = ("gid", "keys", "G", "order", "bounds")
+
+    def __init__(self, gid: np.ndarray, keys: List[tuple]) -> None:
+        self.gid = gid
+        self.keys = keys
+        self.G = len(keys)
+        self.order = np.argsort(gid, kind="stable")
+        go = gid[self.order]
+        self.bounds = np.searchsorted(go, np.arange(self.G + 1))
+
+
+def _group(batch: _Batch, by: List[str],
+           extra: Optional[tuple] = None) -> _Grouping:
+    """Group rows by the ``by`` columns (plus an optional pre-computed
+    (codes, keyvals) leading key, used for timechart buckets).  Groups
+    come out sorted by their key tuples, matching the row engine."""
+    code_arrays: List[np.ndarray] = []
+    labels_list: List[List] = []
+    if extra is not None:
+        code_arrays.append(extra[0])
+        labels_list.append(extra[1])
+    for b in by:
+        codes, labels = _factorize(batch.cols.get(b), batch.n)
+        code_arrays.append(codes)
+        labels_list.append(labels)
+    if batch.n == 0:
+        return _Grouping(np.zeros(0, np.int64), [])
+    if not code_arrays:
+        return _Grouping(np.zeros(batch.n, np.int64), [()])
+    sizes = [len(lb) for lb in labels_list]
+    combined = _combine_codes(code_arrays, sizes)
+    uniq, inv = np.unique(combined, return_inverse=True)
+    # decompose each unique combined code back into per-column labels
+    keys = []
+    for token in uniq.tolist():
+        parts = []
+        for size in reversed(sizes[1:]):
+            parts.append(token % size)
+            token //= size
+        parts.append(token)
+        parts.reverse()
+        keys.append(tuple(labels_list[j][p] for j, p in enumerate(parts)))
+    order = sorted(range(len(keys)), key=keys.__getitem__)
+    perm = np.empty(len(keys), np.int64)
+    perm[np.array(order, np.int64)] = np.arange(len(keys))
+    return _Grouping(perm[inv], [keys[i] for i in order])
+
+
+def _quantile(xs: np.ndarray, q: float) -> float:
+    if xs.size == 0:
+        return math.nan
+    if xs.size <= 4:  # tiny groups: exact oracle path
+        return exact_quantile(xs.tolist(), q)
+    return float(np.quantile(xs, q))
+
+
+def _aggregate(batch: _Batch, grouping: _Grouping, aggs) -> List[Dict]:
+    """NumPy group-by kernels for every supported aggregation."""
+    G = grouping.G
+    gid, order = grouping.gid, grouping.order
+    out: List[Dict] = [dict() for _ in range(G)]
+    field_cache: Dict[str, tuple] = {}
+
+    def field_data(fname: str):
+        cached = field_cache.get(fname)
+        if cached is not None:
+            return cached
+        col = batch.cols.get(fname)
+        if col is None:
+            present = np.zeros(batch.n, bool)
+            numeric = present
+            vals = np.full(batch.n, np.nan)
+        elif col.kind == "num":
+            present = col.present
+            numeric = present & ~np.isnan(col.vals)
+            vals = col.vals
+        elif col.kind == "str":
+            present = col.codes >= 0
+            numeric = np.zeros(batch.n, bool)
+            vals = np.full(batch.n, np.nan)
+        else:
+            present = col.present
+            vals = np.full(batch.n, np.nan)
+            numeric = np.zeros(batch.n, bool)
+            for i in range(batch.n):
+                v = col.vals[i]
+                if present[i] and isinstance(v, (int, float)) and not (
+                        isinstance(v, float) and math.isnan(v)):
+                    numeric[i] = True
+                    vals[i] = float(v)
+        # per-group numeric slices (ordered by gid, original order kept)
+        num_o = numeric[order]
+        vals_o = vals[order][num_o]
+        go = gid[order][num_o]
+        cuts = np.searchsorted(go, np.arange(1, G))
+        slices = np.split(vals_o, cuts)
+        cached = (col, present, numeric, slices)
+        field_cache[fname] = cached
+        return cached
+
+    for name, fname, outname in aggs:
+        if not fname:
+            if name == "count":
+                cnt = np.bincount(gid, minlength=G)
+                for g in range(G):
+                    out[g][outname] = int(cnt[g])
+                continue
+            raise _Fallback  # field-less first/dc/... aggregate row dicts
+        col, present, numeric, slices = field_data(fname)
+        if name == "count":
+            cnt = np.bincount(gid[present], minlength=G)
+            for g in range(G):
+                out[g][outname] = int(cnt[g])
+        elif name == "sum":
+            for g in range(G):
+                xs = slices[g]
+                # row engine: sum([]) is int 0; non-empty sums are float
+                out[g][outname] = float(xs.sum()) if xs.size else 0
+        elif name in ("avg", "mean"):
+            for g in range(G):
+                xs = slices[g]
+                out[g][outname] = float(xs.mean()) if xs.size else math.nan
+        elif name == "min":
+            for g in range(G):
+                xs = slices[g]
+                out[g][outname] = float(xs.min()) if xs.size else math.nan
+        elif name == "max":
+            for g in range(G):
+                xs = slices[g]
+                out[g][outname] = float(xs.max()) if xs.size else math.nan
+        elif name == "range":
+            for g in range(G):
+                xs = slices[g]
+                out[g][outname] = (float(xs.max() - xs.min()) if xs.size
+                                   else math.nan)
+        elif name == "stdev":
+            for g in range(G):
+                xs = slices[g]
+                out[g][outname] = (float(xs.std(ddof=1)) if xs.size > 1
+                                   else 0.0)
+        elif name in ("median",) or _PCT_RE.match(name):
+            q = 0.5 if name == "median" else int(name[1:]) / 100.0
+            for g in range(G):
+                out[g][outname] = _quantile(slices[g], q)
+        elif name == "dc":
+            codes, _labels = _factorize(col, batch.n)
+            pc = codes[present]
+            pg = gid[present]
+            if pg.size:
+                pair = np.unique(pg * (codes.max() + 1) + pc)
+                cnt = np.bincount(pair // (codes.max() + 1), minlength=G)
+            else:
+                cnt = np.zeros(G, np.int64)
+            for g in range(G):
+                out[g][outname] = int(cnt[g])
+        elif name in ("first", "last"):
+            po = present[order]
+            for g in range(G):
+                lo, hi = grouping.bounds[g], grouping.bounds[g + 1]
+                seg_idx = order[lo:hi][po[lo:hi]]
+                if seg_idx.size == 0:
+                    out[g][outname] = None
+                else:
+                    i = int(seg_idx[0] if name == "first" else seg_idx[-1])
+                    out[g][outname] = col.value_at(i)
+        else:  # pragma: no cover - _check_agg guards this
+            raise QueryError(f"unknown aggregation {name!r}")
+    return out
+
+
+# ------------------------------------------------------- columnar commands --
+
+def _col_search(batch: _Batch, args: List[str]) -> _Batch:
+    terms = [_Term(t) for t in args]
+    mask = np.ones(batch.n, bool)
+    for t in terms:
+        mask &= _term_mask(batch, t)
+    return batch.take(np.nonzero(mask)[0])
+
+
+def _col_stats(batch: _Batch, args: List[str]) -> _Batch:
+    if "by" in args:
+        split = args.index("by")
+        agg_tokens, by = args[:split], args[split + 1:]
+    else:
+        agg_tokens, by = args, []
+    aggs = _parse_aggs(agg_tokens)
+    grouping = _group(batch, by)
+    agg_rows = _aggregate(batch, grouping, aggs)
+    rows: List[Row] = []
+    for key, vals in zip(grouping.keys, agg_rows):
+        row: Row = dict(zip(by, key))
+        row.update(vals)
+        rows.append(row)
+    return _batch_from_rows(rows)
+
+
+def _col_timechart(batch: _Batch, args: List[str]) -> _Batch:
+    span = 60.0
+    rest: List[str] = []
+    for tok in args:
+        if tok.startswith("span="):
+            span = float(tok[5:])
+        else:
+            rest.append(tok)
+    by: List[str] = []
+    if "by" in rest:
+        split = rest.index("by")
+        rest, by = rest[:split], rest[split + 1:]
+    aggs = _parse_aggs(rest)
+    ts_col = batch.cols.get("ts")
+    if ts_col is None or ts_col.kind != "num":
+        raise _Fallback
+    valid = ts_col.present & ~np.isnan(ts_col.vals)
+    sub = batch.take(np.nonzero(valid)[0])
+    if sub.n == 0:
+        return _batch_from_rows([])
+    buckets = np.floor(sub.cols["ts"].vals / span) * span
+    u, inv = np.unique(buckets, return_inverse=True)
+    grouping = _group(sub, by, extra=(inv.astype(np.int64), u.tolist()))
+    agg_rows = _aggregate(sub, grouping, aggs)
+    rows: List[Row] = []
+    for key, vals in zip(grouping.keys, agg_rows):
+        row: Row = {"_time": key[0]}
+        row.update(dict(zip(by, key[1:])))
+        row.update(vals)
+        rows.append(row)
+    return _batch_from_rows(rows)
+
+
+def _eval_env_array(batch: _Batch, name: str) -> np.ndarray:
+    col = batch.cols.get(name)
+    if col is None:
+        return np.full(batch.n, np.nan)
+    if col.kind == "str":
+        return np.full(batch.n, np.nan)  # row engine: non-numeric -> nan
+    if col.kind == "obj":
+        raise _Fallback  # mixed column: numeric rows need row semantics
+    return np.where(col.present, col.vals, np.nan)
+
+
+def _vec_eval(node: ast.AST, batch: _Batch):
+    """Vectorized safe-eval mirroring the row engine's per-row
+    semantics (exceptions there become NaN here)."""
+    nan = math.nan
+    if isinstance(node, ast.Expression):
+        return _vec_eval(node.body, batch)
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, bool):
+            return float(node.value)
+        if isinstance(node.value, (int, float)):
+            return float(node.value)
+        raise _Fallback
+    if isinstance(node, ast.Name):
+        if node.id in _EVAL_FUNCS:
+            raise _Fallback
+        return _eval_env_array(batch, node.id)
+    if isinstance(node, ast.UnaryOp):
+        v = _vec_eval(node.operand, batch)
+        return -v if isinstance(node.op, ast.USub) else +v
+    if isinstance(node, ast.BinOp):
+        a = _vec_eval(node.left, batch)
+        b = _vec_eval(node.right, batch)
+        with np.errstate(all="ignore"):
+            if isinstance(node.op, ast.Add):
+                return a + b
+            if isinstance(node.op, ast.Sub):
+                return a - b
+            if isinstance(node.op, ast.Mult):
+                return a * b
+            if isinstance(node.op, ast.Div):
+                r = np.divide(a, b)
+                return np.where(np.asarray(b) == 0, nan, r)
+            if isinstance(node.op, ast.Mod):
+                r = np.mod(a, b)
+                return np.where(np.asarray(b) == 0, nan, r)
+            if isinstance(node.op, ast.Pow):
+                r = np.power(a, b)
+                bad = (np.isinf(r) & np.isfinite(np.asarray(a))
+                       & np.isfinite(np.asarray(b)))
+                return np.where(bad, nan, r)
+        raise _Fallback
+    if isinstance(node, ast.Compare):
+        cur = _vec_eval(node.left, batch)
+        acc = None
+        with np.errstate(invalid="ignore"):
+            for op, comp in zip(node.ops, node.comparators):
+                nxt = _vec_eval(comp, batch)
+                c = {ast.Gt: lambda x, y: x > y,
+                     ast.GtE: lambda x, y: x >= y,
+                     ast.Lt: lambda x, y: x < y,
+                     ast.LtE: lambda x, y: x <= y,
+                     ast.Eq: lambda x, y: x == y,
+                     ast.NotEq: lambda x, y: x != y}[type(op)](cur, nxt)
+                acc = c if acc is None else (acc & c)
+                cur = nxt
+        return np.asarray(acc, dtype=np.float64)
+    if isinstance(node, ast.IfExp):
+        cond = np.asarray(_vec_eval(node.test, batch))
+        a = _vec_eval(node.body, batch)
+        b = _vec_eval(node.orelse, batch)
+        return np.where(cond.astype(bool), a, b)
+    if isinstance(node, ast.Call):
+        fname = node.func.id  # validated earlier
+        args = [_vec_eval(a, batch) for a in node.args]
+        with np.errstate(all="ignore"), warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            if fname == "abs" and len(args) == 1:
+                return np.abs(args[0])
+            if fname in ("min", "max"):
+                if len(args) < 2:  # row engine: TypeError -> nan
+                    return np.full(batch.n, nan)
+                # mirror python's builtin exactly (NaN comparisons are
+                # False, so NaN operands only win in the first position)
+                acc = np.asarray(args[0], dtype=np.float64)
+                for a in args[1:]:
+                    a = np.asarray(a, dtype=np.float64)
+                    better = (a < acc) if fname == "min" else (a > acc)
+                    acc = np.where(better, a, acc)
+                return acc
+            if fname == "round" and len(args) == 1:
+                return np.round(args[0])
+            if fname in ("log", "log2", "log10") and len(args) == 1:
+                a = np.asarray(args[0], dtype=np.float64)
+                fn = {"log": np.log, "log2": np.log2,
+                      "log10": np.log10}[fname]
+                return np.where(a > 0, fn(np.where(a > 0, a, 1.0)), nan)
+            if fname == "sqrt" and len(args) == 1:
+                return np.sqrt(args[0])
+            if fname == "exp" and len(args) == 1:
+                a = np.asarray(args[0], dtype=np.float64)
+                r = np.exp(a)
+                return np.where(np.isinf(r) & np.isfinite(a), nan, r)
+            if fname in ("floor", "ceil") and len(args) == 1:
+                return (np.floor if fname == "floor" else np.ceil)(args[0])
+        raise _Fallback
+    raise _Fallback
+
+
+_INT_FUNCS = ("floor", "ceil", "round")
+
+
+def _nonfloat_leaks(node: ast.AST, is_root: bool = True) -> bool:
+    """True when the row engine could produce a non-float result (bool
+    from compares, int from floor/ceil/round) somewhere the vectorized
+    f64 pipeline cannot reproduce it.  Root-level int funcs are handled
+    specially by the caller; an IfExp's *test* only feeds truthiness,
+    so compares there never leak into the value."""
+    if isinstance(node, ast.Compare):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in _INT_FUNCS and not is_root:
+        return True
+    if isinstance(node, ast.IfExp):
+        return (_nonfloat_leaks(node.body, False)
+                or _nonfloat_leaks(node.orelse, False))
+    return any(_nonfloat_leaks(c, False)
+               for c in ast.iter_child_nodes(node))
+
+
+def _col_eval(batch: _Batch, args: List[str]) -> _Batch:
+    expr = " ".join(args)
+    if "=" not in expr:
+        raise QueryError("eval needs name=expr")
+    name, rhs = expr.split("=", 1)
+    name = name.strip()
+    try:
+        tree = ast.parse(rhs, mode="eval")
+    except SyntaxError:  # row engine: per-row exception -> nan
+        vals = np.full(batch.n, np.nan)
+        cols = dict(batch.cols)
+        cols[name] = NumColumn(vals, np.ones(batch.n, bool),
+                               np.zeros(batch.n, bool))
+        return _Batch(batch.n, cols)
+    for node in ast.walk(tree):
+        if not isinstance(node, _ALLOWED_NODES):
+            raise QueryError(f"eval: disallowed syntax {type(node).__name__}")
+        if isinstance(node, ast.Call):
+            if not (isinstance(node.func, ast.Name)
+                    and node.func.id in _EVAL_FUNCS):
+                raise QueryError("eval: disallowed function")
+    # expressions whose row-engine result is not a plain float (bool
+    # compares, nested int funcs, pure-constant int arithmetic) run on
+    # the row engine so values and str() group keys stay identical
+    root = tree.body
+    root_int_fn = (isinstance(root, ast.Call)
+                   and isinstance(root.func, ast.Name)
+                   and root.func.id in _INT_FUNCS and len(root.args) == 1)
+    if _nonfloat_leaks(root):
+        raise _Fallback
+    if not any(isinstance(n, ast.Name) and n.id not in _EVAL_FUNCS
+               for n in ast.walk(tree)):
+        raise _Fallback  # constant expression: row engine keeps int-ness
+    result = _vec_eval(tree, batch)
+    result = np.asarray(result, dtype=np.float64)
+    if result.ndim == 0:
+        result = np.full(batch.n, float(result))
+    is_int = np.zeros(batch.n, bool)
+    if root_int_fn:
+        # math.floor/ceil/round return ints (inf/nan raise -> nan)
+        result = np.where(np.isinf(result), np.nan, result)
+        is_int = ~np.isnan(result)
+    cols = dict(batch.cols)
+    cols[name] = NumColumn(result, np.ones(batch.n, bool), is_int)
+    return _Batch(batch.n, cols)
+
+
+def _sort_key_arrays(batch: _Batch, key: str):
+    """(tier, value) arrays mirroring the row engine's 3-tier sort key:
+    0 = numeric non-NaN, 1 = present but non-numeric/NaN, 2 = missing."""
+    n = batch.n
+    col = batch.cols.get(key)
+    if col is None:
+        return np.full(n, 2.0), np.zeros(n)
+    if col.kind == "num":
+        isn = np.isnan(col.vals)
+        tier = np.where(col.present & ~isn, 0.0,
+                        np.where(col.present, 1.0, 2.0))
+        val = np.where(tier == 0.0, np.where(isn, 0.0, col.vals), 0.0)
+        return tier, val
+    if col.kind == "str":
+        present = col.codes >= 0
+        return np.where(present, 1.0, 2.0), np.zeros(n)
+    tier = np.empty(n)
+    val = np.zeros(n)
+    for i in range(n):
+        v = col.vals[i]
+        if not col.present[i]:
+            tier[i] = 2.0
+        elif isinstance(v, (int, float)) and not (
+                isinstance(v, float) and math.isnan(v)):
+            tier[i] = 0.0
+            val[i] = float(v)
+        else:
+            tier[i] = 1.0
+    return tier, val
+
+
+def _col_sort(batch: _Batch, args: List[str]) -> _Batch:
+    if not args:
+        return batch
+    lex: List[np.ndarray] = []
+    for a in reversed(args):  # least-significant key first for lexsort
+        desc = a.startswith("-")
+        tier, val = _sort_key_arrays(batch, a.lstrip("+-"))
+        if desc:
+            tier, val = -tier, -val
+        lex.append(val)
+        lex.append(tier)
+    order = np.lexsort(tuple(lex))
+    return batch.take(order)
+
+
+def _col_head(batch: _Batch, args: List[str]) -> _Batch:
+    n = int(args[0]) if args else 10
+    stop = min(n, batch.n) if n >= 0 else max(batch.n + n, 0)
+    return batch.take(np.arange(stop))
+
+
+def _col_fields(batch: _Batch, args: List[str]) -> _Batch:
+    return _Batch(batch.n, {k: batch.cols[k] for k in args
+                            if k in batch.cols})
+
+
+def _col_dedup(batch: _Batch, args: List[str]) -> _Batch:
+    if batch.n == 0:
+        return batch
+    code_arrays = []
+    sizes = []
+    for a in args:
+        codes, labels = _factorize(batch.cols.get(a), batch.n)
+        code_arrays.append(codes)
+        sizes.append(len(labels))
+    if not code_arrays:
+        return batch.take(np.arange(min(1, batch.n)))
+    combined = _combine_codes(code_arrays, sizes)
+    _, first_idx = np.unique(combined, return_index=True)
+    return batch.take(np.sort(first_idx))
+
+
+_COL_COMMANDS = {
+    "search": _col_search,
+    "where": _col_search,
+    "stats": _col_stats,
+    "timechart": _col_timechart,
+    "sort": _col_sort,
+    "head": _col_head,
+    "fields": _col_fields,
+    "table": _col_fields,
+    "dedup": _col_dedup,
+    "eval": _col_eval,
+}
+
+
+def _columnar_query(store: ColumnarMetricStore,
+                    stages: List[List[str]]) -> List[Row]:
+    # plan: push the leading search's predicates down to the segment scan
+    i = 0
+    terms: List[_Term] = []
+    if stages:
+        cmd, args = stages[0][0], stages[0][1:]
+        if cmd not in _COMMANDS:
+            cmd, args = "search", stages[0]  # leading implicit search
+        if cmd in ("search", "where"):
+            terms = [_Term(t) for t in args]
+            i = 1
+        else:
+            # validate remaining pipeline still raises on unknown cmds
+            i = 0
+    batch = _batch_from_store(store, terms)
+    rows: Optional[List[Row]] = None
+    for toks in stages[i:]:
+        cmd, args = toks[0], toks[1:]
+        if cmd not in _COMMANDS:
+            raise QueryError(f"unknown command {cmd!r}")
+        if rows is None:
+            try:
+                batch = _COL_COMMANDS[cmd](batch, args)
+                continue
+            except _Fallback:
+                rows = _rows_from_batch(batch)
+        rows = _COMMANDS[cmd](rows, args)
+    return rows if rows is not None else _rows_from_batch(batch)
+
+
+# ----------------------------------------------------------------- driver ---
+
+def query(source: Union[ColumnarMetricStore, Sequence[Row],
+                        Sequence[MetricRecord]],
+          q: str, engine: Optional[str] = None) -> List[Row]:
+    """Run an SPL-like pipeline over a store / record list / row list.
+
+    ``engine`` — ``None`` (auto: columnar for stores, rows otherwise),
+    ``"columnar"`` or ``"rows"`` to force an executor.
+    """
+    stages = _split_pipeline(q)
+    if isinstance(source, ColumnarMetricStore):
+        if engine != "rows":
+            return _columnar_query(source, stages)
         rows: List[Row] = [r.as_dict() for r in source.records]
     else:
+        if engine == "columnar":
+            raise QueryError("columnar engine requires a ColumnarMetricStore")
         rows = [r.as_dict() if isinstance(r, MetricRecord) else dict(r)
                 for r in source]
-    stages = _split_pipeline(q)
     if not stages:
         return rows
     for i, toks in enumerate(stages):

@@ -20,6 +20,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 
 def _kernel(xdt_ref, acs_ref, b_ref, c_ref, y_ref, st_ref, *, chunk: int):
     # xdt: [1, Q, 1, P] (x*dt); acs: [1, Q, 1] cumsum of a within chunk;
@@ -81,7 +85,7 @@ def ssd_intra_chunk(xdt: jnp.ndarray, a_cs: jnp.ndarray, b_mat: jnp.ndarray,
             jax.ShapeDtypeStruct((bsz, s, h, p), jnp.float32),
             jax.ShapeDtypeStruct((bsz, nc, h, n, p), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(xdt, a_cs, b_mat, c_mat)

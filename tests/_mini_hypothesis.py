@@ -1,0 +1,257 @@
+"""Tiny fallback shim for ``hypothesis`` so property tests still run
+(with deterministic pseudo-random examples) when the real library is not
+installed.  Installed into ``sys.modules`` by ``conftest.py`` only when
+``import hypothesis`` fails; implements just the strategy surface this
+test suite uses.
+"""
+
+from __future__ import annotations
+
+import random
+import re
+import string
+import sys
+import types
+import zlib
+
+_MAX_EXAMPLES_CAP = 10  # keep the fallback suite fast
+
+
+class Unsatisfied(Exception):
+    pass
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise Unsatisfied("filter predicate too strict for shim")
+        return Strategy(draw)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2 ** 31) if min_value is None else int(min_value)
+    hi = 2 ** 31 if max_value is None else int(max_value)
+
+    def draw(rng):
+        if rng.random() < 0.2:  # edge bias
+            return rng.choice([lo, hi, 0 if lo <= 0 <= hi else lo])
+        return rng.randint(lo, hi)
+    return Strategy(draw)
+
+
+def floats(min_value=None, max_value=None, allow_nan=None,
+           allow_infinity=None, width=64):
+    def draw(rng):
+        if min_value is not None or max_value is not None:
+            lo = -1e9 if min_value is None else float(min_value)
+            hi = 1e9 if max_value is None else float(max_value)
+            if rng.random() < 0.15:
+                return rng.choice([lo, hi, (lo + hi) / 2.0])
+            return rng.uniform(lo, hi)
+        r = rng.random()
+        if r < 0.1:
+            return rng.choice([0.0, 1.0, -1.0, 0.5, 1e-9, 1e12, -3.25])
+        # log-uniform magnitudes, both signs
+        mag = 10.0 ** rng.uniform(-12, 12)
+        return mag if rng.random() < 0.5 else -mag
+    return Strategy(draw)
+
+
+def booleans():
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(lambda rng: rng.choice(seq))
+
+
+def just(value):
+    return Strategy(lambda rng: value)
+
+
+def one_of(*strategies):
+    return Strategy(lambda rng: rng.choice(strategies).example(rng))
+
+
+def lists(elements, min_size=0, max_size=None):
+    hi = (min_size + 12) if max_size is None else max_size
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        return [elements.example(rng) for _ in range(n)]
+    return Strategy(draw)
+
+
+_TEXT_ALPHABET = (string.ascii_letters + string.digits
+                  + " .,:;!?_-+*/=()[]{}'\"\\%&#@^~$|<>\n\t"
+                  + "äöüßéλΩ中日")
+
+
+def text(alphabet=None, min_size=0, max_size=20):
+    chars = list(alphabet) if alphabet else list(_TEXT_ALPHABET)
+
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return "".join(rng.choice(chars) for _ in range(n))
+    return Strategy(draw)
+
+
+def dictionaries(keys, values, min_size=0, max_size=8):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        out = {}
+        for _ in range(n * 3):
+            if len(out) >= n:
+                break
+            try:
+                k = keys.example(rng)
+            except Unsatisfied:
+                continue
+            if k not in out:
+                out[k] = values.example(rng)
+        return out
+    return Strategy(draw)
+
+
+def tuples(*strategies):
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+# ------------------------------------------------------------- from_regex ---
+# Minimal generator for the simple patterns this suite uses:
+# sequences of literals / [character classes] with optional {m,n} bounds.
+
+_CLASS_RE = re.compile(
+    r"\[([^\]]+)\](?:\{(\d+)(?:,(\d+))?\})?|(\\?.)(?:\{(\d+)(?:,(\d+))?\})?")
+
+
+def _expand_class(body: str) -> str:
+    chars = []
+    i = 0
+    while i < len(body):
+        c = body[i]
+        if c == "\\" and i + 1 < len(body):
+            chars.append(body[i + 1])
+            i += 2
+            continue
+        if i + 2 < len(body) and body[i + 1] == "-":
+            for o in range(ord(c), ord(body[i + 2]) + 1):
+                chars.append(chr(o))
+            i += 3
+            continue
+        chars.append(c)
+        i += 1
+    return "".join(chars)
+
+
+def from_regex(pattern, fullmatch=False):
+    if hasattr(pattern, "pattern"):
+        pattern = pattern.pattern
+    tokens = []
+    pos = 0
+    while pos < len(pattern):
+        m = _CLASS_RE.match(pattern, pos)
+        if m is None:  # pragma: no cover - unsupported pattern
+            raise NotImplementedError(f"shim from_regex: {pattern!r}")
+        pos = m.end()
+        if m.group(1) is not None:
+            chars = _expand_class(m.group(1))
+            lo = int(m.group(2)) if m.group(2) else 1
+            hi = int(m.group(3)) if m.group(3) else lo
+        else:
+            lit = m.group(4)
+            chars = lit[-1]
+            lo = int(m.group(5)) if m.group(5) else 1
+            hi = int(m.group(6)) if m.group(6) else lo
+        tokens.append((chars, lo, hi))
+    compiled = re.compile(pattern)
+
+    def draw(rng):
+        for _ in range(100):
+            parts = []
+            for chars, lo, hi in tokens:
+                n = rng.randint(lo, hi)
+                parts.append("".join(rng.choice(chars) for _ in range(n)))
+            s = "".join(parts)
+            if compiled.fullmatch(s):
+                return s
+        raise Unsatisfied(f"cannot satisfy {pattern!r}")
+    return Strategy(draw)
+
+
+# ------------------------------------------------------- given / settings ---
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        fn._shim_settings = kwargs
+        return fn
+    if args and callable(args[0]):  # bare @settings
+        return args[0]
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise Unsatisfied("assumption failed")
+    return True
+
+
+def given(*gargs, **gkwargs):
+    def deco(fn):
+        cfg = getattr(fn, "_shim_settings", {})
+
+        def wrapper():
+            n = min(int(cfg.get("max_examples", _MAX_EXAMPLES_CAP)),
+                    _MAX_EXAMPLES_CAP)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(max(n, 1)):
+                try:
+                    args = [s.example(rng) for s in gargs]
+                    kwargs = {k: s.example(rng) for k, s in gkwargs.items()}
+                except Unsatisfied:
+                    continue
+                try:
+                    fn(*args, **kwargs)
+                except Unsatisfied:
+                    continue
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._shim_settings = cfg
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    hyp = types.ModuleType("hypothesis")
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "just",
+                 "one_of", "lists", "text", "dictionaries", "tuples",
+                 "from_regex"):
+        setattr(st_mod, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = st_mod
+    hyp.__version__ = "0.0-shim"
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

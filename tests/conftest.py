@@ -5,6 +5,16 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
+# Property tests use hypothesis when available; otherwise install the
+# deterministic mini-shim so the suite still collects and runs (with a
+# reduced number of pseudo-random examples per property).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    import _mini_hypothesis
+    _mini_hypothesis.install()
+
 # NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
 # tests and benches must see the real (single) device; only
 # launch/dryrun.py (run as its own process) forces 512 devices.

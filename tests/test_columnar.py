@@ -1,0 +1,165 @@
+"""Columnar store mechanics: sealing, zone maps, dictionary encoding,
+scan pruning, dedup horizon eviction, row-compat materialization."""
+
+import numpy as np
+
+from repro.core.aggregator import MetricStore
+from repro.core.columnar import ColumnarMetricStore
+from repro.core.schema import MetricRecord, encode_line
+
+
+def rec(ts, host="n0", job="j1", kind="perf", **fields):
+    return MetricRecord(ts, host, job, kind, fields)
+
+
+def test_buffer_seals_at_threshold():
+    store = MetricStore(seal_threshold=10)
+    for i in range(25):
+        store.insert(rec(1000.0 + i, v=float(i)))
+    assert len(store) == 25
+    segs = store.segments()
+    assert len(segs) == 3  # 2 sealed + transient buffer of 5
+    assert segs[0].n == 10 and segs[1].n == 10 and segs[2].n == 5
+    store.seal()
+    assert len(store.segments()) == 3
+    assert all(s.n in (10, 5) for s in store.segments())
+    assert len(store) == 25
+
+
+def test_segments_are_time_ordered():
+    store = MetricStore(seal_threshold=100)
+    for ts in (5.0, 1.0, 3.0, 2.0, 4.0):
+        store.insert(rec(ts, v=ts))
+    store.seal()
+    seg = store.segments()[0]
+    ts = seg.attrs["ts"].vals
+    assert list(ts) == sorted(ts)
+    assert seg.ts_min == 1.0 and seg.ts_max == 5.0
+
+
+def test_zone_maps():
+    store = MetricStore(seal_threshold=4)
+    for i in range(8):
+        store.insert(rec(1000.0 + i, v=float(i * 10)))
+    segs = store.segments()
+    assert segs[0].zone("v") == (0.0, 30.0)
+    assert segs[1].zone("v") == (40.0, 70.0)
+    # unknown columns get the conservative "never prune" zone
+    assert segs[0].zone("not_there") == (-np.inf, np.inf)
+
+
+def test_dictionary_encoding_and_vocab_union():
+    store = MetricStore(seal_threshold=3)
+    for i in range(7):
+        store.insert(rec(1000.0 + i, host=f"h{i % 2}",
+                         job=f"job{i % 3}", kind="perf",
+                         app="gemma" if i % 2 else "qwen"))
+    assert store.jobs() == ["job0", "job1", "job2"]
+    assert store.kinds() == ["perf"]
+    assert store.hosts() == ["h0", "h1"]
+    seg = store.segments()[0]
+    col = seg.cols["app"]
+    assert col.kind == "str" and set(col.index) <= {"gemma", "qwen"}
+
+
+def test_scan_filters_and_pruning():
+    store = MetricStore(seal_threshold=5)
+    for i in range(20):
+        store.insert(rec(1000.0 + i, host=f"h{i % 2}",
+                         job="a" if i < 10 else "b",
+                         kind="perf" if i % 2 == 0 else "device",
+                         v=float(i)))
+    sc = store.scan(job="a", kind="perf", fields=("v",))
+    vals, present = sc.field("v")
+    assert sc.n == 5 and present.all()
+    assert sorted(vals.tolist()) == [0.0, 2.0, 4.0, 6.0, 8.0]
+    sc = store.scan(since=1010.0, until=1015.0)
+    assert sc.n == 5
+    assert store.scan(job="zzz").n == 0
+    # str-typed field scans come back non-numeric
+    store2 = MetricStore()
+    store2.insert(rec(1.0, app="gemma"))
+    vals, present = store2.scan(fields=("app",)).field("app")
+    assert not present.any()
+
+
+def test_records_and_select_compat():
+    store = MetricStore(seal_threshold=4)
+    for i in range(10):
+        store.insert(rec(1000.0 + i, host=f"h{i % 3}", v=float(i), step=i))
+    recs = store.records
+    assert len(recs) == 10
+    assert all(isinstance(r, MetricRecord) for r in recs)
+    assert recs[0].fields["step"] == 0  # ints stay ints
+    assert isinstance(recs[0].fields["step"], int)
+    assert isinstance(recs[0].fields["v"], float)
+    sel = list(store.select(kind="perf", since=1003.0, until=1007.0))
+    assert [r.ts for r in sel] == [1003.0, 1004.0, 1005.0, 1006.0]
+    # records cache invalidates on insert
+    store.insert(rec(2000.0, v=99.0))
+    assert len(store.records) == 11
+
+
+def test_field_named_like_reserved_attr():
+    # detector events carry a "host" *field*; the record attr must
+    # survive while the query view shows the field (as_dict semantics)
+    store = MetricStore()
+    store.insert(MetricRecord(1.0, "aggregator", "j1", "event",
+                              {"host": "n7", "detector": "hang"}))
+    r = store.records[0]
+    assert r.host == "aggregator" and r.fields["host"] == "n7"
+    from repro.core.splunklite import query
+    rows = query(store, "search kind=event")
+    assert rows[0]["host"] == "n7"  # field overrides, like as_dict()
+
+
+def test_dedup_within_horizon():
+    store = MetricStore(seal_threshold=4, dedup_horizon_s=1000.0)
+    r = rec(1000.0, v=1.0)
+    assert store.insert(r)
+    assert not store.insert(rec(1000.0, v=1.0))
+    assert store.duplicates_dropped == 1
+
+
+def test_dedup_eviction_past_horizon():
+    store = MetricStore(seal_threshold=2, dedup_horizon_s=100.0)
+    for i in range(6):
+        store.insert(rec(1000.0 + i, v=float(i)))
+    assert store.dedup_evicted_keys == 0
+    # jump far past the horizon; sealing triggers eviction
+    store.insert(rec(5000.0, v=100.0))
+    store.insert(rec(5001.0, v=101.0))
+    assert store.dedup_evicted_keys >= 6
+    # old keys were evicted -> stale duplicates are accepted again
+    assert store.insert(rec(1000.0, v=0.0))
+
+
+def test_dedup_unlimited_when_horizon_none():
+    store = MetricStore(seal_threshold=2, dedup_horizon_s=None)
+    for i in range(10):
+        store.insert(rec(1000.0 + i, v=float(i)))
+    store.insert(rec(999999.0, v=1.0))
+    store.seal()
+    assert store.dedup_evicted_keys == 0
+    assert not store.insert(rec(1000.0, v=0.0))
+    assert store.duplicates_dropped == 1
+
+
+def test_mixed_type_column_falls_back_to_object():
+    store = MetricStore()
+    store.insert(rec(1.0, x=1.5))
+    store.insert(rec(2.0, x="str"))
+    store.seal()
+    col = store.segments()[0].cols["x"]
+    assert col.kind == "obj"
+    vals = [r.fields["x"] for r in store.records]
+    assert vals == [1.5, "str"]
+
+
+def test_store_roundtrips_wire_lines():
+    store = MetricStore(seal_threshold=3)
+    recs = [rec(1000.0 + i, v=float(i), app="a b c") for i in range(7)]
+    store.ingest_lines(encode_line(r) for r in recs)
+    assert len(store) == 7
+    got = store.records
+    assert [r.fields["app"] for r in got] == ["a b c"] * 7

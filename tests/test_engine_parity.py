@@ -1,0 +1,206 @@
+"""Engine parity: every splunklite query must return identical results
+through the legacy row executor and the columnar executor.
+
+Randomized stores (mixed field presence, NaN values, string fields,
+multiple sealed segments plus an unsealed buffer) are queried through
+both paths; rows are compared order-sensitively with numeric tolerance.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.aggregator import MetricStore
+from repro.core.schema import MetricRecord
+from repro.core.splunklite import query
+
+
+def _value_eq(a, b):
+    if isinstance(a, float) and isinstance(b, float):
+        if math.isnan(a) and math.isnan(b):
+            return True
+    if isinstance(a, (int, float)) and isinstance(b, (int, float)) and \
+            not isinstance(a, bool) and not isinstance(b, bool):
+        fa, fb = float(a), float(b)
+        if math.isnan(fa) or math.isnan(fb):
+            return math.isnan(fa) == math.isnan(fb)
+        return fa == fb or abs(fa - fb) <= 1e-9 * max(1.0, abs(fa), abs(fb))
+    return a == b
+
+
+def assert_rows_equal(got, want, q):
+    assert len(got) == len(want), \
+        f"{q!r}: {len(got)} rows (columnar) vs {len(want)} (rows)"
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert set(g) == set(w), f"{q!r} row {i}: keys {set(g)} != {set(w)}"
+        for k in w:
+            assert _value_eq(g[k], w[k]), \
+                f"{q!r} row {i} field {k}: {g[k]!r} != {w[k]!r}"
+
+
+def both_engines(store, q):
+    got = query(store, q)  # auto -> columnar
+    want = query(store, q, engine="rows")  # legacy row oracle
+    assert_rows_equal(got, want, q)
+    return got
+
+
+def random_store(seed=0, n=400, seal_threshold=97):
+    """Store with several sealed segments + a live buffer, mixed types,
+    missing fields and NaNs."""
+    rng = np.random.default_rng(seed)
+    store = MetricStore(seal_threshold=seal_threshold)
+    jobs = ["alpha.1", "beta.2", "gamma.3"]
+    hosts = ["n0", "n1", "n2", "n3"]
+    kinds = ["perf", "device", "meta"]
+    apps = ["gemma", "qwen", "mamba"]
+    for i in range(n):
+        fields = {}
+        if rng.random() < 0.9:
+            fields["gflops"] = float(rng.uniform(0, 1000))
+        if rng.random() < 0.08:
+            fields["gflops"] = float("nan")
+        if rng.random() < 0.7:
+            fields["step"] = int(rng.integers(0, 50))
+        if rng.random() < 0.5:
+            fields["app"] = apps[int(rng.integers(0, len(apps)))]
+        if rng.random() < 0.3:
+            fields["mfu"] = float(rng.uniform(0, 1))
+        store.insert(MetricRecord(
+            ts=1000.0 + i * 3.0,
+            host=hosts[int(rng.integers(0, len(hosts)))],
+            job=jobs[int(rng.integers(0, len(jobs)))],
+            kind=kinds[int(rng.integers(0, len(kinds)))],
+            fields=fields))
+    return store
+
+
+SEARCH_QUERIES = [
+    "search kind=perf",
+    "search kind=perf job=alpha.1",
+    "search gflops>500",
+    "search gflops<=250 kind=perf",
+    "search step>=10 step<30",
+    "search app=gem*",
+    "search app!=gemma",
+    "search job=*a*",
+    "search gemma",
+    "search missingfield=x",
+    "search missingfield!=x",
+    "search kind=perf | where gflops>100 | where step<40",
+]
+
+AGG_QUERIES = [
+    "search kind=perf | stats count",
+    "search kind=perf | stats count(gflops) count(app) by job",
+    "search kind=perf | stats avg(gflops) sum(gflops) min(gflops) "
+    "max(gflops) by host",
+    "stats median(gflops) p25(gflops) p75(gflops) p90(gflops) p95(gflops) "
+    "p99(gflops) by job",
+    "stats stdev(gflops) range(gflops) dc(host) dc(app) dc(step) by kind",
+    "search kind=perf | stats first(app) last(app) first(step) last(gflops)",
+    "stats avg(gflops) as g max(step) as s by job host",
+    "stats count by step",          # numeric group keys
+    "stats count by app",           # group key with missing values
+    "search kind=perf | timechart span=30 avg(gflops) count",
+    "timechart span=100 p90(gflops) max(step) by job",
+    "timechart span=45 avg(mfu) by host app",
+]
+
+PIPELINE_QUERIES = [
+    "search kind=perf | sort -gflops | head 7",
+    "search kind=perf | sort gflops | head 12",
+    "sort -app gflops | head 25",   # mixed string/num keys + desc
+    "sort mfu | head 30",           # many rows missing the key
+    "search kind=perf | dedup host",
+    "dedup job app",
+    "dedup step",
+    "search kind=perf | fields host gflops step | head 9",
+    "head 5",
+    "search kind=perf | eval tflops=gflops/1000 | head 6",
+    "eval r=gflops/(step-10) | stats avg(r) count(r)",  # div-by-zero -> nan
+    "eval z=log(gflops-500) | stats count avg(z)",      # log(<=0) -> nan
+    "eval s=sqrt(gflops-500) | stats avg(s)",
+    "eval m=min(gflops,step) | sort -m | head 8",
+    "eval hot=gflops>750 | stats sum(hot) by job",
+    "eval hot=gflops>750 | stats count by hot",    # bool str group keys
+    "eval b=floor(gflops/100) | stats count by b",  # int str group keys
+    "eval b=floor(gflops/100)+1 | stats count by b",  # nested int func
+    "eval k=5 | stats count by k",                  # constant int eval
+    "search kind=perf | stats sum(nosuchfield) by job",  # sum([]) is 0
+    "eval b=(gflops+1)%7 | stats avg(b)",
+    "eval c=gflops if step>25 else mfu | stats avg(c)",
+    "search kind=perf | eval x=missing*2 | stats count(x) avg(x)",
+    "search kind=perf | stats avg(gflops) by job "
+    "| eval t=avg_gflops/1000 | sort -t",
+    "search kind=perf | timechart span=60 avg(gflops) by job "
+    "| sort -avg_gflops | head 4",
+]
+
+
+@pytest.mark.parametrize("q", SEARCH_QUERIES)
+def test_search_parity(q):
+    both_engines(random_store(), q)
+
+
+@pytest.mark.parametrize("q", AGG_QUERIES)
+def test_agg_parity(q):
+    both_engines(random_store(), q)
+
+
+@pytest.mark.parametrize("q", PIPELINE_QUERIES)
+def test_pipeline_parity(q):
+    both_engines(random_store(), q)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_randomized_store_parity(seed):
+    store = random_store(seed=seed, n=150 + seed * 70,
+                         seal_threshold=41 + seed * 13)
+    for q in ("search kind=perf gflops>10 | stats avg(gflops) "
+              "p90(gflops) count by job | sort -avg_gflops | head 10",
+              "stats dc(host) median(gflops) by kind job",
+              "search app=q* | timechart span=90 count by host",
+              "sort -gflops step | head 20",
+              "dedup host app | fields host app gflops"):
+        both_engines(store, q)
+
+
+def test_parity_with_fieldless_first_fallback():
+    # field-less first/dc aggregate whole row dicts -> columnar engine
+    # falls back mid-pipeline; results must still match
+    both_engines(random_store(), "search kind=perf | stats count first")
+
+
+def test_parity_eval_on_mixed_type_column():
+    # a field holding both strings and numbers lands in an obj column;
+    # eval must fall back to the row engine, not silently produce NaN
+    store = MetricStore()
+    store.insert(MetricRecord(1.0, "h", "j", "perf", {"status": "ok"}))
+    store.insert(MetricRecord(2.0, "h", "j", "perf", {"status": 5}))
+    store.insert(MetricRecord(3.0, "h", "j", "perf", {"gflops": 2.0}))
+    rows = both_engines(store, "eval x=status+1 | fields ts x")
+    assert any(r.get("x") == 6.0 for r in rows)
+
+
+def test_parity_empty_store():
+    store = MetricStore()
+    for q in ("search kind=perf", "stats count", "stats avg(x) by job",
+              "timechart span=10 count", "sort -x | head 3", "dedup a"):
+        both_engines(store, q)
+
+
+def test_parity_small_buffer_only_store():
+    store = MetricStore(seal_threshold=10_000)  # nothing sealed
+    for i in range(25):
+        store.insert(MetricRecord(1000.0 + i, f"h{i % 2}", "j", "perf",
+                                  {"v": float(i)}))
+    both_engines(store, "stats avg(v) p50(v) by host")
+    both_engines(store, "search v>5 | sort -v | head 4")
+
+
+def test_engine_kwarg_validation():
+    from repro.core.splunklite import QueryError
+    with pytest.raises(QueryError):
+        query([{"a": 1}], "stats count", engine="columnar")

@@ -77,11 +77,10 @@ def test_error_feedback_reduces_bias():
 
 
 def test_compressed_psum_single_participant_exact_vs_quant():
-    from jax.sharding import Mesh
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _mk
+    mesh = _mk((1,), ("pod",))
     x = jnp.linspace(-1, 1, 64)
     err = jnp.zeros_like(x)
 

@@ -14,9 +14,9 @@ from repro.train.sharding import (DEFAULT_RULES, ShardingCtx, param_logical,
 
 @pytest.fixture(scope="module")
 def mesh():
+    from repro.launch.mesh import _mk
     # single real device: a 1x1 mesh still exercises the resolution code
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _mk((1, 1), ("data", "model"))
 
 
 def test_param_logical_rules():
@@ -41,8 +41,8 @@ def test_spec_divisibility_fallback(mesh):
 
 
 def test_spec_no_duplicate_mesh_axes():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _mk
+    mesh = _mk((1, 1), ("data", "model"))
     ctx = ShardingCtx(mesh=mesh).with_rules(seq=("model",))
     # heads also wants "model": only one dim may take it
     spec = ctx.spec(("batch", "seq", "heads"), (8, 16, 4))
