@@ -1,0 +1,73 @@
+"""CI guard: fail when a tracked benchmark row regresses vs a baseline.
+
+Usage::
+
+    python benchmarks/check_regression.py BASELINE.json CURRENT.json \
+        [--row splunklite.fleet_query] [--factor 1.5]
+
+Compares ``us_per_call`` of the named row between the committed baseline
+(e.g. ``git show HEAD:experiments/BENCH_splunklite.json``) and a fresh
+run; exits non-zero when current > factor * baseline.  A row missing
+from the baseline passes (first run of a new benchmark); a row missing
+from the current results fails (the benchmark stopped producing it).
+
+``--normalize-row`` divides both sides by another row measured in the
+same run (e.g. the legacy row-engine time for the same query), so the
+comparison is a machine-independent ratio — a CI runner slower than
+the machine that produced the committed baseline does not trip the
+guard, and a genuinely regressed code path still does.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def row_us(doc: dict, name: str):
+    for r in doc.get("rows", []):
+        if r.get("name") == name:
+            return r.get("us_per_call")
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--row", default="splunklite.fleet_query")
+    ap.add_argument("--factor", type=float, default=1.5)
+    ap.add_argument("--normalize-row", default=None)
+    args = ap.parse_args(argv)
+    with open(args.baseline, encoding="utf-8") as f:
+        base_doc = json.load(f)
+    with open(args.current, encoding="utf-8") as f:
+        cur_doc = json.load(f)
+    base = row_us(base_doc, args.row)
+    cur = row_us(cur_doc, args.row)
+    if base is None:
+        print(f"[bench-guard] no baseline for {args.row!r}; skipping")
+        return 0
+    if cur is None:
+        print(f"[bench-guard] {args.row!r} missing from current results")
+        return 1
+    unit = "us"
+    if args.normalize_row is not None:
+        base_n = row_us(base_doc, args.normalize_row)
+        cur_n = row_us(cur_doc, args.normalize_row)
+        if base_n and cur_n:
+            base, cur, unit = base / base_n, cur / cur_n, "x-of-norm"
+        else:
+            print(f"[bench-guard] normalize row {args.normalize_row!r} "
+                  "unavailable; comparing absolute times")
+    ratio = cur / base
+    ok = ratio <= args.factor
+    print(f"[bench-guard] {args.row}: {base:.4g}{unit} -> {cur:.4g}{unit} "
+          f"({ratio:.2f}x, limit {args.factor:.2f}x) "
+          f"{'OK' if ok else 'REGRESSION'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,18 +31,31 @@ class Aggregator:
     """Tails inbox files into a :class:`MetricStore`.
 
     ``inbox_dir`` receives one or more ``*.log`` stream files (one per
-    shipper uplink).  ``persist_path`` optionally appends every accepted
-    record to a consolidated archive (the "Splunk index" on disk; the
-    paper keeps unlimited retention — so do we).  Pass a pre-configured
-    ``store`` to control sealing / dedup-eviction behavior.
+    shipper uplink).  ``store_dir`` is the durable on-disk index (the
+    "Splunk index"; the paper keeps unlimited retention — so do we):
+    sealed columnar segments plus a write-ahead log, memory-mapped back
+    on restart without re-parsing wire lines — see
+    ``repro.core.segmentio``.  ``persist_path`` is the legacy
+    consolidated line archive, kept as a *fallback*: writing it is
+    deprecated, but :meth:`load_archive` still reads old archives (e.g.
+    to migrate one into a ``store_dir``).  Pass a pre-configured
+    ``store`` instead to control sealing / dedup-eviction / durability.
     """
 
     def __init__(self, inbox_dir: os.PathLike,
                  persist_path: Optional[os.PathLike] = None,
-                 store: Optional[MetricStore] = None) -> None:
+                 store: Optional[MetricStore] = None,
+                 store_dir: Optional[os.PathLike] = None,
+                 wal_fsync: bool = False) -> None:
         self.inbox_dir = Path(inbox_dir)
         self.inbox_dir.mkdir(parents=True, exist_ok=True)
-        self.store = store if store is not None else MetricStore()
+        if store is not None:
+            self.store = store
+        elif store_dir is not None:
+            self.store = MetricStore(directory=store_dir,
+                                     wal_fsync=wal_fsync)
+        else:
+            self.store = MetricStore()
         self._readers: Dict[str, TailReader] = {}
         self.persist_path = Path(persist_path) if persist_path else None
         self._on_record: List[Callable[[MetricRecord], None]] = []
@@ -83,9 +96,20 @@ class Aggregator:
         return n
 
     def load_archive(self, path: os.PathLike) -> int:
-        """Replay a persisted archive into the store (restart path)."""
+        """Fallback reader: replay a legacy consolidated line archive.
+
+        Durable stores (``store_dir``) restore themselves on
+        construction via mmap + WAL replay; this full re-parse remains
+        only for archives written through ``persist_path``, and for
+        migrating such an archive into a durable store (replaying into
+        a store with a ``directory`` persists every accepted record).
+        """
         try:
             with open(path, encoding="utf-8") as f:
                 return self.store.ingest_lines(f)
         except OSError:
             return 0
+
+    def close(self) -> None:
+        """Release the store's WAL handle (durable stores)."""
+        self.store.close()

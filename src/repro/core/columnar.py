@@ -22,6 +22,12 @@ fleet scale, so the store keeps data the way an analytics engine does:
   arrived in and evicted once the segment's newest timestamp falls a
   configurable horizon behind the store watermark, bounding memory
   (the seed kept one global, unbounded ``_seen`` set).
+* **Durability** (opt-in via ``directory``) — sealed segments are
+  written as self-describing column files (``repro.core.segmentio``)
+  and memory-mapped back on restart; only the mutable append buffer is
+  replayed, from a small write-ahead line log (``wal.log``).  Dedup
+  keys persist with their segment, so a restarted store still rejects
+  transport retransmits of already-indexed lines.
 
 The vectorized splunklite executor (``repro.core.splunklite``),
 dashboards and detectors all run on the column arrays directly via
@@ -34,12 +40,14 @@ from __future__ import annotations
 
 import hashlib
 import math
+import os
 from collections import deque
+from pathlib import Path
 from typing import Deque, Dict, Iterable, Iterator, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.core.schema import MetricRecord, encode_line
+from repro.core.schema import MetricRecord, encode_line, parse_line
 
 _RESERVED = ("ts", "host", "job", "kind")
 
@@ -353,10 +361,19 @@ class ColumnarMetricStore:
     keeps keys forever (the seed's behavior): eviction is opt-in
     because an aggregator that replays a multi-day archive and then
     re-tails its inbox would otherwise re-accept old lines as new.
+    ``directory`` — when set, the store is durable: sealed segments are
+    persisted under ``<directory>/segments/`` and loaded back via
+    ``np.memmap`` on construction; accepted inserts are appended to
+    ``<directory>/wal.log`` (canonical wire encoding) and replayed on
+    restart.  Only one live store per directory is supported.
+    ``wal_fsync`` — fsync the WAL after every accepted insert (and the
+    segment files at seal); off by default, matching ``Spool``.
     """
 
     def __init__(self, seal_threshold: int = 4096,
-                 dedup_horizon_s: Optional[float] = None) -> None:
+                 dedup_horizon_s: Optional[float] = None,
+                 directory: Optional[os.PathLike] = None,
+                 wal_fsync: bool = False) -> None:
         self.seal_threshold = int(seal_threshold)
         self.dedup_horizon_s = dedup_horizon_s
         self._sealed: List[Segment] = []
@@ -367,7 +384,15 @@ class ColumnarMetricStore:
         self._watermark = -math.inf
         self.duplicates_dropped = 0
         self.dedup_evicted_keys = 0
+        self.segment_load_errors = 0
         self._cache: Dict[str, tuple] = {}
+        self.directory = Path(directory) if directory is not None else None
+        self.wal_fsync = bool(wal_fsync)
+        self._wal = None
+        self._next_seq = 0
+        self._replaying = False
+        if self.directory is not None:
+            self._open_directory()
 
     # ------------------------------------------------------------- ingest --
     def __len__(self) -> int:
@@ -377,8 +402,8 @@ class ColumnarMetricStore:
         return (len(self._sealed), len(self._buffer))
 
     def insert(self, rec: MetricRecord) -> bool:
-        key = hashlib.blake2b(encode_line(rec).encode(),
-                              digest_size=12).digest()
+        encoded = encode_line(rec)
+        key = hashlib.blake2b(encoded.encode(), digest_size=12).digest()
         if key in self._seen:
             self.duplicates_dropped += 1
             return False
@@ -388,6 +413,11 @@ class ColumnarMetricStore:
         ts = float(rec.ts)
         if ts > self._watermark:
             self._watermark = ts
+        if self._wal is not None and not self._replaying:
+            self._wal.write(encoded + "\n")
+            self._wal.flush()
+            if self.wal_fsync:
+                os.fsync(self._wal.fileno())
         if len(self._buffer) >= self.seal_threshold:
             self.seal()
         return True
@@ -402,15 +432,29 @@ class ColumnarMetricStore:
         return n
 
     def seal(self) -> None:
-        """Freeze the append buffer into an immutable segment."""
+        """Freeze the append buffer into an immutable segment.
+
+        With a ``directory``, the segment is persisted *before* the WAL
+        resets; a crash in between leaves both — replay dedups against
+        the segment's persisted keys, so nothing duplicates or is lost.
+        """
         if not self._buffer:
             return
         seg = columns_from_records(self._buffer)
+        keys = self._buffer_keys
+        if self.directory is not None:
+            from repro.core import segmentio
+            segmentio.save_segment(
+                self.directory / "segments",
+                segmentio.SEGMENT_STEM_FMT.format(self._next_seq), seg, keys)
+            self._next_seq += 1
         self._sealed.append(seg)
         if self.dedup_horizon_s is not None:
-            self._epochs.append((seg.ts_max, self._buffer_keys))
+            self._epochs.append((seg.ts_max, keys))
         self._buffer = []
         self._buffer_keys = set()
+        if self.directory is not None:
+            self._rewrite_wal()
         self._evict_dedup()
 
     def _evict_dedup(self) -> None:
@@ -421,6 +465,104 @@ class ColumnarMetricStore:
             _, keys = self._epochs.popleft()
             self._seen -= keys
             self.dedup_evicted_keys += len(keys)
+
+    # -------------------------------------------------------- persistence --
+    def _open_directory(self) -> None:
+        """Restart path: mmap committed segments, replay the WAL.
+
+        Sealed rows never go through ``parse_line`` again — their
+        columns map straight back in.  Manifests that fail to load
+        (interrupted seals, foreign files) are skipped and counted in
+        ``segment_load_errors``; their rows, if any were acknowledged,
+        are still in the WAL and get replayed into the buffer.
+        """
+        from repro.core import segmentio
+        seg_dir = self.directory / "segments"
+        seg_dir.mkdir(parents=True, exist_ok=True)
+        loaded: List[Tuple[int, "segmentio.MappedSegment"]] = []
+        for man_path in sorted(seg_dir.glob("seg-*.json")):
+            try:
+                seq = int(man_path.stem.split("-")[1])
+            except (IndexError, ValueError):
+                continue
+            try:
+                loaded.append((seq, segmentio.load_segment(man_path)))
+            except (OSError, ValueError, KeyError, TypeError):
+                self.segment_load_errors += 1
+        loaded.sort(key=lambda t: t[0])
+        for seq, seg in loaded:
+            self._sealed.append(seg)
+            self._next_seq = max(self._next_seq, seq + 1)
+            if seg.ts_max > self._watermark:
+                self._watermark = seg.ts_max
+        cutoff = (-math.inf if self.dedup_horizon_s is None
+                  else self._watermark - self.dedup_horizon_s)
+        last_seg = loaded[-1][1] if loaded else None
+        transient_keys: Set[bytes] = set()
+        for _, seg in loaded:
+            if seg.ts_max < cutoff:
+                if seg is last_seg:
+                    # Only the newest seal can sit in the crash window
+                    # between segment commit and WAL reset (every
+                    # earlier seal's reset completed, or there would be
+                    # a newer segment).  If its data is already past
+                    # the horizon, its keys must still be visible
+                    # *during* replay — the un-reset WAL holds exactly
+                    # its rows — and evicted again afterwards.
+                    transient_keys = seg.dedup_keys() - self._seen
+                    self._seen |= transient_keys
+                continue  # keys already past the horizon: stay evicted
+            keys = seg.dedup_keys()
+            self._seen |= keys
+            if self.dedup_horizon_s is not None:
+                self._epochs.append((seg.ts_max, keys))
+        # replay complete WAL lines into the append buffer (suppressing
+        # re-append); a torn trailing write is dropped here and removed
+        # from disk by the rewrite below, so it can never concatenate
+        # with the next accepted line
+        try:
+            data = (self.directory / "wal.log").read_bytes()
+        except OSError:
+            data = b""
+        end = data.rfind(b"\n")
+        if end >= 0:
+            self._replaying = True
+            try:
+                for raw in data[:end + 1].split(b"\n"):
+                    if not raw:
+                        continue
+                    rec = parse_line(raw.decode("utf-8", errors="replace"))
+                    if rec is not None:
+                        self.insert(rec)
+            finally:
+                self._replaying = False
+        self._seen -= transient_keys
+        self._rewrite_wal()
+
+    def _rewrite_wal(self) -> None:
+        """Atomically reset the WAL to exactly the current buffer."""
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
+        wal_path = self.directory / "wal.log"
+        tmp = wal_path.with_suffix(".tmp")
+        with open(tmp, "w", encoding="utf-8") as f:
+            for rec in self._buffer:
+                f.write(encode_line(rec) + "\n")
+            f.flush()
+            if self.wal_fsync:
+                os.fsync(f.fileno())
+        os.replace(tmp, wal_path)
+        if self.wal_fsync:
+            from repro.core import segmentio
+            segmentio.fsync_dir(self.directory)
+        self._wal = open(wal_path, "a", encoding="utf-8")
+
+    def close(self) -> None:
+        """Release the WAL handle (durable stores); safe to call twice."""
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
 
     # -------------------------------------------------------------- reads --
     def segments(self) -> List[Segment]:

@@ -67,6 +67,7 @@ class DaemonConfig:
     align_to_clock: bool = True   # paper: sync across nodes via system clock
     monitor_idle: bool = False    # paper: skip idle/shared nodes
     max_segment_bytes: int = 1 << 20
+    spool_fsync: bool = False     # fsync spool writes (crash-safe samples)
 
 
 class Hpcmd:
@@ -85,7 +86,8 @@ class Hpcmd:
         self.host = host or socket.gethostname()
         self.manifest = manifest
         self.spool = Spool(spool_dir,
-                           max_segment_bytes=self.config.max_segment_bytes)
+                           max_segment_bytes=self.config.max_segment_bytes,
+                           fsync=self.config.spool_fsync)
         self.sources: List[MetricSource] = []
         self._once_done: set = set()
         self._suspended = 0

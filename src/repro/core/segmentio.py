@@ -1,0 +1,286 @@
+"""Self-describing on-disk files for sealed columnar segments.
+
+The paper's Splunk tier keeps the full metric index on disk with
+unlimited retention (§4.3).  PR 1 made the in-memory representation
+columnar; this module makes sealed segments *durable* so an aggregator
+restart loads them back as column arrays instead of re-parsing the
+line-oriented archive (PerSyst and the LIKWID Monitoring Stack both
+identify restart/replay cost as the practical limit on retention).
+
+Layout per sealed segment (two files, committed atomically):
+
+``seg-XXXXXXXX.bin``
+    Raw little-endian column arrays (float64 values, bool presence and
+    int-ness masks, int32 dictionary codes) plus the segment's 12-byte
+    dedup keys, concatenated with 64-byte alignment.  Never rewritten.
+
+``seg-XXXXXXXX.json``
+    Manifest: format tag, row count, ts range, per-column descriptors
+    (array byte offsets/lengths into the ``.bin``, string vocabularies,
+    JSON-encoded object-column values), numeric zone maps, and the
+    dedup-key extent.  Written *last* via ``os.replace`` — the manifest
+    is the commit point.  A ``.bin`` without its manifest is an
+    interrupted seal and is ignored by the loader (its rows are still
+    in the store's write-ahead log).
+
+Readers memory-map the ``.bin`` once (``np.memmap``) and build column
+objects lazily: a column's array views are only constructed — and its
+pages only faulted in — when a query actually touches it.  Zone maps
+and dictionaries live in the manifest, so segment pruning never touches
+the ``.bin`` at all.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from collections.abc import Mapping
+from pathlib import Path
+from typing import Dict, Iterable, List, Set, Tuple
+
+import numpy as np
+
+from repro.core.columnar import (MISSING, NumColumn, ObjColumn, Segment,
+                                 StrColumn)
+
+FORMAT = "repro-colseg-v1"
+SEGMENT_STEM_FMT = "seg-{:08d}"
+_ALIGN = 64
+
+
+# -------------------------------------------------------------------- write --
+
+def fsync_dir(path: os.PathLike) -> None:
+    """fsync a directory so renamed-in entries survive power loss
+    (``os.replace`` alone does not guarantee directory durability on
+    ext4/xfs).  Best-effort: silently skipped where unsupported."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+class _BinWriter:
+    """Accumulates raw arrays with aligned offsets."""
+
+    def __init__(self) -> None:
+        self.chunks: List[bytes] = []
+        self.size = 0
+
+    def add(self, arr: np.ndarray) -> List[int]:
+        """Append an array; returns its ``[offset, count]`` descriptor."""
+        pad = (-self.size) % _ALIGN
+        if pad:
+            self.chunks.append(b"\0" * pad)
+            self.size += pad
+        off = self.size
+        data = np.ascontiguousarray(arr).tobytes()
+        self.chunks.append(data)
+        self.size += len(data)
+        return [off, int(arr.size)]
+
+
+def _col_spec(col, w: _BinWriter) -> Dict:
+    if col.kind == "num":
+        return {"kind": "num",
+                "vals": w.add(col.vals.astype("<f8", copy=False)),
+                "present": w.add(col.present),
+                "is_int": w.add(col.is_int)}
+    if col.kind == "str":
+        return {"kind": "str",
+                "codes": w.add(col.codes.astype("<i4", copy=False)),
+                "vocab": [str(v) for v in col.vocab.tolist()]}
+    # obj fallback: values are wire scalars (insert() canonicalizes every
+    # record through encode_line, so nothing non-JSON-able can get here);
+    # the explicit present mask disambiguates absent rows.
+    values = [v if p else None
+              for v, p in zip(col.vals.tolist(), col.present.tolist())]
+    return {"kind": "obj", "values": values, "present": w.add(col.present)}
+
+
+def save_segment(seg_dir: os.PathLike, stem: str, seg: Segment,
+                 dedup_keys: Iterable[bytes]) -> Path:
+    """Persist one sealed segment; returns the committed manifest path.
+
+    Commit protocol: ``.bin`` first (fsync + rename), manifest last
+    (fsync + rename).  A crash at any point leaves either nothing or an
+    orphan ``.bin`` — never a manifest describing missing data.
+    """
+    seg_dir = Path(seg_dir)
+    seg_dir.mkdir(parents=True, exist_ok=True)
+    w = _BinWriter()
+    attrs = {k: _col_spec(seg.attrs[k], w)
+             for k in ("ts", "host", "job", "kind")}
+    fields = {k: _col_spec(seg.cols[k], w) for k in seg.field_names}
+    zones = {name: list(seg.zone(name))
+             for name, col in seg.cols.items() if col.kind == "num"}
+    keys = sorted(dedup_keys)
+    karr = (np.frombuffer(b"".join(keys), dtype=np.uint8)
+            if keys else np.zeros(0, np.uint8))
+    digest_size = len(keys[0]) if keys else 12
+    manifest = {
+        "format": FORMAT,
+        "n": seg.n,
+        "ts_min": seg.ts_min,
+        "ts_max": seg.ts_max,
+        "attrs": attrs,
+        "fields": fields,
+        "zones": zones,
+        "dedup": {"digest_size": digest_size, "count": len(keys),
+                  "keys": w.add(karr)},
+        "bin_bytes": w.size,
+    }
+    bin_path = seg_dir / (stem + ".bin")
+    man_path = seg_dir / (stem + ".json")
+    tmp = Path(str(bin_path) + ".tmp")
+    with open(tmp, "wb") as f:
+        for chunk in w.chunks:
+            f.write(chunk)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, bin_path)
+    tmp = Path(str(man_path) + ".tmp")
+    with open(tmp, "w", encoding="utf-8") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, man_path)
+    fsync_dir(seg_dir)
+    return man_path
+
+
+# --------------------------------------------------------------------- read --
+
+class _LazyCols(Mapping):
+    """Name -> column mapping that builds columns on first access.
+
+    Membership, iteration and ``len`` never touch the ``.bin`` file, so
+    planner-side checks (``name in seg.cols``) stay free.
+    """
+
+    __slots__ = ("_build", "_names", "_built")
+
+    def __init__(self, build, names: Iterable[str]) -> None:
+        self._build = build
+        self._names = dict.fromkeys(names)
+        self._built: Dict[str, object] = {}
+
+    def __getitem__(self, name: str):
+        col = self._built.get(name)
+        if col is None:
+            if name not in self._names:
+                raise KeyError(name)
+            col = self._built[name] = self._build(name)
+        return col
+
+    def __contains__(self, name) -> bool:
+        return name in self._names
+
+    def __iter__(self):
+        return iter(self._names)
+
+    def __len__(self) -> int:
+        return len(self._names)
+
+
+class MappedSegment(Segment):
+    """A sealed segment backed by a memory-mapped ``.bin`` file.
+
+    Fully substitutable for an in-memory :class:`Segment`: same
+    ``attrs``/``cols``/``field_names``/``zone`` surface, so scans,
+    splunklite execution, dashboards and record materialization behave
+    identically.  Column objects are built on demand; their arrays are
+    read-only views into the map (immutability for free).
+    """
+
+    __slots__ = ("_man", "_mm", "_shared")
+
+    def __init__(self, manifest: Dict, mm: np.ndarray) -> None:
+        self._man = manifest
+        self._mm = mm
+        self._shared: Dict[Tuple[str, str], object] = {}
+        self.n = int(manifest["n"])
+        self.field_names = list(manifest["fields"])
+        self.ts_min = float(manifest["ts_min"])
+        self.ts_max = float(manifest["ts_max"])
+        self._zones = {k: (float(v[0]), float(v[1]))
+                       for k, v in manifest["zones"].items()}
+        self.attrs = _LazyCols(self._attr_col, manifest["attrs"])
+        names = dict.fromkeys(manifest["attrs"])
+        names.update(dict.fromkeys(manifest["fields"]))
+        self.cols = _LazyCols(self._view_col, names)
+
+    # ----------------------------------------------------------- builders --
+    def _arr(self, ref: List[int], dtype: str) -> np.ndarray:
+        off, count = ref
+        dt = np.dtype(dtype)
+        end = off + count * dt.itemsize
+        if end > self._mm.size:
+            raise ValueError("column extends past end of .bin")
+        return self._mm[off:end].view(dt)
+
+    def _build(self, spec: Dict):
+        kind = spec["kind"]
+        if kind == "num":
+            return NumColumn(self._arr(spec["vals"], "<f8"),
+                             self._arr(spec["present"], "|b1"),
+                             self._arr(spec["is_int"], "|b1"))
+        if kind == "str":
+            vocab_list = spec["vocab"]
+            vocab = np.empty(len(vocab_list), dtype=object)
+            vocab[:] = vocab_list
+            index = {v: i for i, v in enumerate(vocab_list)}
+            return StrColumn(self._arr(spec["codes"], "<i4"), vocab, index)
+        present = self._arr(spec["present"], "|b1")
+        vals = np.empty(self.n, dtype=object)
+        for i, v in enumerate(spec["values"]):
+            vals[i] = v if present[i] else MISSING
+        return ObjColumn(vals, present)
+
+    def _attr_col(self, name: str):
+        key = ("attr", name)
+        col = self._shared.get(key)
+        if col is None:
+            col = self._shared[key] = self._build(self._man["attrs"][name])
+        return col
+
+    def _view_col(self, name: str):
+        # query view: metric fields shadow same-named attrs (as_dict
+        # semantics), mirroring Segment.cols construction order
+        spec = self._man["fields"].get(name)
+        if spec is None:
+            return self._attr_col(name)
+        key = ("field", name)
+        col = self._shared.get(key)
+        if col is None:
+            col = self._shared[key] = self._build(spec)
+        return col
+
+    # -------------------------------------------------------------- dedup --
+    def dedup_keys(self) -> Set[bytes]:
+        d = self._man["dedup"]
+        raw = self._arr(d["keys"], "|u1").tobytes()
+        size = int(d["digest_size"])
+        return {raw[i * size:(i + 1) * size] for i in range(int(d["count"]))}
+
+
+def load_segment(manifest_path: os.PathLike) -> MappedSegment:
+    """Map one committed segment.  Raises ``ValueError``/``OSError`` on
+    missing, foreign-format, or truncated files (callers skip those —
+    an interrupted seal's rows are recovered from the WAL instead)."""
+    manifest_path = Path(manifest_path)
+    with open(manifest_path, encoding="utf-8") as f:
+        manifest = json.load(f)
+    if not isinstance(manifest, dict) or manifest.get("format") != FORMAT:
+        raise ValueError(f"not a {FORMAT} manifest: {manifest_path}")
+    bin_path = manifest_path.with_suffix(".bin")
+    mm = np.memmap(bin_path, dtype=np.uint8, mode="r")
+    if mm.size < int(manifest.get("bin_bytes", 0)):
+        raise ValueError(f"truncated segment data file: {bin_path}")
+    return MappedSegment(manifest, mm)

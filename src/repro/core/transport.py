@@ -10,6 +10,13 @@ servers per island).  Properties:
   the tail; the aggregator tolerates duplicate lines),
 * strictly line-oriented: a torn final line is never forwarded until the
   newline arrives.
+
+All offsets are **byte** offsets: files are read in binary and decoded
+per complete line, so multi-byte UTF-8 in metric fields can never drift
+an offset against ``stat().st_size`` (reading decoded text and advancing
+by character counts did exactly that, silently duplicating or truncating
+lines).  UTF-8 never embeds ``0x0A`` in a multi-byte sequence, so
+splitting on newlines before decoding is always safe.
 """
 
 from __future__ import annotations
@@ -25,7 +32,15 @@ SEGMENT_FMT = "segment-{:08d}.log"
 
 
 class Spool:
-    """Node-local append-only spool with size-based segment rotation."""
+    """Node-local append-only spool with size-based segment rotation.
+
+    The rotation check uses a stat-seeded byte counter, not
+    ``fh.tell()``: a freshly reopened append-mode handle reports
+    position 0 until its first write, so a restarted daemon would keep
+    appending to an already-oversized active segment.  Reopening an
+    existing segment also newline-terminates any torn trailing write
+    from a crash, so the fragment can never merge with the next line.
+    """
 
     def __init__(self, root: os.PathLike, max_segment_bytes: int = 1 << 20,
                  fsync: bool = False) -> None:
@@ -35,6 +50,7 @@ class Spool:
         self.fsync = fsync
         self._seq = self._latest_seq()
         self._fh = None
+        self._size = 0
         self._open_active()
 
     def _latest_seq(self) -> int:
@@ -48,14 +64,29 @@ class Spool:
     def _open_active(self) -> None:
         if self._fh is not None:
             self._fh.close()
-        self._fh = open(self._active_path(), "a", encoding="utf-8")
+        path = self._active_path()
+        try:
+            self._size = path.stat().st_size
+        except OSError:
+            self._size = 0
+        self._fh = open(path, "ab")
+        if self._size:
+            with open(path, "rb") as f:
+                f.seek(-1, os.SEEK_END)
+                torn = f.read(1) != b"\n"
+            if torn:
+                self._fh.write(b"\n")
+                self._fh.flush()
+                self._size += 1
 
     def write_line(self, line: str) -> None:
-        if self._fh.tell() >= self.max_segment_bytes:
+        if self._size >= self.max_segment_bytes:
             self._seq += 1
             self._open_active()
-        self._fh.write(line.rstrip("\n") + "\n")
+        data = line.rstrip("\n").encode("utf-8") + b"\n"
+        self._fh.write(data)
         self._fh.flush()
+        self._size += len(data)
         if self.fsync:
             os.fsync(self._fh.fileno())
 
@@ -104,7 +135,11 @@ class Shipper:
         os.replace(tmp, self._offsets_path())
 
     def ship_once(self) -> int:
-        """Forward all new complete lines.  Returns #lines shipped."""
+        """Forward all new complete lines.  Returns #lines shipped.
+
+        Reads in binary and decodes per line: the persisted offsets are
+        byte positions, directly comparable to ``stat().st_size``.
+        """
         segments = sorted(self.src.glob("segment-*.log"))
         if not segments:
             return 0
@@ -116,16 +151,21 @@ class Shipper:
                 size = seg.stat().st_size
             except OSError:
                 continue
+            if size < offset:
+                # segment truncated/replaced underneath us: re-ship from
+                # the start (at-least-once; the aggregator deduplicates)
+                offset = self._offsets[seg.name] = 0
             if size > offset:
-                with open(seg, "r", encoding="utf-8", errors="replace") as f:
+                with open(seg, "rb") as f:
                     f.seek(offset)
                     chunk = f.read()
                 # forward only complete lines
-                end = chunk.rfind("\n")
+                end = chunk.rfind(b"\n")
                 if end >= 0:
-                    for line in chunk[: end + 1].splitlines():
-                        if line:
-                            self.sink(line)
+                    for raw in chunk[: end + 1].split(b"\n"):
+                        raw = raw.rstrip(b"\r")
+                        if raw:
+                            self.sink(raw.decode("utf-8", errors="replace"))
                             shipped += 1
                     self._offsets[seg.name] = offset + end + 1
             if (self.delete_shipped and seg != active
@@ -181,24 +221,43 @@ class IslandRelay:
 
 
 class TailReader:
-    """Incremental reader of an inbox stream file (aggregator side)."""
+    """Incremental reader of an inbox stream file (aggregator side).
+
+    ``offset`` is a byte position.  When the file shrinks below it, or
+    is replaced by a new inode (rotation or truncation by an
+    operator/log-rotate — the replacement may already have grown past
+    the old offset by the next poll), the reader resets to the start
+    and resumes instead of stalling or skipping — duplicate re-reads
+    are the aggregator's (deduplicated) problem, a silently frozen or
+    gapped inbox is nobody's.
+    """
 
     def __init__(self, path: os.PathLike) -> None:
         self.path = Path(path)
         self.offset = 0
+        self.truncations_seen = 0
+        self._ino: Optional[int] = None
 
     def read_new_lines(self) -> List[str]:
         try:
-            size = self.path.stat().st_size
+            st = self.path.stat()
         except OSError:
             return []
+        size = st.st_size
+        if ((self._ino is not None and st.st_ino != self._ino)
+                or size < self.offset):
+            self.offset = 0
+            self.truncations_seen += 1
+        self._ino = st.st_ino
         if size <= self.offset:
             return []
-        with open(self.path, "r", encoding="utf-8", errors="replace") as f:
+        with open(self.path, "rb") as f:
             f.seek(self.offset)
             chunk = f.read()
-        end = chunk.rfind("\n")
+        end = chunk.rfind(b"\n")
         if end < 0:
             return []
         self.offset += end + 1
-        return [ln for ln in chunk[: end + 1].splitlines() if ln]
+        return [raw.decode("utf-8", errors="replace")
+                for raw in (r.rstrip(b"\r") for r in
+                            chunk[: end + 1].split(b"\n")) if raw]

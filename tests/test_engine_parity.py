@@ -46,11 +46,12 @@ def both_engines(store, q):
     return got
 
 
-def random_store(seed=0, n=400, seal_threshold=97):
+def random_store(seed=0, n=400, seal_threshold=97, directory=None):
     """Store with several sealed segments + a live buffer, mixed types,
-    missing fields and NaNs."""
+    missing fields and NaNs.  ``directory`` makes it durable so the
+    persistence tests can reload the exact same workload from disk."""
     rng = np.random.default_rng(seed)
-    store = MetricStore(seal_threshold=seal_threshold)
+    store = MetricStore(seal_threshold=seal_threshold, directory=directory)
     jobs = ["alpha.1", "beta.2", "gamma.3"]
     hosts = ["n0", "n1", "n2", "n3"]
     kinds = ["perf", "device", "meta"]

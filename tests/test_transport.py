@@ -118,6 +118,96 @@ def test_aggregator_persist_and_replay(tmp_path):
     assert len(agg2.store) == 7
 
 
+def test_shipper_byte_offsets_with_multibyte_utf8(tmp_path):
+    # offsets are bytes compared against stat().st_size; decoded-character
+    # counting drifted on multi-byte UTF-8 and duplicated/truncated lines
+    sp = Spool(tmp_path / "spool")
+    l1 = 'hpcmd ts=1 host=h job=j kind=perf app="gemmä-β"'
+    l2 = 'hpcmd ts=2 host=h job=j kind=perf app="中文模型"'
+    l3 = "hpcmd ts=3 host=h job=j kind=perf v=3"
+    out = []
+    sp.write_line(l1)
+    assert Shipper(tmp_path / "spool", out.append,
+                   state_dir=tmp_path / "st").ship_once() == 1
+    sp.write_line(l2)
+    # restart between batches: byte offsets must resume exactly
+    s2 = Shipper(tmp_path / "spool", out.append, state_dir=tmp_path / "st")
+    assert s2.ship_once() == 1
+    sp.write_line(l3)
+    assert s2.ship_once() == 1
+    assert out == [l1, l2, l3]
+    sp.close()
+
+
+def test_tail_reader_multibyte_utf8_offsets(tmp_path):
+    p = tmp_path / "stream.log"
+    tr = TailReader(p)
+    with open(p, "w", encoding="utf-8") as f:
+        f.write('hpcmd a="αβγ中文"\n')
+    assert tr.read_new_lines() == ['hpcmd a="αβγ中文"']
+    with open(p, "a", encoding="utf-8") as f:
+        f.write("hpcmd b=1\n")
+    # char-counted offsets would re-read into the middle of line 1
+    assert tr.read_new_lines() == ["hpcmd b=1"]
+    assert tr.read_new_lines() == []
+
+
+def test_tail_reader_resets_on_truncation(tmp_path):
+    # size < offset used to return [] forever, stalling the aggregator
+    p = tmp_path / "stream.log"
+    tr = TailReader(p)
+    p.write_text("hpcmd a=1\nhpcmd b=2\n")
+    assert len(tr.read_new_lines()) == 2
+    p.write_text("hpcmd c=3\n")  # rotated/truncated underneath the reader
+    assert tr.read_new_lines() == ["hpcmd c=3"]
+    assert tr.truncations_seen == 1
+
+
+def test_tail_reader_detects_rotation_by_inode(tmp_path):
+    # a replacement file that already grew past the old offset would
+    # pass the size check and silently skip its first lines
+    p = tmp_path / "stream.log"
+    tr = TailReader(p)
+    p.write_text("hpcmd a=1\n")
+    assert tr.read_new_lines() == ["hpcmd a=1"]
+    fresh = tmp_path / "fresh.log"
+    fresh.write_text("hpcmd b=2\nhpcmd c=3\nhpcmd d=4\n")  # > old size
+    fresh.replace(p)  # rotation: new inode, larger than the offset
+    assert tr.read_new_lines() == ["hpcmd b=2", "hpcmd c=3", "hpcmd d=4"]
+    assert tr.truncations_seen == 1
+
+
+def test_spool_reopen_rotates_at_configured_size(tmp_path):
+    # fh.tell() reports 0 right after an append-mode reopen, so a
+    # restarted daemon kept growing an already-oversized active segment
+    sp = Spool(tmp_path / "spool", max_segment_bytes=1 << 20)
+    for ln in lines_for(5):
+        sp.write_line(ln)
+    sp.close()
+    sp2 = Spool(tmp_path / "spool", max_segment_bytes=50)
+    sp2.write_line("hpcmd ts=9 host=h job=j kind=perf v=9")
+    assert len(sp2.segments()) == 2  # rotated instead of overgrowing
+    sp2.close()
+
+
+def test_spool_reopen_terminates_torn_line(tmp_path):
+    sp = Spool(tmp_path / "spool")
+    sp.write_line("hpcmd ts=1 host=h job=j kind=perf v=1")
+    sp.close()
+    # crash mid-write: torn fragment, cut inside a multi-byte char
+    torn = 'hpcmd ts=2 host=h job=j kind=perf tag="äb"'.encode("utf-8")[:-4]
+    with open(tmp_path / "spool" / "segment-00000000.log", "ab") as f:
+        f.write(torn)
+    sp2 = Spool(tmp_path / "spool")
+    sp2.write_line("hpcmd ts=3 host=h job=j kind=perf v=3")
+    sp2.close()
+    out = []
+    Shipper(tmp_path / "spool", out.append).ship_once()
+    assert len(out) == 3  # fragment isolated on its own line
+    assert out[0].endswith("v=1")
+    assert out[2].endswith("v=3") and "ts=2" not in out[2]  # no merge
+
+
 def test_tail_reader_incremental(tmp_path):
     p = tmp_path / "stream.log"
     tr = TailReader(p)
