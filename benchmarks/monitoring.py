@@ -287,6 +287,58 @@ def bench_anomaly(out_dir: Path):
                 f"recall=1.0,fp_hosts={fp},n={len(recs)}")]
 
 
+def bench_sharded(out_dir: Path):
+    """Sharded query fan-out vs the single-store path on the same
+    ≥100k-record fleet workload and the same fleet query.  Emits the
+    sharded time, the same-run single-store time (the CI guard
+    normalizes by it so runner speed cancels), and an exact-gather
+    fallback sample."""
+    from repro.core.shards import ShardedAggregator
+    from repro.core.splunklite import query
+    single, _m, _p = _fleet_store(n_jobs=110, hosts_per_job=8, samples=60)
+    sharded = ShardedAggregator(num_shards=4)
+    _fleet_store(n_jobs=110, hosts_per_job=8, samples=60, store=sharded)
+    assert len(sharded) == len(single)
+    q = ("search kind=perf gflops>0 "
+         "| stats avg(gflops) p90(step_time_s) count by job "
+         "| sort -avg_gflops | head 10")
+    # results agree (quantiles within the documented bound)
+    got = {r["job"]: r for r in query(sharded, q)}
+    want = {r["job"]: r for r in query(single, q)}
+    assert got.keys() == want.keys()
+    for job, w in want.items():
+        assert got[job]["count"] == w["count"]
+        assert abs(got[job]["avg_gflops"] - w["avg_gflops"]) <= 1e-6
+    # interleave the two paths so allocator/CPU drift cancels out of
+    # the ratio (they run on identical data in the same windows)
+    sh_t, si_t = [], []
+    query(sharded, q), query(single, q)  # warmup
+    for _ in range(9):
+        t0 = time.perf_counter()
+        query(sharded, q)
+        sh_t.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        query(single, q)
+        si_t.append(time.perf_counter() - t0)
+    us_sharded = sorted(sh_t)[len(sh_t) // 2] * 1e6
+    us_single = sorted(si_t)[len(si_t) // 2] * 1e6
+    assert sharded.scatter_queries > 0  # the plan actually fanned out
+    ratio = us_sharded / max(us_single, 1e-9)
+    # acceptance: fan-out must not lose to the single store it shards
+    # (generous ceiling for noisy shared CI runners)
+    assert ratio <= 1.35, (us_sharded, us_single)
+    q_exact = "search kind=perf gflops>0 | stats first(app) by job"
+    us_exact = timeit(lambda: query(sharded, q_exact), warmup=1, iters=3)
+    return [
+        row("sharded.fleet_query", us_sharded,
+            f"{len(sharded)}records,4shards,{ratio:.2f}x_of_single"),
+        row("sharded.fleet_query_single", us_single,
+            f"{len(single)}records,same_run_baseline"),
+        row("sharded.exact_gather", us_exact,
+            f"{len(sharded)}records,row_gather_fallback"),
+    ]
+
+
 def bench_restart(out_dir: Path):
     """Aggregator cold-start on the 100k+-record fleet workload:
     mmap-load of persisted columnar segments (+ WAL replay of the

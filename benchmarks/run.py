@@ -11,6 +11,7 @@ trajectory is tracked across PRs.
   job_view      — paper Fig. 3
   detectors     — paper §4.4 specialized views / §5 case studies
   splunklite    — analysis-layer query latency (columnar vs legacy rows)
+  sharded       — multi-aggregator scatter/gather fan-out vs single store
   restart       — aggregator cold-start: mmap segments vs line replay
   transport     — rsyslog-analog throughput
   kernels.*     — Pallas kernels vs jnp oracles (interpret mode)
@@ -49,6 +50,7 @@ def main() -> None:
         mbench.bench_detectors,
         mbench.bench_anomaly,
         mbench.bench_splunklite,
+        mbench.bench_sharded,
         mbench.bench_restart,
         mbench.bench_transport,
         kbench.bench_flash_attention,

@@ -101,10 +101,15 @@ def main() -> None:
     root = Path(tempfile.mkdtemp(prefix="repro-fleet-"))
     print(f"workdir: {root}")
     manifests = simulate_fleet(root)
-    agg = Aggregator(root / "inbox")
+    # sharded ingest/query tier: hosts route to two aggregator shards
+    # and every dashboard query below runs scatter/gather across them
+    # (drop `shards=` for a single-store aggregator) — docs/sharding.md
+    agg = Aggregator(root / "inbox", shards=2)
     n = agg.pump()
     print(f"aggregated {n} records from "
-          f"{len(agg.store.hosts())} hosts, {len(agg.store.jobs())} jobs\n")
+          f"{len(agg.store.hosts())} hosts, {len(agg.store.jobs())} jobs "
+          f"across {agg.store.num_shards} shards "
+          f"(sizes {agg.store.shard_sizes()})\n")
 
     # --- Fig 2: roofline overview ---------------------------------------
     points = roofline_points(agg.store, manifests)

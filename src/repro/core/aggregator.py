@@ -28,29 +28,42 @@ class MetricStore(ColumnarMetricStore):
 
 
 class Aggregator:
-    """Tails inbox files into a :class:`MetricStore`.
+    """Tails inbox files into a :class:`MetricStore` (or a shard set).
 
     ``inbox_dir`` receives one or more ``*.log`` stream files (one per
     shipper uplink).  ``store_dir`` is the durable on-disk index (the
     "Splunk index"; the paper keeps unlimited retention — so do we):
     sealed columnar segments plus a write-ahead log, memory-mapped back
     on restart without re-parsing wire lines — see
-    ``repro.core.segmentio``.  ``persist_path`` is the legacy
-    consolidated line archive, kept as a *fallback*: writing it is
-    deprecated, but :meth:`load_archive` still reads old archives (e.g.
-    to migrate one into a ``store_dir``).  Pass a pre-configured
-    ``store`` instead to control sealing / dedup-eviction / durability.
+    ``repro.core.segmentio``.  ``shards``/``shard_policy`` back the
+    aggregator with a :class:`~repro.core.shards.ShardedAggregator`
+    instead of one store: inserts route to N shards and fleet queries
+    run through the scatter/gather planner (``store_dir`` then holds a
+    ``shards.json`` manifest plus one standalone store directory per
+    shard).  ``persist_path`` is the legacy consolidated line archive,
+    kept as a *fallback*: writing it is deprecated, but
+    :meth:`load_archive` still reads old archives (e.g. to migrate one
+    into a ``store_dir``).  Pass a pre-configured ``store`` instead to
+    control sealing / dedup-eviction / durability.
     """
 
     def __init__(self, inbox_dir: os.PathLike,
                  persist_path: Optional[os.PathLike] = None,
-                 store: Optional[MetricStore] = None,
+                 store=None,
                  store_dir: Optional[os.PathLike] = None,
-                 wal_fsync: bool = False) -> None:
+                 wal_fsync: bool = False,
+                 shards: Optional[int] = None,
+                 shard_policy="hash") -> None:
         self.inbox_dir = Path(inbox_dir)
         self.inbox_dir.mkdir(parents=True, exist_ok=True)
         if store is not None:
             self.store = store
+        elif shards is not None:
+            from repro.core.shards import ShardedAggregator
+            self.store = ShardedAggregator(num_shards=shards,
+                                           policy=shard_policy,
+                                           directory=store_dir,
+                                           wal_fsync=wal_fsync)
         elif store_dir is not None:
             self.store = MetricStore(directory=store_dir,
                                      wal_fsync=wal_fsync)

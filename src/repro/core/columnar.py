@@ -517,21 +517,15 @@ class ColumnarMetricStore:
             if self.dedup_horizon_s is not None:
                 self._epochs.append((seg.ts_max, keys))
         # replay complete WAL lines into the append buffer (suppressing
-        # re-append); a torn trailing write is dropped here and removed
-        # from disk by the rewrite below, so it can never concatenate
-        # with the next accepted line
-        try:
-            data = (self.directory / "wal.log").read_bytes()
-        except OSError:
-            data = b""
-        end = data.rfind(b"\n")
-        if end >= 0:
+        # re-append); a torn trailing write is dropped by the shared
+        # reader and removed from disk by the rewrite below, so it can
+        # never concatenate with the next accepted line
+        lines = segmentio.read_complete_wal_lines(self.directory / "wal.log")
+        if lines:
             self._replaying = True
             try:
-                for raw in data[:end + 1].split(b"\n"):
-                    if not raw:
-                        continue
-                    rec = parse_line(raw.decode("utf-8", errors="replace"))
+                for line in lines:
+                    rec = parse_line(line)
                     if rec is not None:
                         self.insert(rec)
             finally:
@@ -563,6 +557,41 @@ class ColumnarMetricStore:
         if self._wal is not None:
             self._wal.close()
             self._wal = None
+
+    def adopt_segment(self, manifest_path: os.PathLike) -> int:
+        """Adopt a committed segment file pair from *another* store.
+
+        Sealed segments are immutable, self-describing shard units —
+        adopting one never re-parses rows: a durable store copies the
+        ``.bin``/``.json`` under its own sequence number (same commit
+        protocol as a seal), a memory-only store maps the source files
+        in place.  The segment's persisted dedup keys merge into the
+        live set (horizon rules apply), so transport retransmits of
+        adopted rows are still rejected.  Used by shard rebalancing /
+        store migration (``repro.core.shards``).  Returns the adopted
+        row count.
+        """
+        from repro.core import segmentio
+        if self.directory is not None:
+            # always fsync, matching save_segment's seal commit —
+            # wal_fsync only governs per-append WAL durability
+            man_path = segmentio.copy_segment_files(
+                manifest_path, self.directory / "segments",
+                segmentio.SEGMENT_STEM_FMT.format(self._next_seq),
+                fsync=True)
+            self._next_seq += 1
+            seg = segmentio.load_segment(man_path)
+        else:
+            seg = segmentio.load_segment(manifest_path)
+        self._sealed.append(seg)
+        if seg.ts_max > self._watermark:
+            self._watermark = seg.ts_max
+        keys = seg.dedup_keys()
+        self._seen |= keys
+        if self.dedup_horizon_s is not None:
+            self._epochs.append((seg.ts_max, keys))
+            self._evict_dedup()
+        return seg.n
 
     # -------------------------------------------------------------- reads --
     def segments(self) -> List[Segment]:

@@ -11,6 +11,12 @@ Three views, exactly as in the paper:
   but idle; large-memory underuse; low host participation — implemented
   as splunklite queries (staff "custom queries" in the paper).
 
+Every view takes a single :class:`MetricStore` *or* a sharded store
+(:class:`~repro.core.shards.ShardedAggregator`) — ``query`` dispatches
+fleet queries through the scatter/gather planner and ``scan`` merges
+per-shard column scans, so dashboards render identically either way
+(the shard-parity suite asserts it).
+
 Rendering is dependency-free SVG string building.
 """
 
@@ -18,14 +24,17 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.aggregator import MetricStore
 from repro.core.daemon import JobManifest
 from repro.core.derived import HardwareSpec, TPU_V5E
+from repro.core.shards import ShardedAggregator
 from repro.core.splunklite import query
+
+StoreLike = Union[MetricStore, ShardedAggregator]
 
 # ------------------------------------------------------------ svg helpers ---
 
@@ -104,7 +113,7 @@ class JobPoint:
     mfu: float = 0.0
 
 
-def roofline_points(store: MetricStore,
+def roofline_points(store: StoreLike,
                     manifests: Optional[Dict[str, JobManifest]] = None
                     ) -> List[JobPoint]:
     """Condense each job into (AI, GFLOP/s-per-chip, device-hours)."""
@@ -254,7 +263,7 @@ JOB_VIEW_METRICS = ("gflops", "hbm_gbs", "ai", "mfu", "step_time_s",
                     "tokens_per_s", "loss")
 
 
-def job_metric_series(store: MetricStore, job: str, metric: str,
+def job_metric_series(store: StoreLike, job: str, metric: str,
                       kind: str = "perf"
                       ) -> Dict[str, List[Tuple[float, float]]]:
     """Per-host (ts, value) series straight off the column arrays."""
@@ -278,7 +287,7 @@ def job_metric_series(store: MetricStore, job: str, metric: str,
     return series
 
 
-def job_statistical_view(store: MetricStore, job: str, metric: str,
+def job_statistical_view(store: StoreLike, job: str, metric: str,
                          kind: str = "perf", span_s: float = 60.0
                          ) -> Dict[str, List[Tuple[float, float]]]:
     """The paper's second job dashboard: min/median/max curves across all
@@ -313,7 +322,7 @@ def job_statistical_view(store: MetricStore, job: str, metric: str,
 
 # ------------------------------------------------------- specialized views --
 
-def view_top_apps_by_device_hours(store: MetricStore,
+def view_top_apps_by_device_hours(store: StoreLike,
                                   manifests: Dict[str, JobManifest],
                                   limit: int = 10) -> List[Dict]:
     """Paper: 'most executed applications by core hours'."""
@@ -331,7 +340,7 @@ def view_top_apps_by_device_hours(store: MetricStore,
     return table[:limit]
 
 
-def view_idle_accelerators(store: MetricStore, max_frac: float = 0.05
+def view_idle_accelerators(store: StoreLike, max_frac: float = 0.05
                            ) -> List[Dict]:
     """Paper: 'jobs that reserved GPU nodes without using GPUs'."""
     return query(store,
@@ -341,7 +350,7 @@ def view_idle_accelerators(store: MetricStore, max_frac: float = 0.05
                  "| sort max_hbm_frac_used")
 
 
-def view_memory_underuse(store: MetricStore,
+def view_memory_underuse(store: StoreLike,
                          manifests: Dict[str, JobManifest],
                          max_frac: float = 0.25) -> List[Dict]:
     """Paper: 'jobs that reserved large memory nodes without using much
@@ -359,7 +368,7 @@ def view_memory_underuse(store: MetricStore,
     return out
 
 
-def view_low_participation(store: MetricStore,
+def view_low_participation(store: StoreLike,
                            manifests: Dict[str, JobManifest],
                            min_frac: float = 0.5) -> List[Dict]:
     """Paper: 'jobs that use less than half of the available CPU cores'."""

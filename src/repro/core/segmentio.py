@@ -44,7 +44,9 @@ from repro.core.columnar import (MISSING, NumColumn, ObjColumn, Segment,
                                  StrColumn)
 
 FORMAT = "repro-colseg-v1"
+SHARDSET_FORMAT = "repro-shardset-v1"
 SEGMENT_STEM_FMT = "seg-{:08d}"
+SHARDSET_MANIFEST = "shards.json"
 _ALIGN = 64
 
 
@@ -268,6 +270,97 @@ class MappedSegment(Segment):
         raw = self._arr(d["keys"], "|u1").tobytes()
         size = int(d["digest_size"])
         return {raw[i * size:(i + 1) * size] for i in range(int(d["count"]))}
+
+
+def copy_segment_files(src_manifest: os.PathLike, dest_dir: os.PathLike,
+                       stem: str, fsync: bool = True) -> Path:
+    """Copy one committed segment's file pair under a new stem (segment
+    routing between stores/shards: segments are immutable shippable
+    units, so adoption is a byte copy, never a row re-parse).  Follows
+    the seal commit protocol — ``.bin`` first, manifest last via
+    ``os.replace`` — so an interrupted copy never leaves a manifest
+    describing missing data.  Returns the new manifest path."""
+    import shutil
+    src_manifest = Path(src_manifest)
+    with open(src_manifest, encoding="utf-8") as f:
+        manifest = json.load(f)
+    if not isinstance(manifest, dict) or manifest.get("format") != FORMAT:
+        raise ValueError(f"not a {FORMAT} manifest: {src_manifest}")
+    dest_dir = Path(dest_dir)
+    dest_dir.mkdir(parents=True, exist_ok=True)
+    bin_path = dest_dir / (stem + ".bin")
+    man_path = dest_dir / (stem + ".json")
+    tmp = Path(str(bin_path) + ".tmp")
+    shutil.copyfile(src_manifest.with_suffix(".bin"), tmp)
+    if fsync:
+        with open(tmp, "rb") as f:
+            os.fsync(f.fileno())
+    os.replace(tmp, bin_path)
+    tmp = Path(str(man_path) + ".tmp")
+    with open(tmp, "w", encoding="utf-8") as f:
+        json.dump(manifest, f)
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+    os.replace(tmp, man_path)
+    if fsync:
+        fsync_dir(dest_dir)
+    return man_path
+
+
+def read_complete_wal_lines(path: os.PathLike) -> List[str]:
+    """Decoded complete lines of a write-ahead log, dropping a torn
+    trailing write (a crash mid-append must never yield a partial
+    record, and the torn bytes must not concatenate with the next
+    accepted line).  Shared by store restart replay and shard-set
+    migration so the WAL framing rules live in one place."""
+    try:
+        data = Path(path).read_bytes()
+    except OSError:
+        return []
+    end = data.rfind(b"\n")
+    if end < 0:
+        return []
+    return [raw.decode("utf-8", errors="replace")
+            for raw in data[:end + 1].split(b"\n") if raw]
+
+
+# ---------------------------------------------------------------- shardset --
+
+def save_shardset_manifest(directory: os.PathLike, meta: Dict) -> Path:
+    """Atomically write a shard-set manifest (``shards.json``): the
+    routing policy and shard directory names for a sharded aggregator.
+    Each named shard directory stays a complete standalone store."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    manifest = {"format": SHARDSET_FORMAT}
+    manifest.update(meta)
+    path = directory / SHARDSET_MANIFEST
+    tmp = Path(str(path) + ".tmp")
+    with open(tmp, "w", encoding="utf-8") as f:
+        json.dump(manifest, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    fsync_dir(directory)
+    return path
+
+
+def load_shardset_manifest(directory: os.PathLike) -> Dict:
+    """Read a shard-set manifest; ``None`` when the directory has none
+    (fresh shard set).  Raises ``ValueError`` on a foreign file."""
+    path = Path(directory) / SHARDSET_MANIFEST
+    try:
+        with open(path, encoding="utf-8") as f:
+            manifest = json.load(f)
+    except OSError:
+        return None
+    except ValueError as exc:
+        raise ValueError(f"corrupt shard-set manifest: {path}") from exc
+    if not isinstance(manifest, dict) or \
+            manifest.get("format") != SHARDSET_FORMAT:
+        raise ValueError(f"not a {SHARDSET_FORMAT} manifest: {path}")
+    return manifest
 
 
 def load_segment(manifest_path: os.PathLike) -> MappedSegment:

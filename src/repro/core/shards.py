@@ -1,0 +1,455 @@
+"""Sharded multi-aggregator query fan-out (scatter/gather).
+
+The paper's Splunk tier answers fleet-wide queries over rsyslog streams
+from every compute node; at MPCDF scale that is a multi-indexer
+scatter/gather problem, and PerSyst (arXiv:2009.06061) keeps fleet
+analysis tractable with a tree of aggregation agents.  This module is
+that tier's analog: a :class:`ShardedAggregator` owns N
+:class:`~repro.core.columnar.ColumnarMetricStore` shards, routes
+inserts to them by policy, and executes splunklite pipelines as a
+scatter plan (per-shard predicate masks + partial aggregates) and a
+gather plan (merge of the partial states).
+
+Execution strategy per query (see ``repro.core.splunklite`` for the
+partial/merge/finalize algebra and docs/sharding.md for the format):
+
+* **scatter/gather** — pipelines of row-local stages ending in a
+  ``stats``/``timechart`` whose aggregations are all *mergeable*
+  compile to a :class:`~repro.core.splunklite.ScatterPlan`.  Each shard
+  filters with vectorized predicate masks (zone-map pruning included),
+  gathers only referenced columns, and reduces every group to a small
+  partial state; the gather step merges states (count/sum/min/max/
+  Welford merges, set union for ``dc``, order-insensitive P² sketch
+  merge for quantiles) and finalizes rows, then runs any tail stages
+  locally.  No shard ships rows.
+* **exact gather** — anything else (order-dependent ``first``/``last``,
+  ``sort``/``dedup``/``head`` before aggregation, whole-row aggregates)
+  falls back to gathering the predicate-filtered, column-projected rows
+  from every shard, canonically ordering them by record timestamp
+  (stable: ties keep shard order), and running the remaining pipeline
+  locally.  Results are exact; they match a single store whenever
+  timestamps are unique (the monitoring wire format's normal case) or
+  the pipeline is order-insensitive.
+
+Routing policies: ``"hash"`` (stable blake2 hash of the host — keeps a
+host's stream on one shard), ``"time"`` (time windows round-robin
+across shards), or any callable ``(record, num_shards) -> shard index``.
+Duplicates route identically, so per-shard dedup equals global dedup.
+
+Durable layout (``directory=``): ``shards.json`` manifest plus one
+standard store directory per shard (``shard-00/``, ``shard-01/``, ...).
+Every shard directory is a complete, self-describing store — it can be
+opened standalone with ``ColumnarMetricStore(directory=...)``, shipped
+to another aggregator, or adopted segment-by-segment via
+:meth:`ShardedAggregator.adopt_store_dir`.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+import os
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
+                    Tuple, Union)
+
+import numpy as np
+
+from repro.core.columnar import ColumnarMetricStore, ColumnScan, _empty_scan
+from repro.core.schema import MetricRecord, parse_line
+from repro.core import splunklite
+from repro.core.splunklite import _Fallback
+
+Policy = Union[str, Callable[[MetricRecord, int], int]]
+
+
+def _hash_route(host: str, num_shards: int) -> int:
+    """Stable host hash (process-restart safe, unlike ``hash()``)."""
+    digest = hashlib.blake2b(host.encode("utf-8"), digest_size=8).digest()
+    return int.from_bytes(digest, "little") % num_shards
+
+
+class ShardedAggregator:
+    """N columnar store shards behind one store-compatible query surface.
+
+    Implements the read surface dashboards, detectors, and splunklite
+    rely on (``query`` via dispatch, ``scan``, ``records``, ``select``,
+    ``jobs``/``kinds``/``hosts``, ``insert``/``ingest_lines``), so it is
+    a drop-in for :class:`MetricStore` at the analysis layer.
+
+    ``num_shards``/``policy`` — shard count and routing policy.
+    ``directory`` — durable mode: a ``shards.json`` manifest plus one
+    standard store directory per shard.  Reopening validates the
+    manifest (shard count and named policy must match).
+    Remaining kwargs are forwarded to every shard store.
+    """
+
+    is_sharded = True  # splunklite.query dispatch marker
+
+    def __init__(self, num_shards: int = 4, policy: Policy = "hash",
+                 time_window_s: float = 3600.0,
+                 seal_threshold: int = 4096,
+                 dedup_horizon_s: Optional[float] = None,
+                 directory: Optional[os.PathLike] = None,
+                 wal_fsync: bool = False,
+                 parallel: Optional[bool] = None) -> None:
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        # thread-parallel shard execution pays off once there are spare
+        # cores for the NumPy kernels; on small boxes the GIL makes the
+        # sequential scan faster, so auto-enable only with headroom
+        if parallel is None:
+            parallel = (os.cpu_count() or 1) >= 2 * num_shards
+        self.parallel = bool(parallel)
+        self.policy = policy
+        self.time_window_s = float(time_window_s)
+        self.directory = Path(directory) if directory is not None else None
+        policy_name = policy if isinstance(policy, str) else "custom"
+        if policy_name not in ("hash", "time", "custom"):
+            raise ValueError(f"unknown routing policy {policy!r}")
+        if self.directory is not None:
+            from repro.core import segmentio
+            manifest = segmentio.load_shardset_manifest(self.directory)
+            if manifest is not None:
+                if int(manifest["num_shards"]) != int(num_shards):
+                    raise ValueError(
+                        f"shard set at {self.directory} has "
+                        f"{manifest['num_shards']} shards, not {num_shards}")
+                if manifest["policy"] != policy_name:
+                    raise ValueError(
+                        f"shard set at {self.directory} was created with "
+                        f"policy {manifest['policy']!r}, not {policy_name!r}")
+                stored_window = float(manifest.get("time_window_s",
+                                                   self.time_window_s))
+                if policy_name == "time" and \
+                        stored_window != self.time_window_s:
+                    # a different window re-routes existing records, so
+                    # per-shard dedup would no longer equal global dedup
+                    raise ValueError(
+                        f"shard set at {self.directory} was created with "
+                        f"time_window_s={stored_window}, "
+                        f"not {self.time_window_s}")
+            else:
+                segmentio.save_shardset_manifest(self.directory, {
+                    "num_shards": int(num_shards),
+                    "policy": policy_name,
+                    "time_window_s": self.time_window_s,
+                    "shard_dirs": [self._shard_dirname(i)
+                                   for i in range(num_shards)],
+                })
+        self.shards: List[ColumnarMetricStore] = []
+        for i in range(num_shards):
+            shard_dir = (self.directory / self._shard_dirname(i)
+                         if self.directory is not None else None)
+            self.shards.append(ColumnarMetricStore(
+                seal_threshold=seal_threshold,
+                dedup_horizon_s=dedup_horizon_s,
+                directory=shard_dir, wal_fsync=wal_fsync))
+        # query-path observability (tests assert the scatter plan runs)
+        self.scatter_queries = 0
+        self.fallback_queries = 0
+        self.segments_adopted = 0
+        self.records_reingested = 0
+        self._cache: Dict[str, tuple] = {}
+        self._pool: Optional[ThreadPoolExecutor] = None
+
+    def _map_shards(self, fn):
+        """Run ``fn`` once per shard — in parallel for multi-shard sets
+        (each shard is touched by exactly one worker, so per-shard lazy
+        caches stay single-threaded; NumPy kernels release the GIL).
+        Results come back in shard order, keeping every gather
+        deterministic."""
+        if self.num_shards == 1 or not self.parallel:
+            return [fn(shard) for shard in self.shards]
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=min(self.num_shards, 8),
+                thread_name_prefix="shard-query")
+        return list(self._pool.map(fn, self.shards))
+
+    @staticmethod
+    def _shard_dirname(i: int) -> str:
+        return f"shard-{i:02d}"
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    # ------------------------------------------------------------ routing --
+    def shard_index(self, rec: MetricRecord) -> int:
+        if callable(self.policy):
+            return int(self.policy(rec, self.num_shards)) % self.num_shards
+        if self.policy == "hash":
+            return _hash_route(rec.host, self.num_shards)
+        window = int(math.floor(float(rec.ts) / self.time_window_s))
+        return window % self.num_shards
+
+    # ------------------------------------------------------------- ingest --
+    def insert(self, rec: MetricRecord) -> bool:
+        return self.shards[self.shard_index(rec)].insert(rec)
+
+    def ingest_lines(self, lines: Iterable[str]) -> int:
+        n = 0
+        for line in lines:
+            rec = parse_line(line)
+            if rec is not None and self.insert(rec):
+                n += 1
+        return n
+
+    def seal(self) -> None:
+        for shard in self.shards:
+            shard.seal()
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        for shard in self.shards:
+            shard.close()
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    @property
+    def duplicates_dropped(self) -> int:
+        return sum(s.duplicates_dropped for s in self.shards)
+
+    def shard_sizes(self) -> List[int]:
+        return [len(s) for s in self.shards]
+
+    def _version(self) -> tuple:
+        return tuple(s._version() for s in self.shards)
+
+    # ------------------------------------------------------- segment adopt --
+    def adopt_store_dir(self, src_directory: os.PathLike) -> int:
+        """Migrate an existing single-store directory into the shards.
+
+        Sealed segments are shippable units: a segment whose rows all
+        route to one shard is adopted file-by-file (no re-parse) via
+        :meth:`ColumnarMetricStore.adopt_segment`; otherwise its rows
+        are re-ingested through normal routing.  The source WAL's
+        complete lines are replayed last.  The source directory is only
+        read.  Returns the number of records brought in.
+        """
+        from repro.core import segmentio
+        src = Path(src_directory)
+        total = 0
+        for man_path in sorted((src / "segments").glob("seg-*.json")):
+            try:
+                seg = segmentio.load_segment(man_path)
+            except (OSError, ValueError, KeyError, TypeError):
+                continue
+            target = self._segment_route(seg)
+            if target is not None:
+                total += self.shards[target].adopt_segment(man_path)
+                self.segments_adopted += 1
+            else:
+                from repro.core.columnar import _segment_records
+                for rec in _segment_records(seg, np.arange(seg.n)):
+                    if self.insert(rec):
+                        total += 1
+                        self.records_reingested += 1
+        for line in segmentio.read_complete_wal_lines(src / "wal.log"):
+            rec = parse_line(line)
+            if rec is not None and self.insert(rec):
+                total += 1
+        return total
+
+    def _segment_route(self, seg) -> Optional[int]:
+        """Shard index if every row of the segment routes there, else
+        ``None`` (the segment must be split by re-ingesting rows)."""
+        if self.num_shards == 1:
+            return 0
+        if callable(self.policy):
+            return None
+        if self.policy == "time":
+            w = self.time_window_s
+            lo = int(math.floor(seg.ts_min / w))
+            hi = int(math.floor(seg.ts_max / w))
+            return lo % self.num_shards if lo == hi else None
+        hosts = {_hash_route(h, self.num_shards)
+                 for h in seg.attrs["host"].index}
+        if len(hosts) == 1:
+            return next(iter(hosts))
+        return None
+
+    # -------------------------------------------------------------- query --
+    def query(self, q: str, engine: Optional[str] = None) -> List[Dict]:
+        """Execute a splunklite pipeline across the shards.
+
+        ``engine="rows"`` forces the legacy row executor over the
+        canonically ordered gathered rows (the parity oracle);
+        otherwise a mergeable pipeline runs scatter/gather and anything
+        else takes the exact-gather path.
+        """
+        stages = splunklite._split_pipeline(q)
+        if engine == "rows":
+            rows = [r.as_dict() for r in self.records]
+            if not stages:
+                return rows
+            return splunklite.run_stages(rows, stages, implicit_first=True)
+        plan = splunklite.compile_scatter_plan(stages)
+        if plan is not None:
+            try:
+                maps = self._map_shards(
+                    lambda shard: splunklite.scatter_partials(shard, plan))
+                merged = splunklite.merge_partial_maps(maps, plan.aggs)
+                rows = splunklite.finalize_partial_rows(merged, plan)
+                self.scatter_queries += 1
+                return splunklite.run_stages(rows, plan.tail)
+            except _Fallback:
+                pass  # shard data defeated a partial kernel: go exact
+        self.fallback_queries += 1
+        rows, rest = self._gather_rows(stages)
+        return splunklite.run_stages(rows, rest)
+
+    def explain(self, q: str) -> Dict[str, Any]:
+        """Describe how a query would execute (for tests/operators)."""
+        stages = splunklite._split_pipeline(q)
+        plan = splunklite.compile_scatter_plan(stages)
+        if plan is not None:
+            return {
+                "mode": "scatter_gather",
+                "shards": self.num_shards,
+                "partial_aggs": [name for name, _f, _o in plan.aggs],
+                "group_by": list(plan.by),
+                "columns": (sorted(plan.cols)
+                            if plan.cols is not None else None),
+                "tail_stages": [t[0] for t in plan.tail],
+            }
+        terms, rest = splunklite._leading_terms(stages)
+        cols = splunklite.referenced_columns(rest)
+        return {
+            "mode": "exact_gather",
+            "shards": self.num_shards,
+            "pushed_terms": len(terms),
+            "columns": sorted(cols) if cols is not None else None,
+            "stages": [t[0] for t in rest],
+        }
+
+    def _gather_rows(self, stages: List[List[str]]):
+        """Exact gather: filtered + projected rows from every shard in
+        canonical (ts, shard, local-position) order."""
+        gathered = self._map_shards(
+            lambda shard: splunklite.gather_filtered(shard, stages))
+        ts_parts = [ts for ts, _rows, _rest in gathered]
+        row_parts = [rows for _ts, rows, _rest in gathered]
+        rest = gathered[-1][2]
+        all_rows = [r for part in row_parts for r in part]
+        if not all_rows:
+            return [], rest
+        ts_all = np.concatenate(ts_parts)
+        order = np.argsort(ts_all, kind="stable")
+        return [all_rows[i] for i in order.tolist()], rest
+
+    # -------------------------------------------------------------- reads --
+    @property
+    def records(self) -> List[MetricRecord]:
+        """All records in canonical (ts, shard, local) order."""
+        v = self._version()
+        cached = self._cache.get("records")
+        if cached is None or cached[0] != v:
+            recs: List[MetricRecord] = []
+            ts: List[float] = []
+            for shard in self.shards:
+                part = shard.records
+                recs.extend(part)
+                ts.extend(float(r.ts) for r in part)
+            order = np.argsort(np.asarray(ts), kind="stable")
+            cached = (v, [recs[i] for i in order.tolist()])
+            self._cache["records"] = cached
+        return cached[1]
+
+    def select(self, job: Optional[str] = None, kind: Optional[str] = None,
+               since: Optional[float] = None,
+               until: Optional[float] = None) -> Iterator[MetricRecord]:
+        recs: List[MetricRecord] = []
+        ts: List[float] = []
+        for shard in self.shards:
+            for r in shard.select(job=job, kind=kind, since=since,
+                                  until=until):
+                recs.append(r)
+                ts.append(float(r.ts))
+        order = np.argsort(np.asarray(ts), kind="stable")
+        for i in order.tolist():
+            yield recs[i]
+
+    def scan(self, job: Optional[str] = None, kind: Optional[str] = None,
+             since: Optional[float] = None, until: Optional[float] = None,
+             fields: Iterable[str] = ()) -> ColumnScan:
+        """Merged vectorized scan across shards (memoized per version).
+
+        Row order is shard-concatenation order; every dashboard/detector
+        consumer orders by (ts, value) itself, so the merged scan is a
+        drop-in for the single-store one.
+        """
+        fields = tuple(fields)
+        memo_key = (job, kind, since, until, fields)
+        memo = self._cache.get("scans")
+        if memo is None or memo[0] != self._version():
+            memo = (self._version(), {})
+            self._cache["scans"] = memo
+        hit = memo[1].get(memo_key)
+        if hit is not None:
+            return hit
+        sc = self._scan_uncached(job, kind, since, until, fields)
+        if len(memo[1]) < 64:
+            memo[1][memo_key] = sc
+        return sc
+
+    def _scan_uncached(self, job, kind, since, until,
+                       fields: Tuple[str, ...]) -> ColumnScan:
+        scans = [s.scan(job=job, kind=kind, since=since, until=until,
+                        fields=fields) for s in self.shards]
+        scans = [s for s in scans if s.n]
+        if not scans:
+            return _empty_scan(fields)
+        n = sum(s.n for s in scans)
+        ts = np.concatenate([s.ts for s in scans])
+        host_index: Dict[str, int] = {}
+        job_index: Dict[str, int] = {}
+        host_codes = np.empty(n, np.int32)
+        job_codes = np.empty(n, np.int32)
+        fvals = {f: np.empty(n) for f in fields}
+        fpres = {f: np.empty(n, bool) for f in fields}
+        pos = 0
+        for sc in scans:
+            m = sc.n
+            for codes_out, codes, vocab, index in (
+                    (host_codes, sc.host_codes, sc.host_vocab, host_index),
+                    (job_codes, sc.job_codes, sc.job_vocab, job_index)):
+                remap = np.array([index.setdefault(v, len(index))
+                                  for v in vocab.tolist()], np.int32) \
+                    if len(vocab) else np.empty(0, np.int32)
+                codes_out[pos:pos + m] = remap[codes]
+            for f in fields:
+                v, p = sc.field(f)
+                fvals[f][pos:pos + m] = v
+                fpres[f][pos:pos + m] = p
+            pos += m
+        return ColumnScan(
+            n, ts, host_codes, np.array(list(host_index), dtype=object),
+            job_codes, np.array(list(job_index), dtype=object),
+            {f: (fvals[f], fpres[f]) for f in fields})
+
+    # ------------------------------------------------------------- vocabs --
+    def _vocab_union(self, method: str) -> List[str]:
+        out: Dict[str, None] = {}
+        for shard in self.shards:
+            for v in getattr(shard, method)():
+                out.setdefault(v)
+        return sorted(out)
+
+    def jobs(self) -> List[str]:
+        return self._vocab_union("jobs")
+
+    def kinds(self) -> List[str]:
+        return self._vocab_union("kinds")
+
+    def hosts(self, job: Optional[str] = None) -> List[str]:
+        out: Dict[str, None] = {}
+        for shard in self.shards:
+            for v in shard.hosts(job):
+                out.setdefault(v)
+        return sorted(out)

@@ -9,12 +9,19 @@ samples, so we provide:
 * :class:`P2Quantile` — the P² algorithm (Jain & Chlamtac 1985): a single
   quantile estimate from 5 markers, no stored samples.
 * :class:`QuantileSet` — min/p25/median/p75/max in O(1) memory.
+* :class:`P2Summary` / :func:`merge_quantile_summaries` — the mergeable
+  form of a P² sketch: a five-knot piecewise-linear quantile summary
+  that shards export and an aggregator merges (order-insensitively)
+  into one distributed quantile estimate.  See docs/sharding.md for the
+  merge algebra and the error bound.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 
 class StreamStats:
@@ -148,6 +155,288 @@ class P2Quantile:
             frac = idx - lo
             return srt[lo] * (1 - frac) + srt[hi] * frac
         return self._q[2]
+
+    def summary(self) -> "P2Summary":
+        """Export the mergeable form of this sketch's current state."""
+        if self.count < 5:
+            return P2Summary.from_values(self._q, self.p)
+        # marker heights with their *observed* cumulative fractions
+        fracs = [(pos - 1) / (self.count - 1) for pos in self._pos]
+        return P2Summary(self.p, self.count, tuple(self._q), tuple(fracs),
+                         point=self.value)
+
+
+class P2Summary:
+    """Mergeable quantile summary — the shippable state of a P² sketch.
+
+    A summary is either a small raw sample (``n <= RAW_MAX`` values kept
+    exactly, so merges of tiny groups stay exact) or five knots of the
+    shard-local quantile function: ``(value, cumulative fraction)``
+    pairs at the P² marker fractions ``{0, p/2, p, (1+p)/2, 1}``.  Knots
+    come from :meth:`P2Quantile.summary` (streaming build) or
+    :meth:`from_values` (batch build over values a shard already holds —
+    knot values are then *exact* local quantiles).
+
+    ``point`` is the summary's own estimate at ``p``; a merge of a
+    single non-empty summary returns it unchanged, which makes
+    ``merge(empty, s) == s`` hold exactly.
+    """
+
+    RAW_MAX = 32
+
+    __slots__ = ("p", "n", "knots_v", "knots_f", "raw", "point")
+
+    def __init__(self, p: float, n: int,
+                 knots_v: Tuple[float, ...] = (),
+                 knots_f: Tuple[float, ...] = (),
+                 raw: Optional[Tuple[float, ...]] = None,
+                 point: float = math.nan) -> None:
+        self.p = p
+        self.n = int(n)
+        self.knots_v = knots_v
+        self.knots_f = knots_f
+        self.raw = raw
+        self.point = point
+
+    @classmethod
+    def from_values(cls, xs: Sequence[float], p: float) -> "P2Summary":
+        """Batch build from values a shard holds (exact local knots)."""
+        xs = [float(x) for x in xs]
+        n = len(xs)
+        if n == 0:
+            return cls(p, 0, raw=(), point=math.nan)
+        if n <= cls.RAW_MAX:
+            raw = tuple(sorted(xs))
+            return cls(p, n, raw=raw, point=exact_quantile(list(raw), p))
+        fracs = (0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0)
+        vals = np.quantile(np.asarray(xs, dtype=np.float64),
+                           np.asarray(fracs))
+        return cls(p, n, tuple(float(v) for v in vals), fracs,
+                   point=float(vals[2]))
+
+    def _sort_key(self):
+        return (self.n, self.raw if self.raw is not None else (),
+                self.knots_v, self.knots_f)
+
+
+def merge_quantile_summary_groups(groups: List[List["P2Summary"]],
+                                  p: float) -> List[float]:
+    """Batched :func:`merge_quantile_summaries` over many groups — the
+    gather node finalizes one quantile column for *all* group keys in a
+    handful of vectorized passes instead of one Python CDF merge per
+    group.  Groups whose summaries are all knotted (the common sharded
+    case) are stacked and merged with NumPy; small/raw or single-shard
+    groups take the exact scalar paths.  Result-equivalent to the
+    scalar merge up to degenerate duplicate-knot handling (still within
+    the documented bound and the summaries' value range)."""
+    out: List[float] = [math.nan] * len(groups)
+    batched: Dict[int, List[Tuple[int, List["P2Summary"]]]] = {}
+    for i, summaries in enumerate(groups):
+        ss = [s for s in summaries if s.n > 0]
+        if not ss:
+            continue
+        if len(ss) == 1:
+            out[i] = ss[0].point
+        elif any(s.raw is not None for s in ss):
+            out[i] = merge_quantile_summaries(ss, p)
+        else:
+            batched.setdefault(len(ss), []).append((i, ss))
+    for n_parts, items in batched.items():
+        idxs = [i for i, _ in items]
+        vals = _batch_merge_knotted([ss for _, ss in items], n_parts, p)
+        for i, v in zip(idxs, vals):
+            out[i] = v
+    return out
+
+
+def _batch_merge_knotted(groups: List[List["P2Summary"]], S: int,
+                         p: float) -> np.ndarray:
+    """Vectorized CDF-average merge for G groups of S knotted summaries."""
+    G = len(groups)
+    V = np.array([[s.knots_v for s in ss] for ss in groups])  # (G, S, 5)
+    F = np.array([[s.knots_f for s in ss] for ss in groups])  # (G, S, 5)
+    W = np.array([[float(s.n) for s in ss] for ss in groups])  # (G, S)
+    C = S * 5
+    X = np.sort(V.reshape(G, C), axis=1)  # candidate knot values per group
+    # piecewise-linear CDF of every summary at every candidate
+    less = V[:, :, None, :] < X[:, None, :, None]          # (G, S, C, 5)
+    hi = np.clip(less.sum(-1), 1, 4)                        # (G, S, C)
+    lo = hi - 1
+    base = (np.arange(G * S, dtype=np.int64) * 5).reshape(G, S, 1)
+    Vf, Ff = V.reshape(-1), F.reshape(-1)
+    vlo, vhi = Vf[base + lo], Vf[base + hi]
+    flo, fhi = Ff[base + lo], Ff[base + hi]
+    denom = vhi - vlo
+    safe = np.where(denom > 0, denom, 1.0)
+    t = np.clip((X[:, None, :] - vlo) / safe, 0.0, 1.0)
+    t = np.where(denom > 0, t, 1.0)
+    Fx = flo + t * (fhi - flo)
+    cdf = (W[:, :, None] * Fx).sum(1) / W.sum(1)[:, None]   # (G, C)
+    # invert the merged CDF at p per group
+    ge = cdf >= p
+    first = np.argmax(ge, axis=1)
+    i0 = np.maximum(first - 1, 0)
+    rows = np.arange(G)
+    x0, x1 = X[rows, i0], X[rows, first]
+    f0, f1 = cdf[rows, i0], cdf[rows, first]
+    df = f1 - f0
+    t = np.where(df > 0, (p - f0) / np.where(df > 0, df, 1.0), 1.0)
+    res = x0 + np.clip(t, 0.0, 1.0) * (x1 - x0)
+    return np.where(ge.any(axis=1), res, X[:, -1])
+
+
+def p2_summaries_from_sorted_groups(vals: np.ndarray, starts: np.ndarray,
+                                    counts: np.ndarray, p: float
+                                    ) -> List["P2Summary"]:
+    """Vectorized batch build: one :class:`P2Summary` per group from
+    group-partitioned, ascending-sorted values (group ``g`` occupies
+    ``vals[starts[g]:starts[g]+counts[g]]``).  Result-equivalent to
+    calling :meth:`P2Summary.from_values` per group, but the five knot
+    gathers run once across all groups — the hot path for sharded
+    ``stats pXX(...) by ...`` over many groups."""
+    starts = np.asarray(starts, dtype=np.int64)
+    counts = np.asarray(counts, dtype=np.int64)
+    G = len(counts)
+    fracs = (0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0)
+    knot_vals = np.zeros((G, 5))
+    if vals.size:
+        nm1 = np.maximum(counts - 1, 0)
+        safe_start = np.minimum(starts, vals.size - 1)
+        for j, f in enumerate(fracs):
+            idx = f * nm1
+            lo = np.floor(idx).astype(np.int64)
+            hi = np.minimum(lo + 1, nm1)
+            w = idx - lo
+            vlo = vals[np.minimum(safe_start + lo, vals.size - 1)]
+            vhi = vals[np.minimum(safe_start + hi, vals.size - 1)]
+            knot_vals[:, j] = vlo * (1.0 - w) + vhi * w
+    out: List[P2Summary] = []
+    for g in range(G):
+        n = int(counts[g])
+        if n == 0:
+            out.append(P2Summary(p, 0, raw=(), point=math.nan))
+        elif n <= P2Summary.RAW_MAX:
+            s = int(starts[g])
+            out.append(P2Summary(p, n, raw=tuple(vals[s:s + n].tolist()),
+                                 point=float(knot_vals[g, 2])))
+        else:
+            kv = knot_vals[g]
+            out.append(P2Summary(p, n, tuple(kv.tolist()), fracs,
+                                 point=float(kv[2])))
+    return out
+
+
+def _clean_knots(vs: List[float], fs: List[float]):
+    """Strictly increasing knot values with nondecreasing fractions
+    (duplicate values keep the largest fraction) — a valid piecewise-
+    linear CDF.  Inputs are already sorted by value."""
+    out_v: List[float] = []
+    out_f: List[float] = []
+    last_f = 0.0
+    for v, f in zip(vs, fs):
+        if f < last_f:
+            f = last_f
+        last_f = f
+        if out_v and v == out_v[-1]:
+            out_f[-1] = f  # keep the largest fraction of a value run
+        else:
+            out_v.append(v)
+            out_f.append(f)
+    return out_v, out_f
+
+
+def merge_quantile_summaries(summaries: Iterable["P2Summary"],
+                             p: Optional[float] = None) -> float:
+    """Distributed quantile: merge shard summaries into one estimate.
+
+    Order-insensitive by construction: raw samples from small summaries
+    are pooled into one sorted sample, knot summaries are sorted by a
+    canonical key, and the merged CDF — the sample-count-weighted
+    average of the per-summary piecewise-linear CDFs — is inverted at
+    ``p``.  Empty summaries are identity elements, and a merge of a
+    single non-empty summary returns its own ``point`` estimate
+    unchanged.  The result always lies within the union of the
+    summaries' value ranges; see docs/sharding.md for the error bound.
+
+    Pure-Python on purpose: inputs are a handful of 5-knot summaries
+    per group, where interpreter-loop cost beats NumPy call overhead
+    (the gather node runs one merge per group per quantile column).
+    """
+    ss = [s for s in summaries if s.n > 0]
+    if not ss:
+        return math.nan
+    if p is None:
+        p = ss[0].p
+    if len(ss) == 1:
+        return ss[0].point
+    raw_pool: List[float] = []
+    knotted: List[P2Summary] = []
+    for s in ss:
+        if s.raw is not None:
+            raw_pool.extend(s.raw)
+        else:
+            knotted.append(s)
+    if not knotted:
+        return exact_quantile(raw_pool, p)
+    knotted.sort(key=P2Summary._sort_key)
+    parts = []
+    for s in knotted:
+        vs, fs = s.knots_v, s.knots_f
+        if any(vs[i] >= vs[i + 1] for i in range(len(vs) - 1)):
+            vs, fs = _clean_knots(list(vs), list(fs))
+        parts.append((s.n, (vs, fs)))
+    if raw_pool:
+        raw_pool.sort()
+        m = len(raw_pool)
+        if m > 17:
+            # condense a large pooled sample to 17 exact quantile knots
+            # so the CDF walk stays O(knots); the piecewise-linear error
+            # this introduces is far inside the documented bound
+            vs, fs = [], []
+            for i in range(17):
+                f = i / 16.0
+                idx = f * (m - 1)
+                lo = int(idx)
+                hi = min(lo + 1, m - 1)
+                vs.append(raw_pool[lo] * (1 - (idx - lo))
+                          + raw_pool[hi] * (idx - lo))
+                fs.append(f)
+            parts.append((m, _clean_knots(vs, fs)))
+        else:
+            fs = ([0.5] if m == 1
+                  else [i / (m - 1) for i in range(m)])
+            parts.append((m, _clean_knots(raw_pool, fs)))
+    total = float(sum(w for w, _ in parts))
+    xs = sorted({x for _, (vs, _fs) in parts for x in vs})
+    acc = [0.0] * len(xs)
+    for w, (vs, fs) in parts:
+        j = 0
+        k = len(vs)
+        for i, x in enumerate(xs):
+            while j < k and vs[j] < x:
+                j += 1
+            if j == 0:
+                fv = fs[0]
+            elif j == k:
+                fv = fs[-1]
+            elif vs[j] == x:
+                fv = fs[j]
+            else:
+                t = (x - vs[j - 1]) / (vs[j] - vs[j - 1])
+                fv = fs[j - 1] + t * (fs[j] - fs[j - 1])
+            acc[i] += w * fv
+    prev_x, prev_f = xs[0], acc[0] / total
+    if prev_f >= p:
+        return prev_x
+    for i in range(1, len(xs)):
+        f = acc[i] / total
+        if f >= p:
+            if f <= prev_f:
+                return xs[i]
+            t = (p - prev_f) / (f - prev_f)
+            return prev_x + t * (xs[i] - prev_x)
+        prev_x, prev_f = xs[i], f
+    return xs[-1]
 
 
 class QuantileSet:

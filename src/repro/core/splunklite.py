@@ -175,6 +175,30 @@ def _parse_aggs(tokens: List[str]):
     return aggs
 
 
+def _stats_split(args: List[str]):
+    """stats args -> (agg tokens, by columns)."""
+    if "by" in args:
+        split = args.index("by")
+        return args[:split], args[split + 1:]
+    return list(args), []
+
+
+def _timechart_split(args: List[str]):
+    """timechart args -> (span seconds, agg tokens, by columns)."""
+    span = 60.0
+    rest: List[str] = []
+    for tok in args:
+        if tok.startswith("span="):
+            span = float(tok[5:])
+        else:
+            rest.append(tok)
+    by: List[str] = []
+    if "by" in rest:
+        split = rest.index("by")
+        rest, by = rest[:split], rest[split + 1:]
+    return span, rest, by
+
+
 def _group_rows(rows: List[Row], by: List[str]):
     groups: Dict[tuple, List[Row]] = {}
     for r in rows:
@@ -184,11 +208,7 @@ def _group_rows(rows: List[Row], by: List[str]):
 
 
 def _cmd_stats(rows: List[Row], args: List[str]) -> List[Row]:
-    if "by" in args:
-        split = args.index("by")
-        agg_tokens, by = args[:split], args[split + 1:]
-    else:
-        agg_tokens, by = args, []
+    agg_tokens, by = _stats_split(args)
     aggs = [(_agg_fn(name), fieldname, outname)
             for name, fieldname, outname in _parse_aggs(agg_tokens)]
     out: List[Row] = []
@@ -205,17 +225,7 @@ def _cmd_stats(rows: List[Row], args: List[str]) -> List[Row]:
 
 
 def _cmd_timechart(rows: List[Row], args: List[str]) -> List[Row]:
-    span = 60.0
-    rest: List[str] = []
-    for tok in args:
-        if tok.startswith("span="):
-            span = float(tok[5:])
-        else:
-            rest.append(tok)
-    by: List[str] = []
-    if "by" in rest:
-        split = rest.index("by")
-        rest, by = rest[:split], rest[split + 1:]
+    span, rest, by = _timechart_split(args)
     aggs = [(_agg_fn(name), fieldname, outname)
             for name, fieldname, outname in _parse_aggs(rest)]
     out: List[Row] = []
@@ -530,14 +540,16 @@ def _prune_segment(seg: Segment, terms: List[_Term]) -> bool:
     return False
 
 
-def _merge_parts(parts: List) -> _Batch:
+def _merge_parts(parts: List, cols: Optional[frozenset] = None) -> _Batch:
     """Concatenate (segment, row-idx) gathers into one batch, merging
-    string dictionaries and unioning columns across segments."""
+    string dictionaries and unioning columns across segments.  ``cols``
+    (from :func:`referenced_columns`) restricts the gather to columns
+    the rest of the pipeline actually touches (projection pushdown)."""
     total = int(sum(len(idx) for _, idx in parts))
     names: Dict[str, None] = {}
     for seg, _ in parts:
         for k in seg.cols:
-            if k not in names:
+            if k not in names and (cols is None or k in cols):
                 names[k] = None
     cols: Dict[str, object] = {}
     for name in names:
@@ -590,8 +602,19 @@ def _merge_parts(parts: List) -> _Batch:
     return _Batch(total, cols)
 
 
-def _batch_from_store(store: ColumnarMetricStore,
-                      terms: List[_Term]) -> _Batch:
+def _batch_from_store(store: ColumnarMetricStore, terms: List[_Term],
+                      cols: Optional[frozenset] = None) -> _Batch:
+    parts = _store_parts(store, terms)
+    if not parts:
+        return _Batch(0, {})
+    return _merge_parts(parts, cols)
+
+
+def _store_parts(store: ColumnarMetricStore,
+                 terms: List[_Term]) -> List[tuple]:
+    """(segment, matching-row-idx) pairs after zone-map pruning and
+    vectorized predicate evaluation — the shared scan for both the
+    local executor and the sharded gather path."""
     parts = []
     for seg in store.segments():
         if terms and _prune_segment(seg, terms):
@@ -608,9 +631,7 @@ def _batch_from_store(store: ColumnarMetricStore,
         else:
             idx = np.arange(seg.n)
         parts.append((seg, idx))
-    if not parts:
-        return _Batch(0, {})
-    return _merge_parts(parts)
+    return parts
 
 
 # ------------------------------------------------------------ factorizing ---
@@ -669,15 +690,29 @@ def _combine_codes(code_arrays: List[np.ndarray],
 # -------------------------------------------------------------- group/agg ---
 
 class _Grouping:
-    __slots__ = ("gid", "keys", "G", "order", "bounds")
+    __slots__ = ("gid", "keys", "G", "_order", "_bounds")
 
     def __init__(self, gid: np.ndarray, keys: List[tuple]) -> None:
         self.gid = gid
         self.keys = keys
         self.G = len(keys)
-        self.order = np.argsort(gid, kind="stable")
-        go = gid[self.order]
-        self.bounds = np.searchsorted(go, np.arange(self.G + 1))
+        # row-order structures are lazy: the vectorized partial kernels
+        # never need them, so shards skip the argsort entirely
+        self._order = None
+        self._bounds = None
+
+    @property
+    def order(self) -> np.ndarray:
+        if self._order is None:
+            self._order = np.argsort(self.gid, kind="stable")
+        return self._order
+
+    @property
+    def bounds(self) -> np.ndarray:
+        if self._bounds is None:
+            go = self.gid[self.order]
+            self._bounds = np.searchsorted(go, np.arange(self.G + 1))
+        return self._bounds
 
 
 def _group(batch: _Batch, by: List[str],
@@ -685,6 +720,22 @@ def _group(batch: _Batch, by: List[str],
     """Group rows by the ``by`` columns (plus an optional pre-computed
     (codes, keyvals) leading key, used for timechart buckets).  Groups
     come out sorted by their key tuples, matching the row engine."""
+    if extra is None and len(by) == 1 and batch.n:
+        # fast path for the common single string key with no missing
+        # rows: group ids come straight off the dictionary codes — no
+        # combined-key unique over all rows
+        col = batch.cols.get(by[0])
+        if col is not None and col.kind == "str" and \
+                not (col.codes < 0).any():
+            counts = np.bincount(col.codes, minlength=len(col.vocab))
+            used = np.nonzero(counts)[0]
+            labels = [col.vocab[c] for c in used.tolist()]
+            order = sorted(range(len(labels)), key=labels.__getitem__)
+            lookup = np.empty(len(col.vocab), np.int64)
+            for rank, j in enumerate(order):
+                lookup[used[j]] = rank
+            return _Grouping(lookup[col.codes],
+                             [(labels[j],) for j in order])
     code_arrays: List[np.ndarray] = []
     labels_list: List[List] = []
     if extra is not None:
@@ -725,8 +776,59 @@ def _quantile(xs: np.ndarray, q: float) -> float:
     return float(np.quantile(xs, q))
 
 
+def _field_masks(batch: _Batch, fname: str):
+    """(column, present-mask, numeric-mask, float values) for one
+    aggregated field, regardless of column kind."""
+    col = batch.cols.get(fname)
+    if col is None:
+        present = np.zeros(batch.n, bool)
+        numeric = present
+        vals = np.full(batch.n, np.nan)
+    elif col.kind == "num":
+        present = col.present
+        numeric = present & ~np.isnan(col.vals)
+        vals = col.vals
+    elif col.kind == "str":
+        present = col.codes >= 0
+        numeric = np.zeros(batch.n, bool)
+        vals = np.full(batch.n, np.nan)
+    else:
+        present = col.present
+        vals = np.full(batch.n, np.nan)
+        numeric = np.zeros(batch.n, bool)
+        for i in range(batch.n):
+            v = col.vals[i]
+            if present[i] and isinstance(v, (int, float)) and not (
+                    isinstance(v, float) and math.isnan(v)):
+                numeric[i] = True
+                vals[i] = float(v)
+    return col, present, numeric, vals
+
+
+def _field_group_data(batch: _Batch, grouping: _Grouping, fname: str):
+    """(column, present-mask, numeric-mask, float values, per-group
+    numeric slices) for one aggregated field — the fused single-store
+    kernels' view of a field."""
+    G = grouping.G
+    gid, order = grouping.gid, grouping.order
+    col, present, numeric, vals = _field_masks(batch, fname)
+    # per-group numeric slices (ordered by gid, original order kept)
+    num_o = numeric[order]
+    vals_o = vals[order][num_o]
+    go = gid[order][num_o]
+    cuts = np.searchsorted(go, np.arange(1, G))
+    slices = np.split(vals_o, cuts)
+    return (col, present, numeric, vals, slices)
+
+
 def _aggregate(batch: _Batch, grouping: _Grouping, aggs) -> List[Dict]:
-    """NumPy group-by kernels for every supported aggregation."""
+    """NumPy group-by kernels for every supported aggregation.
+
+    This is the fused single-store fast path; it must stay result-
+    identical to ``finalize ∘ merge ∘ partial`` over the same rows (the
+    sharded algebra below) — the shard-parity suite runs both over the
+    same workloads and asserts equality.
+    """
     G = grouping.G
     gid, order = grouping.gid, grouping.order
     out: List[Dict] = [dict() for _ in range(G)]
@@ -734,39 +836,9 @@ def _aggregate(batch: _Batch, grouping: _Grouping, aggs) -> List[Dict]:
 
     def field_data(fname: str):
         cached = field_cache.get(fname)
-        if cached is not None:
-            return cached
-        col = batch.cols.get(fname)
-        if col is None:
-            present = np.zeros(batch.n, bool)
-            numeric = present
-            vals = np.full(batch.n, np.nan)
-        elif col.kind == "num":
-            present = col.present
-            numeric = present & ~np.isnan(col.vals)
-            vals = col.vals
-        elif col.kind == "str":
-            present = col.codes >= 0
-            numeric = np.zeros(batch.n, bool)
-            vals = np.full(batch.n, np.nan)
-        else:
-            present = col.present
-            vals = np.full(batch.n, np.nan)
-            numeric = np.zeros(batch.n, bool)
-            for i in range(batch.n):
-                v = col.vals[i]
-                if present[i] and isinstance(v, (int, float)) and not (
-                        isinstance(v, float) and math.isnan(v)):
-                    numeric[i] = True
-                    vals[i] = float(v)
-        # per-group numeric slices (ordered by gid, original order kept)
-        num_o = numeric[order]
-        vals_o = vals[order][num_o]
-        go = gid[order][num_o]
-        cuts = np.searchsorted(go, np.arange(1, G))
-        slices = np.split(vals_o, cuts)
-        cached = (col, present, numeric, slices)
-        field_cache[fname] = cached
+        if cached is None:
+            cached = _field_group_data(batch, grouping, fname)
+            field_cache[fname] = cached
         return cached
 
     for name, fname, outname in aggs:
@@ -777,7 +849,7 @@ def _aggregate(batch: _Batch, grouping: _Grouping, aggs) -> List[Dict]:
                     out[g][outname] = int(cnt[g])
                 continue
             raise _Fallback  # field-less first/dc/... aggregate row dicts
-        col, present, numeric, slices = field_data(fname)
+        col, present, numeric, _vals, slices = field_data(fname)
         if name == "count":
             cnt = np.bincount(gid[present], minlength=G)
             for g in range(G):
@@ -850,11 +922,7 @@ def _col_search(batch: _Batch, args: List[str]) -> _Batch:
 
 
 def _col_stats(batch: _Batch, args: List[str]) -> _Batch:
-    if "by" in args:
-        split = args.index("by")
-        agg_tokens, by = args[:split], args[split + 1:]
-    else:
-        agg_tokens, by = args, []
+    agg_tokens, by = _stats_split(args)
     aggs = _parse_aggs(agg_tokens)
     grouping = _group(batch, by)
     agg_rows = _aggregate(batch, grouping, aggs)
@@ -867,17 +935,7 @@ def _col_stats(batch: _Batch, args: List[str]) -> _Batch:
 
 
 def _col_timechart(batch: _Batch, args: List[str]) -> _Batch:
-    span = 60.0
-    rest: List[str] = []
-    for tok in args:
-        if tok.startswith("span="):
-            span = float(tok[5:])
-        else:
-            rest.append(tok)
-    by: List[str] = []
-    if "by" in rest:
-        split = rest.index("by")
-        rest, by = rest[:split], rest[split + 1:]
+    span, rest, by = _timechart_split(args)
     aggs = _parse_aggs(rest)
     ts_col = batch.cols.get("ts")
     if ts_col is None or ts_col.kind != "num":
@@ -1163,24 +1221,103 @@ _COL_COMMANDS = {
 }
 
 
+# ---------------------------------------------------- projection pushdown --
+
+def referenced_columns(stages: List[List[str]]) -> Optional[frozenset]:
+    """Columns the pipeline can possibly read from its input rows.
+
+    Backward pass over the stages; ``None`` means "any column" (no
+    restricting stage, a bare search term that scans every string
+    column, or a whole-row aggregate).  Used to gather only referenced
+    columns from segments (projection pushdown) — both by the local
+    columnar executor and by the sharded exact-gather path.
+    """
+    need: Optional[set] = None
+    for toks in reversed(list(stages)):
+        if not toks:
+            continue
+        cmd, args = toks[0], toks[1:]
+        if cmd in ("fields", "table"):
+            need = set(args)
+        elif cmd in ("stats", "timechart"):
+            if cmd == "timechart":
+                try:
+                    _span, agg_tokens, by = _timechart_split(args)
+                except ValueError:
+                    return None
+            else:
+                agg_tokens, by = _stats_split(args)
+            try:
+                aggs = _parse_aggs(agg_tokens)
+            except QueryError:
+                return None  # executors raise the real error
+            need = set(by)
+            if cmd == "timechart":
+                need.add("ts")
+            for name, fieldname, _out in aggs:
+                if fieldname:
+                    need.add(fieldname)
+                elif name != "count":
+                    return None  # whole-row aggregate (first/dc/... )
+        elif cmd in ("search", "where"):
+            if need is None:
+                continue
+            for t in args:
+                m = _CMP_RE.match(t)
+                if not m:
+                    return None  # bare term scans every string column
+                need.add(m.group(1))
+        elif cmd == "sort":
+            if need is not None:
+                need.update(a.lstrip("+-") for a in args)
+        elif cmd == "dedup":
+            if need is not None:
+                need.update(args)
+        elif cmd == "head":
+            pass
+        elif cmd == "eval":
+            expr = " ".join(args)
+            if "=" not in expr:
+                return None  # executors raise
+            name, rhs = expr.split("=", 1)
+            if need is not None:
+                need.discard(name.strip())
+                try:
+                    tree = ast.parse(rhs, mode="eval")
+                except SyntaxError:
+                    continue  # all-NaN output column: no inputs read
+                need.update(n.id for n in ast.walk(tree)
+                            if isinstance(n, ast.Name)
+                            and n.id not in _EVAL_FUNCS)
+        else:
+            return None  # unknown command: executors raise
+    return None if need is None else frozenset(need)
+
+
+def _leading_terms(stages: List[List[str]]):
+    """Normalize a leading implicit search and consume every leading
+    ``search``/``where`` stage into predicate terms.  Returns
+    (terms, remaining stages)."""
+    stages = list(stages)
+    if stages and stages[0] and stages[0][0] not in _COMMANDS:
+        stages = [["search"] + list(stages[0])] + stages[1:]
+    terms: List[_Term] = []
+    i = 0
+    while i < len(stages) and stages[i] and stages[i][0] in ("search",
+                                                             "where"):
+        terms.extend(_Term(t) for t in stages[i][1:])
+        i += 1
+    return terms, stages[i:]
+
+
 def _columnar_query(store: ColumnarMetricStore,
                     stages: List[List[str]]) -> List[Row]:
-    # plan: push the leading search's predicates down to the segment scan
-    i = 0
-    terms: List[_Term] = []
-    if stages:
-        cmd, args = stages[0][0], stages[0][1:]
-        if cmd not in _COMMANDS:
-            cmd, args = "search", stages[0]  # leading implicit search
-        if cmd in ("search", "where"):
-            terms = [_Term(t) for t in args]
-            i = 1
-        else:
-            # validate remaining pipeline still raises on unknown cmds
-            i = 0
-    batch = _batch_from_store(store, terms)
+    # plan: push the leading search's predicates down to the segment
+    # scan, and gather only the columns the pipeline references
+    terms, rest = _leading_terms(stages)
+    batch = _batch_from_store(store, terms, referenced_columns(rest))
     rows: Optional[List[Row]] = None
-    for toks in stages[i:]:
+    for toks in rest:
         cmd, args = toks[0], toks[1:]
         if cmd not in _COMMANDS:
             raise QueryError(f"unknown command {cmd!r}")
@@ -1194,6 +1331,386 @@ def _columnar_query(store: ColumnarMetricStore,
     return rows if rows is not None else _rows_from_batch(batch)
 
 
+# ===========================================================================
+# Sharded scatter/gather: the mergeable aggregation algebra
+# ===========================================================================
+#
+# Every distributable aggregation is split into a partial/merge/finalize
+# triple so N shards can each reduce their rows to a small partial state
+# and a gather node can combine the states without seeing any row:
+#
+#   agg          partial state                merge            finalize
+#   -----------  ---------------------------  ---------------  ----------
+#   count        n                            +                n
+#   sum, avg     (n, sum)                     elementwise +    sum / n
+#   min/max/rng  (n, min, max)                min / max        min, max-min
+#   stdev        (n, mean, M2)                Chan et al.      sqrt(M2/(n-1))
+#   p50/p90/...  (P2Summary, ...)             concatenate      CDF-average
+#   dc           set of labels                set union        len(set)
+#
+# ``dc`` is the canonical non-mergeable-by-count aggregate: summing
+# per-shard distinct counts over-counts any value seen on two shards, so
+# its partial is the exact label set (union-merge).  ``first``/``last``
+# depend on global row order and are not distributable at all — plans
+# containing them compile to None and callers fall back to an exact
+# row gather.  The fused kernels in ``_aggregate`` are an optimization
+# of ``finalize ∘ partial`` for the single-store case; the shard-parity
+# suite keeps the two paths result-identical.
+
+_ROW_LOCAL_CMDS = ("search", "where", "eval", "fields", "table")
+
+
+class ScatterPlan:
+    """Compiled scatter/gather plan for one ``stats``/``timechart``
+    pipeline: predicate terms + row-local prefix stages that every shard
+    runs, the aggregation to compute partials for, and the tail stages
+    the gather node runs on the merged rows."""
+
+    __slots__ = ("terms", "prefix", "cols", "cmd", "aggs", "by", "span",
+                 "tail")
+
+    def __init__(self, terms, prefix, cols, cmd, aggs, by, span,
+                 tail) -> None:
+        self.terms = terms
+        self.prefix = prefix
+        self.cols = cols
+        self.cmd = cmd
+        self.aggs = aggs
+        self.by = by
+        self.span = span
+        self.tail = tail
+
+
+def compile_scatter_plan(stages: List[List[str]]) -> Optional[ScatterPlan]:
+    """Compile a pipeline into a scatter/gather plan, or ``None`` when
+    it is not distributable (no leading row-local prefix ending in a
+    ``stats``/``timechart``, or a non-mergeable aggregate)."""
+    stages = list(stages)
+    if not stages:
+        return None
+    if stages[0] and stages[0][0] not in _COMMANDS:
+        stages = [["search"] + list(stages[0])] + stages[1:]
+    k = 0
+    while k < len(stages) and stages[k] and stages[k][0] in _ROW_LOCAL_CMDS:
+        k += 1
+    if k >= len(stages):
+        return None
+    cmd, args = stages[k][0], stages[k][1:]
+    if cmd not in ("stats", "timechart"):
+        return None
+    span = None
+    if cmd == "timechart":
+        try:
+            span, agg_tokens, by = _timechart_split(args)
+        except ValueError:
+            return None
+    else:
+        agg_tokens, by = _stats_split(args)
+    try:
+        aggs = _parse_aggs(agg_tokens)
+    except QueryError:
+        return None  # the fallback executor raises the real error
+    for name, fieldname, _out in aggs:
+        if name in ("first", "last"):
+            return None  # global-row-order dependent: exact gather
+        if not fieldname and name != "count":
+            return None  # whole-row aggregate
+    terms: List[_Term] = []
+    prefix = stages[:k]
+    if prefix and prefix[0][0] in ("search", "where"):
+        terms = [_Term(t) for t in prefix[0][1:]]
+        prefix = prefix[1:]
+    cols = referenced_columns(prefix + [stages[k]])
+    return ScatterPlan(terms, prefix, cols, cmd, aggs, by, span,
+                       stages[k + 1:])
+
+
+def scatter_partials(store: ColumnarMetricStore, plan: ScatterPlan
+                     ) -> Dict[tuple, Dict[str, Any]]:
+    """Shard-local half of a plan: run the prefix, group, and reduce
+    every group to partial aggregation states.
+
+    Returns ``{group key: {output name: partial state}}``.  Raises
+    ``_Fallback`` when this shard's data defeats vectorization in a way
+    the partial kernels cannot express (callers then re-run the whole
+    query through the exact gather path).
+    """
+    batch = _batch_from_store(store, plan.terms, plan.cols)
+    for toks in plan.prefix:
+        # a _Fallback here (eval on a mixed-type column, non-float row
+        # semantics, ...) propagates: partial kernels cannot reproduce
+        # row-engine value semantics, so the caller re-plans the whole
+        # query as an exact gather
+        batch = _COL_COMMANDS[toks[0]](batch, toks[1:])
+    if plan.cmd == "timechart":
+        ts_col = batch.cols.get("ts")
+        if batch.n and (ts_col is None or ts_col.kind != "num"):
+            raise _Fallback
+        if batch.n:
+            valid = ts_col.present & ~np.isnan(ts_col.vals)
+            batch = batch.take(np.nonzero(valid)[0])
+        if batch.n == 0:
+            return {}
+        buckets = np.floor(batch.cols["ts"].vals / plan.span) * plan.span
+        u, inv = np.unique(buckets, return_inverse=True)
+        grouping = _group(batch, plan.by,
+                          extra=(inv.astype(np.int64), u.tolist()))
+    else:
+        if batch.n == 0:
+            return {}
+        grouping = _group(batch, plan.by)
+    return _partial_aggregate(batch, grouping, plan.aggs)
+
+
+def _partial_aggregate(batch: _Batch, grouping: _Grouping, aggs
+                       ) -> Dict[tuple, Dict[str, Any]]:
+    """Reduce every group of a shard-local batch to partial states.
+
+    Fully vectorized: per field one pass builds numeric masks, one
+    ``bincount`` family per moment aggregate, and one group-major value
+    sort shared by min/max/range and every quantile summary — no
+    per-group NumPy calls (a shard pays fixed overhead once, however
+    many groups it holds)."""
+    from repro.core.sketches import p2_summaries_from_sorted_groups
+    G = grouping.G
+    gid = grouping.gid
+    out: List[Dict[str, Any]] = [dict() for _ in range(G)]
+    cache: Dict[tuple, tuple] = {}
+
+    def masks(fname: str):
+        c = cache.get(("m", fname))
+        if c is None:
+            c = cache[("m", fname)] = _field_masks(batch, fname)
+        return c
+
+    def numeric_groups(fname: str):
+        c = cache.get(("n", fname))
+        if c is None:
+            _col, _present, numeric, vals = masks(fname)
+            ngids = gid[numeric]
+            nvals = vals[numeric]
+            counts = np.bincount(ngids, minlength=G)
+            c = cache[("n", fname)] = (ngids, nvals, counts)
+        return c
+
+    def sorted_groups(fname: str):
+        """Group-major, value-sorted numeric values + group extents.
+
+        Uses the grouping's shared row-order argsort (amortized across
+        fields) and small in-place per-group sorts — much cheaper than
+        a full two-key lexsort."""
+        c = cache.get(("s", fname))
+        if c is None:
+            _col, _present, numeric, vals = masks(fname)
+            num_o = numeric[grouping.order]
+            svals = np.ascontiguousarray(vals[grouping.order][num_o])
+            counts = np.bincount(gid[numeric], minlength=G)
+            starts = np.zeros(G, np.int64)
+            if G > 1:
+                starts[1:] = np.cumsum(counts)[:-1]
+            pos = 0
+            for cnt in counts.tolist():
+                if cnt > 1:
+                    svals[pos:pos + cnt].sort()
+                pos += cnt
+            c = cache[("s", fname)] = (svals, starts, counts)
+        return c
+
+    for name, fname, outname in aggs:
+        if not fname:  # plain `count`: rows per group
+            cnt = np.bincount(gid, minlength=G)
+            for g in range(G):
+                out[g][outname] = int(cnt[g])
+            continue
+        if name == "count":
+            _col, present, _numeric, _vals = masks(fname)
+            cnt = np.bincount(gid[present], minlength=G)
+            for g in range(G):
+                out[g][outname] = int(cnt[g])
+        elif name in ("sum", "avg", "mean"):
+            ngids, nvals, counts = numeric_groups(fname)
+            sums = (np.bincount(ngids, weights=nvals, minlength=G)
+                    if ngids.size else np.zeros(G))
+            for g in range(G):
+                out[g][outname] = (int(counts[g]), float(sums[g]))
+        elif name in ("min", "max", "range"):
+            svals, starts, counts = sorted_groups(fname)
+            if svals.size:
+                last = svals.size - 1
+                mins = svals[np.minimum(starts, last)]
+                maxs = svals[np.minimum(
+                    starts + np.maximum(counts - 1, 0), last)]
+            for g in range(G):
+                c = int(counts[g])
+                out[g][outname] = ((c, float(mins[g]), float(maxs[g]))
+                                   if c else (0, math.inf, -math.inf))
+        elif name == "stdev":
+            ngids, nvals, counts = numeric_groups(fname)
+            if ngids.size:
+                sums = np.bincount(ngids, weights=nvals, minlength=G)
+                means = sums / np.maximum(counts, 1)
+                # two-pass M2 (robust against catastrophic cancellation)
+                m2 = np.bincount(ngids, weights=(nvals - means[ngids]) ** 2,
+                                 minlength=G)
+            for g in range(G):
+                c = int(counts[g])
+                out[g][outname] = ((c, float(means[g]), float(m2[g]))
+                                   if c else (0, 0.0, 0.0))
+        elif name in ("median",) or _PCT_RE.match(name):
+            q = 0.5 if name == "median" else int(name[1:]) / 100.0
+            summaries = p2_summaries_from_sorted_groups(
+                *sorted_groups(fname), q)
+            for g in range(G):
+                out[g][outname] = [summaries[g]]
+        elif name == "dc":
+            col, present, _numeric, _vals = masks(fname)
+            codes, labels = _factorize(col, batch.n)
+            pg = gid[present]
+            pc = codes[present]
+            sets: List[set] = [set() for _ in range(G)]
+            if pg.size:
+                stride = len(labels) + 1
+                pairs = np.unique(pg * stride + pc)
+                gg = pairs // stride
+                cc = pairs % stride
+                cuts = np.searchsorted(gg, np.arange(1, G))
+                for g, chunk in enumerate(np.split(cc, cuts)):
+                    sets[g] = {labels[c] for c in chunk.tolist()}
+            for g in range(G):
+                out[g][outname] = sets[g]
+        else:  # pragma: no cover - compile_scatter_plan guards this
+            raise QueryError(f"non-mergeable aggregation {name!r}")
+    return {key: out[g] for g, key in enumerate(grouping.keys)}
+
+
+def _merge_partial(name: str, a, b):
+    if name == "count":
+        return a + b
+    if name in ("sum", "avg", "mean"):
+        return (a[0] + b[0], a[1] + b[1])
+    if name in ("min", "max", "range"):
+        return (a[0] + b[0], min(a[1], b[1]), max(a[2], b[2]))
+    if name == "stdev":  # Chan et al. parallel variance merge
+        (na, ma, m2a), (nb, mb, m2b) = a, b
+        if na == 0:
+            return b
+        if nb == 0:
+            return a
+        n = na + nb
+        d = mb - ma
+        return (n, ma + d * nb / n, m2a + m2b + d * d * na * nb / n)
+    if name in ("median",) or _PCT_RE.match(name):
+        return a + b  # summary lists concatenate; the CDF merge is
+        # order-insensitive, so gather order cannot matter
+    if name == "dc":
+        return a | b  # exact union — never sum per-shard counts
+    raise QueryError(f"non-mergeable aggregation {name!r}")
+
+
+def merge_partial_maps(maps: Iterable[Dict[tuple, Dict[str, Any]]],
+                       aggs) -> Dict[tuple, Dict[str, Any]]:
+    """Gather half, step 1: union group keys across shards and merge
+    each group's partial states.  Consumes the shard maps (the first
+    occurrence of a group is reused as the accumulator); callers build
+    fresh partials per query."""
+    merged: Dict[tuple, Dict[str, Any]] = {}
+    for m in maps:
+        for key, partials in m.items():
+            cur = merged.get(key)
+            if cur is None:
+                merged[key] = partials
+                continue
+            for name, _fname, outname in aggs:
+                cur[outname] = _merge_partial(name, cur[outname],
+                                              partials[outname])
+    return merged
+
+
+def _finalize_partial(name: str, part):
+    from repro.core.sketches import merge_quantile_summaries
+    if name == "count":
+        return int(part)
+    if name == "sum":
+        n, s = part
+        return float(s) if n else 0  # row engine: sum([]) is int 0
+    if name in ("avg", "mean"):
+        n, s = part
+        return s / n if n else math.nan
+    if name == "min":
+        return part[1] if part[0] else math.nan
+    if name == "max":
+        return part[2] if part[0] else math.nan
+    if name == "range":
+        return part[2] - part[1] if part[0] else math.nan
+    if name == "stdev":
+        n, _mu, m2 = part
+        return math.sqrt(max(m2, 0.0) / (n - 1)) if n >= 2 else 0.0
+    if name in ("median",) or _PCT_RE.match(name):
+        q = 0.5 if name == "median" else int(name[1:]) / 100.0
+        return merge_quantile_summaries(part, q)
+    if name == "dc":
+        return len(part)
+    raise QueryError(f"non-mergeable aggregation {name!r}")
+
+
+def finalize_partial_rows(merged: Dict[tuple, Dict[str, Any]],
+                          plan: ScatterPlan) -> List[Row]:
+    """Gather half, step 2: finalize merged partials into result rows
+    (sorted by group key, matching both local executors).  Quantile
+    columns finalize batched: one vectorized CDF merge across all group
+    keys instead of one Python merge per group."""
+    from repro.core.sketches import merge_quantile_summary_groups
+    keys = sorted(merged)
+    rows: List[Row] = []
+    for key in keys:
+        if plan.cmd == "timechart":
+            row: Row = {"_time": key[0]}
+            row.update(dict(zip(plan.by, key[1:])))
+        else:
+            row = dict(zip(plan.by, key))
+        rows.append(row)
+    for name, _fname, outname in plan.aggs:
+        if name in ("median",) or _PCT_RE.match(name):
+            q = 0.5 if name == "median" else int(name[1:]) / 100.0
+            vals = merge_quantile_summary_groups(
+                [merged[k][outname] for k in keys], q)
+            for row, v in zip(rows, vals):
+                row[outname] = v
+        else:
+            for row, k in zip(rows, keys):
+                row[outname] = _finalize_partial(name, merged[k][outname])
+    return rows
+
+
+def gather_filtered(store: ColumnarMetricStore, stages: List[List[str]]):
+    """Exact-gather scan for one shard: push the leading searches down
+    to the segment scan, gather only referenced columns, and return
+    ``(ts array, rows, remaining stages)``.  The ts array comes from the
+    record *attribute* (immune to field shadowing) so the gather node
+    can canonically order rows across shards before running the rest of
+    the pipeline."""
+    terms, rest = _leading_terms(stages)
+    parts = _store_parts(store, terms)
+    if not parts:
+        return np.empty(0), [], rest
+    ts = np.concatenate([seg.attrs["ts"].vals[idx] for seg, idx in parts])
+    batch = _merge_parts(parts, referenced_columns(rest))
+    return ts, _rows_from_batch(batch), rest
+
+
+def run_stages(rows: List[Row], stages: List[List[str]],
+               implicit_first: bool = False) -> List[Row]:
+    """Run pipeline stages on materialized rows (the row executor)."""
+    for i, toks in enumerate(stages):
+        cmd, args = toks[0], toks[1:]
+        if i == 0 and implicit_first and cmd not in _COMMANDS:
+            cmd, args = "search", toks  # leading implicit search
+        if cmd not in _COMMANDS:
+            raise QueryError(f"unknown command {cmd!r}")
+        rows = _COMMANDS[cmd](rows, args)
+    return rows
+
+
 # ----------------------------------------------------------------- driver ---
 
 def query(source: Union[ColumnarMetricStore, Sequence[Row],
@@ -1202,8 +1719,12 @@ def query(source: Union[ColumnarMetricStore, Sequence[Row],
     """Run an SPL-like pipeline over a store / record list / row list.
 
     ``engine`` — ``None`` (auto: columnar for stores, rows otherwise),
-    ``"columnar"`` or ``"rows"`` to force an executor.
+    ``"columnar"`` or ``"rows"`` to force an executor.  A sharded store
+    (``repro.core.shards.ShardedAggregator``) plans its own distributed
+    execution and is dispatched to directly.
     """
+    if getattr(source, "is_sharded", False):
+        return source.query(q, engine=engine)
     stages = _split_pipeline(q)
     if isinstance(source, ColumnarMetricStore):
         if engine != "rows":
@@ -1216,11 +1737,4 @@ def query(source: Union[ColumnarMetricStore, Sequence[Row],
                 for r in source]
     if not stages:
         return rows
-    for i, toks in enumerate(stages):
-        cmd, args = toks[0], toks[1:]
-        if i == 0 and cmd not in _COMMANDS:
-            cmd, args = "search", toks  # leading implicit search
-        if cmd not in _COMMANDS:
-            raise QueryError(f"unknown command {cmd!r}")
-        rows = _COMMANDS[cmd](rows, args)
-    return rows
+    return run_stages(rows, stages, implicit_first=True)

@@ -18,3 +18,102 @@ except ModuleNotFoundError:
 # NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
 # tests and benches must see the real (single) device; only
 # launch/dryrun.py (run as its own process) forces 512 devices.
+
+# ---------------------------------------------------------------------------
+# Shared store/record generators + row comparison helpers for the three
+# parity suites (engine parity, segment persistence, shard fan-out).
+# Import directly: ``from conftest import random_store, assert_rows_equal``.
+# ---------------------------------------------------------------------------
+
+import math  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+
+def random_records(seed=0, n=400):
+    """Randomized metric records: mixed field presence, NaN values,
+    string fields, numeric (int and float) fields; strictly increasing
+    unique timestamps so row order is canonical across store layouts."""
+    from repro.core.schema import MetricRecord
+    rng = np.random.default_rng(seed)
+    jobs = ["alpha.1", "beta.2", "gamma.3"]
+    hosts = ["n0", "n1", "n2", "n3"]
+    kinds = ["perf", "device", "meta"]
+    apps = ["gemma", "qwen", "mamba"]
+    records = []
+    for i in range(n):
+        fields = {}
+        if rng.random() < 0.9:
+            fields["gflops"] = float(rng.uniform(0, 1000))
+        if rng.random() < 0.08:
+            fields["gflops"] = float("nan")
+        if rng.random() < 0.7:
+            fields["step"] = int(rng.integers(0, 50))
+        if rng.random() < 0.5:
+            fields["app"] = apps[int(rng.integers(0, len(apps)))]
+        if rng.random() < 0.3:
+            fields["mfu"] = float(rng.uniform(0, 1))
+        records.append(MetricRecord(
+            ts=1000.0 + i * 3.0,
+            host=hosts[int(rng.integers(0, len(hosts)))],
+            job=jobs[int(rng.integers(0, len(jobs)))],
+            kind=kinds[int(rng.integers(0, len(kinds)))],
+            fields=fields))
+    return records
+
+
+def random_store(seed=0, n=400, seal_threshold=97, directory=None,
+                 shards=None, policy="hash", records=None):
+    """Store with several sealed segments + a live buffer over
+    :func:`random_records`.  ``directory`` makes it durable so
+    persistence tests can reload the exact same workload from disk;
+    ``shards``/``policy`` build a :class:`ShardedAggregator` over the
+    same record stream instead (policy may be a callable for skewed
+    shard-size tests)."""
+    if records is None:
+        records = random_records(seed=seed, n=n)
+    if shards is None:
+        from repro.core.aggregator import MetricStore
+        store = MetricStore(seal_threshold=seal_threshold,
+                            directory=directory)
+    else:
+        from repro.core.shards import ShardedAggregator
+        store = ShardedAggregator(num_shards=shards, policy=policy,
+                                  seal_threshold=seal_threshold,
+                                  directory=directory)
+    for rec in records:
+        store.insert(rec)
+    return store
+
+
+def _value_eq(a, b, tol=1e-9):
+    if isinstance(a, float) and isinstance(b, float):
+        if math.isnan(a) and math.isnan(b):
+            return True
+    if isinstance(a, (int, float)) and isinstance(b, (int, float)) and \
+            not isinstance(a, bool) and not isinstance(b, bool):
+        fa, fb = float(a), float(b)
+        if math.isnan(fa) or math.isnan(fb):
+            return math.isnan(fa) == math.isnan(fb)
+        return fa == fb or abs(fa - fb) <= tol * max(1.0, abs(fa), abs(fb))
+    return a == b
+
+
+def assert_rows_equal(got, want, q):
+    """Order-sensitive row-list equality with numeric tolerance."""
+    assert len(got) == len(want), \
+        f"{q!r}: {len(got)} rows vs {len(want)} expected"
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert set(g) == set(w), f"{q!r} row {i}: keys {set(g)} != {set(w)}"
+        for k in w:
+            assert _value_eq(g[k], w[k]), \
+                f"{q!r} row {i} field {k}: {g[k]!r} != {w[k]!r}"
+
+
+def both_engines(store, q):
+    """Columnar vs legacy-row-executor parity check; returns the rows."""
+    from repro.core.splunklite import query
+    got = query(store, q)  # auto -> columnar
+    want = query(store, q, engine="rows")  # legacy row oracle
+    assert_rows_equal(got, want, q)
+    return got

@@ -6,75 +6,15 @@ multiple sealed segments plus an unsealed buffer) are queried through
 both paths; rows are compared order-sensitively with numeric tolerance.
 """
 
-import math
-
-import numpy as np
 import pytest
 
+# shared generators/comparators live in conftest so the engine-parity,
+# persistence, and shard-fan-out suites drive one workload definition
+from conftest import (assert_rows_equal, both_engines,  # noqa: F401
+                      random_store)
 from repro.core.aggregator import MetricStore
 from repro.core.schema import MetricRecord
 from repro.core.splunklite import query
-
-
-def _value_eq(a, b):
-    if isinstance(a, float) and isinstance(b, float):
-        if math.isnan(a) and math.isnan(b):
-            return True
-    if isinstance(a, (int, float)) and isinstance(b, (int, float)) and \
-            not isinstance(a, bool) and not isinstance(b, bool):
-        fa, fb = float(a), float(b)
-        if math.isnan(fa) or math.isnan(fb):
-            return math.isnan(fa) == math.isnan(fb)
-        return fa == fb or abs(fa - fb) <= 1e-9 * max(1.0, abs(fa), abs(fb))
-    return a == b
-
-
-def assert_rows_equal(got, want, q):
-    assert len(got) == len(want), \
-        f"{q!r}: {len(got)} rows (columnar) vs {len(want)} (rows)"
-    for i, (g, w) in enumerate(zip(got, want)):
-        assert set(g) == set(w), f"{q!r} row {i}: keys {set(g)} != {set(w)}"
-        for k in w:
-            assert _value_eq(g[k], w[k]), \
-                f"{q!r} row {i} field {k}: {g[k]!r} != {w[k]!r}"
-
-
-def both_engines(store, q):
-    got = query(store, q)  # auto -> columnar
-    want = query(store, q, engine="rows")  # legacy row oracle
-    assert_rows_equal(got, want, q)
-    return got
-
-
-def random_store(seed=0, n=400, seal_threshold=97, directory=None):
-    """Store with several sealed segments + a live buffer, mixed types,
-    missing fields and NaNs.  ``directory`` makes it durable so the
-    persistence tests can reload the exact same workload from disk."""
-    rng = np.random.default_rng(seed)
-    store = MetricStore(seal_threshold=seal_threshold, directory=directory)
-    jobs = ["alpha.1", "beta.2", "gamma.3"]
-    hosts = ["n0", "n1", "n2", "n3"]
-    kinds = ["perf", "device", "meta"]
-    apps = ["gemma", "qwen", "mamba"]
-    for i in range(n):
-        fields = {}
-        if rng.random() < 0.9:
-            fields["gflops"] = float(rng.uniform(0, 1000))
-        if rng.random() < 0.08:
-            fields["gflops"] = float("nan")
-        if rng.random() < 0.7:
-            fields["step"] = int(rng.integers(0, 50))
-        if rng.random() < 0.5:
-            fields["app"] = apps[int(rng.integers(0, len(apps)))]
-        if rng.random() < 0.3:
-            fields["mfu"] = float(rng.uniform(0, 1))
-        store.insert(MetricRecord(
-            ts=1000.0 + i * 3.0,
-            host=hosts[int(rng.integers(0, len(hosts)))],
-            job=jobs[int(rng.integers(0, len(jobs)))],
-            kind=kinds[int(rng.integers(0, len(kinds)))],
-            fields=fields))
-    return store
 
 
 SEARCH_QUERIES = [

@@ -17,9 +17,8 @@ from repro.core.schema import MetricRecord, encode_line, parse_line
 from repro.core.splunklite import query
 from repro.core.transport import Shipper, Spool, StreamFileSink
 
-from test_engine_parity import (AGG_QUERIES, PIPELINE_QUERIES,
-                                SEARCH_QUERIES, assert_rows_equal,
-                                random_store)
+from conftest import assert_rows_equal, random_store
+from test_engine_parity import AGG_QUERIES, PIPELINE_QUERIES, SEARCH_QUERIES
 
 
 def rec(ts, host="n0", job="j1", kind="perf", **fields):

@@ -1,0 +1,426 @@
+"""Shard fan-out parity: every splunklite pipeline must return the same
+results through a :class:`ShardedAggregator` (scatter/gather over N
+shards) as through the single ``ColumnarMetricStore`` and the legacy
+row executor.
+
+Exactness contract (docs/sharding.md): all aggregates merge exactly
+except quantiles, whose distributed P²-summary merge carries a bounded
+error — asserted here as containment in the field's value range plus
+the 0.35·spread bound shared with ``test_sketches``.  Shard counts
+{1, 2, 7} and skewed layouts (empty shard, single-record shard, all
+data on one shard) all run the same workload as the other two parity
+suites.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from conftest import (_value_eq, assert_rows_equal, random_records,
+                      random_store)
+from test_engine_parity import AGG_QUERIES, PIPELINE_QUERIES, SEARCH_QUERIES
+
+from repro.core.aggregator import Aggregator, MetricStore
+from repro.core.schema import MetricRecord, encode_line
+from repro.core.shards import ShardedAggregator
+from repro.core.splunklite import (QueryError, _parse_aggs, _split_pipeline,
+                                   _stats_split, _timechart_split,
+                                   compile_scatter_plan, query)
+
+ALL_QUERIES = SEARCH_QUERIES + AGG_QUERIES + PIPELINE_QUERIES
+SHARD_COUNTS = [1, 2, 7]
+
+RECORDS = random_records(seed=3, n=420)
+
+FLEET_Q = ("search kind=perf gflops>10 | stats avg(gflops) p90(gflops) "
+           "count by job | sort -avg_gflops | head 10")
+
+
+# ------------------------------------------------------------ comparators --
+
+def quantile_fields(q):
+    """{output column: aggregated field} for quantile aggregations — the
+    only approximately-merged aggregates."""
+    out = {}
+    for toks in _split_pipeline(q):
+        cmd, args = toks[0], toks[1:]
+        if cmd == "stats":
+            agg_tokens, _by = _stats_split(args)
+        elif cmd == "timechart":
+            _span, agg_tokens, _by = _timechart_split(args)
+        else:
+            continue
+        for name, fieldname, outname in _parse_aggs(agg_tokens):
+            if name == "median" or (name.startswith("p")
+                                    and name[1:].isdigit()):
+                out[outname] = fieldname
+    return out
+
+
+def _field_bounds(records, fname):
+    vals = []
+    for r in records:
+        v = r.fields.get(fname)
+        if isinstance(v, (int, float)) and not (
+                isinstance(v, float) and math.isnan(v)):
+            vals.append(float(v))
+    if not vals:
+        return (math.nan, math.nan, 0.0)
+    lo, hi = min(vals), max(vals)
+    return (lo, hi, hi - lo)
+
+
+def assert_sharded_rows(got, want, q, records=RECORDS):
+    """Exact equality, except quantile outputs which must obey the
+    documented merge error bound."""
+    approx = quantile_fields(q)
+    assert len(got) == len(want), \
+        f"{q!r}: {len(got)} rows (sharded) vs {len(want)} (single)"
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert set(g) == set(w), f"{q!r} row {i}: keys {set(g)} != {set(w)}"
+        for k in w:
+            if k in approx and not _value_eq(g[k], w[k]):
+                gv, wv = g[k], w[k]
+                assert isinstance(gv, float) and isinstance(wv, float), \
+                    f"{q!r} row {i} field {k}: {gv!r} vs {wv!r}"
+                assert math.isnan(gv) == math.isnan(wv), \
+                    f"{q!r} row {i} field {k}: {gv!r} vs {wv!r}"
+                if math.isnan(wv):
+                    continue
+                lo, hi, spread = _field_bounds(records, approx[k])
+                assert lo - 1e-9 <= gv <= hi + 1e-9, \
+                    f"{q!r} row {i} field {k}: {gv} outside [{lo}, {hi}]"
+                assert abs(gv - wv) <= 0.35 * spread + 1e-6, \
+                    f"{q!r} row {i} field {k}: |{gv} - {wv}| > 0.35*{spread}"
+            else:
+                assert _value_eq(g[k], w[k]), \
+                    f"{q!r} row {i} field {k}: {g[k]!r} != {w[k]!r}"
+
+
+# ----------------------------------------------------------------- stores --
+
+@pytest.fixture(scope="module")
+def single():
+    return random_store(records=RECORDS)
+
+
+@pytest.fixture(scope="module", params=SHARD_COUNTS)
+def sharded(request):
+    return random_store(records=RECORDS, shards=request.param,
+                        seal_threshold=53)
+
+
+# ----------------------------------------------------------------- parity --
+
+@pytest.mark.parametrize("q", ALL_QUERIES)
+def test_sharded_parity(q, single, sharded):
+    assert_sharded_rows(query(sharded, q), query(single, q), q)
+
+
+def test_sharded_rows_engine_matches_single_rows_engine(single, sharded):
+    # third leg of the three-way oracle: the sharded store's row
+    # executor (canonically ordered gather) vs the single store's
+    for q in ALL_QUERIES:
+        assert_rows_equal(query(sharded, q, engine="rows"),
+                          query(single, q, engine="rows"), q)
+
+
+def test_sharded_empty_query_returns_all_records(single, sharded):
+    got = query(sharded, "")
+    want = query(single, "")
+    assert_rows_equal(got, want, "<empty>")
+
+
+def test_sharded_unknown_command_raises(sharded):
+    with pytest.raises(QueryError):
+        query(sharded, "stats count | bogus x")
+
+
+# ------------------------------------------------------------ skew layouts --
+
+def _route_all_on_last(rec, n):
+    return n - 1
+
+
+def _route_one_record_apart(rec, n):
+    # exactly one record (the first ts) on shard 0, the rest on shard 1+
+    return 0 if float(rec.ts) == float(RECORDS[0].ts) else 1
+
+
+def _route_leave_last_empty(rec, n):
+    return hash_route_stable(rec.host, max(n - 1, 1))
+
+
+def hash_route_stable(host, n):
+    from repro.core.shards import _hash_route
+    return _hash_route(host, n)
+
+
+SKEWS = {
+    "all_on_one_shard": _route_all_on_last,
+    "single_record_shard": _route_one_record_apart,
+    "empty_shard": _route_leave_last_empty,
+}
+
+SKEW_QUERIES = [
+    "search kind=perf | stats count",
+    "search kind=perf | stats avg(gflops) sum(gflops) min(gflops) "
+    "max(gflops) by host",
+    "stats stdev(gflops) range(gflops) dc(host) dc(app) by kind",
+    "stats median(gflops) p25(gflops) p90(gflops) p99(gflops) by job",
+    "search kind=perf | timechart span=45 avg(gflops) count by job",
+    "search kind=perf | sort -gflops | head 7",
+    "search kind=perf | stats first(app) last(gflops)",
+    "dedup job app",
+]
+
+
+@pytest.mark.parametrize("skew", sorted(SKEWS))
+@pytest.mark.parametrize("shards", [2, 7])
+def test_skewed_shard_parity(skew, shards, single):
+    store = random_store(records=RECORDS, shards=shards,
+                         policy=SKEWS[skew], seal_threshold=29)
+    sizes = store.shard_sizes()
+    if skew == "all_on_one_shard":
+        assert sizes[-1] == len(RECORDS) and not any(sizes[:-1])
+    elif skew == "single_record_shard":
+        assert sizes[0] == 1
+    else:
+        assert sizes[-1] == 0  # at least one genuinely empty shard
+    for q in SKEW_QUERIES:
+        assert_sharded_rows(query(store, q), query(single, q), q)
+
+
+# ------------------------------------------------------------ plan choice --
+
+def test_scatter_plan_used_for_mergeable_aggregations(single):
+    store = random_store(records=RECORDS, shards=3)
+    q = ("search kind=perf | stats avg(gflops) p90(gflops) dc(host) "
+         "count by job | sort -avg_gflops")
+    assert_sharded_rows(query(store, q), query(single, q), q)
+    assert store.scatter_queries == 1 and store.fallback_queries == 0
+    plan = store.explain(q)
+    assert plan["mode"] == "scatter_gather"
+    assert set(plan["columns"]) == {"gflops", "host", "job"}
+    # order-dependent aggregates must go to the exact gather instead
+    q2 = "search kind=perf | stats first(app) by job"
+    assert_sharded_rows(query(store, q2), query(single, q2), q2)
+    assert store.fallback_queries == 1
+    assert store.explain(q2)["mode"] == "exact_gather"
+
+
+def test_non_mergeable_prefix_forces_exact_gather(single):
+    store = random_store(records=RECORDS, shards=3)
+    # a sort before stats is order-dependent -> no scatter plan
+    q = "search kind=perf | sort -gflops | head 20 | stats avg(gflops)"
+    assert compile_scatter_plan(_split_pipeline(q)) is None
+    assert_sharded_rows(query(store, q), query(single, q), q)
+    assert store.scatter_queries == 0 and store.fallback_queries == 1
+
+
+def test_dc_regression_naive_sum_merge_would_overcount(single):
+    """`stats dc(app)` must union per-shard label sets; summing the
+    per-shard distinct counts (the latent bug class) over-counts any
+    app seen on two shards."""
+    store = random_store(records=RECORDS, shards=3)
+    got = query(store, "stats dc(app)")[0]["dc_app"]
+    want = query(single, "stats dc(app)")[0]["dc_app"]
+    assert got == want
+    naive = sum(query(s, "stats dc(app)")[0]["dc_app"]
+                for s in store.shards if len(s))
+    assert naive > want, "workload must make a sum-merge observable"
+    assert store.scatter_queries >= 1  # dc went through the merge path
+
+
+def test_mixed_type_column_falls_back_to_exact_gather(single):
+    # an obj column (mixed str/num) defeats the vectorized eval prefix
+    # on the shard that holds it; the whole query must re-run exact
+    recs = list(RECORDS[:40])
+    recs.append(MetricRecord(9000.0, "n0", "alpha.1", "perf",
+                             {"status": "ok"}))
+    recs.append(MetricRecord(9001.0, "n1", "alpha.1", "perf",
+                             {"status": 5}))
+    sh = random_store(records=recs, shards=2, seal_threshold=7)
+    si = random_store(records=recs)
+    q = "eval x=status+1 | stats count(x) avg(x)"
+    assert_sharded_rows(query(sh, q), query(si, q), q, records=recs)
+
+
+# ------------------------------------------------------------- store-like --
+
+def test_sharded_store_surface_matches_single(single, sharded):
+    assert len(sharded) == len(single)
+    assert sharded.jobs() == single.jobs()
+    assert sharded.kinds() == single.kinds()
+    assert sharded.hosts() == single.hosts()
+    assert sharded.hosts("alpha.1") == single.hosts("alpha.1")
+    got = [encode_line(r) for r in sharded.select(job="beta.2",
+                                                  kind="perf")]
+    want = [encode_line(r) for r in single.select(job="beta.2",
+                                                  kind="perf")]
+    assert got == want
+    assert [encode_line(r) for r in sharded.records] == \
+        [encode_line(r) for r in single.records]
+
+
+def test_sharded_dedup_matches_single():
+    sh = random_store(records=RECORDS, shards=3)
+    si = random_store(records=RECORDS)
+    for rec in RECORDS[::5]:  # at-least-once retransmits
+        assert not sh.insert(rec)
+        assert not si.insert(rec)
+    assert sh.duplicates_dropped == si.duplicates_dropped == len(
+        RECORDS[::5])
+    assert len(sh) == len(si)
+
+
+def test_sharded_scan_merges_shard_scans(single, sharded):
+    a = single.scan(kind="perf", fields=("gflops", "step"))
+    b = sharded.scan(kind="perf", fields=("gflops", "step"))
+    assert a.n == b.n
+    # same multiset of (ts, host, gflops-or-nan) samples
+    def key_set(sc):
+        v, p = sc.field("gflops")
+        return sorted(
+            (float(t), str(sc.host_vocab[h]),
+             float(v[i]) if p[i] and not np.isnan(v[i]) else None)
+            for i, (t, h) in enumerate(zip(sc.ts, sc.host_codes)))
+    assert key_set(a) == key_set(b)
+
+
+def test_dashboards_and_detectors_identical_over_sharded_store():
+    from repro.core.daemon import JobManifest
+    from repro.core.dashboards import (job_metric_series,
+                                       job_statistical_view,
+                                       view_idle_accelerators)
+    from repro.core.detectors import DetectorBank
+    def fill(store):
+        for h in range(3):
+            for s in range(20):
+                stalled = h == 2 and s > 10
+                store.insert(MetricRecord(
+                    1000.0 + s * 10.0 + h * 0.1, f"n{h}", "jobA", "perf",
+                    {"gflops": 0.0 if stalled else 500.0, "mfu": 0.4,
+                     "steps_per_s": 0.0 if stalled else 1.0, "step": s}))
+                store.insert(MetricRecord(
+                    1000.0 + s * 10.0 + h * 0.1 + 0.01, f"n{h}", "jobA",
+                    "device", {"hbm_frac_used": 0.5, "local_devices": 4}))
+        return store
+    single = fill(MetricStore(seal_threshold=16))
+    sh = fill(ShardedAggregator(num_shards=3, seal_threshold=16))
+    assert job_metric_series(single, "jobA", "gflops") == \
+        job_metric_series(sh, "jobA", "gflops")
+    assert job_statistical_view(single, "jobA", "gflops") == \
+        job_statistical_view(sh, "jobA", "gflops")
+    assert_rows_equal(view_idle_accelerators(sh),
+                      view_idle_accelerators(single), "idle_view")
+    manifests = {"jobA": JobManifest(job_id="jobA", num_hosts=3)}
+    key = lambda e: (e.detector, e.job, sorted(e.fields.items()))  # noqa: E731
+    assert sorted(map(key, DetectorBank().scan(single, manifests))) == \
+        sorted(map(key, DetectorBank().scan(sh, manifests)))
+
+
+# ------------------------------------------------------------- durability --
+
+def test_durable_sharded_store_reopens(tmp_path):
+    sh = random_store(records=RECORDS, shards=3,
+                      directory=tmp_path / "fleet", seal_threshold=37)
+    want = query(sh, FLEET_Q)
+    want_n = len(sh)
+    sh.close()
+    re = ShardedAggregator(num_shards=3, directory=tmp_path / "fleet",
+                          seal_threshold=37)
+    assert len(re) == want_n
+    assert_rows_equal(query(re, FLEET_Q), want, FLEET_Q)
+    # retransmits after restart still dedup (keys persisted per shard)
+    for rec in RECORDS[:25]:
+        assert not re.insert(rec)
+    shard1_n = len(re.shards[1])
+    re.close()
+    # the shard-set manifest pins shape and policy
+    with pytest.raises(ValueError):
+        ShardedAggregator(num_shards=5, directory=tmp_path / "fleet")
+    with pytest.raises(ValueError):
+        ShardedAggregator(num_shards=3, policy="time",
+                          directory=tmp_path / "fleet")
+    # every shard dir is a complete standalone store
+    alone = MetricStore(seal_threshold=37,
+                        directory=tmp_path / "fleet" / "shard-01")
+    assert len(alone) == shard1_n
+    alone.close()
+
+
+def test_time_window_pinned_by_manifest(tmp_path):
+    # reopening a time-routed shard set with a different window would
+    # re-route records and break the per-shard-dedup == global-dedup
+    # invariant, so the manifest must reject it
+    sh = ShardedAggregator(num_shards=2, policy="time", time_window_s=3600.0,
+                           directory=tmp_path / "t")
+    rec = MetricRecord(3600.0, "n0", "j", "perf", {"v": 1.0})
+    assert sh.insert(rec)
+    sh.close()
+    with pytest.raises(ValueError):
+        ShardedAggregator(num_shards=2, policy="time", time_window_s=60.0,
+                          directory=tmp_path / "t")
+    re = ShardedAggregator(num_shards=2, policy="time", time_window_s=3600.0,
+                           directory=tmp_path / "t")
+    assert not re.insert(rec)  # retransmit routes identically -> deduped
+    assert len(re) == 1
+    re.close()
+
+
+def test_adopt_store_dir_time_policy_ships_whole_segments(tmp_path):
+    src = random_store(records=RECORDS, directory=tmp_path / "src",
+                       seal_threshold=40)
+    src.close()
+    # 40-record segments span 117s; a 200s window makes some segments
+    # land inside one window (whole-file adoption) and some straddle a
+    # boundary (row re-ingest) — both routes must coexist
+    sh = ShardedAggregator(num_shards=3, policy="time", time_window_s=200.0,
+                           directory=tmp_path / "dst")
+    n = sh.adopt_store_dir(tmp_path / "src")
+    assert n == len(RECORDS)
+    assert sh.segments_adopted > 0
+    assert sh.records_reingested > 0
+    single = random_store(records=RECORDS)
+    for q in SKEW_QUERIES[:5]:
+        assert_sharded_rows(query(sh, q), query(single, q), q)
+    # adopted dedup keys still reject retransmits
+    assert not sh.insert(RECORDS[0])
+    sh.close()
+
+
+def test_adopt_store_dir_hash_policy_reroutes_rows(tmp_path):
+    src = random_store(records=RECORDS, directory=tmp_path / "src",
+                       seal_threshold=64)
+    src.close()
+    sh = ShardedAggregator(num_shards=4, policy="hash")
+    n = sh.adopt_store_dir(tmp_path / "src")
+    assert n == len(RECORDS)
+    assert sh.records_reingested > 0  # multi-host segments must split
+    single = random_store(records=RECORDS)
+    q = "stats avg(gflops) count by host"
+    assert_sharded_rows(query(sh, q), query(single, q), q)
+
+
+def test_aggregator_with_shards_pumps_and_restarts(tmp_path):
+    def rec(ts, host, v):
+        return MetricRecord(ts, host, "j1", "perf", {"v": v})
+    agg = Aggregator(tmp_path / "inbox", shards=2,
+                     store_dir=tmp_path / "fleet")
+    inbox = tmp_path / "inbox" / "a.log"
+    lines = [encode_line(rec(1000.0 + i, f"n{i % 3}", float(i)))
+             for i in range(9)]
+    inbox.write_text("".join(ln + "\n" for ln in lines))
+    assert agg.pump() == 9
+    want = query(agg.store, "stats sum(v) count by host")
+    agg.close()
+    agg2 = Aggregator(tmp_path / "inbox", shards=2,
+                      store_dir=tmp_path / "fleet")
+    assert len(agg2.store) == 9
+    assert agg2.pump() == 0  # re-tail deduplicated per shard
+    assert agg2.store.duplicates_dropped == 9
+    assert_rows_equal(query(agg2.store, "stats sum(v) count by host"),
+                      want, "restart")
+    agg2.close()

@@ -1,10 +1,15 @@
-"""Streaming-sketch accuracy: P2 quantiles vs exact, Welford vs numpy."""
+"""Streaming-sketch accuracy: P2 quantiles vs exact, Welford vs numpy,
+and the mergeable P² summary algebra used by shard fan-out."""
+
+import math
+import random
 
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.sketches import (P2Quantile, QuantileSet, StreamStats,
-                                 exact_quantile)
+from repro.core.sketches import (P2Quantile, P2Summary, QuantileSet,
+                                 StreamStats, exact_quantile,
+                                 merge_quantile_summaries)
 
 
 def test_stream_stats_matches_numpy():
@@ -59,6 +64,92 @@ def test_p2_bounded_error_property(xs, p):
     assert min(xs) - 1e-9 <= q.value <= max(xs) + 1e-9
     if spread > 0:
         assert abs(q.value - exact) <= 0.35 * spread + 1e-6
+
+
+# ------------------------------------------------------- mergeable P² ------
+
+def _eq_or_both_nan(a, b):
+    return (math.isnan(a) and math.isnan(b)) or a == b
+
+
+@given(st.lists(st.lists(st.floats(min_value=-1e6, max_value=1e6),
+                         min_size=0, max_size=200),
+                min_size=1, max_size=6),
+       st.sampled_from([0.25, 0.5, 0.9, 0.95]),
+       st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=60, deadline=None)
+def test_p2_merge_order_insensitive(shards, p, permseed):
+    """Merging shard summaries in any permutation yields the *same*
+    estimate — required for a deterministic gather over async shards."""
+    summaries = [P2Summary.from_values(xs, p) for xs in shards]
+    merged = merge_quantile_summaries(summaries, p)
+    perm = list(summaries)
+    random.Random(permseed).shuffle(perm)
+    assert _eq_or_both_nan(merge_quantile_summaries(perm, p), merged)
+    allv = [x for xs in shards for x in xs]
+    if allv:
+        assert min(allv) - 1e-9 <= merged <= max(allv) + 1e-9
+    else:
+        assert math.isnan(merged)
+
+
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6), min_size=0,
+                max_size=300),
+       st.sampled_from([0.25, 0.5, 0.75, 0.9]))
+@settings(max_examples=40, deadline=None)
+def test_p2_merge_empty_is_identity(xs, p):
+    """merge(empty, s) == s — empty shards cannot move an estimate."""
+    s = P2Summary.from_values(xs, p)
+    empty = P2Summary.from_values([], p)
+    want = s.point
+    assert _eq_or_both_nan(merge_quantile_summaries([empty, s], p), want)
+    assert _eq_or_both_nan(merge_quantile_summaries([s, empty], p), want)
+    assert math.isnan(merge_quantile_summaries([empty, empty], p))
+
+
+def test_p2_merge_small_shards_exact():
+    # every shard below RAW_MAX keeps raw samples: the merge pools them
+    # and is *exact*, not just bounded
+    shards = [[5.0, 1.0], [2.0], [], [9.0, 3.0, 7.0]]
+    allv = [x for xs in shards for x in xs]
+    for p in (0.1, 0.5, 0.9):
+        merged = merge_quantile_summaries(
+            [P2Summary.from_values(xs, p) for xs in shards], p)
+        assert merged == exact_quantile(allv, p)
+
+
+def test_p2_merge_bounded_error_vs_exact():
+    """The documented bound: merged estimate within the global value
+    range and within 0.35·spread of the exact quantile (same bound the
+    single-sketch property test uses)."""
+    rng = np.random.default_rng(7)
+    for p in (0.5, 0.9, 0.95):
+        for dist in ("uniform", "normal", "lognormal"):
+            xs = getattr(rng, dist)(size=4000)
+            shards = np.array_split(rng.permutation(xs), 5)
+            merged = merge_quantile_summaries(
+                [P2Summary.from_values(s, p) for s in shards], p)
+            exact = exact_quantile(xs.tolist(), p)
+            spread = float(xs.max() - xs.min())
+            assert xs.min() - 1e-9 <= merged <= xs.max() + 1e-9
+            assert abs(merged - exact) <= 0.35 * spread + 1e-6
+            # batch-built shard summaries have exact local knots, so in
+            # practice the merge lands far inside the bound
+            assert abs(merged - exact) <= 0.05 * spread + 1e-6
+
+
+def test_p2_streamed_summary_merges_with_batch_summaries():
+    rng = np.random.default_rng(11)
+    xs = rng.normal(size=3000)
+    a, b = xs[:1500], xs[1500:]
+    stream = P2Quantile(0.5)
+    for x in a:
+        stream.add(float(x))
+    merged = merge_quantile_summaries(
+        [stream.summary(), P2Summary.from_values(b, 0.5)], 0.5)
+    exact = exact_quantile(xs.tolist(), 0.5)
+    spread = float(xs.max() - xs.min())
+    assert abs(merged - exact) <= 0.1 * spread
 
 
 def test_quantile_set_summary():
