@@ -12,6 +12,9 @@ table/figure/claim.
 * ``bench_detectors``     — paper §4.4/§5 specialized views: planted
   anomalies; precision/recall + scan latency.
 * ``bench_splunklite``    — query latency on a 100k-record store.
+* ``bench_incremental``   — repeated fleet queries through the
+  segment-keyed partial-aggregate cache: cold vs warm vs
+  append-then-requery (docs/incremental.md).
 * ``bench_restart``       — §4.3 retention: aggregator cold-start from
   persisted columnar segments (mmap) vs full wire-line replay.
 """
@@ -336,6 +339,73 @@ def bench_sharded(out_dir: Path):
             f"{len(single)}records,same_run_baseline"),
         row("sharded.exact_gather", us_exact,
             f"{len(sharded)}records,row_gather_fallback"),
+    ]
+
+
+def bench_incremental(out_dir: Path):
+    """Incremental query engine (docs/incremental.md): repeated fleet
+    queries against the segment-keyed partial-aggregate cache on the
+    ≥100k-record workload — cold (empty cache) vs warm (all sealed
+    segments cached: only the append buffer recomputes) vs
+    append-then-requery (buffer + newly sealed segments only), with
+    byte parity between the cached and uncached runs asserted."""
+    from repro.core.schema import MetricRecord
+    from repro.core.shards import ShardedAggregator
+    from repro.core.splunklite import query
+    store, _m, _p = _fleet_store(n_jobs=110, hosts_per_job=8, samples=60)
+    q = ("search kind=perf gflops>0 "
+         "| stats avg(gflops) p90(step_time_s) count by job "
+         "| sort -avg_gflops | head 10")
+
+    def cold():
+        store.partial_cache.clear()
+        return query(store, q, engine="incremental")
+
+    def warm():
+        return query(store, q, engine="incremental")
+
+    us_cold = timeit(cold, warmup=1, iters=5)
+    warm()  # prime
+    us_warm = timeit(warm, warmup=1, iters=9)
+    # cached and uncached runs must be byte-identical
+    store.partial_cache.clear()
+    assert warm() == warm(), "warm rerun diverged"
+    stats = store.last_query_stats
+    assert stats["mode"] == "incremental"
+    assert stats["segments_computed"] == 0, stats
+    assert stats["segments_cached"] == len(store._sealed)
+    speedup = us_cold / max(us_warm, 1e-9)
+    # acceptance: a warm repeated fleet query is >= 5x cheaper than the
+    # same-run cold scan (it only recomputes the append buffer)
+    assert speedup >= 5.0, (us_cold, us_warm)
+    # append-then-requery: new samples land in the buffer; the sealed
+    # fleet stays cached (explain counters prove it)
+    def append_requery():
+        store.insert(MetricRecord(1e7 + append_requery.i, "nZ", "job.000",
+                                  "perf", {"gflops": 1.0,
+                                           "step": append_requery.i}))
+        append_requery.i += 1
+        return query(store, q, engine="incremental")
+    append_requery.i = 0
+    us_append = timeit(append_requery, warmup=1, iters=5)
+    stats = store.last_query_stats
+    assert stats["segments_computed"] == 0, stats
+    assert stats["buffer_rows"] == len(store._buffer)
+    # sharded stores consult per-shard caches on every query
+    sharded = ShardedAggregator(num_shards=4)
+    _fleet_store(n_jobs=110, hosts_per_job=8, samples=60, store=sharded)
+    query(sharded, q)  # prime
+    us_sh_warm = timeit(lambda: query(sharded, q), warmup=1, iters=9)
+    assert sharded.last_query_stats["segments_computed"] == 0
+    return [
+        row("incremental.fleet_query_cold", us_cold,
+            f"{len(store)}records,{len(store._sealed)}segments"),
+        row("incremental.fleet_query_warm", us_warm,
+            f"{speedup:.1f}x_vs_cold,buffer_only"),
+        row("incremental.append_requery", us_append,
+            f"buffer={len(store._buffer)}rows,0_segments_recomputed"),
+        row("incremental.sharded_fleet_query_warm", us_sh_warm,
+            "4shards,per-shard_caches"),
     ]
 
 

@@ -12,6 +12,7 @@ trajectory is tracked across PRs.
   detectors     — paper §4.4 specialized views / §5 case studies
   splunklite    — analysis-layer query latency (columnar vs legacy rows)
   sharded       — multi-aggregator scatter/gather fan-out vs single store
+  incremental   — segment-keyed partial-aggregate cache: cold vs warm
   restart       — aggregator cold-start: mmap segments vs line replay
   transport     — rsyslog-analog throughput
   kernels.*     — Pallas kernels vs jnp oracles (interpret mode)
@@ -51,6 +52,7 @@ def main() -> None:
         mbench.bench_anomaly,
         mbench.bench_splunklite,
         mbench.bench_sharded,
+        mbench.bench_incremental,
         mbench.bench_restart,
         mbench.bench_transport,
         kbench.bench_flash_attention,

@@ -72,10 +72,31 @@ class Aggregator:
         self._readers: Dict[str, TailReader] = {}
         self.persist_path = Path(persist_path) if persist_path else None
         self._on_record: List[Callable[[MetricRecord], None]] = []
+        self.watches: List = []
 
     def on_record(self, cb: Callable[[MetricRecord], None]) -> None:
         """Attach a streaming consumer (e.g. a detector bank)."""
         self._on_record.append(cb)
+
+    def watch(self, q: str) -> "QueryHandle":
+        """Register a continuously-refreshed query over the store.
+
+        The paper's dashboards re-run the same Splunk queries as new
+        samples stream in; a watch makes that loop incremental: call
+        :meth:`pump`, then ``handle.refresh()`` — sealed segments come
+        from the store's segment-keyed partial-aggregate cache, so a
+        refresh pays only for the unsealed buffer and segments sealed
+        since the last pump (docs/incremental.md).  The handle is also
+        kept in :attr:`watches` for :meth:`refresh_watches`.
+        """
+        from repro.core.splunklite import QueryHandle
+        handle = QueryHandle(self.store, q)
+        self.watches.append(handle)
+        return handle
+
+    def refresh_watches(self) -> Dict[str, List[Dict]]:
+        """Refresh every registered watch; ``{query: current rows}``."""
+        return {h.q: h.refresh() for h in self.watches}
 
     def pump(self) -> int:
         """Batch-ingest all new lines from all inbox files.

@@ -28,6 +28,16 @@ fleet scale, so the store keeps data the way an analytics engine does:
   replayed, from a small write-ahead line log (``wal.log``).  Dedup
   keys persist with their segment, so a restarted store still rejects
   transport retransmits of already-indexed lines.
+* **Segment identity + partial-aggregate cache** — every sealed
+  segment carries a *content-derived* ``uid`` (a hash of its sorted
+  dedup keys) that survives seal, restart, and whole-segment adoption
+  into another store.  The store owns a bounded LRU
+  :class:`PartialAggregateCache` keyed by ``(segment uid, query-plan
+  fingerprint)`` that the incremental splunklite executor
+  (``repro.core.splunklite``) fills with per-segment partial
+  aggregation states: because segments are immutable, appends never
+  invalidate an entry — a repeated query recomputes only the unsealed
+  buffer and any newly sealed segments.  See docs/incremental.md.
 
 The vectorized splunklite executor (``repro.core.splunklite``),
 dashboards and detectors all run on the column arrays directly via
@@ -60,6 +70,85 @@ class _Missing:
 
 
 MISSING = _Missing()
+
+
+def segment_uid(dedup_keys: Iterable[bytes]) -> str:
+    """Stable, content-derived segment identity.
+
+    Dedup keys are content hashes of the segment's records, so a hash
+    over their sorted concatenation identifies the segment by *what it
+    holds*: the uid survives seal → persist → restart → adoption into
+    another store (the file pair is copied byte-for-byte), which is
+    exactly the lifetime a cached per-segment partial aggregate must
+    track.  Mutable append buffers have no uid (``uid is None``) and
+    are never cached.
+    """
+    return hashlib.blake2b(b"".join(sorted(dedup_keys)),
+                           digest_size=16).hexdigest()
+
+
+class PartialAggregateCache:
+    """Bounded LRU of per-segment partial-aggregation states.
+
+    Keys are ``(segment uid, plan fingerprint)`` pairs; values are the
+    ``{group key: {output name: partial state}}`` maps produced by the
+    splunklite partial kernels for one sealed segment.  Sealed segments
+    are immutable, so an entry can never go stale from appends — there
+    is no store-version check here on purpose (that is the point of
+    *per-segment* invalidation).  Entries leave the cache only by LRU
+    eviction, :meth:`drop_segment`, or :meth:`clear`.
+
+    Consumers must treat cached maps as read-only;
+    ``splunklite.merge_partial_maps`` copies before merging.
+    """
+
+    __slots__ = ("max_entries", "hits", "misses", "evictions", "_d")
+
+    def __init__(self, max_entries: int = 512) -> None:
+        self.max_entries = int(max_entries)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._d: Dict[tuple, dict] = {}
+
+    def get(self, key: tuple):
+        """Cached value or ``None``; counts a hit/miss and refreshes
+        the entry's LRU position."""
+        val = _lru_memo_get(self._d, key)
+        if val is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return val
+
+    def put(self, key: tuple, value: dict) -> None:
+        if self.max_entries <= 0:
+            return  # caching disabled: every lookup stays a miss
+        if key in self._d:
+            del self._d[key]  # overwrite must not evict a neighbor
+        elif len(self._d) >= self.max_entries:
+            self.evictions += 1
+        _lru_memo_put(self._d, key, value, self.max_entries)
+
+    def peek(self, key: tuple) -> bool:
+        """Membership probe that does not touch counters or LRU order
+        (``explain()`` uses this to report cache state)."""
+        return key in self._d
+
+    def drop_segment(self, uid: str) -> int:
+        """Invalidate every plan's entry for one segment (the unit of
+        invalidation; stores never mutate sealed segments, so this only
+        matters to external managers that retire segment files)."""
+        stale = [k for k in self._d if k[0] == uid]
+        for k in stale:
+            del self._d[k]
+        return len(stale)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def __len__(self) -> int:
+        return len(self._d)
 
 
 # ---------------------------------------------------------------- columns ---
@@ -208,15 +297,18 @@ class Segment:
     ``attrs`` holds the four reserved record attributes (ts/host/job/
     kind); ``cols`` is the query view — attrs overridden by same-named
     metric fields, mirroring ``MetricRecord.as_dict()`` — and
-    ``field_names`` lists the actual metric-field columns.
+    ``field_names`` lists the actual metric-field columns.  ``uid`` is
+    the content-derived identity (:func:`segment_uid`) assigned at
+    seal/load time; it stays ``None`` for transient buffer segments.
     """
 
     __slots__ = ("n", "cols", "attrs", "field_names", "ts_min", "ts_max",
-                 "_zones")
+                 "uid", "_zones")
 
     def __init__(self, n: int, attrs: Dict[str, object],
                  field_cols: Dict[str, object]) -> None:
         self.n = n
+        self.uid = None
         self.attrs = attrs
         self.field_names = list(field_cols)
         self.cols = dict(attrs)
@@ -267,6 +359,90 @@ def columns_from_records(records: List[MetricRecord]) -> Segment:
     field_cols = {k: build_column([r.fields.get(k, MISSING) for r in recs])
                   for k in names}
     return Segment(n, attrs, field_cols)
+
+
+def _concat_str_columns(a, b, na: int, nb: int, order: np.ndarray):
+    """Concatenate two (possibly absent) dictionary columns, merging
+    vocabularies, then reorder rows; absent sides contribute -1."""
+    index: Dict[str, int] = {}
+    codes = np.full(na + nb, -1, np.int32)
+    pos = 0
+    for col, m in ((a, na), (b, nb)):
+        if col is not None and len(col.vocab):
+            remap = np.array([index.setdefault(v, len(index))
+                              for v in col.vocab.tolist()], np.int32)
+            cc = col.codes
+            codes[pos:pos + m] = np.where(cc >= 0,
+                                          remap[np.clip(cc, 0, None)], -1)
+        pos += m
+    return StrColumn(codes[order], np.array(list(index), dtype=object),
+                     index)
+
+
+def merge_transient_segments(a: Segment, b: Segment) -> Segment:
+    """Merge two ts-sorted buffer segments into one, row- and value-
+    equivalent to rebuilding ``columns_from_records`` over both record
+    batches at once.
+
+    This is the incremental append-buffer path: the previously built
+    transient segment (rows inserted before position ``k``) merges with
+    a delta segment over only the new records, so a query after an
+    append pays per-record Python cost only for the delta.  Ordering is
+    exact: both inputs are ts-sorted with insertion-order ties and every
+    ``a`` row was inserted before every ``b`` row, so a stable argsort
+    over the concatenated timestamps reproduces the full rebuild's
+    (ts, insertion index) order.  String dictionaries may end up in a
+    different (still first-appearance) vocabulary order — code numbering
+    is not query-observable.
+    """
+    na, nb = a.n, b.n
+    ts = np.concatenate([a.attrs["ts"].vals, b.attrs["ts"].vals])
+    order = np.argsort(ts, kind="stable")
+    attrs: Dict[str, object] = {
+        "ts": NumColumn(ts[order], np.ones(na + nb, bool),
+                        np.concatenate([a.attrs["ts"].is_int,
+                                        b.attrs["ts"].is_int])[order])}
+    for key in ("host", "job", "kind"):
+        attrs[key] = _concat_str_columns(a.attrs[key], b.attrs[key],
+                                         na, nb, order)
+    names: Dict[str, None] = dict.fromkeys(a.field_names)
+    names.update(dict.fromkeys(b.field_names))
+    a_fields = set(a.field_names)
+    b_fields = set(b.field_names)
+    field_cols: Dict[str, object] = {}
+    for name in names:
+        ca = a.cols[name] if name in a_fields else None
+        cb = b.cols[name] if name in b_fields else None
+        kinds = {c.kind for c in (ca, cb) if c is not None}
+        if kinds == {"num"}:
+            vals = np.full(na + nb, np.nan)
+            present = np.zeros(na + nb, bool)
+            is_int = np.zeros(na + nb, bool)
+            pos = 0
+            for col, m in ((ca, na), (cb, nb)):
+                if col is not None:
+                    vals[pos:pos + m] = col.vals
+                    present[pos:pos + m] = col.present
+                    is_int[pos:pos + m] = col.is_int
+                pos += m
+            field_cols[name] = NumColumn(vals[order], present[order],
+                                         is_int[order])
+        elif kinds == {"str"}:
+            field_cols[name] = _concat_str_columns(ca, cb, na, nb, order)
+        else:  # mixed kinds (or an obj side): object fallback
+            vals = np.empty(na + nb, dtype=object)
+            vals[:] = MISSING
+            present = np.zeros(na + nb, bool)
+            pos = 0
+            for col, m in ((ca, na), (cb, nb)):
+                if col is not None:
+                    pm = col.present_mask()
+                    section = vals[pos:pos + m]
+                    section[pm] = col.materialize()[pm]
+                    present[pos:pos + m] = pm
+                pos += m
+            field_cols[name] = ObjColumn(vals[order], present[order])
+    return Segment(na + nb, attrs, field_cols)
 
 
 def columns_from_rows(rows: List[Dict]) -> Tuple[int, Dict[str, object]]:
@@ -349,6 +525,24 @@ def _empty_scan(fields: Iterable[str]) -> ColumnScan:
                       {f: (np.empty(0), np.empty(0, bool)) for f in fields})
 
 
+SCAN_MEMO_MAX = 64
+
+
+def _lru_memo_get(memo: Dict, key):
+    """Fetch + LRU-refresh a memo entry (dicts iterate in insertion
+    order, so re-inserting moves the entry to the back)."""
+    hit = memo.pop(key, None)
+    if hit is not None:
+        memo[key] = hit
+    return hit
+
+
+def _lru_memo_put(memo: Dict, key, value, bound: int) -> None:
+    if len(memo) >= bound:
+        memo.pop(next(iter(memo)))
+    memo[key] = value
+
+
 # -------------------------------------------------------------------- store --
 
 class ColumnarMetricStore:
@@ -368,12 +562,16 @@ class ColumnarMetricStore:
     restart.  Only one live store per directory is supported.
     ``wal_fsync`` — fsync the WAL after every accepted insert (and the
     segment files at seal); off by default, matching ``Spool``.
+    ``partial_cache_entries`` — LRU bound on the per-segment
+    partial-aggregate cache (one entry per (segment, plan fingerprint);
+    see :class:`PartialAggregateCache` and docs/incremental.md).
     """
 
     def __init__(self, seal_threshold: int = 4096,
                  dedup_horizon_s: Optional[float] = None,
                  directory: Optional[os.PathLike] = None,
-                 wal_fsync: bool = False) -> None:
+                 wal_fsync: bool = False,
+                 partial_cache_entries: int = 512) -> None:
         self.seal_threshold = int(seal_threshold)
         self.dedup_horizon_s = dedup_horizon_s
         self._sealed: List[Segment] = []
@@ -386,6 +584,9 @@ class ColumnarMetricStore:
         self.dedup_evicted_keys = 0
         self.segment_load_errors = 0
         self._cache: Dict[str, tuple] = {}
+        self._transient_base: Optional[Tuple[int, Segment]] = None
+        self.partial_cache = PartialAggregateCache(partial_cache_entries)
+        self.last_query_stats: Optional[Dict] = None
         self.directory = Path(directory) if directory is not None else None
         self.wal_fsync = bool(wal_fsync)
         self._wal = None
@@ -410,6 +611,13 @@ class ColumnarMetricStore:
         self._seen.add(key)
         self._buffer_keys.add(key)
         self._buffer.append(rec)
+        if self._cache:
+            # version-scoped memos (transient segment, records, scans)
+            # are stale the moment the version changes — evict eagerly
+            # instead of holding superseded materializations until the
+            # same memo key is touched again.  The per-segment partial
+            # cache is *not* version-scoped and survives untouched.
+            self._cache.clear()
         ts = float(rec.ts)
         if ts > self._watermark:
             self._watermark = ts
@@ -442,6 +650,7 @@ class ColumnarMetricStore:
             return
         seg = columns_from_records(self._buffer)
         keys = self._buffer_keys
+        seg.uid = segment_uid(keys)
         if self.directory is not None:
             from repro.core import segmentio
             segmentio.save_segment(
@@ -453,6 +662,9 @@ class ColumnarMetricStore:
             self._epochs.append((seg.ts_max, keys))
         self._buffer = []
         self._buffer_keys = set()
+        self._transient_base = None
+        if self._cache:
+            self._cache.clear()
         if self.directory is not None:
             self._rewrite_wal()
         self._evict_dedup()
@@ -584,6 +796,8 @@ class ColumnarMetricStore:
         else:
             seg = segmentio.load_segment(manifest_path)
         self._sealed.append(seg)
+        if self._cache:
+            self._cache.clear()
         if seg.ts_max > self._watermark:
             self._watermark = seg.ts_max
         keys = seg.dedup_keys()
@@ -596,15 +810,46 @@ class ColumnarMetricStore:
     # -------------------------------------------------------------- reads --
     def segments(self) -> List[Segment]:
         """Sealed segments plus a transient segment over the buffer."""
-        segs = list(self._sealed)
-        if self._buffer:
+        return [seg for seg, _uid in self.segment_units()]
+
+    def segment_units(self, include_buffer: bool = True
+                      ) -> List[Tuple[Segment, Optional[str]]]:
+        """``(segment, uid)`` pairs — the cache-aware scan units.
+
+        Sealed segments carry their stable content uid; the transient
+        buffer segment (present only with ``include_buffer``) has uid
+        ``None`` and is always recomputed by incremental queries.
+        """
+        units: List[Tuple[Segment, Optional[str]]] = [
+            (seg, seg.uid) for seg in self._sealed]
+        if include_buffer and self._buffer:
             v = self._version()
             cached = self._cache.get("transient")
             if cached is None or cached[0] != v:
-                cached = (v, columns_from_records(self._buffer))
+                cached = (v, self._build_transient())
                 self._cache["transient"] = cached
-            segs.append(cached[1])
-        return segs
+            units.append((cached[1], None))
+        return units
+
+    def _build_transient(self) -> Segment:
+        """Transient segment over the append buffer, built
+        incrementally: the previous build covers a buffer *prefix*
+        (buffers only grow between seals), so per-record column
+        construction runs only over records appended since, then the
+        prefix and delta merge with vectorized column concatenation
+        (:func:`merge_transient_segments`).  Equivalent to — and on a
+        streaming store much cheaper than — rebuilding from scratch.
+        """
+        n = len(self._buffer)
+        base = self._transient_base
+        if base is not None and 0 < base[0] <= n:
+            k, prev = base
+            seg = (prev if k == n else merge_transient_segments(
+                prev, columns_from_records(self._buffer[k:])))
+        else:
+            seg = columns_from_records(self._buffer)
+        self._transient_base = (n, seg)
+        return seg
 
     @property
     def records(self) -> List[MetricRecord]:
@@ -651,7 +896,9 @@ class ColumnarMetricStore:
         segment, then a single gather into merged column arrays.
 
         Results are memoized per store version (dashboards and reports
-        issue the same scan repeatedly for different renderings).
+        issue the same scan repeatedly for different renderings); the
+        memo is a bounded LRU so many distinct scans in one version
+        evict the oldest instead of disabling memoization.
         """
         fields = tuple(fields)
         memo_key = (job, kind, since, until, fields)
@@ -659,13 +906,19 @@ class ColumnarMetricStore:
         if memo is None or memo[0] != self._version():
             memo = (self._version(), {})
             self._cache["scans"] = memo
-        hit = memo[1].get(memo_key)
-        if hit is not None:
-            return hit
-        sc = self._scan_uncached(job, kind, since, until, fields)
-        if len(memo[1]) < 64:
-            memo[1][memo_key] = sc
+        sc = _lru_memo_get(memo[1], memo_key)
+        if sc is None:
+            sc = self._scan_uncached(job, kind, since, until, fields)
+            _lru_memo_put(memo[1], memo_key, sc, SCAN_MEMO_MAX)
         return sc
+
+    def explain(self, q: str) -> Dict:
+        """Describe how ``q`` would execute incrementally against this
+        store: plan shape, per-segment partial-cache state for the
+        plan's fingerprint, and cumulative hit/miss counters.  See
+        ``repro.core.splunklite.explain_store``."""
+        from repro.core.splunklite import explain_store
+        return explain_store(self, q)
 
     def _scan_uncached(self, job, kind, since, until,
                        fields: Tuple[str, ...]) -> ColumnScan:

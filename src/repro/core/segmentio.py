@@ -41,7 +41,7 @@ from typing import Dict, Iterable, List, Set, Tuple
 import numpy as np
 
 from repro.core.columnar import (MISSING, NumColumn, ObjColumn, Segment,
-                                 StrColumn)
+                                 StrColumn, segment_uid)
 
 FORMAT = "repro-colseg-v1"
 SHARDSET_FORMAT = "repro-shardset-v1"
@@ -129,6 +129,7 @@ def save_segment(seg_dir: os.PathLike, stem: str, seg: Segment,
     manifest = {
         "format": FORMAT,
         "n": seg.n,
+        "uid": seg.uid if seg.uid is not None else segment_uid(keys),
         "ts_min": seg.ts_min,
         "ts_max": seg.ts_max,
         "attrs": attrs,
@@ -209,6 +210,12 @@ class MappedSegment(Segment):
         self._shared: Dict[Tuple[str, str], object] = {}
         self.n = int(manifest["n"])
         self.field_names = list(manifest["fields"])
+        # content identity: written by save_segment since the manifest
+        # grew a "uid" field; recomputed from the persisted dedup keys
+        # for manifests from before it existed (same derivation, same
+        # value — uid is a pure function of segment content)
+        uid = manifest.get("uid")
+        self.uid = uid if uid is not None else segment_uid(self.dedup_keys())
         self.ts_min = float(manifest["ts_min"])
         self.ts_max = float(manifest["ts_max"])
         self._zones = {k: (float(v[0]), float(v[1]))

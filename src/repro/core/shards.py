@@ -18,10 +18,13 @@ partial/merge/finalize algebra and docs/sharding.md for the format):
   compile to a :class:`~repro.core.splunklite.ScatterPlan`.  Each shard
   filters with vectorized predicate masks (zone-map pruning included),
   gathers only referenced columns, and reduces every group to a small
-  partial state; the gather step merges states (count/sum/min/max/
-  Welford merges, set union for ``dc``, order-insensitive P² sketch
-  merge for quantiles) and finalizes rows, then runs any tail stages
-  locally.  No shard ships rows.
+  partial state — **per sealed segment**, consulting the shard store's
+  segment-keyed partial-aggregate cache so a repeated query recomputes
+  only append buffers and newly sealed segments (docs/incremental.md);
+  the gather step merges states (count/sum/min/max/Welford merges, set
+  union for ``dc``, order-insensitive P² sketch merge for quantiles)
+  and finalizes rows, then runs any tail stages locally.  No shard
+  ships rows.
 * **exact gather** — anything else (order-dependent ``first``/``last``,
   ``sort``/``dedup``/``head`` before aggregation, whole-row aggregates)
   falls back to gathering the predicate-filtered, column-projected rows
@@ -56,7 +59,9 @@ from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
 
 import numpy as np
 
-from repro.core.columnar import ColumnarMetricStore, ColumnScan, _empty_scan
+from repro.core.columnar import (SCAN_MEMO_MAX, ColumnarMetricStore,
+                                 ColumnScan, _empty_scan, _lru_memo_get,
+                                 _lru_memo_put)
 from repro.core.schema import MetricRecord, parse_line
 from repro.core import splunklite
 from repro.core.splunklite import _Fallback
@@ -93,7 +98,8 @@ class ShardedAggregator:
                  dedup_horizon_s: Optional[float] = None,
                  directory: Optional[os.PathLike] = None,
                  wal_fsync: bool = False,
-                 parallel: Optional[bool] = None) -> None:
+                 parallel: Optional[bool] = None,
+                 partial_cache_entries: int = 512) -> None:
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
         # thread-parallel shard execution pays off once there are spare
@@ -145,12 +151,14 @@ class ShardedAggregator:
             self.shards.append(ColumnarMetricStore(
                 seal_threshold=seal_threshold,
                 dedup_horizon_s=dedup_horizon_s,
-                directory=shard_dir, wal_fsync=wal_fsync))
+                directory=shard_dir, wal_fsync=wal_fsync,
+                partial_cache_entries=partial_cache_entries))
         # query-path observability (tests assert the scatter plan runs)
         self.scatter_queries = 0
         self.fallback_queries = 0
         self.segments_adopted = 0
         self.records_reingested = 0
+        self.last_query_stats: Optional[Dict] = None
         self._cache: Dict[str, tuple] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
 
@@ -187,7 +195,13 @@ class ShardedAggregator:
 
     # ------------------------------------------------------------- ingest --
     def insert(self, rec: MetricRecord) -> bool:
-        return self.shards[self.shard_index(rec)].insert(rec)
+        accepted = self.shards[self.shard_index(rec)].insert(rec)
+        if accepted and self._cache:
+            # aggregator-level version memos (records/scans) are stale
+            # the moment any shard's version moves; the shards' own
+            # per-segment partial caches are untouched by design
+            self._cache.clear()
+        return accepted
 
     def ingest_lines(self, lines: Iterable[str]) -> int:
         n = 0
@@ -200,6 +214,8 @@ class ShardedAggregator:
     def seal(self) -> None:
         for shard in self.shards:
             shard.seal()
+        if self._cache:
+            self._cache.clear()
 
     def close(self) -> None:
         if self._pool is not None:
@@ -254,6 +270,8 @@ class ShardedAggregator:
             rec = parse_line(line)
             if rec is not None and self.insert(rec):
                 total += 1
+        if self._cache:
+            self._cache.clear()
         return total
 
     def _segment_route(self, seg) -> Optional[int]:
@@ -280,43 +298,93 @@ class ShardedAggregator:
 
         ``engine="rows"`` forces the legacy row executor over the
         canonically ordered gathered rows (the parity oracle);
-        otherwise a mergeable pipeline runs scatter/gather and anything
-        else takes the exact-gather path.
+        otherwise a mergeable pipeline runs scatter/gather — consulting
+        each shard's segment-keyed partial-aggregate cache, so repeated
+        fleet queries recompute only append buffers and newly sealed
+        segments — and anything else takes the exact-gather path.
+        ``last_query_stats`` records the mode and, for scatter/gather,
+        the fleet-wide cached/recomputed segment counts.
         """
         stages = splunklite._split_pipeline(q)
         if engine == "rows":
+            self.last_query_stats = {"mode": "rows"}
             rows = [r.as_dict() for r in self.records]
             if not stages:
                 return rows
             return splunklite.run_stages(rows, stages, implicit_first=True)
         plan = splunklite.compile_scatter_plan(stages)
         if plan is not None:
+            # one stats dict per shard: _map_shards touches each shard
+            # from exactly one worker, so the scatter fills these (and
+            # the per-shard caches) without cross-thread sharing
+            stats_by_shard = {id(s): {} for s in self.shards}
             try:
                 maps = self._map_shards(
-                    lambda shard: splunklite.scatter_partials(shard, plan))
+                    lambda shard: splunklite.scatter_partials(
+                        shard, plan, cache=shard.partial_cache,
+                        stats=stats_by_shard[id(shard)]))
                 merged = splunklite.merge_partial_maps(maps, plan.aggs)
                 rows = splunklite.finalize_partial_rows(merged, plan)
                 self.scatter_queries += 1
+                stats = {"mode": "scatter_gather",
+                         "shards": self.num_shards,
+                         "fingerprint": plan.fingerprint,
+                         "segments_cached": 0, "segments_computed": 0,
+                         "buffer_rows": 0}
+                for st in stats_by_shard.values():
+                    for k in ("segments_cached", "segments_computed",
+                              "buffer_rows"):
+                        stats[k] += st.get(k, 0)
+                    if st.get("cache_bypassed"):
+                        stats["cache_bypassed"] = True
+                self.last_query_stats = stats
                 return splunklite.run_stages(rows, plan.tail)
             except _Fallback:
                 pass  # shard data defeated a partial kernel: go exact
         self.fallback_queries += 1
+        self.last_query_stats = {"mode": "exact_gather"}
         rows, rest = self._gather_rows(stages)
         return splunklite.run_stages(rows, rest)
 
+    @property
+    def partial_cache_hits(self) -> int:
+        return sum(s.partial_cache.hits for s in self.shards)
+
+    @property
+    def partial_cache_misses(self) -> int:
+        return sum(s.partial_cache.misses for s in self.shards)
+
     def explain(self, q: str) -> Dict[str, Any]:
-        """Describe how a query would execute (for tests/operators)."""
+        """Describe how a query would execute (for tests/operators),
+        including the fleet-wide partial-cache state for the plan's
+        fingerprint.  Pure introspection — runs nothing."""
         stages = splunklite._split_pipeline(q)
         plan = splunklite.compile_scatter_plan(stages)
+        cache_info = {
+            "hits": self.partial_cache_hits,
+            "misses": self.partial_cache_misses,
+            "entries": sum(len(s.partial_cache) for s in self.shards),
+        }
         if plan is not None:
+            sealed = cached = 0
+            for shard in self.shards:
+                for _seg, uid in shard.segment_units(include_buffer=False):
+                    sealed += 1
+                    if shard.partial_cache.peek((uid, plan.fingerprint)):
+                        cached += 1
             return {
                 "mode": "scatter_gather",
                 "shards": self.num_shards,
+                "fingerprint": plan.fingerprint,
                 "partial_aggs": [name for name, _f, _o in plan.aggs],
                 "group_by": list(plan.by),
                 "columns": (sorted(plan.cols)
                             if plan.cols is not None else None),
                 "tail_stages": [t[0] for t in plan.tail],
+                "segments": {"sealed": sealed, "cached": cached,
+                             "buffer_rows": sum(len(s._buffer)
+                                                for s in self.shards)},
+                "cache": cache_info,
             }
         terms, rest = splunklite._leading_terms(stages)
         cols = splunklite.referenced_columns(rest)
@@ -326,6 +394,7 @@ class ShardedAggregator:
             "pushed_terms": len(terms),
             "columns": sorted(cols) if cols is not None else None,
             "stages": [t[0] for t in rest],
+            "cache": cache_info,
         }
 
     def _gather_rows(self, stages: List[List[str]]):
@@ -390,12 +459,10 @@ class ShardedAggregator:
         if memo is None or memo[0] != self._version():
             memo = (self._version(), {})
             self._cache["scans"] = memo
-        hit = memo[1].get(memo_key)
-        if hit is not None:
-            return hit
-        sc = self._scan_uncached(job, kind, since, until, fields)
-        if len(memo[1]) < 64:
-            memo[1][memo_key] = sc
+        sc = _lru_memo_get(memo[1], memo_key)
+        if sc is None:
+            sc = self._scan_uncached(job, kind, since, until, fields)
+            _lru_memo_put(memo[1], memo_key, sc, SCAN_MEMO_MAX)
         return sc
 
     def _scan_uncached(self, job, kind, since, until,

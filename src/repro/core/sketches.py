@@ -180,6 +180,14 @@ class P2Summary:
     ``point`` is the summary's own estimate at ``p``; a merge of a
     single non-empty summary returns it unchanged, which makes
     ``merge(empty, s) == s`` hold exactly.
+
+    Summaries are immutable value objects: every field is a scalar or
+    tuple and no merge ever mutates its inputs.  That makes them safe
+    to hold in the segment-keyed partial-aggregate caches
+    (docs/incremental.md) and to ship across process boundaries — the
+    same summary may be merged any number of times, in any order, with
+    identical results.  :meth:`state` / :meth:`from_state` round-trip
+    the summary through a plain tuple for transport or comparison.
     """
 
     RAW_MAX = 32
@@ -218,17 +226,65 @@ class P2Summary:
         return (self.n, self.raw if self.raw is not None else (),
                 self.knots_v, self.knots_f)
 
+    def state(self) -> tuple:
+        """The summary's full state as one plain tuple — canonical for
+        equality/hashing and self-contained for transport."""
+        return (self.p, self.n, self.knots_v, self.knots_f, self.raw,
+                self.point)
+
+    @classmethod
+    def from_state(cls, state: tuple) -> "P2Summary":
+        p, n, knots_v, knots_f, raw, point = state
+        return cls(p, n, tuple(knots_v), tuple(knots_f),
+                   tuple(raw) if raw is not None else None, point)
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, P2Summary):
+            return NotImplemented
+        return self.state() == other.state()
+
+    def __hash__(self) -> int:
+        return hash(self.state())
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        form = (f"raw[{len(self.raw)}]" if self.raw is not None
+                else "knots")
+        return (f"P2Summary(p={self.p}, n={self.n}, {form}, "
+                f"point={self.point})")
+
+
+def _knotted_from_values(xs: Sequence[float], p: float) -> "P2Summary":
+    """Force a 5-knot summary over raw values (even when ``n`` is small
+    enough that :meth:`P2Summary.from_values` would keep them raw) —
+    used to make mixed raw+knotted groups uniformly knotted so they can
+    take the vectorized batch merge.  Knot values are exact pooled
+    quantiles, the same derivation ``from_values`` uses past
+    ``RAW_MAX``."""
+    srt = sorted(float(x) for x in xs)
+    n1 = len(srt) - 1
+    fracs = (0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0)
+    vals = []
+    for f in fracs:  # exact_quantile over one shared sort (np.quantile
+        idx = f * n1  # per tiny pool costs more than it computes)
+        lo = int(idx)
+        hi = min(lo + 1, n1)
+        w = idx - lo
+        vals.append(srt[lo] * (1.0 - w) + srt[hi] * w)
+    return P2Summary(p, len(srt), tuple(vals), fracs, point=vals[2])
+
 
 def merge_quantile_summary_groups(groups: List[List["P2Summary"]],
                                   p: float) -> List[float]:
     """Batched :func:`merge_quantile_summaries` over many groups — the
     gather node finalizes one quantile column for *all* group keys in a
     handful of vectorized passes instead of one Python CDF merge per
-    group.  Groups whose summaries are all knotted (the common sharded
-    case) are stacked and merged with NumPy; small/raw or single-shard
-    groups take the exact scalar paths.  Result-equivalent to the
-    scalar merge up to degenerate duplicate-knot handling (still within
-    the documented bound and the summaries' value range)."""
+    group.  All-raw groups pool into an exact quantile; otherwise each
+    group's raw summaries condense into one exact 5-knot pooled part
+    (weighted by its sample count) and the now uniformly knotted groups
+    are stacked and merged with NumPy.  Stays within the documented
+    merge bound and the summaries' value range; order-insensitive like
+    the scalar merge (pooling ignores order, the CDF average is
+    commutative)."""
     out: List[float] = [math.nan] * len(groups)
     batched: Dict[int, List[Tuple[int, List["P2Summary"]]]] = {}
     for i, summaries in enumerate(groups):
@@ -237,10 +293,15 @@ def merge_quantile_summary_groups(groups: List[List["P2Summary"]],
             continue
         if len(ss) == 1:
             out[i] = ss[0].point
-        elif any(s.raw is not None for s in ss):
-            out[i] = merge_quantile_summaries(ss, p)
-        else:
-            batched.setdefault(len(ss), []).append((i, ss))
+            continue
+        raw_pool = [x for s in ss if s.raw is not None for x in s.raw]
+        knotted = [s for s in ss if s.raw is None]
+        if not knotted:
+            out[i] = exact_quantile(raw_pool, p)
+            continue
+        if raw_pool:
+            knotted = knotted + [_knotted_from_values(raw_pool, p)]
+        batched.setdefault(len(knotted), []).append((i, knotted))
     for n_parts, items in batched.items():
         idxs = [i for i, _ in items]
         vals = _batch_merge_knotted([ss for _, ss in items], n_parts, p)

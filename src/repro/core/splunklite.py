@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import ast
 import fnmatch
+import hashlib
 import math
 import re
 import shlex
@@ -610,6 +611,22 @@ def _batch_from_store(store: ColumnarMetricStore, terms: List[_Term],
     return _merge_parts(parts, cols)
 
 
+def _segment_match_idx(seg: Segment,
+                       terms: List[_Term]) -> Optional[np.ndarray]:
+    """Matching-row indices for one segment (zone-map pruning plus
+    vectorized predicate masks); ``None`` when nothing matches."""
+    if terms and _prune_segment(seg, terms):
+        return None
+    if not terms:
+        return np.arange(seg.n)
+    mask = np.ones(seg.n, bool)
+    for t in terms:
+        mask &= _term_mask(seg, t)
+        if not mask.any():
+            return None
+    return np.nonzero(mask)[0]
+
+
 def _store_parts(store: ColumnarMetricStore,
                  terms: List[_Term]) -> List[tuple]:
     """(segment, matching-row-idx) pairs after zone-map pruning and
@@ -617,20 +634,9 @@ def _store_parts(store: ColumnarMetricStore,
     local executor and the sharded gather path."""
     parts = []
     for seg in store.segments():
-        if terms and _prune_segment(seg, terms):
-            continue
-        if terms:
-            mask = np.ones(seg.n, bool)
-            for t in terms:
-                mask &= _term_mask(seg, t)
-                if not mask.any():
-                    break
-            if not mask.any():
-                continue
-            idx = np.nonzero(mask)[0]
-        else:
-            idx = np.arange(seg.n)
-        parts.append((seg, idx))
+        idx = _segment_match_idx(seg, terms)
+        if idx is not None:
+            parts.append((seg, idx))
     return parts
 
 
@@ -715,27 +721,68 @@ class _Grouping:
         return self._bounds
 
 
+def _decompose_key(token: int, sizes: List[int]) -> List[int]:
+    """Mixed-radix decode of one combined group code (see
+    :func:`_combine_codes`) back into per-column label indices."""
+    parts: List[int] = []
+    for size in reversed(sizes[1:]):
+        parts.append(token % size)
+        token //= size
+    parts.append(token)
+    parts.reverse()
+    return parts
+
+
+def _group_str_fast(batch: _Batch, by: List[str]) -> Optional[_Grouping]:
+    """Dictionary-aware group-by for all-string key columns.
+
+    ``stats ... by a, b`` over dictionary-encoded columns never needs a
+    sort over the rows: the combined mixed-radix dictionary code is
+    bincounted to find the used key combinations, and a dense
+    code→rank lookup labels every row — O(rows + key-space) instead of
+    the general path's O(rows·log rows) ``np.unique``.  Missing rows
+    group under ``""`` exactly like the row engine (``_factorize``
+    appends the label).  Returns ``None`` when a key column is not
+    dictionary-encoded or the key space is too large for a dense
+    bincount (the general path then takes over)."""
+    cols = [batch.cols.get(b) for b in by]
+    if not all(c is not None and c.kind == "str" for c in cols):
+        return None
+    code_arrays: List[np.ndarray] = []
+    labels_list: List[List] = []
+    sizes: List[int] = []
+    space = 1
+    for col in cols:
+        codes, labels = _factorize(col, batch.n)
+        code_arrays.append(codes)
+        labels_list.append(labels)
+        sizes.append(len(labels))
+        space *= len(labels)
+    if space > max(4 * batch.n, 1024):
+        return None  # sparse key space: dense bincount would dominate
+    combined = _combine_codes(code_arrays, sizes)
+    counts = np.bincount(combined, minlength=space)
+    used = np.nonzero(counts)[0]
+    keys = []
+    for token in used.tolist():
+        parts = _decompose_key(token, sizes)
+        keys.append(tuple(labels_list[j][p] for j, p in enumerate(parts)))
+    order = sorted(range(len(keys)), key=keys.__getitem__)
+    lookup = np.empty(space, np.int64)
+    for rank, j in enumerate(order):
+        lookup[used[j]] = rank
+    return _Grouping(lookup[combined], [keys[j] for j in order])
+
+
 def _group(batch: _Batch, by: List[str],
            extra: Optional[tuple] = None) -> _Grouping:
     """Group rows by the ``by`` columns (plus an optional pre-computed
     (codes, keyvals) leading key, used for timechart buckets).  Groups
     come out sorted by their key tuples, matching the row engine."""
-    if extra is None and len(by) == 1 and batch.n:
-        # fast path for the common single string key with no missing
-        # rows: group ids come straight off the dictionary codes — no
-        # combined-key unique over all rows
-        col = batch.cols.get(by[0])
-        if col is not None and col.kind == "str" and \
-                not (col.codes < 0).any():
-            counts = np.bincount(col.codes, minlength=len(col.vocab))
-            used = np.nonzero(counts)[0]
-            labels = [col.vocab[c] for c in used.tolist()]
-            order = sorted(range(len(labels)), key=labels.__getitem__)
-            lookup = np.empty(len(col.vocab), np.int64)
-            for rank, j in enumerate(order):
-                lookup[used[j]] = rank
-            return _Grouping(lookup[col.codes],
-                             [(labels[j],) for j in order])
+    if extra is None and by and batch.n:
+        grouping = _group_str_fast(batch, by)
+        if grouping is not None:
+            return grouping
     code_arrays: List[np.ndarray] = []
     labels_list: List[List] = []
     if extra is not None:
@@ -755,12 +802,7 @@ def _group(batch: _Batch, by: List[str],
     # decompose each unique combined code back into per-column labels
     keys = []
     for token in uniq.tolist():
-        parts = []
-        for size in reversed(sizes[1:]):
-            parts.append(token % size)
-            token //= size
-        parts.append(token)
-        parts.reverse()
+        parts = _decompose_key(token, sizes)
         keys.append(tuple(labels_list[j][p] for j, p in enumerate(parts)))
     order = sorted(range(len(keys)), key=keys.__getitem__)
     perm = np.empty(len(keys), np.int64)
@@ -1364,13 +1406,27 @@ class ScatterPlan:
     """Compiled scatter/gather plan for one ``stats``/``timechart``
     pipeline: predicate terms + row-local prefix stages that every shard
     runs, the aggregation to compute partials for, and the tail stages
-    the gather node runs on the merged rows."""
+    the gather node runs on the merged rows.
+
+    ``fingerprint`` canonically identifies the *partial-producing* half
+    of the plan (terms, prefix, aggregation, group keys, span, gathered
+    columns — everything **except** the tail, which only runs on merged
+    rows).  It keys the per-segment partial-aggregate caches, so two
+    queries differing only in their tail (``... | sort``, ``... |
+    where``) share cached partials.  See docs/incremental.md for the
+    format."""
 
     __slots__ = ("terms", "prefix", "cols", "cmd", "aggs", "by", "span",
-                 "tail")
+                 "tail", "fingerprint")
 
     def __init__(self, terms, prefix, cols, cmd, aggs, by, span,
-                 tail) -> None:
+                 tail, term_tokens) -> None:
+        # term_tokens is deliberately required: the fingerprint is a
+        # correctness-critical cache key, and defaulting the predicate
+        # tokens to () would let two plans with different predicates
+        # share cached partials
+        if len(term_tokens) != len(terms):
+            raise ValueError("term_tokens must mirror terms")
         self.terms = terms
         self.prefix = prefix
         self.cols = cols
@@ -1379,6 +1435,15 @@ class ScatterPlan:
         self.by = by
         self.span = span
         self.tail = tail
+        canon = ("plan-v1", cmd, float(span) if span is not None else None,
+                 tuple(term_tokens),
+                 tuple(tuple(toks) for toks in prefix),
+                 tuple((name, fieldname or "", out)
+                       for name, fieldname, out in aggs),
+                 tuple(by),
+                 tuple(sorted(cols)) if cols is not None else None)
+        self.fingerprint = hashlib.blake2b(
+            repr(canon).encode("utf-8"), digest_size=12).hexdigest()
 
 
 def compile_scatter_plan(stages: List[List[str]]) -> Optional[ScatterPlan]:
@@ -1416,31 +1481,29 @@ def compile_scatter_plan(stages: List[List[str]]) -> Optional[ScatterPlan]:
         if not fieldname and name != "count":
             return None  # whole-row aggregate
     terms: List[_Term] = []
+    term_tokens: List[str] = []
     prefix = stages[:k]
     if prefix and prefix[0][0] in ("search", "where"):
-        terms = [_Term(t) for t in prefix[0][1:]]
+        term_tokens = list(prefix[0][1:])
+        terms = [_Term(t) for t in term_tokens]
         prefix = prefix[1:]
     cols = referenced_columns(prefix + [stages[k]])
     return ScatterPlan(terms, prefix, cols, cmd, aggs, by, span,
-                       stages[k + 1:])
+                       stages[k + 1:], term_tokens=term_tokens)
 
 
-def scatter_partials(store: ColumnarMetricStore, plan: ScatterPlan
-                     ) -> Dict[tuple, Dict[str, Any]]:
-    """Shard-local half of a plan: run the prefix, group, and reduce
-    every group to partial aggregation states.
+def _batch_partials(batch: _Batch, plan: ScatterPlan
+                    ) -> Dict[tuple, Dict[str, Any]]:
+    """Run a plan's prefix + grouping + partial kernels on one gathered
+    batch, reducing it to ``{group key: {output name: partial state}}``.
 
-    Returns ``{group key: {output name: partial state}}``.  Raises
-    ``_Fallback`` when this shard's data defeats vectorization in a way
-    the partial kernels cannot express (callers then re-run the whole
-    query through the exact gather path).
+    Raises ``_Fallback`` when the batch's data defeats vectorization in
+    a way the partial kernels cannot express (eval on a mixed-type
+    column, non-float row semantics, ...): partial kernels cannot
+    reproduce row-engine value semantics, so callers re-plan the whole
+    query as an exact gather.
     """
-    batch = _batch_from_store(store, plan.terms, plan.cols)
     for toks in plan.prefix:
-        # a _Fallback here (eval on a mixed-type column, non-float row
-        # semantics, ...) propagates: partial kernels cannot reproduce
-        # row-engine value semantics, so the caller re-plans the whole
-        # query as an exact gather
         batch = _COL_COMMANDS[toks[0]](batch, toks[1:])
     if plan.cmd == "timechart":
         ts_col = batch.cols.get("ts")
@@ -1460,6 +1523,80 @@ def scatter_partials(store: ColumnarMetricStore, plan: ScatterPlan
             return {}
         grouping = _group(batch, plan.by)
     return _partial_aggregate(batch, grouping, plan.aggs)
+
+
+def _segment_partials(seg, plan: ScatterPlan) -> Dict[tuple, Dict[str, Any]]:
+    """Partial states of one segment under a plan — the cacheable unit.
+
+    Segments are immutable and the plan fingerprint pins everything
+    that shapes this result, so the value is valid for the segment's
+    whole lifetime (including after adoption by another store)."""
+    idx = _segment_match_idx(seg, plan.terms)
+    if idx is None or not len(idx):
+        return {}
+    batch = _merge_parts([(seg, idx)], plan.cols)
+    return _batch_partials(batch, plan)
+
+
+def scatter_partials(store: ColumnarMetricStore, plan: ScatterPlan,
+                     cache=None, stats: Optional[Dict[str, int]] = None
+                     ) -> Dict[tuple, Dict[str, Any]]:
+    """Store-local half of a plan: reduce every group of every segment
+    to partial aggregation states and merge them into one
+    ``{group key: {output name: partial state}}`` map.
+
+    The partial stage runs **per sealed segment** so results are
+    cacheable: with a ``cache`` (a
+    :class:`~repro.core.columnar.PartialAggregateCache`), each sealed
+    segment's map is looked up by ``(segment uid, plan fingerprint)``
+    and only missing segments — plus the unsealed append buffer, which
+    has no uid — are recomputed.  ``stats`` (when given) is incremented
+    in place: ``segments_cached`` / ``segments_computed`` /
+    ``buffer_rows``.
+
+    Raises ``_Fallback`` when some segment's data defeats the partial
+    kernels (callers then re-run the whole query through the exact
+    gather path); segments cached before the fallback stay valid.
+
+    When a single plan's sealed-segment sweep cannot fit in the cache
+    (``sealed > max_entries``) the cache is bypassed for this query
+    (``stats["cache_bypassed"]``): an LRU fed a cyclic sweep larger
+    than itself would evict every entry the next run needs — 0% hits
+    *and* it would clobber other plans' entries.  Size
+    ``partial_cache_entries`` to at least segments × actively refreshed
+    plans (docs/incremental.md).
+    """
+    maps: List[Dict[tuple, Dict[str, Any]]] = []
+    if hasattr(store, "segment_units"):
+        units = store.segment_units()
+    else:  # pragma: no cover - stores always expose segment_units
+        units = [(seg, None) for seg in store.segments()]
+    if cache is not None and cache.max_entries < sum(
+            1 for _seg, uid in units if uid is not None):
+        cache = None
+        if stats is not None:
+            stats["cache_bypassed"] = True
+    for seg, uid in units:
+        key = (uid, plan.fingerprint) if uid is not None else None
+        if cache is not None and key is not None:
+            hit = cache.get(key)
+            if hit is not None:
+                maps.append(hit)
+                if stats is not None:
+                    stats["segments_cached"] = \
+                        stats.get("segments_cached", 0) + 1
+                continue
+        pmap = _segment_partials(seg, plan)
+        if cache is not None and key is not None:
+            cache.put(key, pmap)
+        if stats is not None:
+            if uid is None:
+                stats["buffer_rows"] = stats.get("buffer_rows", 0) + seg.n
+            else:
+                stats["segments_computed"] = \
+                    stats.get("segments_computed", 0) + 1
+        maps.append(pmap)
+    return merge_partial_maps(maps, plan.aggs)
 
 
 def _partial_aggregate(batch: _Batch, grouping: _Grouping, aggs
@@ -1609,16 +1746,20 @@ def _merge_partial(name: str, a, b):
 
 def merge_partial_maps(maps: Iterable[Dict[tuple, Dict[str, Any]]],
                        aggs) -> Dict[tuple, Dict[str, Any]]:
-    """Gather half, step 1: union group keys across shards and merge
-    each group's partial states.  Consumes the shard maps (the first
-    occurrence of a group is reused as the accumulator); callers build
-    fresh partials per query."""
+    """Gather half, step 1: union group keys across partial maps
+    (per-segment and/or per-shard) and merge each group's states.
+
+    Never mutates the input maps or their partial states: inputs may be
+    live partial-cache entries, so each group's accumulator starts as a
+    shallow copy and every ``_merge_partial`` returns a fresh value
+    (tuples/ints are immutable; quantile-summary lists and ``dc`` label
+    sets are rebuilt, not extended in place)."""
     merged: Dict[tuple, Dict[str, Any]] = {}
     for m in maps:
         for key, partials in m.items():
             cur = merged.get(key)
             if cur is None:
-                merged[key] = partials
+                merged[key] = dict(partials)
                 continue
             for name, _fname, outname in aggs:
                 cur[outname] = _merge_partial(name, cur[outname],
@@ -1711,6 +1852,152 @@ def run_stages(rows: List[Row], stages: List[List[str]],
     return rows
 
 
+# ===========================================================================
+# Incremental execution: segment-keyed partial-aggregate caches
+# ===========================================================================
+#
+# Sealed segments are immutable, so a mergeable plan's partial states
+# for a segment never change: computing them once per (segment, plan
+# fingerprint) and caching turns a repeated fleet query into "recompute
+# the unsealed buffer, merge, finalize".  The incremental result is
+# byte-identical to recomputing every per-segment partial fresh (same
+# partition, same deterministic kernels, order-insensitive merges) —
+# the cached-vs-uncached parity suite asserts it.  Relative to the
+# *fused* single-store kernels the algebra is exact for every
+# aggregation except quantiles, which carry the documented P²-summary
+# merge bound (docs/sharding.md).  See docs/incremental.md.
+
+def _incremental_query(store: ColumnarMetricStore,
+                       stages: List[List[str]],
+                       plan: Optional[ScatterPlan] = None):
+    """Cache-aware execution of a pipeline against a single store.
+
+    Returns ``(rows, stats)``.  Mergeable pipelines run per-segment
+    partials through the store's :class:`PartialAggregateCache`;
+    anything else — and any ``_Fallback`` from mixed-type data — runs
+    the exact columnar executor (``stats["mode"] == "full"``).
+    ``plan`` skips recompilation when the caller (a
+    :class:`QueryHandle`) already compiled these stages.
+    """
+    if plan is None:
+        plan = compile_scatter_plan(stages)
+    if plan is not None:
+        stats = {"mode": "incremental", "fingerprint": plan.fingerprint,
+                 "segments_cached": 0, "segments_computed": 0,
+                 "buffer_rows": 0}
+        try:
+            merged = scatter_partials(store, plan,
+                                      cache=store.partial_cache,
+                                      stats=stats)
+        except _Fallback:
+            pass
+        else:
+            rows = finalize_partial_rows(merged, plan)
+            return run_stages(rows, plan.tail), stats
+    return _columnar_query(store, stages), {"mode": "full"}
+
+
+class QueryHandle:
+    """A registered, repeatedly-refreshed query — the streaming-
+    dashboard surface of the incremental engine (the paper's
+    "interactive analysis" loop: the aggregator pumps new samples, the
+    dashboard re-renders).
+
+    :meth:`refresh` returns the query's current rows.  While the store
+    version is unchanged the previous rows are returned as-is (treat
+    them as read-only); once data arrived, mergeable pipelines pay only
+    for the unsealed buffer plus newly sealed segments — cached
+    per-segment partials cover the rest.  Works over a single
+    :class:`ColumnarMetricStore` or a sharded store (whose scatter path
+    consults the per-shard caches on every query).
+    """
+
+    def __init__(self, store, q: str) -> None:
+        self.store = store
+        self.q = q
+        self._stages = _split_pipeline(q)
+        self.plan = compile_scatter_plan(self._stages)
+        self.refreshes = 0
+        self.last_rows: Optional[List[Row]] = None
+        self.last_stats: Optional[Dict] = None
+        self._last_version = None
+
+    def refresh(self, force: bool = False) -> List[Row]:
+        store = self.store
+        version = store._version() if hasattr(store, "_version") else None
+        if (not force and self.last_rows is not None
+                and version is not None
+                and version == self._last_version):
+            return self.last_rows
+        if getattr(store, "is_sharded", False):
+            rows = store.query(self.q)
+            stats = dict(store.last_query_stats or {})
+        elif isinstance(store, ColumnarMetricStore):
+            if self.plan is None:  # not mergeable: skip recompiling
+                rows, stats = _columnar_query(store, self._stages), \
+                    {"mode": "full"}
+            else:
+                rows, stats = _incremental_query(store, self._stages,
+                                                 plan=self.plan)
+            store.last_query_stats = stats
+        else:
+            rows = query(store, self.q)
+            stats = {"mode": "full"}
+        self.refreshes += 1
+        self.last_rows = rows
+        self.last_stats = stats
+        self._last_version = version
+        return rows
+
+    def explain(self) -> Dict[str, Any]:
+        """Execution mode + the last refresh's recompute counters."""
+        out: Dict[str, Any] = {"query": self.q,
+                               "incremental": self.plan is not None,
+                               "refreshes": self.refreshes}
+        if self.last_stats:
+            out.update(self.last_stats)
+        return out
+
+
+def explain_store(store: ColumnarMetricStore, q: str) -> Dict[str, Any]:
+    """Describe how ``q`` executes incrementally against one store:
+    plan shape, how many sealed segments already hold cached partials
+    for this plan's fingerprint, and the store's cumulative cache
+    counters.  Pure introspection — runs nothing, counts no hits."""
+    stages = _split_pipeline(q)
+    plan = compile_scatter_plan(stages)
+    cache = store.partial_cache
+    out: Dict[str, Any] = {
+        "shards": 1,
+        "cache": {"hits": cache.hits, "misses": cache.misses,
+                  "entries": len(cache), "evictions": cache.evictions},
+    }
+    if plan is None:
+        terms, rest = _leading_terms(stages)
+        cols = referenced_columns(rest)
+        out.update({
+            "mode": "full",
+            "pushed_terms": len(terms),
+            "columns": sorted(cols) if cols is not None else None,
+            "stages": [t[0] for t in rest],
+        })
+        return out
+    sealed = store.segment_units(include_buffer=False)
+    cached = sum(1 for _seg, uid in sealed
+                 if cache.peek((uid, plan.fingerprint)))
+    out.update({
+        "mode": "incremental",
+        "fingerprint": plan.fingerprint,
+        "partial_aggs": [name for name, _f, _o in plan.aggs],
+        "group_by": list(plan.by),
+        "columns": sorted(plan.cols) if plan.cols is not None else None,
+        "tail_stages": [t[0] for t in plan.tail],
+        "segments": {"sealed": len(sealed), "cached": cached,
+                     "buffer_rows": len(store._buffer)},
+    })
+    return out
+
+
 # ----------------------------------------------------------------- driver ---
 
 def query(source: Union[ColumnarMetricStore, Sequence[Row],
@@ -1719,14 +2006,21 @@ def query(source: Union[ColumnarMetricStore, Sequence[Row],
     """Run an SPL-like pipeline over a store / record list / row list.
 
     ``engine`` — ``None`` (auto: columnar for stores, rows otherwise),
-    ``"columnar"`` or ``"rows"`` to force an executor.  A sharded store
+    ``"columnar"`` or ``"rows"`` to force an executor, or
+    ``"incremental"`` to run a single store through the segment-keyed
+    partial-aggregate cache (mergeable pipelines only; anything else
+    falls back to the exact columnar path).  A sharded store
     (``repro.core.shards.ShardedAggregator``) plans its own distributed
-    execution and is dispatched to directly.
+    execution — cache-aware by default — and is dispatched to directly.
     """
     if getattr(source, "is_sharded", False):
         return source.query(q, engine=engine)
     stages = _split_pipeline(q)
     if isinstance(source, ColumnarMetricStore):
+        if engine == "incremental":
+            rows, stats = _incremental_query(source, stages)
+            source.last_query_stats = stats
+            return rows
         if engine != "rows":
             return _columnar_query(source, stages)
         rows: List[Row] = [r.as_dict() for r in source.records]

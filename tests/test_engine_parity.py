@@ -44,6 +44,9 @@ AGG_QUERIES = [
     "stats avg(gflops) as g max(step) as s by job host",
     "stats count by step",          # numeric group keys
     "stats count by app",           # group key with missing values
+    "stats count by job host app",  # multi string keys (dict fast path)
+    "stats avg(gflops) dc(step) by app job",  # multi keys w/ missing rows
+    "stats count by app kind",      # missing + reserved-attr key mix
     "search kind=perf | timechart span=30 avg(gflops) count",
     "timechart span=100 p90(gflops) max(step) by job",
     "timechart span=45 avg(mfu) by host app",

@@ -1,0 +1,592 @@
+"""Incremental query engine: segment-keyed partial-aggregate caches.
+
+The contract under test (docs/incremental.md): caching per-segment
+partial aggregation states keyed by ``(segment uid, plan fingerprint)``
+must never change query results — cold (empty cache), warm (all sealed
+segments cached), and every mixed state in between return
+**byte-identical** rows, across append→seal transitions, restart from
+disk, and whole-segment adoption/migration, on single stores and
+sharded stores alike.  ``explain()`` counters prove that a warm re-run
+recomputes only the unsealed buffer plus newly sealed segments.
+"""
+
+import math
+
+import pytest
+
+from conftest import assert_rows_equal, random_records, random_store
+from test_engine_parity import AGG_QUERIES, PIPELINE_QUERIES, SEARCH_QUERIES
+
+from repro.core.aggregator import Aggregator, MetricStore
+from repro.core.columnar import (SCAN_MEMO_MAX, PartialAggregateCache,
+                                 segment_uid)
+from repro.core.schema import MetricRecord
+from repro.core.shards import ShardedAggregator
+from repro.core.splunklite import (QueryHandle, _split_pipeline,
+                                   compile_scatter_plan, query)
+
+RECORDS = random_records(seed=11, n=420)
+ALL_QUERIES = SEARCH_QUERIES + AGG_QUERIES + PIPELINE_QUERIES
+MERGEABLE = [q for q in ALL_QUERIES
+             if compile_scatter_plan(_split_pipeline(q)) is not None]
+NON_MERGEABLE = [q for q in ALL_QUERIES if q not in MERGEABLE]
+
+FLEET_Q = ("search kind=perf gflops>10 | stats avg(gflops) p90(gflops) "
+           "count by job | sort -avg_gflops | head 10")
+
+
+def rows_identical(got, want, q):
+    """Byte-identical row lists: same order, keys, types and values
+    (NaN compares equal to NaN; int 3 is NOT float 3.0)."""
+    assert len(got) == len(want), \
+        f"{q!r}: {len(got)} rows vs {len(want)}"
+    for i, (g, w) in enumerate(zip(got, want)):
+        assert set(g) == set(w), f"{q!r} row {i}: keys differ"
+        for k in w:
+            gv, wv = g[k], w[k]
+            if isinstance(gv, float) and isinstance(wv, float) \
+                    and math.isnan(gv) and math.isnan(wv):
+                continue
+            assert type(gv) is type(wv) and gv == wv, \
+                f"{q!r} row {i} field {k}: {gv!r} != {wv!r}"
+
+
+def clear_partial_caches(store):
+    for shard in getattr(store, "shards", [store]):
+        shard.partial_cache.clear()
+
+
+def run_cached(store, q):
+    """The cache-aware path for either store flavor."""
+    if getattr(store, "is_sharded", False):
+        return store.query(q)
+    return query(store, q, engine="incremental")
+
+
+# ------------------------------------------------------ cold/warm parity --
+
+@pytest.fixture(scope="module")
+def single():
+    return random_store(records=RECORDS, seal_threshold=67)
+
+
+@pytest.fixture(scope="module", params=[1, 2, 7])
+def sharded(request):
+    return random_store(records=RECORDS, shards=request.param,
+                        seal_threshold=53)
+
+
+@pytest.mark.parametrize("q", MERGEABLE)
+def test_cached_vs_uncached_single_store(q, single):
+    clear_partial_caches(single)
+    cold = run_cached(single, q)
+    warm = run_cached(single, q)
+    warm2 = run_cached(single, q)
+    rows_identical(warm, cold, q)
+    rows_identical(warm2, cold, q)
+    stats = single.last_query_stats
+    # data can still defeat the partial kernels (e.g. an eval whose
+    # row-engine result is non-float); the fallback must say so
+    assert stats["mode"] in ("incremental", "full")
+    if stats["mode"] == "incremental":
+        assert stats["segments_computed"] == 0
+
+
+@pytest.mark.parametrize("q", MERGEABLE)
+def test_cached_vs_uncached_sharded(q, sharded):
+    clear_partial_caches(sharded)
+    cold = run_cached(sharded, q)
+    warm = run_cached(sharded, q)
+    rows_identical(warm, cold, q)
+    stats = sharded.last_query_stats
+    assert stats["mode"] in ("scatter_gather", "exact_gather")
+    if stats["mode"] == "scatter_gather":
+        assert stats["segments_computed"] == 0
+
+
+@pytest.mark.parametrize("q", NON_MERGEABLE)
+def test_non_mergeable_falls_back_exactly(q, single):
+    got = query(single, q, engine="incremental")
+    assert single.last_query_stats == {"mode": "full"}
+    assert_rows_equal(got, query(single, q), q)
+
+
+def test_incremental_vs_exact_engines_non_quantile(single):
+    # without quantiles the partial algebra is exact: the incremental
+    # path must agree with the fused columnar kernels and the row
+    # oracle (within float-merge tolerance)
+    q = ("search kind=perf | stats count avg(gflops) min(gflops) "
+         "max(gflops) stdev(gflops) dc(host) by job")
+    clear_partial_caches(single)
+    inc = run_cached(single, q)
+    assert_rows_equal(inc, query(single, q), q)
+    assert_rows_equal(inc, query(single, q, engine="rows"), q)
+
+
+# ---------------------------------------------------- append -> seal ------
+
+def test_append_seal_transitions_single_store():
+    store = MetricStore(seal_threshold=60)
+    feed = iter(random_records(seed=12, n=400))
+    for _ in range(150):
+        store.insert(next(feed))
+    q = FLEET_Q
+    warm_prev = run_cached(store, q)
+    fed = 150
+    while fed < 400:
+        # batches of 45 cross a seal boundary every other iteration
+        for _ in range(min(45, 400 - fed)):
+            store.insert(next(feed))
+            fed += 1
+        warm = run_cached(store, q)
+        stats = dict(store.last_query_stats)
+        clear_partial_caches(store)
+        uncached = run_cached(store, q)
+        rows_identical(warm, uncached, q)
+        # at most one seal per 45-record batch at threshold 60, so the
+        # warm pass recomputes at most one segment (plus the buffer)
+        assert stats["segments_computed"] <= 1
+        warm_prev = warm
+    assert warm_prev  # data actually flowed
+
+
+def test_requery_after_append_recomputes_only_buffer(single):
+    clear_partial_caches(single)
+    run_cached(single, FLEET_Q)
+    n_sealed = len(single._sealed)
+    # buffer-only append: no new seal at threshold 67
+    single.insert(MetricRecord(99991.0, "n0", "alpha.1", "perf",
+                               {"gflops": 123.0}))
+    run_cached(single, FLEET_Q)
+    stats = single.last_query_stats
+    assert stats["segments_cached"] == n_sealed
+    assert stats["segments_computed"] == 0
+    assert stats["buffer_rows"] == len(single._buffer)
+
+
+def test_tail_only_queries_share_cached_partials(single):
+    clear_partial_caches(single)
+    base = "search kind=perf | stats avg(gflops) count by job"
+    run_cached(single, base)
+    e1 = single.explain(base)
+    # same partial prefix, different tails -> same fingerprint, all hits
+    for tail in (" | sort -avg_gflops", " | where count>3 | head 2"):
+        e2 = single.explain(base + tail)
+        assert e2["fingerprint"] == e1["fingerprint"]
+        run_cached(single, base + tail)
+        assert single.last_query_stats["segments_computed"] == 0
+
+
+# ----------------------------------------------------------- durability --
+
+def test_restart_preserves_segment_uids_and_results(tmp_path):
+    store = random_store(records=RECORDS, seal_threshold=37,
+                         directory=tmp_path / "s")
+    uids = [seg.uid for seg in store._sealed]
+    assert all(uids) and len(set(uids)) == len(uids)
+    before = run_cached(store, FLEET_Q)
+    store.close()
+    re = MetricStore(seal_threshold=37, directory=tmp_path / "s")
+    assert [seg.uid for seg in re._sealed] == uids
+    after_cold = run_cached(re, FLEET_Q)
+    rows_identical(after_cold, before, FLEET_Q)
+    # second run over the restarted store is fully cached
+    rows_identical(run_cached(re, FLEET_Q), before, FLEET_Q)
+    assert re.last_query_stats["segments_cached"] == len(uids)
+    re.close()
+
+
+def test_restart_sharded_parity(tmp_path):
+    sh = random_store(records=RECORDS, shards=3, seal_threshold=37,
+                      directory=tmp_path / "fleet")
+    before = run_cached(sh, FLEET_Q)
+    sh.close()
+    re = ShardedAggregator(num_shards=3, seal_threshold=37,
+                           directory=tmp_path / "fleet")
+    rows_identical(run_cached(re, FLEET_Q), before, FLEET_Q)
+    rows_identical(run_cached(re, FLEET_Q), before, FLEET_Q)
+    assert re.last_query_stats["segments_computed"] == 0
+    re.close()
+
+
+def test_legacy_manifest_without_uid_gets_content_uid(tmp_path):
+    import json
+    store = random_store(records=RECORDS[:150], seal_threshold=40,
+                         directory=tmp_path / "s")
+    uids = [seg.uid for seg in store._sealed]
+    store.close()
+    # simulate a pre-uid manifest (earlier format revisions)
+    for man in sorted((tmp_path / "s" / "segments").glob("seg-*.json")):
+        doc = json.loads(man.read_text())
+        doc.pop("uid")
+        man.write_text(json.dumps(doc))
+    re = MetricStore(seal_threshold=40, directory=tmp_path / "s")
+    # uid is a pure function of content, so the fallback derivation
+    # reproduces the original values
+    assert [seg.uid for seg in re._sealed] == uids
+    re.close()
+
+
+# ------------------------------------------------- adoption / migration --
+
+def test_adopted_segment_keeps_uid_and_cached_results(tmp_path):
+    src = random_store(records=RECORDS[:200], seal_threshold=50,
+                       directory=tmp_path / "src")
+    src_uids = [seg.uid for seg in src._sealed]
+    src.close()
+    dst = MetricStore(seal_threshold=50, directory=tmp_path / "dst")
+    for man in sorted((tmp_path / "src" / "segments").glob("seg-*.json")):
+        dst.adopt_segment(man)
+    assert [seg.uid for seg in dst._sealed] == src_uids
+    cold = run_cached(dst, FLEET_Q)
+    rows_identical(run_cached(dst, FLEET_Q), cold, FLEET_Q)
+    assert dst.last_query_stats["segments_cached"] == len(src_uids)
+    dst.close()
+
+
+def test_migration_into_sharded_store_parity_and_cache_survival(tmp_path):
+    src = random_store(records=RECORDS[:200], seal_threshold=40,
+                       directory=tmp_path / "src")
+    src.close()
+    sh = random_store(records=RECORDS[200:], shards=3, policy="time",
+                      seal_threshold=40)
+    prime = run_cached(sh, FLEET_Q)
+    assert prime is not None
+    sealed_before = sum(len(s._sealed) for s in sh.shards)
+    hits_before = sh.partial_cache_hits
+    n = sh.adopt_store_dir(tmp_path / "src")
+    assert n == 200
+    warm = run_cached(sh, FLEET_Q)
+    stats = sh.last_query_stats
+    sealed_after = sum(len(s._sealed) for s in sh.shards)
+    # pre-adoption segments still served from cache; only segments the
+    # migration brought in (adopted whole or re-sealed from re-ingest)
+    # were recomputed
+    assert stats["segments_cached"] >= sealed_before
+    assert stats["segments_computed"] == sealed_after - sealed_before
+    assert sh.partial_cache_hits > hits_before
+    clear_partial_caches(sh)
+    rows_identical(run_cached(sh, FLEET_Q), warm, FLEET_Q)
+    # and the merged data matches a single store over the same records
+    single = random_store(records=RECORDS, seal_threshold=40)
+    got = {r["job"]: r for r in warm}
+    want = {r["job"]: r for r in query(single, FLEET_Q)}
+    assert got.keys() == want.keys()
+    for job, w in want.items():
+        assert got[job]["count"] == w["count"]
+        assert abs(got[job]["avg_gflops"] - w["avg_gflops"]) <= 1e-9
+    sh.close()
+
+
+# ------------------------------------------------------------- explain ---
+
+def test_explain_reports_cache_state(single):
+    clear_partial_caches(single)
+    e0 = single.explain(FLEET_Q)
+    assert e0["mode"] == "incremental"
+    assert e0["segments"]["cached"] == 0
+    assert e0["segments"]["sealed"] == len(single._sealed)
+    run_cached(single, FLEET_Q)
+    e1 = single.explain(FLEET_Q)
+    assert e1["segments"]["cached"] == e1["segments"]["sealed"]
+    assert e1["cache"]["entries"] >= e1["segments"]["sealed"]
+    # explain is pure introspection: counters unchanged by explain
+    assert single.explain(FLEET_Q)["cache"] == e1["cache"]
+    e_full = single.explain("search kind=perf | sort -gflops | head 3")
+    assert e_full["mode"] == "full"
+    assert "cache" in e_full
+
+
+def test_sharded_explain_reports_cache_state(sharded):
+    clear_partial_caches(sharded)
+    e0 = sharded.explain(FLEET_Q)
+    assert e0["mode"] == "scatter_gather"
+    assert e0["segments"]["cached"] == 0
+    run_cached(sharded, FLEET_Q)
+    e1 = sharded.explain(FLEET_Q)
+    assert e1["segments"]["cached"] == e1["segments"]["sealed"] > 0
+    assert e1["cache"]["entries"] == e1["segments"]["sealed"]
+    assert e1["shards"] == sharded.num_shards
+
+
+# ----------------------------------------------------- cache mechanics ---
+
+def test_partial_cache_lru_bound_and_counters():
+    cache = PartialAggregateCache(max_entries=3)
+    for i in range(5):
+        cache.put((f"seg{i}", "fp"), {("k",): {"count": i}})
+    assert len(cache) == 3 and cache.evictions == 2
+    assert cache.get(("seg0", "fp")) is None  # evicted (oldest)
+    assert cache.get(("seg4", "fp"))[("k",)]["count"] == 4
+    assert cache.misses == 1 and cache.hits == 1
+    # peek neither counts nor reorders
+    assert cache.peek(("seg4", "fp"))
+    assert cache.hits == 1
+    # drop_segment removes every plan's entry for that segment
+    cache.put(("seg4", "fp2"), {})
+    assert cache.drop_segment("seg4") == 2
+    assert not cache.peek(("seg4", "fp"))
+
+
+def test_partial_cache_entries_zero_disables_caching():
+    store = MetricStore(seal_threshold=60, partial_cache_entries=0)
+    for rec in RECORDS[:200]:
+        store.insert(rec)
+    a = run_cached(store, FLEET_Q)
+    b = run_cached(store, FLEET_Q)  # must not crash on put-evict
+    rows_identical(b, a, FLEET_Q)
+    assert len(store.partial_cache) == 0
+    assert store.last_query_stats["segments_cached"] == 0
+    assert store.last_query_stats["segments_computed"] == \
+        len(store._sealed)
+
+
+def test_oversized_segment_sweep_bypasses_cache():
+    # a plan sweeping more sealed segments than the cache can hold
+    # would thrash the LRU (0% hits + collateral eviction), so the
+    # sweep skips the cache and says so — results stay byte-identical
+    store = MetricStore(seal_threshold=60, partial_cache_entries=2)
+    for rec in RECORDS[:300]:
+        store.insert(rec)
+    assert len(store._sealed) == 5
+    a = run_cached(store, FLEET_Q)
+    b = run_cached(store, FLEET_Q)
+    rows_identical(b, a, FLEET_Q)
+    stats = store.last_query_stats
+    assert stats["cache_bypassed"] and stats["segments_cached"] == 0
+    assert stats["segments_computed"] == 5
+    assert len(store.partial_cache) == 0  # nothing clobbered into it
+
+
+def test_streaming_view_sees_postprocess_state_changes():
+    # a manifests dict can gain a job with no new metric records; the
+    # postprocess must re-run even though the store version (and thus
+    # the query rows) did not change
+    from repro.core.daemon import JobManifest
+    from repro.core.dashboards import (streaming_specialized_views,
+                                       view_low_participation)
+    store = MetricStore(seal_threshold=25)
+    for h in range(1):
+        for s in range(10):
+            store.insert(MetricRecord(1000.0 + s, f"n{h}", "jobQ", "perf",
+                                      {"gflops": 10.0, "step": s}))
+    manifests = {}
+    views = streaming_specialized_views(store, manifests)
+    assert views["low_participation"].refresh() == []
+    r_empty = views["low_participation"].rendered()
+    manifests["jobQ"] = JobManifest(job_id="jobQ", num_hosts=8)
+    want = view_low_participation(store, manifests)
+    assert want  # one host active out of 8 allocated
+    assert views["low_participation"].refresh() == want
+    assert views["low_participation"].rendered() is not r_empty
+
+
+def test_store_partial_cache_bounded():
+    store = MetricStore(seal_threshold=97, partial_cache_entries=6)
+    for rec in RECORDS:
+        store.insert(rec)
+    queries = [f"search kind=perf | stats count avg(gflops) by {by}"
+               for by in ("job", "host", "app", "kind")]
+    for q in queries:
+        run_cached(store, q)
+    assert len(store.partial_cache) <= 6
+    assert store.partial_cache.evictions > 0
+
+
+def test_version_memos_evicted_on_write():
+    store = MetricStore(seal_threshold=97)
+    for rec in RECORDS[:120]:
+        store.insert(rec)
+    _ = store.records
+    store.scan(kind="perf", fields=("gflops",))
+    assert "records" in store._cache and "scans" in store._cache
+    store.insert(RECORDS[200])
+    assert not store._cache  # superseded memos are gone immediately
+    # the partial cache is NOT version-scoped: prime then insert
+    run_cached(store, FLEET_Q)
+    entries = len(store.partial_cache)
+    store.insert(RECORDS[201])
+    assert len(store.partial_cache) == entries
+
+
+def test_scan_memo_is_lru_bounded():
+    store = MetricStore(seal_threshold=97)
+    for rec in RECORDS[:120]:
+        store.insert(rec)
+    for i in range(SCAN_MEMO_MAX + 8):
+        store.scan(since=float(i), fields=("gflops",))
+    memo = store._cache["scans"][1]
+    assert len(memo) == SCAN_MEMO_MAX
+    # oldest keys evicted, newest retained
+    assert float(SCAN_MEMO_MAX + 7) in {k[2] for k in memo}
+    assert 0.0 not in {k[2] for k in memo}
+
+
+def test_segment_uid_is_content_derived():
+    keys = [b"b" * 12, b"a" * 12, b"c" * 12]
+    assert segment_uid(keys) == segment_uid(reversed(keys))
+    assert segment_uid(keys) != segment_uid(keys[:2])
+    store = random_store(records=RECORDS[:150], seal_threshold=40)
+    assert all(seg.uid for seg in store._sealed)
+    buffer_units = [u for _s, u in store.segment_units() if u is None]
+    assert len(buffer_units) == (1 if store._buffer else 0)
+
+
+def test_incremental_transient_build_matches_full_rebuild():
+    # interleave inserts with queries (each query snapshots the buffer
+    # into a transient segment, extended incrementally on the next
+    # build) and compare against a control store that never queried —
+    # records, scans, and every engine's results must be identical
+    from repro.core.columnar import columns_from_records
+    from repro.core.schema import encode_line
+    recs = random_records(seed=21, n=260)
+    # shuffle timestamps so the buffer is NOT insertion-ordered and
+    # duplicate some so the stable tie-break is exercised
+    mixed = []
+    for i, r in enumerate(recs):
+        ts = float(recs[(i * 7) % len(recs)].ts)
+        mixed.append(MetricRecord(ts if i % 3 else recs[0].ts, r.host,
+                                  r.job, r.kind, dict(r.fields)))
+    live = MetricStore(seal_threshold=500)    # everything stays buffered
+    control = MetricStore(seal_threshold=500)
+    queries = ["stats count avg(gflops) by job host",
+               "search kind=perf | stats first(app) last(gflops) by job",
+               "sort -gflops | head 5", "dedup job app"]
+    for i, rec in enumerate(mixed):
+        live.insert(rec)
+        control.insert(rec)
+        if i % 17 == 0:
+            query(live, queries[i % len(queries)])  # builds transient
+    assert [encode_line(r) for r in live.records] == \
+        [encode_line(r) for r in control.records]
+    full = columns_from_records(control._buffer)
+    inc = live.segment_units()[-1][0]
+    assert inc.n == full.n
+    assert set(inc.field_names) == set(full.field_names)
+    for q in queries + ["search app=gem* | stats dc(host) by job",
+                        "timechart span=40 p90(gflops) by host"]:
+        assert_rows_equal(query(live, q), query(control, q), q)
+        assert_rows_equal(query(live, q, engine="rows"),
+                          query(control, q, engine="rows"), q)
+
+
+# -------------------------------------------------------- query handles --
+
+def test_query_handle_memoizes_until_version_changes(single):
+    h = QueryHandle(single, FLEET_Q)
+    a = h.refresh()
+    assert h.refresh() is a  # no new data: same rows object
+    single.insert(MetricRecord(99992.0, "n1", "beta.2", "perf",
+                               {"gflops": 321.0}))
+    b = h.refresh()
+    assert b is not a
+    clear_partial_caches(single)
+    rows_identical(run_cached(single, FLEET_Q), b, FLEET_Q)
+    assert h.explain()["incremental"] and h.refreshes == 2
+
+
+def test_query_handle_non_mergeable_and_plain_rows(single):
+    h = QueryHandle(single, "search kind=perf | sort -gflops | head 4")
+    assert_rows_equal(h.refresh(),
+                      query(single, "search kind=perf | sort -gflops "
+                                    "| head 4"), "handle-fallback")
+    assert h.explain()["mode"] == "full"
+    rows = [{"x": 1.0}, {"x": 2.0}]
+    h2 = QueryHandle(rows, "stats sum(x)")
+    assert h2.refresh() == [{"sum_x": 3.0}]
+
+
+def test_query_handle_over_sharded_store(sharded):
+    h = QueryHandle(sharded, FLEET_Q)
+    a = h.refresh()
+    assert h.refresh() is a
+    assert h.last_stats["mode"] == "scatter_gather"
+    rows_identical(a, query(sharded, FLEET_Q), FLEET_Q)
+
+
+def test_aggregator_watch_refresh_loop(tmp_path):
+    agg = Aggregator(tmp_path / "inbox", store=MetricStore(
+        seal_threshold=30))
+    h = agg.watch("search kind=perf | stats count by job")
+    assert agg.refresh_watches()[h.q] == []
+    for rec in RECORDS[:100]:
+        agg.store.insert(rec)
+    total = sum(r["count"] for r in h.refresh())
+    want = len([r for r in RECORDS[:100] if r.kind == "perf"])
+    assert total == want
+    assert h.last_stats["mode"] == "incremental"
+
+
+# ------------------------------------------------------ streaming views --
+
+def test_streaming_views_match_one_shot_views():
+    from repro.core.daemon import JobManifest
+    from repro.core.dashboards import (streaming_specialized_views,
+                                       view_idle_accelerators,
+                                       view_low_participation,
+                                       view_memory_underuse)
+    store = MetricStore(seal_threshold=25)
+    manifests = {}
+    for j in range(4):
+        job = f"jobA.{j}"
+        manifests[job] = JobManifest(
+            job_id=job, app="gemma", num_hosts=4,
+            extra={"large_memory": "1"} if j == 1 else {})
+        for h in range(4 if j != 2 else 1):
+            for s in range(12):
+                store.insert(MetricRecord(
+                    1000.0 + s * 10.0, f"n{j}-{h}", job, "perf",
+                    {"gflops": 100.0, "mfu": 0.4, "step": s}))
+                store.insert(MetricRecord(
+                    1000.0 + s * 10.0 + 0.5, f"n{j}-{h}", job, "device",
+                    {"hbm_frac_used": 0.02 if j in (0, 1) else 0.6}))
+    views = streaming_specialized_views(store, manifests)
+    assert views["idle_accelerators"].refresh() == \
+        view_idle_accelerators(store)
+    assert views["memory_underuse"].refresh() == \
+        view_memory_underuse(store, manifests)
+    assert views["low_participation"].refresh() == \
+        view_low_participation(store, manifests)
+    # renders are memoized until the rows change
+    r1 = views["idle_accelerators"].rendered()
+    assert views["idle_accelerators"].rendered() is r1
+    assert views["idle_accelerators"].renders == 1
+    store.insert(MetricRecord(5000.0, "nZ", "jobA.0", "device",
+                              {"hbm_frac_used": 0.01}))
+    assert views["idle_accelerators"].refresh() == \
+        view_idle_accelerators(store)
+    assert views["idle_accelerators"].rendered() is not r1
+    # idle + memory views share one cached aggregation prefix
+    fp_idle = views["idle_accelerators"].explain().get("fingerprint")
+    fp_mem = views["memory_underuse"].explain().get("fingerprint")
+    assert fp_idle == fp_mem
+
+
+# ------------------------------------------------- multi-key group-by -----
+
+MULTI_KEY_QUERIES = [
+    "stats count by job host",
+    "stats count by job host app",           # app has missing rows
+    "stats avg(gflops) min(step) by app job kind",
+    "search kind=perf | stats dc(host) sum(gflops) by app job",
+]
+
+
+@pytest.mark.parametrize("q", MULTI_KEY_QUERIES)
+def test_multi_key_string_group_by_parity(q, single):
+    got = query(single, q)
+    assert_rows_equal(got, query(single, q, engine="rows"), q)
+    keys = [tuple(sorted(r.items())) for r in got]
+    assert len(set(keys)) == len(keys)  # no duplicated groups
+
+
+def test_multi_key_fast_path_engages():
+    from repro.core.splunklite import _batch_from_store, _group_str_fast
+    store = random_store(records=RECORDS, seal_threshold=67)
+    batch = _batch_from_store(store, [])
+    g = _group_str_fast(batch, ["job", "host"])
+    assert g is not None and g.G == len(
+        {(str(r.job), str(r.host)) for r in RECORDS})
+    assert g.keys == sorted(g.keys)
+    # numeric key columns are not dictionary-encoded: fast path declines
+    assert _group_str_fast(batch, ["job", "step"]) is None
