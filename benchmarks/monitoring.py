@@ -17,6 +17,9 @@ table/figure/claim.
   append-then-requery (docs/incremental.md).
 * ``bench_restart``       — §4.3 retention: aggregator cold-start from
   persisted columnar segments (mmap) vs full wire-line replay.
+* ``bench_remote``        — remote shard execution (docs/remote.md):
+  fleet query over 4 worker processes (overlapped scatter + worker-side
+  partial caches) vs the same-run in-process sharded path.
 """
 
 from __future__ import annotations
@@ -407,6 +410,81 @@ def bench_incremental(out_dir: Path):
         row("incremental.sharded_fleet_query_warm", us_sh_warm,
             "4shards,per-shard_caches"),
     ]
+
+
+def bench_remote(out_dir: Path):
+    """Remote shard execution (docs/remote.md): the ≥100k-record fleet
+    workload is built into a durable 4-shard store, then served by 4
+    worker processes.  Measures the warm remote fleet query (worker-
+    side partial caches primed; only append buffers recompute) against
+    the same-run in-process sharded warm latency, plus a cold run with
+    worker caches cleared.  Asserts byte parity with the in-process
+    result, the ≤3x warm-latency acceptance bound, and that the
+    overlap path issued every shard request before the first merge.
+    Workers are started and stopped under hard deadlines — a hung
+    worker cannot wedge the job."""
+    import shutil
+    import tempfile
+    from repro.core.remote import RemoteShardedAggregator
+    from repro.core.shards import ShardedAggregator
+    from repro.core.splunklite import query
+    tmp = Path(tempfile.mkdtemp())
+    fleet = None
+    try:
+        sharded = ShardedAggregator(num_shards=4, directory=tmp / "fleet",
+                                    seal_threshold=4096)
+        _fleet_store(n_jobs=110, hosts_per_job=8, samples=60, store=sharded)
+        n = len(sharded)
+        q = ("search kind=perf gflops>0 "
+             "| stats avg(gflops) p90(step_time_s) count by job "
+             "| sort -avg_gflops | head 10")
+        query(sharded, q)  # prime the in-process per-shard caches
+        us_inproc = timeit(lambda: query(sharded, q), warmup=1, iters=9)
+        want = query(sharded, q)
+        sharded.close()
+        # the worker fleet re-adopts the durable shard dirs (segments
+        # mmap back in, WAL tails replay) — the PR 2 restart path
+        fleet = RemoteShardedAggregator(num_shards=4,
+                                        directory=tmp / "fleet",
+                                        seal_threshold=4096,
+                                        worker_idle_timeout_s=300.0,
+                                        spawn_timeout_s=60.0)
+        assert len(fleet) == n
+
+        def cold():
+            for sh in fleet.shards:
+                sh.rpc("clear_cache")
+            fleet.drop_scatter_memos()
+            return query(fleet, q)
+
+        got = cold()
+        assert got == want, "remote rows diverged from in-process sharded"
+        us_cold = timeit(cold, warmup=1, iters=3)
+        query(fleet, q)  # prime worker caches
+        us_warm = timeit(lambda: query(fleet, q), warmup=1, iters=9)
+        stats = fleet.last_query_stats
+        assert stats["mode"] == "scatter_gather" and stats["remote"]
+        assert stats["segments_computed"] == 0, stats
+        assert stats["degraded_shards"] == 0, stats
+        assert stats["overlap"], \
+            "scatter must issue all shard requests before the first merge"
+        ratio = us_warm / max(us_inproc, 1e-9)
+        # acceptance: warm remote fleet query within 3x of the same-run
+        # in-process sharded warm latency (wire framing + codec is the
+        # only extra work — partials are small)
+        assert ratio <= 3.0, (us_warm, us_inproc)
+        return [
+            row("remote.fleet_query_warm", us_warm,
+                f"{n}records,4workers,{ratio:.2f}x_of_inproc"),
+            row("remote.fleet_query_cold", us_cold,
+                "worker_caches_cleared"),
+            row("remote.fleet_query_inproc", us_inproc,
+                "same_run_in_process_sharded_warm"),
+        ]
+    finally:
+        if fleet is not None:
+            fleet.close()
+        shutil.rmtree(tmp, ignore_errors=True)
 
 
 def bench_restart(out_dir: Path):

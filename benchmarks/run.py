@@ -13,6 +13,7 @@ trajectory is tracked across PRs.
   splunklite    — analysis-layer query latency (columnar vs legacy rows)
   sharded       — multi-aggregator scatter/gather fan-out vs single store
   incremental   — segment-keyed partial-aggregate cache: cold vs warm
+  remote        — worker-process shard fleet vs in-process sharded
   restart       — aggregator cold-start: mmap segments vs line replay
   transport     — rsyslog-analog throughput
   kernels.*     — Pallas kernels vs jnp oracles (interpret mode)
@@ -53,6 +54,7 @@ def main() -> None:
         mbench.bench_splunklite,
         mbench.bench_sharded,
         mbench.bench_incremental,
+        mbench.bench_remote,
         mbench.bench_restart,
         mbench.bench_transport,
         kbench.bench_flash_attention,

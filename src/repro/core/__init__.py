@@ -9,6 +9,7 @@ from repro.core.derived import (HardwareSpec, RooflineTerms, TPU_V5E, mfu,
                                 roofline_terms)
 from repro.core.detectors import DetectorBank, DetectorEvent
 from repro.core.hooks import TrainMonitor, load_manifests
+from repro.core.remote import RemoteShardedAggregator
 from repro.core.schema import MetricRecord, encode_line, parse_line
 from repro.core.shards import ShardedAggregator
 from repro.core.splunklite import query
@@ -17,6 +18,7 @@ __all__ = [
     "Aggregator", "MetricStore", "ColumnarMetricStore", "ColumnScan",
     "Segment", "DaemonConfig", "Hpcmd", "JobManifest",
     "HardwareSpec", "RooflineTerms", "TPU_V5E", "mfu", "roofline_terms",
-    "DetectorBank", "DetectorEvent", "ShardedAggregator", "TrainMonitor",
+    "DetectorBank", "DetectorEvent", "RemoteShardedAggregator",
+    "ShardedAggregator", "TrainMonitor",
     "load_manifests", "MetricRecord", "encode_line", "parse_line", "query",
 ]

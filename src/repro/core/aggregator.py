@@ -40,7 +40,12 @@ class Aggregator:
     instead of one store: inserts route to N shards and fleet queries
     run through the scatter/gather planner (``store_dir`` then holds a
     ``shards.json`` manifest plus one standalone store directory per
-    shard).  ``persist_path`` is the legacy consolidated line archive,
+    shard).  ``remote_workers=True`` additionally moves each shard into
+    its own worker process
+    (:class:`~repro.core.remote.RemoteShardedAggregator`, the PerSyst
+    agent-tree shape — docs/remote.md); watches, dashboards, and
+    detectors run unchanged over the wire.  ``persist_path`` is the
+    legacy consolidated line archive,
     kept as a *fallback*: writing it is deprecated, but
     :meth:`load_archive` still reads old archives (e.g. to migrate one
     into a ``store_dir``).  Pass a pre-configured ``store`` instead to
@@ -53,11 +58,20 @@ class Aggregator:
                  store_dir: Optional[os.PathLike] = None,
                  wal_fsync: bool = False,
                  shards: Optional[int] = None,
-                 shard_policy="hash") -> None:
+                 shard_policy="hash",
+                 remote_workers: bool = False) -> None:
         self.inbox_dir = Path(inbox_dir)
         self.inbox_dir.mkdir(parents=True, exist_ok=True)
+        if remote_workers and store is None and shards is None:
+            raise ValueError("remote_workers=True requires shards=N")
         if store is not None:
             self.store = store
+        elif shards is not None and remote_workers:
+            from repro.core.remote import RemoteShardedAggregator
+            self.store = RemoteShardedAggregator(num_shards=shards,
+                                                 policy=shard_policy,
+                                                 directory=store_dir,
+                                                 wal_fsync=wal_fsync)
         elif shards is not None:
             from repro.core.shards import ShardedAggregator
             self.store = ShardedAggregator(num_shards=shards,

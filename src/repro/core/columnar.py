@@ -565,13 +565,21 @@ class ColumnarMetricStore:
     ``partial_cache_entries`` — LRU bound on the per-segment
     partial-aggregate cache (one entry per (segment, plan fingerprint);
     see :class:`PartialAggregateCache` and docs/incremental.md).
+    ``read_only`` — open a durable directory without taking ownership
+    of it: segments mmap in and the WAL tail replays into the buffer,
+    but nothing on disk is written (no WAL rewrite, no seals), and
+    ``insert``/``seal`` raise ``RuntimeError``.  This is how a remote
+    coordinator inspects a dead worker's shard directory in degraded
+    mode (docs/remote.md) without violating the one-live-store-per-
+    directory rule when the worker comes back.
     """
 
     def __init__(self, seal_threshold: int = 4096,
                  dedup_horizon_s: Optional[float] = None,
                  directory: Optional[os.PathLike] = None,
                  wal_fsync: bool = False,
-                 partial_cache_entries: int = 512) -> None:
+                 partial_cache_entries: int = 512,
+                 read_only: bool = False) -> None:
         self.seal_threshold = int(seal_threshold)
         self.dedup_horizon_s = dedup_horizon_s
         self._sealed: List[Segment] = []
@@ -589,6 +597,9 @@ class ColumnarMetricStore:
         self.last_query_stats: Optional[Dict] = None
         self.directory = Path(directory) if directory is not None else None
         self.wal_fsync = bool(wal_fsync)
+        self.read_only = bool(read_only)
+        if self.read_only and self.directory is None:
+            raise ValueError("read_only requires a directory")
         self._wal = None
         self._next_seq = 0
         self._replaying = False
@@ -603,6 +614,8 @@ class ColumnarMetricStore:
         return (len(self._sealed), len(self._buffer))
 
     def insert(self, rec: MetricRecord) -> bool:
+        if self.read_only and not self._replaying:
+            raise RuntimeError("store is read-only")
         encoded = encode_line(rec)
         key = hashlib.blake2b(encoded.encode(), digest_size=12).digest()
         if key in self._seen:
@@ -626,7 +639,7 @@ class ColumnarMetricStore:
             self._wal.flush()
             if self.wal_fsync:
                 os.fsync(self._wal.fileno())
-        if len(self._buffer) >= self.seal_threshold:
+        if len(self._buffer) >= self.seal_threshold and not self.read_only:
             self.seal()
         return True
 
@@ -646,6 +659,8 @@ class ColumnarMetricStore:
         resets; a crash in between leaves both — replay dedups against
         the segment's persisted keys, so nothing duplicates or is lost.
         """
+        if self.read_only:
+            raise RuntimeError("store is read-only")
         if not self._buffer:
             return
         seg = columns_from_records(self._buffer)
@@ -743,7 +758,8 @@ class ColumnarMetricStore:
             finally:
                 self._replaying = False
         self._seen -= transient_keys
-        self._rewrite_wal()
+        if not self.read_only:
+            self._rewrite_wal()
 
     def _rewrite_wal(self) -> None:
         """Atomically reset the WAL to exactly the current buffer."""

@@ -12,10 +12,13 @@ Three views, exactly as in the paper:
   as splunklite queries (staff "custom queries" in the paper).
 
 Every view takes a single :class:`MetricStore` *or* a sharded store
-(:class:`~repro.core.shards.ShardedAggregator`) — ``query`` dispatches
-fleet queries through the scatter/gather planner and ``scan`` merges
-per-shard column scans, so dashboards render identically either way
-(the shard-parity suite asserts it).
+(:class:`~repro.core.shards.ShardedAggregator`, including its
+worker-process subclass
+:class:`~repro.core.remote.RemoteShardedAggregator`) — ``query``
+dispatches fleet queries through the scatter/gather planner and
+``scan`` merges per-shard column scans, so dashboards render
+identically either way: in-process, sharded, or against a remote
+worker fleet (the shard- and remote-parity suites assert it).
 
 For the paper's continuous dashboards, :class:`StreamingView` (and
 :func:`streaming_specialized_views`) wrap the query-backed views in
@@ -41,6 +44,8 @@ from repro.core.derived import HardwareSpec, TPU_V5E
 from repro.core.shards import ShardedAggregator
 from repro.core.splunklite import QueryHandle, query
 
+# RemoteShardedAggregator subclasses ShardedAggregator, so the union
+# covers the worker-process fleet too
 StoreLike = Union[MetricStore, ShardedAggregator]
 
 # ------------------------------------------------------------ svg helpers ---

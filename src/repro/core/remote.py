@@ -1,0 +1,1253 @@
+"""Remote shard execution — worker processes, partial-state wire
+protocol, and streaming gather (docs/remote.md).
+
+The paper's production pipeline pushes collection and partial
+processing onto the nodes and ships compact results upward (hpcmd →
+rsyslog → Splunk indexers); PerSyst (arXiv:2009.06061) makes the same
+move with a tree of aggregation agents that reduce on the way up.  This
+module is that tier: shard stores live in separate **worker processes**
+(``repro.core.workers``), the coordinator ships each worker a
+serialized :class:`~repro.core.splunklite.ScatterPlan`, and every
+worker replies with a merged map of *partial aggregation states* — the
+small, immutable, content-keyed values PR 3/4 already produce, cache,
+and merge per segment.  The gather is two-level, the PerSyst agent-tree
+shape::
+
+    segment partials ──(worker-local merge)──► per-worker partial map
+    per-worker maps ──(coordinator merge)────► finalize ► tail stages
+
+Wire protocol (both directions): length-prefixed JSON frames — a
+4-byte big-endian payload length followed by a UTF-8 JSON object,
+``MAX_FRAME_BYTES`` bounded.  Every request carries an ``op``; every
+reply carries ``ok`` (error replies add ``kind``/``error`` and the
+client re-raises ``QueryError`` kinds locally).  Connections open with
+a ``hello`` exchange that pins ``PROTOCOL_VERSION`` and
+``CODEC_VERSION`` — a mismatched worker is refused at connect time,
+never mid-query.
+
+Value codec (versioned, strict-JSON safe — no NaN/Infinity literals):
+scalars (str/bool/int/finite float/None) pass through; every composite
+is a tagged two-element list, so plain JSON arrays never appear bare
+and decoding is unambiguous::
+
+    ["f", "nan"|"inf"|"-inf"]   non-finite float
+    ["t", [...]]                tuple        (partial states, group keys)
+    ["l", [...]]                list         (generic lists)
+    ["s", [...]]                set          (exact dc label sets)
+    ["q", [...]]                P2Summary    (its state() tuple, encoded)
+    ["Q", count, b64]           list of P2Summary, bulk-packed as raw
+                                float64 records (the hot quantile path:
+                                one base64 blob instead of thousands of
+                                JSON floats; bit-exact either way)
+
+That covers every partial kind in the scatter/gather algebra
+(count int, sum/avg ``(n, sum)``, min/max/range ``(n, min, max)`` with
+±inf empties, Welford ``(n, mean, M2)``, ``dc`` label sets, quantile
+``P2Summary`` lists — raw and knotted) *and* the exact-row-gather
+fallback rows.  Python's shortest-repr float serialization round-trips
+exactly, so remote results are byte-identical to in-process execution
+(the parity suite asserts it).
+
+Failure semantics: a worker that dies mid-query is detected at the
+socket, the coordinator reconnects once (the worker may have been
+restarted — it re-adopts its durable ``shard-NN/`` directory from the
+PR 2 manifests + WAL), and if that fails the shard degrades to local
+in-process execution over a **read-only** open of the same directory.
+Degraded shards are counted in ``last_query_stats["degraded_shards"]``
+and ``explain()``; results stay identical because the fallback replays
+exactly the state the worker would have served.
+"""
+
+from __future__ import annotations
+
+import base64
+import math
+import json
+import os
+import socket
+import struct
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import splunklite
+from repro.core.columnar import ColumnScan, ColumnarMetricStore
+from repro.core.schema import MetricRecord, encode_line, parse_line
+from repro.core.shards import ShardedAggregator
+from repro.core.sketches import P2Summary
+from repro.core.splunklite import QueryError, ScatterPlan, _Fallback
+
+PROTOCOL_VERSION = 1
+CODEC_VERSION = 1
+MAX_FRAME_BYTES = 1 << 28
+READY_PREFIX = "REPRO_WORKER_READY"
+
+_LEN = struct.Struct("!I")
+_NONFINITE = {"nan": math.nan, "inf": math.inf, "-inf": -math.inf}
+
+
+class RemoteProtocolError(RuntimeError):
+    """Malformed frame, codec violation, or version mismatch."""
+
+
+class WorkerUnavailable(ConnectionError):
+    """The worker for a shard cannot be reached (dead or unreachable)."""
+
+
+class WorkerError(RuntimeError):
+    """The worker reached but reported a non-query failure."""
+
+
+# ===========================================================================
+# Value codec
+# ===========================================================================
+
+_N_MAX = 2 ** 53  # counts above this would not round-trip through f8
+
+
+def _encode_summary_list(vs: List[P2Summary]) -> Optional[list]:
+    """Bulk-pack a list of canonical P² summaries (the quantile partial
+    state) as one float64 blob: per summary ``p, n, point, kind, k``
+    followed by ``k`` raw values (kind 0) or 5+5 knots (kind 1).
+    Returns ``None`` for non-canonical shapes — the generic per-value
+    encoding then applies."""
+    floats: List[float] = []
+    for s in vs:
+        if not isinstance(s, P2Summary) or s.n > _N_MAX:
+            return None
+        if s.raw is not None:
+            if s.knots_v or s.knots_f:
+                return None
+            floats += (s.p, float(s.n), s.point, 0.0, float(len(s.raw)))
+            floats += s.raw
+        else:
+            if len(s.knots_v) != 5 or len(s.knots_f) != 5:
+                return None
+            floats += (s.p, float(s.n), s.point, 1.0, 5.0)
+            floats += s.knots_v
+            floats += s.knots_f
+    blob = np.asarray(floats, np.float64).tobytes()
+    return ["Q", len(vs), base64.b64encode(blob).decode("ascii")]
+
+
+def _decode_summary_list(count, b64s) -> List[P2Summary]:
+    arr = np.frombuffer(base64.b64decode(b64s), np.float64)
+    out: List[P2Summary] = []
+    i = 0
+    try:
+        for _ in range(int(count)):
+            p, n, point, kind, k = (float(x) for x in arr[i:i + 5])
+            i += 5
+            if math.isnan(point):
+                point = math.nan  # normalize to the singleton: state
+                # tuples compare by identity-then-value, as in-process
+            if int(kind) == 0:
+                k = int(k)
+                raw = tuple(float(x) for x in arr[i:i + k])
+                if len(raw) != k:
+                    raise ValueError("truncated raw block")
+                i += k
+                out.append(P2Summary(p, int(n), raw=raw, point=point))
+            else:
+                kv = tuple(float(x) for x in arr[i:i + 5])
+                kf = tuple(float(x) for x in arr[i + 5:i + 10])
+                if len(kf) != 5:
+                    raise ValueError("truncated knot block")
+                i += 10
+                out.append(P2Summary(p, int(n), kv, kf, None, point))
+    except ValueError as exc:
+        raise RemoteProtocolError(f"bad summary block: {exc}") from exc
+    if i != arr.shape[0]:
+        raise RemoteProtocolError("trailing bytes in summary block")
+    return out
+
+
+def encode_value(v) -> Any:
+    """Encode one partial state / group key / row value (see module
+    docstring for the tag table).  Raises ``TypeError`` on a value the
+    wire algebra does not know — better than silently shipping
+    something the far side cannot rebuild."""
+    if v is None or isinstance(v, (str, bool, int)):
+        return v
+    if isinstance(v, float):
+        if math.isfinite(v):
+            return v
+        return ["f", "nan" if math.isnan(v) else
+                ("inf" if v > 0 else "-inf")]
+    if isinstance(v, tuple):
+        return ["t", [encode_value(x) for x in v]]
+    if isinstance(v, list):
+        if v and isinstance(v[0], P2Summary):
+            bulk = _encode_summary_list(v)
+            if bulk is not None:
+                return bulk
+        return ["l", [encode_value(x) for x in v]]
+    if isinstance(v, (set, frozenset)):
+        return ["s", [encode_value(x) for x in v]]
+    if isinstance(v, P2Summary):
+        return ["q", [encode_value(x) for x in v.state()]]
+    if isinstance(v, np.bool_):
+        return bool(v)
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, np.floating):
+        return encode_value(float(v))
+    raise TypeError(f"unencodable value {type(v).__name__}: {v!r}")
+
+
+def decode_value(v):
+    """Inverse of :func:`encode_value`."""
+    if isinstance(v, list):
+        if len(v) == 3 and v[0] == "Q":
+            return _decode_summary_list(v[1], v[2])
+        if len(v) != 2:
+            raise RemoteProtocolError(f"bad tagged value: {v!r}")
+        tag, payload = v
+        if tag == "f":
+            try:
+                return _NONFINITE[payload]
+            except (KeyError, TypeError):
+                raise RemoteProtocolError(f"bad float tag: {payload!r}")
+        if tag == "t":
+            return tuple(decode_value(x) for x in payload)
+        if tag == "l":
+            return [decode_value(x) for x in payload]
+        if tag == "s":
+            return {decode_value(x) for x in payload}
+        if tag == "q":
+            return P2Summary.from_state(
+                tuple(decode_value(x) for x in payload))
+        raise RemoteProtocolError(f"unknown value tag {tag!r}")
+    return v
+
+
+def encode_partial_map(pmap: Dict[tuple, Dict[str, Any]]) -> list:
+    """``{group key: {output name: partial state}}`` → wire list."""
+    return [[encode_value(key),
+             {out: encode_value(state) for out, state in states.items()}]
+            for key, states in pmap.items()]
+
+
+def decode_partial_map(obj) -> Dict[tuple, Dict[str, Any]]:
+    out: Dict[tuple, Dict[str, Any]] = {}
+    for entry in obj:
+        if not isinstance(entry, list) or len(entry) != 2:
+            raise RemoteProtocolError(f"bad partial-map entry: {entry!r}")
+        key, states = entry
+        out[decode_value(key)] = {str(o): decode_value(s)
+                                  for o, s in states.items()}
+    return out
+
+
+def encode_rows(rows: Sequence[Dict]) -> list:
+    """Exact-gather fallback rows → wire form (values via the codec)."""
+    return [{k: encode_value(v) for k, v in r.items()} for r in rows]
+
+
+def decode_rows(obj) -> List[Dict]:
+    return [{str(k): decode_value(v) for k, v in r.items()} for r in obj]
+
+
+def encode_array(arr: np.ndarray) -> Dict[str, Any]:
+    """Numeric ndarray → base64 raw bytes + dtype (compact, exact)."""
+    arr = np.ascontiguousarray(arr)
+    return {"dtype": arr.dtype.str, "n": int(arr.shape[0]),
+            "b64": base64.b64encode(arr.tobytes()).decode("ascii")}
+
+
+def decode_array(obj) -> np.ndarray:
+    arr = np.frombuffer(base64.b64decode(obj["b64"]),
+                        dtype=np.dtype(obj["dtype"]))
+    if arr.shape[0] != int(obj["n"]):
+        raise RemoteProtocolError("array length mismatch")
+    return arr.copy()  # writable, detached from the transport buffer
+
+
+def encode_scan(sc: ColumnScan) -> Dict[str, Any]:
+    return {
+        "n": int(sc.n),
+        "ts": encode_array(np.asarray(sc.ts, np.float64)),
+        "host_codes": encode_array(np.asarray(sc.host_codes, np.int32)),
+        "host_vocab": [str(v) for v in sc.host_vocab.tolist()],
+        "job_codes": encode_array(np.asarray(sc.job_codes, np.int32)),
+        "job_vocab": [str(v) for v in sc.job_vocab.tolist()],
+        "fields": {f: [encode_array(np.asarray(v, np.float64)),
+                       encode_array(np.asarray(p, bool))]
+                   for f, (v, p) in sc._fields.items()},
+    }
+
+
+def decode_scan(obj) -> ColumnScan:
+    fields = {str(f): (decode_array(v), decode_array(p))
+              for f, (v, p) in obj["fields"].items()}
+    return ColumnScan(
+        int(obj["n"]), decode_array(obj["ts"]),
+        decode_array(obj["host_codes"]),
+        np.array(list(obj["host_vocab"]), dtype=object),
+        decode_array(obj["job_codes"]),
+        np.array(list(obj["job_vocab"]), dtype=object),
+        fields)
+
+
+# ===========================================================================
+# Framing
+# ===========================================================================
+
+def send_frame(sock: socket.socket, obj: Dict) -> None:
+    payload = json.dumps(obj, separators=(",", ":"),
+                         allow_nan=False).encode("utf-8")
+    if len(payload) > MAX_FRAME_BYTES:
+        raise RemoteProtocolError(f"frame too large: {len(payload)}B")
+    sock.sendall(_LEN.pack(len(payload)) + payload)
+
+
+def recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(min(n - len(buf), 1 << 20))
+        if not chunk:
+            raise ConnectionError("peer closed mid-frame"
+                                  if buf else "peer closed")
+        buf += chunk
+    return bytes(buf)
+
+
+def recv_frame(sock: socket.socket) -> Dict:
+    (n,) = _LEN.unpack(recv_exact(sock, 4))
+    if n > MAX_FRAME_BYTES:
+        raise RemoteProtocolError(f"oversized frame announced: {n}B")
+    try:
+        obj = json.loads(recv_exact(sock, n).decode("utf-8"))
+    except ValueError as exc:
+        raise RemoteProtocolError(f"undecodable frame: {exc}") from exc
+    if not isinstance(obj, dict):
+        raise RemoteProtocolError("frame payload must be an object")
+    return obj
+
+
+# ===========================================================================
+# Worker client + local worker processes
+# ===========================================================================
+
+class WorkerClient:
+    """One persistent connection to a shard worker.
+
+    ``rpc`` is request/reply; ``send``/``recv`` split the halves so the
+    coordinator can issue every shard's request before reading any
+    reply (scatter overlaps with transport).  Socket trouble raises
+    :class:`WorkerUnavailable` and drops the connection; error replies
+    re-raise ``QueryError`` for query mistakes and
+    :class:`WorkerError` for everything else."""
+
+    def __init__(self, address: Tuple[str, int],
+                 op_timeout_s: float = 60.0,
+                 connect_timeout_s: float = 10.0) -> None:
+        self.address = (str(address[0]), int(address[1]))
+        self.op_timeout_s = float(op_timeout_s)
+        self.connect_timeout_s = float(connect_timeout_s)
+        self._sock: Optional[socket.socket] = None
+
+    @property
+    def connected(self) -> bool:
+        return self._sock is not None
+
+    def connect(self) -> Dict:
+        self.close()
+        try:
+            sock = socket.create_connection(
+                self.address, timeout=self.connect_timeout_s)
+        except OSError as exc:
+            raise WorkerUnavailable(
+                f"cannot connect to worker at {self.address}: {exc}")
+        sock.settimeout(self.op_timeout_s)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._sock = sock
+        hello = self.rpc("hello", proto=PROTOCOL_VERSION,
+                         codec=CODEC_VERSION)
+        if hello.get("proto") != PROTOCOL_VERSION or \
+                hello.get("codec") != CODEC_VERSION:
+            self.close()
+            raise RemoteProtocolError(
+                f"worker at {self.address} speaks protocol "
+                f"{hello.get('proto')}/codec {hello.get('codec')}, "
+                f"need {PROTOCOL_VERSION}/{CODEC_VERSION}")
+        return hello
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def send(self, msg: Dict) -> None:
+        if self._sock is None:
+            raise WorkerUnavailable(f"not connected to {self.address}")
+        try:
+            send_frame(self._sock, msg)
+        except (OSError, ValueError) as exc:
+            self.close()
+            raise WorkerUnavailable(f"send to {self.address} failed: {exc}")
+
+    def recv(self) -> Dict:
+        if self._sock is None:
+            raise WorkerUnavailable(f"not connected to {self.address}")
+        try:
+            reply = recv_frame(self._sock)
+        except (OSError, ConnectionError) as exc:
+            self.close()
+            raise WorkerUnavailable(f"recv from {self.address} failed: {exc}")
+        if not reply.get("ok"):
+            kind = reply.get("kind", "")
+            err = reply.get("error", "worker error")
+            if kind == "QueryError":
+                raise QueryError(err)
+            raise WorkerError(f"worker at {self.address}: {err}")
+        return reply
+
+    def rpc(self, op: str, **kw) -> Dict:
+        msg = {"op": op}
+        msg.update(kw)
+        self.send(msg)
+        return self.recv()
+
+
+class LocalWorkerProcess:
+    """A ``python -m repro.core.workers`` subprocess serving one shard
+    directory on an ephemeral localhost port, with hard-deadline start
+    and stop (a hung worker cannot wedge a CI job: readiness waits are
+    bounded and :meth:`stop` escalates terminate → kill)."""
+
+    def __init__(self, shard_dir: os.PathLike, host: str = "127.0.0.1",
+                 seal_threshold: int = 4096,
+                 dedup_horizon_s: Optional[float] = None,
+                 wal_fsync: bool = False,
+                 partial_cache_entries: int = 512,
+                 idle_timeout_s: Optional[float] = None,
+                 spawn_timeout_s: float = 30.0) -> None:
+        self.shard_dir = Path(shard_dir)
+        cmd = [sys.executable, "-m", "repro.core.workers",
+               "--dir", str(self.shard_dir), "--host", host, "--port", "0",
+               "--seal-threshold", str(int(seal_threshold)),
+               "--partial-cache-entries", str(int(partial_cache_entries))]
+        if dedup_horizon_s is not None:
+            cmd += ["--dedup-horizon-s", str(float(dedup_horizon_s))]
+        if wal_fsync:
+            cmd += ["--wal-fsync"]
+        if idle_timeout_s is not None:
+            cmd += ["--idle-timeout-s", str(float(idle_timeout_s))]
+        env = dict(os.environ)
+        src_root = str(Path(__file__).resolve().parents[2])
+        env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+        self.proc = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                                     text=True, env=env)
+        try:
+            self.address = self._await_ready(float(spawn_timeout_s))
+        except Exception:
+            self.stop(timeout_s=5.0)
+            raise
+
+    def _await_ready(self, timeout_s: float) -> Tuple[str, int]:
+        import selectors
+        deadline = time.monotonic() + timeout_s
+        sel = selectors.DefaultSelector()
+        sel.register(self.proc.stdout, selectors.EVENT_READ)
+        try:
+            while True:
+                if self.proc.poll() is not None:
+                    raise RuntimeError(
+                        f"worker for {self.shard_dir} exited with "
+                        f"{self.proc.returncode} before becoming ready")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise RuntimeError(
+                        f"worker for {self.shard_dir} not ready within "
+                        f"{timeout_s:.0f}s")
+                if not sel.select(timeout=min(remaining, 0.25)):
+                    continue
+                line = self.proc.stdout.readline()
+                if not line:
+                    continue
+                if line.startswith(READY_PREFIX):
+                    kv = dict(part.split("=", 1)
+                              for part in line.split()[1:])
+                    return (kv["host"], int(kv["port"]))
+        finally:
+            sel.close()
+
+    @property
+    def alive(self) -> bool:
+        return self.proc.poll() is None
+
+    def stop(self, timeout_s: float = 5.0) -> None:
+        """Terminate with a hard deadline; escalate to SIGKILL."""
+        if self.proc.poll() is None:
+            self.proc.terminate()
+            try:
+                self.proc.wait(timeout=timeout_s)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+                try:
+                    self.proc.wait(timeout=timeout_s)
+                except subprocess.TimeoutExpired:
+                    pass
+        if self.proc.stdout is not None:
+            self.proc.stdout.close()
+
+    def kill(self) -> None:
+        """Immediate SIGKILL — simulates a worker crash in tests."""
+        if self.proc.poll() is None:
+            self.proc.kill()
+            self.proc.wait()
+        if self.proc.stdout is not None:
+            self.proc.stdout.close()
+
+
+class _CacheStatsSnapshot:
+    """Read-only view of a worker's partial-cache counters, shaped like
+    :class:`~repro.core.columnar.PartialAggregateCache` for the
+    aggregator's summing properties."""
+
+    __slots__ = ("hits", "misses", "evictions", "_entries")
+
+    def __init__(self, hits: int, misses: int, evictions: int,
+                 entries: int) -> None:
+        self.hits = int(hits)
+        self.misses = int(misses)
+        self.evictions = int(evictions)
+        self._entries = int(entries)
+
+    def __len__(self) -> int:
+        return self._entries
+
+
+class RemoteShard:
+    """Store-surface proxy for one worker-hosted shard.
+
+    Implements the read/ingest surface :class:`ShardedAggregator`
+    expects from a shard (``insert``/``seal``/``records``/``select``/
+    ``scan``/vocabs/``__len__``/``_version``), forwarding each call
+    over the wire.  Reads degrade to a local **read-only** open of the
+    shard's durable directory when the worker is unreachable
+    (``degraded_calls`` counts those); ingest never degrades — writing
+    around a worker would fork the directory's ownership."""
+
+    def __init__(self, index: int, shard_dir: Path,
+                 address: Optional[Tuple[str, int]] = None,
+                 process: Optional[LocalWorkerProcess] = None,
+                 op_timeout_s: float = 60.0,
+                 store_kwargs: Optional[Dict[str, Any]] = None,
+                 degraded_ok: bool = True) -> None:
+        self.index = int(index)
+        self.shard_dir = Path(shard_dir)
+        self.process = process
+        self.client = WorkerClient(address if address is not None
+                                   else process.address,
+                                   op_timeout_s=op_timeout_s)
+        self.degraded_ok = bool(degraded_ok)
+        self.degraded_calls = 0
+        self._store_kwargs = dict(store_kwargs or {})
+        self._fallback: Optional[ColumnarMetricStore] = None
+        # conditional-scatter memo: fingerprint -> (worker version,
+        # decoded partial map, {"segments": k, "buffer_rows": b}).
+        # Versions are content-stable across worker restarts (the WAL
+        # replay reproduces the pre-crash state exactly), so entries
+        # survive reconnects.  Bounded LRU — one entry per actively
+        # refreshed plan.
+        self._scatter_memo: Dict[str, tuple] = {}
+
+    SCATTER_MEMO_MAX = 32
+
+    def scatter_etag(self, fingerprint: str) -> Optional[list]:
+        """``[fingerprint, version]`` for a cached decoded map, or
+        ``None`` — sent with a scatter so an unchanged worker can reply
+        ``not_modified`` instead of recomputing and reshipping."""
+        from repro.core.columnar import _lru_memo_get
+        hit = _lru_memo_get(self._scatter_memo, fingerprint)
+        if hit is None:
+            return None
+        return [fingerprint, list(hit[0])]
+
+    def scatter_memo_get(self, fingerprint: str) -> Optional[tuple]:
+        from repro.core.columnar import _lru_memo_get
+        return _lru_memo_get(self._scatter_memo, fingerprint)
+
+    def scatter_memo_put(self, fingerprint: str, version, pmap,
+                         summary: Dict[str, int]) -> None:
+        from repro.core.columnar import _lru_memo_put
+        _lru_memo_put(self._scatter_memo, fingerprint,
+                      (tuple(version), pmap, dict(summary)),
+                      self.SCATTER_MEMO_MAX)
+
+    def drop_scatter_memo(self) -> None:
+        self._scatter_memo.clear()
+
+    # ------------------------------------------------------------- wiring --
+    def connect(self) -> Dict:
+        hello = self.client.connect()
+        self._drop_fallback()
+        return hello
+
+    def _try_reconnect(self) -> bool:
+        """One reconnect attempt — covers a worker that was restarted
+        behind the same address, or a socket that idled out."""
+        if self.process is not None and not self.process.alive:
+            return False
+        try:
+            self.connect()
+            return True
+        except (WorkerUnavailable, RemoteProtocolError, OSError):
+            return False
+
+    def send(self, op: str, **kw) -> None:
+        msg = {"op": op}
+        msg.update(kw)
+        try:
+            self.client.send(msg)
+        except WorkerUnavailable:
+            if not self._try_reconnect():
+                raise
+            self.client.send(msg)
+
+    def recv(self) -> Dict:
+        return self.client.recv()
+
+    def rpc(self, op: str, **kw) -> Dict:
+        self.send(op, **kw)
+        return self.recv()
+
+    # ----------------------------------------------------- degraded reads --
+    def local_store(self) -> ColumnarMetricStore:
+        """Read-only in-process open of the shard directory (degraded
+        mode).  Invalidated whenever the worker connection comes back —
+        a revived worker may accept new inserts this snapshot missed."""
+        if self._fallback is None:
+            kw = {k: self._store_kwargs[k]
+                  for k in ("seal_threshold", "dedup_horizon_s",
+                            "partial_cache_entries")
+                  if k in self._store_kwargs}
+            self._fallback = ColumnarMetricStore(
+                directory=self.shard_dir, read_only=True, **kw)
+        return self._fallback
+
+    def _degraded(self) -> ColumnarMetricStore:
+        """Every degraded read funnels through here, so disabling
+        degraded execution covers the whole store surface (scan,
+        records, vocabs, ...), not just the query path."""
+        if not self.degraded_ok:
+            raise WorkerUnavailable(
+                f"shard {self.index} worker unavailable and degraded "
+                "execution is disabled")
+        self.degraded_calls += 1
+        return self.local_store()
+
+    def _drop_fallback(self) -> None:
+        if self._fallback is not None:
+            self._fallback.close()
+            self._fallback = None
+
+    # ------------------------------------------------------ store surface --
+    def insert(self, rec: MetricRecord) -> bool:
+        return bool(self.rpc("insert", line=encode_line(rec))["accepted"])
+
+    def ingest_lines(self, lines: Iterable[str]) -> int:
+        return int(self.rpc("lines", lines=list(lines))["n"])
+
+    def seal(self) -> None:
+        self.rpc("seal")
+
+    def __len__(self) -> int:
+        try:
+            return int(self.rpc("len")["n"])
+        except WorkerUnavailable:
+            return len(self._degraded())
+
+    @property
+    def duplicates_dropped(self) -> int:
+        try:
+            return int(self.rpc("dups")["n"])
+        except WorkerUnavailable:
+            # best-effort: the read-only replay cannot reconstruct the
+            # worker's lifetime counter, only its current key set
+            return self._degraded().duplicates_dropped
+
+    def _version(self) -> tuple:
+        try:
+            return tuple(self.rpc("version")["v"])
+        except WorkerUnavailable:
+            return self._degraded()._version()
+
+    @property
+    def records(self) -> List[MetricRecord]:
+        try:
+            lines = self.rpc("records")["lines"]
+        except WorkerUnavailable:
+            return self._degraded().records
+        return [r for r in (parse_line(ln) for ln in lines)
+                if r is not None]
+
+    def select(self, job=None, kind=None, since=None, until=None):
+        try:
+            lines = self.rpc("select", job=job, kind=kind,
+                             since=since, until=until)["lines"]
+        except WorkerUnavailable:
+            yield from self._degraded().select(job=job, kind=kind,
+                                               since=since, until=until)
+            return
+        for ln in lines:
+            rec = parse_line(ln)
+            if rec is not None:
+                yield rec
+
+    def scan(self, job=None, kind=None, since=None, until=None,
+             fields: Iterable[str] = ()) -> ColumnScan:
+        fields = tuple(fields)
+        try:
+            reply = self.rpc("scan", job=job, kind=kind, since=since,
+                             until=until, fields=list(fields))
+        except WorkerUnavailable:
+            return self._degraded().scan(job=job, kind=kind, since=since,
+                                         until=until, fields=fields)
+        return decode_scan(reply["scan"])
+
+    def _vocab(self, which: str, job=None) -> List[str]:
+        try:
+            return [str(v) for v in
+                    self.rpc("vocab", which=which, job=job)["values"]]
+        except WorkerUnavailable:
+            store = self._degraded()
+            if which == "hosts":
+                return store.hosts(job)
+            return getattr(store, which)()
+
+    def jobs(self) -> List[str]:
+        return self._vocab("jobs")
+
+    def kinds(self) -> List[str]:
+        return self._vocab("kinds")
+
+    def hosts(self, job=None) -> List[str]:
+        return self._vocab("hosts", job=job)
+
+    @property
+    def partial_cache(self) -> _CacheStatsSnapshot:
+        try:
+            st = self.rpc("cache_stats")
+        except WorkerUnavailable:
+            pc = self._degraded().partial_cache
+            return _CacheStatsSnapshot(pc.hits, pc.misses, pc.evictions,
+                                       len(pc))
+        return _CacheStatsSnapshot(st["hits"], st["misses"],
+                                   st["evictions"], st["entries"])
+
+    # ---------------------------------------------------------- lifecycle --
+    def ping(self) -> bool:
+        try:
+            self.rpc("ping")
+            return True
+        except (WorkerUnavailable, WorkerError):
+            return False
+
+    def close(self) -> None:
+        """Detach from the worker; shut it down only if we own it.
+
+        Externally managed workers (``addresses=`` fleets) belong to
+        whoever started them — closing a coordinator must not take the
+        shared fleet dark, so only spawned :class:`LocalWorkerProcess`
+        workers get the ``shutdown`` op and the hard-deadline stop."""
+        if self.process is not None:
+            try:
+                self.client.rpc("shutdown")
+            except (WorkerUnavailable, WorkerError, RemoteProtocolError):
+                pass
+        self.client.close()
+        if self.process is not None:
+            self.process.stop()
+        self._drop_fallback()
+
+
+def _trace_overlaps(trace: List[Tuple[str, int]]) -> bool:
+    """True when every shard request was issued before the first reply
+    was consumed — the scatter-overlaps-with-transport invariant."""
+    sends = [j for j, (kind, _i) in enumerate(trace) if kind == "send"]
+    recvs = [j for j, (kind, _i) in enumerate(trace) if kind == "recv"]
+    return bool(sends) and (not recvs or max(sends) < min(recvs))
+
+
+class RemoteShardedAggregator(ShardedAggregator):
+    """:class:`ShardedAggregator` whose shards live in worker processes.
+
+    Presents the exact same store surface (dashboards, detectors,
+    ``QueryHandle``, ``Aggregator.watch`` run unchanged); routing,
+    manifest pinning, and the merged read paths are inherited — only
+    shard *execution* moves across the wire:
+
+    * mergeable pipelines serialize their :class:`ScatterPlan` once,
+      issue it to **every** live worker before reading any reply
+      (transport overlaps with worker compute; ``last_query_stats
+      ["overlap"]`` proves it), then merge per-worker partial maps in
+      shard order — deterministic, so results are byte-identical to
+      in-process execution;
+    * each worker consults its own segment-keyed partial-aggregate
+      cache (docs/incremental.md), keeping the warm-path speedup;
+    * anything non-mergeable gathers exact rows from every worker and
+      finishes locally;
+    * a dead worker's shard degrades to local read-only execution of
+      its durable directory, counted in ``last_query_stats`` and
+      :meth:`explain`; :meth:`restart_worker` respawns it (the fresh
+      process re-adopts the directory via segment manifests + WAL).
+
+    ``directory`` is required — worker processes serve durable shard
+    dirs.  With ``spawn=True`` (default) the aggregator owns a local
+    fleet of :class:`LocalWorkerProcess`; pass ``addresses=[(host,
+    port), ...]`` to attach to externally managed workers
+    (``repro-shard-worker`` console entry point) instead.
+    """
+
+    is_remote = True
+
+    def __init__(self, num_shards: int = 4, policy="hash",
+                 time_window_s: float = 3600.0,
+                 seal_threshold: int = 4096,
+                 dedup_horizon_s: Optional[float] = None,
+                 directory: Optional[os.PathLike] = None,
+                 wal_fsync: bool = False,
+                 partial_cache_entries: int = 512,
+                 addresses: Optional[Sequence[Tuple[str, int]]] = None,
+                 spawn: Optional[bool] = None,
+                 op_timeout_s: float = 60.0,
+                 spawn_timeout_s: float = 30.0,
+                 worker_idle_timeout_s: Optional[float] = None,
+                 degraded_ok: bool = True) -> None:
+        if directory is None:
+            raise ValueError("RemoteShardedAggregator requires a directory "
+                             "(workers serve durable shard dirs)")
+        if addresses is not None and spawn:
+            raise ValueError("pass addresses= or spawn=True, not both")
+        if addresses is None and spawn is not None and not spawn:
+            raise ValueError("spawn=False requires addresses= "
+                             "(externally managed workers)")
+        if addresses is not None and len(addresses) != num_shards:
+            raise ValueError(f"{len(addresses)} addresses for "
+                             f"{num_shards} shards")
+        self._addresses = addresses
+        self._spawn = bool(spawn) if spawn is not None else addresses is None
+        self._op_timeout_s = float(op_timeout_s)
+        self._spawn_timeout_s = float(spawn_timeout_s)
+        self._worker_idle_timeout_s = worker_idle_timeout_s
+        self.degraded_ok = bool(degraded_ok)
+        self.remote_queries = 0
+        self.degraded_queries = 0
+        self.last_io_trace: List[Tuple[str, int]] = []
+        super().__init__(num_shards=num_shards, policy=policy,
+                         time_window_s=time_window_s,
+                         seal_threshold=seal_threshold,
+                         dedup_horizon_s=dedup_horizon_s,
+                         directory=directory, wal_fsync=wal_fsync,
+                         parallel=False,
+                         partial_cache_entries=partial_cache_entries)
+        if self._spawn:
+            self._record_topology()
+
+    # ------------------------------------------------------ fleet wiring --
+    def _worker_spawn_kwargs(self) -> Dict[str, Any]:
+        kw = dict(self._store_kwargs)
+        kw.pop("wal_fsync", None)
+        return dict(seal_threshold=kw.get("seal_threshold", 4096),
+                    dedup_horizon_s=kw.get("dedup_horizon_s"),
+                    wal_fsync=self._store_kwargs.get("wal_fsync", False),
+                    partial_cache_entries=kw.get("partial_cache_entries",
+                                                 512),
+                    idle_timeout_s=self._worker_idle_timeout_s,
+                    spawn_timeout_s=self._spawn_timeout_s)
+
+    def _make_shards(self, num_shards: int, **store_kwargs):
+        self._store_kwargs = dict(store_kwargs)
+        shards: List[RemoteShard] = []
+        try:
+            for i in range(num_shards):
+                shard_dir = self.directory / self._shard_dirname(i)
+                process = None
+                address = None
+                if self._spawn:
+                    process = LocalWorkerProcess(shard_dir,
+                                                 **self._worker_spawn_kwargs())
+                else:
+                    address = tuple(self._addresses[i])
+                shard = RemoteShard(i, shard_dir, address=address,
+                                    process=process,
+                                    op_timeout_s=self._op_timeout_s,
+                                    store_kwargs=store_kwargs,
+                                    degraded_ok=self.degraded_ok)
+                shards.append(shard)
+                shard.connect()
+        except Exception:
+            for shard in shards:
+                try:
+                    shard.close()
+                except Exception:  # noqa: BLE001 - teardown best-effort
+                    pass
+            raise
+        return shards
+
+    def _record_topology(self) -> None:
+        """Record the live worker topology in ``shards.json`` (purely
+        informational — operators can see which processes last served
+        the fleet)."""
+        from repro.core import segmentio
+        workers = []
+        for sh in self.shards:
+            workers.append({
+                "shard": sh.index,
+                "host": sh.client.address[0],
+                "port": sh.client.address[1],
+                "pid": (sh.process.proc.pid
+                        if sh.process is not None else None),
+            })
+        try:
+            segmentio.update_shardset_manifest(self.directory,
+                                               {"workers": workers})
+        except (OSError, ValueError):
+            pass  # topology notes must never fail a query path
+
+    def restart_worker(self, i: int) -> None:
+        """Respawn shard ``i``'s worker process; the fresh process
+        re-adopts the durable shard directory (segments mmap back in,
+        the WAL tail replays, dedup keys reload)."""
+        if not self._spawn:
+            raise RuntimeError("only a spawned fleet can be restarted here; "
+                               "restart external workers out-of-band and "
+                               "call reconnect_worker()")
+        sh = self.shards[i]
+        sh.client.close()
+        if sh.process is not None:
+            sh.process.stop()
+        sh.process = LocalWorkerProcess(sh.shard_dir,
+                                        **self._worker_spawn_kwargs())
+        sh.client = WorkerClient(sh.process.address,
+                                 op_timeout_s=self._op_timeout_s)
+        sh.connect()
+        self._cache.clear()
+        self._record_topology()
+
+    def reconnect_worker(self, i: int) -> bool:
+        """Try to re-establish shard ``i``'s connection (externally
+        restarted worker).  Returns success."""
+        return self.shards[i]._try_reconnect()
+
+    def kill_worker(self, i: int) -> None:
+        """Hard-kill shard ``i``'s worker (tests: degraded mode)."""
+        sh = self.shards[i]
+        if sh.process is not None:
+            sh.process.kill()
+        sh.client.close()
+
+    def workers_alive(self) -> List[bool]:
+        return [sh.ping() for sh in self.shards]
+
+    def drop_scatter_memos(self) -> None:
+        """Forget every coordinator-side decoded partial map (so the
+        next scatter is unconditionally recomputed — benchmarks use
+        this to measure a true cold path)."""
+        for sh in self.shards:
+            sh.drop_scatter_memo()
+
+    # ------------------------------------------------------------- ingest --
+    def ingest_lines(self, lines: Iterable[str]) -> int:
+        """Bulk ingest: lines are routed locally, then shipped as one
+        batched ``lines`` frame per shard instead of one round trip per
+        record (each worker parses, dedups, and WALs exactly as it
+        would for individual inserts)."""
+        self._check_open()
+        by_shard: Dict[int, List[str]] = {}
+        for line in lines:
+            rec = parse_line(line)
+            if rec is not None:
+                by_shard.setdefault(self.shard_index(rec), []).append(line)
+        total = 0
+        for i, batch in sorted(by_shard.items()):
+            total += self.shards[i].ingest_lines(batch)
+        if total and self._cache:
+            self._cache.clear()
+        return total
+
+    def adopt_store_dir(self, src_directory: os.PathLike) -> int:
+        """Not supported over the wire: whole-segment adoption writes
+        files into shard directories that live worker processes own
+        (they would never see the new segments).  Migrate with an
+        in-process :class:`ShardedAggregator` over the same directory
+        first, then open the shard set remotely — the workers adopt
+        everything on startup."""
+        raise RuntimeError(
+            "adopt_store_dir is not supported on a remote fleet; run the "
+            "migration with an in-process ShardedAggregator on this "
+            "directory, then reopen it with RemoteShardedAggregator")
+
+    # -------------------------------------------------------------- query --
+    def _drop_unread_replies(self, pending: List[bool], start: int) -> None:
+        """A reply-merge loop that fails after shard ``start - 1`` (a
+        worker error envelope, a protocol violation, degraded execution
+        disabled) leaves every later issued request's reply buffered on
+        its socket — consuming one as the answer to a *future* request
+        would silently serve stale results forever.  Drop those
+        connections instead; they reconnect transparently on the next
+        send."""
+        for k in range(start, self.num_shards):
+            if pending[k]:
+                self.shards[k].client.close()
+
+    def query(self, q: str, engine: Optional[str] = None) -> List[Dict]:
+        """Distributed splunklite execution (see class docstring).
+        ``engine="rows"`` gathers every record and runs the legacy row
+        executor locally (the parity oracle), as in-process."""
+        self._check_open()
+        if engine == "rows":
+            return super().query(q, engine="rows")
+        stages = splunklite._split_pipeline(q)
+        plan = splunklite.compile_scatter_plan(stages)
+        self.last_io_trace = trace = []
+        if plan is not None:
+            rows = self._scatter_remote(plan, trace)
+            if rows is not None:
+                return rows
+        self.fallback_queries += 1
+        # the gather gets its own trace: its overlap invariant must not
+        # be judged against the aborted scatter's events
+        gather_trace: List[Tuple[str, int]] = []
+        rows, rest = self._gather_remote(stages, gather_trace)
+        self.last_io_trace = trace + gather_trace
+        return splunklite.run_stages(rows, rest)
+
+    def _scatter_remote(self, plan: ScatterPlan,
+                        trace: List[Tuple[str, int]]) -> Optional[List[Dict]]:
+        """Two-level gather: issue the serialized plan to every live
+        worker first, then merge per-worker partial maps **in shard
+        order** as replies drain (deterministic merges, overlapped
+        transport), finalize, and run the tail.  Dead workers compute
+        locally in their slot while the remaining workers keep
+        crunching.  Returns ``None`` when any shard's data defeats the
+        partial kernels (the caller re-plans as an exact gather —
+        identical to in-process semantics).
+
+        The streaming refresh path: every scatter carries an etag
+        ``[fingerprint, last seen worker version]`` when the
+        coordinator already holds that worker's decoded partial map —
+        an unchanged worker answers ``not_modified`` (no recompute, no
+        reshipping, no re-decode), so a repeated dashboard/watch query
+        pays per shard only for data that actually arrived."""
+        state = plan.state()
+        pending: List[bool] = []
+        for i, sh in enumerate(self.shards):
+            try:
+                sh.send("scatter", plan=state,
+                        etag=sh.scatter_etag(plan.fingerprint))
+                pending.append(True)
+                trace.append(("send", i))
+            except WorkerUnavailable:
+                pending.append(False)
+        stats = {"mode": "scatter_gather", "remote": True,
+                 "shards": self.num_shards, "fingerprint": plan.fingerprint,
+                 "segments_cached": 0, "segments_computed": 0,
+                 "buffer_rows": 0, "degraded_shards": 0,
+                 "shards_unchanged": 0}
+        counter_keys = ("segments_cached", "segments_computed",
+                        "buffer_rows")
+        merged: Dict[tuple, Dict[str, Any]] = {}
+        fell_back = False
+        i = -1
+        try:
+            for i, sh in enumerate(self.shards):
+                pmap = None
+                if pending[i]:
+                    try:
+                        reply = sh.recv()
+                        trace.append(("recv", i))
+                        if reply.get("fallback"):
+                            fell_back = True
+                        elif reply.get("not_modified"):
+                            hit = sh.scatter_memo_get(plan.fingerprint)
+                            if hit is None:
+                                raise RemoteProtocolError(
+                                    f"worker {i} sent not_modified without "
+                                    "a coordinator-side cached map")
+                            _v, pmap, summary = hit
+                            stats["segments_cached"] += summary["segments"]
+                            stats["buffer_rows"] += summary["buffer_rows"]
+                            stats["shards_unchanged"] += 1
+                        else:
+                            wstats = reply.get("stats", {})
+                            for k in counter_keys:
+                                stats[k] += int(wstats.get(k, 0))
+                            if wstats.get("cache_bypassed"):
+                                stats["cache_bypassed"] = True
+                            if not fell_back:
+                                pmap = decode_partial_map(reply["groups"])
+                                sh.scatter_memo_put(
+                                    plan.fingerprint,
+                                    reply.get("version", ()), pmap,
+                                    {"segments":
+                                     int(wstats.get("segments_cached", 0)) +
+                                     int(wstats.get("segments_computed", 0)),
+                                     "buffer_rows":
+                                     int(wstats.get("buffer_rows", 0))})
+                    except WorkerUnavailable:
+                        pending[i] = False
+                if not pending[i]:
+                    if not self.degraded_ok:
+                        raise WorkerUnavailable(
+                            f"shard {i} worker unavailable and degraded "
+                            "execution is disabled")
+                    trace.append(("local", i))
+                    stats["degraded_shards"] += 1
+                    store = sh._degraded()
+                    local_stats: Dict[str, int] = {}
+                    try:
+                        pmap = splunklite.scatter_partials(
+                            store, plan, cache=store.partial_cache,
+                            stats=local_stats)
+                    except _Fallback:
+                        fell_back = True
+                        pmap = None
+                    for k in counter_keys:
+                        stats[k] += int(local_stats.get(k, 0))
+                if pmap is not None and not fell_back:
+                    merged = (splunklite.merge_partial_maps(
+                        [merged, pmap], plan.aggs) if merged else pmap)
+        except BaseException:
+            self._drop_unread_replies(pending, i + 1)
+            raise
+        stats["overlap"] = _trace_overlaps(trace)
+        if stats["degraded_shards"]:
+            self.degraded_queries += 1
+        if fell_back:
+            return None
+        self.scatter_queries += 1
+        self.remote_queries += 1
+        self.last_query_stats = stats
+        rows = splunklite.finalize_partial_rows(merged, plan)
+        return splunklite.run_stages(rows, plan.tail)
+
+    def _gather_remote(self, stages: List[List[str]],
+                       trace: List[Tuple[str, int]]):
+        """Exact gather across workers: every worker filters + projects
+        its rows (requests issued before any reply is read), the
+        coordinator restores canonical (ts, shard, local) order."""
+        wire_stages = [[str(t) for t in toks] for toks in stages]
+        pending: List[bool] = []
+        for i, sh in enumerate(self.shards):
+            try:
+                sh.send("gather", stages=wire_stages)
+                pending.append(True)
+                trace.append(("send", i))
+            except WorkerUnavailable:
+                pending.append(False)
+        _terms, rest = splunklite._leading_terms(stages)
+        ts_parts: List[np.ndarray] = []
+        row_parts: List[List[Dict]] = []
+        degraded = 0
+        i = -1
+        try:
+            for i, sh in enumerate(self.shards):
+                ts = rows = None
+                if pending[i]:
+                    try:
+                        reply = sh.recv()
+                        trace.append(("recv", i))
+                        ts = decode_array(reply["ts"])
+                        rows = decode_rows(reply["rows"])
+                    except WorkerUnavailable:
+                        pending[i] = False
+                if not pending[i]:
+                    if not self.degraded_ok:
+                        raise WorkerUnavailable(
+                            f"shard {i} worker unavailable and degraded "
+                            "execution is disabled")
+                    trace.append(("local", i))
+                    degraded += 1
+                    store = sh._degraded()
+                    ts, rows, _rest = splunklite.gather_filtered(store,
+                                                                 stages)
+                ts_parts.append(np.asarray(ts, np.float64))
+                row_parts.append(rows)
+        except BaseException:
+            self._drop_unread_replies(pending, i + 1)
+            raise
+        self.remote_queries += 1
+        if degraded:
+            self.degraded_queries += 1
+        self.last_query_stats = {
+            "mode": "exact_gather", "remote": True,
+            "shards": self.num_shards, "degraded_shards": degraded,
+            "overlap": _trace_overlaps(trace)}
+        all_rows = [r for part in row_parts for r in part]
+        if not all_rows:
+            return [], rest
+        order = np.argsort(np.concatenate(ts_parts), kind="stable")
+        return [all_rows[i] for i in order.tolist()], rest
+
+    # ------------------------------------------------------------ explain --
+    def explain(self, q: str) -> Dict[str, Any]:
+        """Parent-shaped explain plus per-worker liveness, degraded-call
+        counters, and each worker's own cache state for the plan's
+        fingerprint.  Pure introspection (one RPC per live worker)."""
+        stages = splunklite._split_pipeline(q)
+        plan = splunklite.compile_scatter_plan(stages)
+        workers = []
+        sealed = cached = buffer_rows = 0
+        hits = misses = entries = 0
+        for sh in self.shards:
+            info: Dict[str, Any] = {"shard": sh.index,
+                                    "degraded_calls": sh.degraded_calls}
+            try:
+                if plan is not None:
+                    r = sh.rpc("explain", fingerprint=plan.fingerprint)
+                    info.update(alive=True, sealed=r["sealed"],
+                                cached=r["cached"],
+                                buffer_rows=r["buffer_rows"])
+                    sealed += r["sealed"]
+                    cached += r["cached"]
+                    buffer_rows += r["buffer_rows"]
+                    st = r["cache"]
+                else:
+                    st = sh.rpc("cache_stats")
+                    info["alive"] = True
+                hits += st["hits"]
+                misses += st["misses"]
+                entries += st["entries"]
+            except WorkerUnavailable:
+                info["alive"] = False
+            workers.append(info)
+        out: Dict[str, Any] = {
+            "remote": True,
+            "shards": self.num_shards,
+            "workers": workers,
+            "degraded_shards": sum(1 for w in workers if not w["alive"]),
+            "cache": {"hits": hits, "misses": misses, "entries": entries},
+        }
+        if plan is not None:
+            out.update({
+                "mode": "scatter_gather",
+                "fingerprint": plan.fingerprint,
+                "partial_aggs": [name for name, _f, _o in plan.aggs],
+                "group_by": list(plan.by),
+                "columns": (sorted(plan.cols)
+                            if plan.cols is not None else None),
+                "tail_stages": [t[0] for t in plan.tail],
+                "segments": {"sealed": sealed, "cached": cached,
+                             "buffer_rows": buffer_rows},
+            })
+            return out
+        terms, rest = splunklite._leading_terms(stages)
+        cols = splunklite.referenced_columns(rest)
+        out.update({
+            "mode": "exact_gather",
+            "pushed_terms": len(terms),
+            "columns": sorted(cols) if cols is not None else None,
+            "stages": [t[0] for t in rest],
+        })
+        return out

@@ -370,6 +370,31 @@ def load_shardset_manifest(directory: os.PathLike) -> Dict:
     return manifest
 
 
+def update_shardset_manifest(directory: os.PathLike, extra: Dict) -> Dict:
+    """Atomically merge informational keys into an existing shard-set
+    manifest (read-modify-write through the same tmp+rename commit as
+    :func:`save_shardset_manifest`).
+
+    The remote tier records its last-spawned worker topology here
+    (host/port/pid per shard) so operators can see which processes
+    served a fleet; routing-critical keys are validated on open and
+    refuse to change through this side door.  Returns the merged
+    manifest."""
+    manifest = load_shardset_manifest(directory)
+    if manifest is None:
+        raise ValueError(f"no shard-set manifest under {directory}")
+    for key in ("format", "num_shards", "policy", "time_window_s",
+                "shard_dirs"):
+        if key in extra and extra[key] != manifest.get(key):
+            raise ValueError(
+                f"refusing to rewrite routing key {key!r} via update")
+    manifest.update(extra)
+    manifest.pop("format", None)  # save_shardset_manifest re-stamps it
+    save_shardset_manifest(directory, manifest)
+    manifest["format"] = SHARDSET_FORMAT
+    return manifest
+
+
 def load_segment(manifest_path: os.PathLike) -> MappedSegment:
     """Map one committed segment.  Raises ``ValueError``/``OSError`` on
     missing, foreign-format, or truncated files (callers skip those —

@@ -144,15 +144,11 @@ class ShardedAggregator:
                     "shard_dirs": [self._shard_dirname(i)
                                    for i in range(num_shards)],
                 })
-        self.shards: List[ColumnarMetricStore] = []
-        for i in range(num_shards):
-            shard_dir = (self.directory / self._shard_dirname(i)
-                         if self.directory is not None else None)
-            self.shards.append(ColumnarMetricStore(
-                seal_threshold=seal_threshold,
-                dedup_horizon_s=dedup_horizon_s,
-                directory=shard_dir, wal_fsync=wal_fsync,
-                partial_cache_entries=partial_cache_entries))
+        self._closed = False
+        self.shards: List[ColumnarMetricStore] = self._make_shards(
+            num_shards, seal_threshold=seal_threshold,
+            dedup_horizon_s=dedup_horizon_s, wal_fsync=wal_fsync,
+            partial_cache_entries=partial_cache_entries)
         # query-path observability (tests assert the scatter plan runs)
         self.scatter_queries = 0
         self.fallback_queries = 0
@@ -161,6 +157,25 @@ class ShardedAggregator:
         self.last_query_stats: Optional[Dict] = None
         self._cache: Dict[str, tuple] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
+
+    def _make_shards(self, num_shards: int,
+                     **store_kwargs) -> List[ColumnarMetricStore]:
+        """Build the N shard backends.  The remote tier
+        (:class:`repro.core.remote.RemoteShardedAggregator`) overrides
+        this to return worker-process proxies with the same surface."""
+        shards: List[ColumnarMetricStore] = []
+        for i in range(num_shards):
+            shard_dir = (self.directory / self._shard_dirname(i)
+                         if self.directory is not None else None)
+            shards.append(ColumnarMetricStore(directory=shard_dir,
+                                              **store_kwargs))
+        return shards
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"{type(self).__name__} is closed; reopen the directory "
+                "with a fresh aggregator instead of reusing this one")
 
     def _map_shards(self, fn):
         """Run ``fn`` once per shard — in parallel for multi-shard sets
@@ -195,6 +210,7 @@ class ShardedAggregator:
 
     # ------------------------------------------------------------- ingest --
     def insert(self, rec: MetricRecord) -> bool:
+        self._check_open()
         accepted = self.shards[self.shard_index(rec)].insert(rec)
         if accepted and self._cache:
             # aggregator-level version memos (records/scans) are stale
@@ -212,12 +228,22 @@ class ShardedAggregator:
         return n
 
     def seal(self) -> None:
+        self._check_open()
         for shard in self.shards:
             shard.seal()
         if self._cache:
             self._cache.clear()
 
     def close(self) -> None:
+        """Shut down the shard backends and the query thread pool.
+
+        Idempotent — closing twice is a no-op.  Afterwards every
+        ingest/query entry point raises ``RuntimeError`` instead of
+        silently reviving resources (a ``query()`` after ``close()``
+        used to recreate the thread pool against closed stores)."""
+        if self._closed:
+            return
+        self._closed = True
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
@@ -249,6 +275,7 @@ class ShardedAggregator:
         read.  Returns the number of records brought in.
         """
         from repro.core import segmentio
+        self._check_open()
         src = Path(src_directory)
         total = 0
         for man_path in sorted((src / "segments").glob("seg-*.json")):
@@ -305,6 +332,7 @@ class ShardedAggregator:
         ``last_query_stats`` records the mode and, for scatter/gather,
         the fleet-wide cached/recomputed segment counts.
         """
+        self._check_open()
         stages = splunklite._split_pipeline(q)
         if engine == "rows":
             self.last_query_stats = {"mode": "rows"}
@@ -453,6 +481,7 @@ class ShardedAggregator:
         consumer orders by (ts, value) itself, so the merged scan is a
         drop-in for the single-store one.
         """
+        self._check_open()
         fields = tuple(fields)
         memo_key = (job, kind, since, until, fields)
         memo = self._cache.get("scans")

@@ -234,9 +234,22 @@ class P2Summary:
 
     @classmethod
     def from_state(cls, state: tuple) -> "P2Summary":
-        p, n, knots_v, knots_f, raw, point = state
-        return cls(p, n, tuple(knots_v), tuple(knots_f),
-                   tuple(raw) if raw is not None else None, point)
+        """Rebuild from :meth:`state` output (tuples may arrive as
+        lists after a JSON round-trip — the wire codec in
+        ``repro.core.remote`` ships states verbatim).  Raises
+        ``ValueError`` on a malformed state so transport bugs surface
+        at the decode boundary, not deep inside a merge."""
+        try:
+            p, n, knots_v, knots_f, raw, point = state
+            return cls(float(p), int(n),
+                       tuple(float(v) for v in knots_v),
+                       tuple(float(f) for f in knots_f),
+                       (tuple(float(x) for x in raw)
+                        if raw is not None else None),
+                       float(point))
+        except (TypeError, ValueError) as exc:
+            raise ValueError(
+                f"malformed P2Summary state: {state!r}") from exc
 
     def __eq__(self, other) -> bool:
         if not isinstance(other, P2Summary):

@@ -1414,10 +1414,18 @@ class ScatterPlan:
     rows).  It keys the per-segment partial-aggregate caches, so two
     queries differing only in their tail (``... | sort``, ``... |
     where``) share cached partials.  See docs/incremental.md for the
-    format."""
+    format.
+
+    :meth:`state` / :meth:`from_state` round-trip the plan through a
+    JSON-safe dict — the wire form shipped to remote shard workers
+    (``repro.core.remote``).  The fingerprint is *recomputed* from the
+    same canonical tuple on reconstruction, so worker-side partial
+    caches key identically to the coordinator's."""
 
     __slots__ = ("terms", "prefix", "cols", "cmd", "aggs", "by", "span",
-                 "tail", "fingerprint")
+                 "tail", "term_tokens", "fingerprint")
+
+    STATE_VERSION = 1
 
     def __init__(self, terms, prefix, cols, cmd, aggs, by, span,
                  tail, term_tokens) -> None:
@@ -1435,6 +1443,7 @@ class ScatterPlan:
         self.by = by
         self.span = span
         self.tail = tail
+        self.term_tokens = list(term_tokens)
         canon = ("plan-v1", cmd, float(span) if span is not None else None,
                  tuple(term_tokens),
                  tuple(tuple(toks) for toks in prefix),
@@ -1444,6 +1453,49 @@ class ScatterPlan:
                  tuple(sorted(cols)) if cols is not None else None)
         self.fingerprint = hashlib.blake2b(
             repr(canon).encode("utf-8"), digest_size=12).hexdigest()
+
+    def state(self) -> Dict[str, Any]:
+        """The plan as a plain JSON-safe dict (wire form; versioned)."""
+        return {
+            "v": self.STATE_VERSION,
+            "cmd": self.cmd,
+            "span": float(self.span) if self.span is not None else None,
+            "terms": list(self.term_tokens),
+            "prefix": [list(toks) for toks in self.prefix],
+            "aggs": [[name, fieldname, out]
+                     for name, fieldname, out in self.aggs],
+            "by": list(self.by),
+            "cols": (sorted(self.cols) if self.cols is not None else None),
+            "tail": [list(toks) for toks in self.tail],
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict[str, Any]) -> "ScatterPlan":
+        """Rebuild a plan from :meth:`state` output.  Raises
+        ``ValueError`` on a malformed or version-mismatched state."""
+        if not isinstance(state, dict) or \
+                state.get("v") != cls.STATE_VERSION:
+            raise ValueError(f"unsupported scatter-plan state: "
+                             f"{state.get('v') if isinstance(state, dict) else state!r}")
+        try:
+            term_tokens = [str(t) for t in state["terms"]]
+            cols = state["cols"]
+            return cls(
+                terms=[_Term(t) for t in term_tokens],
+                prefix=[[str(t) for t in toks] for toks in state["prefix"]],
+                cols=(frozenset(str(c) for c in cols)
+                      if cols is not None else None),
+                cmd=str(state["cmd"]),
+                # a bare `count` parses with fieldname None; "" is
+                # equivalent everywhere (incl. the fingerprint canon)
+                aggs=[(str(n), "" if f is None else str(f), str(o))
+                      for n, f, o in state["aggs"]],
+                by=[str(b) for b in state["by"]],
+                span=state["span"],
+                tail=[[str(t) for t in toks] for toks in state["tail"]],
+                term_tokens=term_tokens)
+        except (KeyError, TypeError) as exc:
+            raise ValueError(f"malformed scatter-plan state: {exc}") from exc
 
 
 def compile_scatter_plan(stages: List[List[str]]) -> Optional[ScatterPlan]:

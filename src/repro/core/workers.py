@@ -1,0 +1,338 @@
+"""Shard worker processes — serve one durable shard store over the
+length-prefixed JSON wire protocol (``repro.core.remote``,
+docs/remote.md).
+
+A worker is the leaf of the PerSyst-style agent tree: it owns one
+``ColumnarMetricStore`` directory (a ``shard-NN/`` dir from a sharded
+fleet, or any standalone store dir), executes serialized
+:class:`~repro.core.splunklite.ScatterPlan`s against it — consulting
+its own segment-keyed partial-aggregate cache — and ships back merged
+partial-state maps.  Everything a worker serves is reconstructed from
+its directory on startup (segments mmap in, the WAL tail replays,
+dedup keys reload), so killing and restarting a worker loses nothing.
+
+Run one directly::
+
+    repro-shard-worker --dir fleet/shard-00            # console script
+    python -m repro.core.workers --dir fleet/shard-00  # equivalent
+
+The worker prints one ``REPRO_WORKER_READY host=... port=...`` line on
+stdout once it is listening (``--port 0`` picks an ephemeral port);
+fleet spawners parse it.  Requests from one client are served at a
+time (the store is single-threaded by design); a disconnected client
+can reconnect — the listener survives.  ``--idle-timeout-s`` makes an
+orphaned worker exit on its own, so a wedged coordinator cannot leak
+processes in CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import socket
+import struct
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import remote, splunklite
+from repro.core.columnar import ColumnarMetricStore
+from repro.core.schema import encode_line, parse_line
+from repro.core.splunklite import QueryError, ScatterPlan, _Fallback
+
+_LEN = struct.Struct("!I")
+
+
+class _ConnDone(Exception):
+    """Client went away (EOF) or the worker is shutting down."""
+
+
+class ShardWorker:
+    """Serve one shard store directory on a localhost socket."""
+
+    # a client that stalls mid-frame is dropped after this long; a
+    # fresh connection is always welcome afterwards
+    FRAME_STALL_S = 60.0
+
+    def __init__(self, directory, host: str = "127.0.0.1", port: int = 0,
+                 seal_threshold: int = 4096,
+                 dedup_horizon_s: Optional[float] = None,
+                 wal_fsync: bool = False,
+                 partial_cache_entries: int = 512,
+                 idle_timeout_s: Optional[float] = None) -> None:
+        self.store = ColumnarMetricStore(
+            directory=directory, seal_threshold=seal_threshold,
+            dedup_horizon_s=dedup_horizon_s, wal_fsync=wal_fsync,
+            partial_cache_entries=partial_cache_entries)
+        self.sock = socket.create_server((host, int(port)))
+        self.sock.settimeout(0.5)
+        self.address = self.sock.getsockname()[:2]
+        self.idle_timeout_s = idle_timeout_s
+        self.requests_served = 0
+        self._shutdown = False
+        self._last_activity = time.monotonic()
+
+    # ------------------------------------------------------------ serving --
+    def _idle_expired(self) -> bool:
+        return (self.idle_timeout_s is not None and
+                time.monotonic() - self._last_activity > self.idle_timeout_s)
+
+    def serve_forever(self) -> None:
+        try:
+            while not self._shutdown and not self._idle_expired():
+                try:
+                    conn, _addr = self.sock.accept()
+                except socket.timeout:
+                    continue
+                with conn:
+                    conn.setsockopt(socket.IPPROTO_TCP,
+                                    socket.TCP_NODELAY, 1)
+                    self._serve_conn(conn)
+        finally:
+            self.close()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        conn.settimeout(0.5)
+        self._last_activity = time.monotonic()
+        while not self._shutdown:
+            try:
+                msg = self._read_frame(conn)
+            except _ConnDone:
+                return
+            except (OSError, remote.RemoteProtocolError):
+                return  # framing broken: drop the connection, keep serving
+            self._last_activity = time.monotonic()
+            reply = self.handle(msg)
+            try:
+                remote.send_frame(conn, reply)
+            except (OSError, ValueError):
+                return
+            self.requests_served += 1
+
+    def _read_frame(self, conn: socket.socket) -> Dict:
+        """Read one frame, waking every 0.5s while *between* frames to
+        honor shutdown/idle deadlines; once a frame starts, a stalled
+        client is abandoned after ``FRAME_STALL_S``."""
+        header = self._read_exact(conn, 4, waiting_for_frame=True)
+        (n,) = _LEN.unpack(header)
+        if n > remote.MAX_FRAME_BYTES:
+            raise remote.RemoteProtocolError(f"oversized frame: {n}B")
+        payload = self._read_exact(conn, n, waiting_for_frame=False)
+        import json
+        try:
+            msg = json.loads(payload.decode("utf-8"))
+        except ValueError as exc:
+            raise remote.RemoteProtocolError(str(exc)) from exc
+        if not isinstance(msg, dict):
+            raise remote.RemoteProtocolError("frame payload must be object")
+        return msg
+
+    def _read_exact(self, conn: socket.socket, n: int,
+                    waiting_for_frame: bool) -> bytes:
+        buf = bytearray()
+        started = time.monotonic()
+        while len(buf) < n:
+            try:
+                chunk = conn.recv(min(n - len(buf), 1 << 20))
+            except socket.timeout:
+                if waiting_for_frame and not buf:
+                    if self._shutdown or self._idle_expired():
+                        raise _ConnDone
+                    continue
+                if time.monotonic() - started > self.FRAME_STALL_S:
+                    raise remote.RemoteProtocolError("client stalled "
+                                                     "mid-frame")
+                continue
+            if not chunk:
+                raise _ConnDone
+            buf += chunk
+            started = time.monotonic()
+        return bytes(buf)
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        self.store.close()
+
+    # ----------------------------------------------------------- dispatch --
+    def handle(self, msg: Dict) -> Dict:
+        op = msg.get("op")
+        fn = getattr(self, f"_op_{op}", None) if isinstance(op, str) else None
+        if fn is None or op.startswith("_"):
+            return {"ok": False, "kind": "RemoteProtocolError",
+                    "error": f"unknown op {op!r}"}
+        try:
+            out = fn(msg) or {}
+        except QueryError as exc:
+            return {"ok": False, "kind": "QueryError", "error": str(exc)}
+        except Exception as exc:  # noqa: BLE001 - must never kill the loop
+            return {"ok": False, "kind": type(exc).__name__,
+                    "error": f"{type(exc).__name__}: {exc}"}
+        out["ok"] = True
+        return out
+
+    # ---------------------------------------------------------------- ops --
+    def _op_hello(self, msg: Dict) -> Dict:
+        if msg.get("proto") != remote.PROTOCOL_VERSION or \
+                msg.get("codec") != remote.CODEC_VERSION:
+            raise remote.RemoteProtocolError(
+                f"protocol {msg.get('proto')}/codec {msg.get('codec')} "
+                f"unsupported (this worker: {remote.PROTOCOL_VERSION}/"
+                f"{remote.CODEC_VERSION})")
+        import os
+        return {"proto": remote.PROTOCOL_VERSION,
+                "codec": remote.CODEC_VERSION,
+                "nrecords": len(self.store), "pid": os.getpid(),
+                "dir": str(self.store.directory)}
+
+    def _op_ping(self, msg: Dict) -> Dict:
+        return {}
+
+    def _op_shutdown(self, msg: Dict) -> Dict:
+        self._shutdown = True
+        return {}
+
+    def _op_len(self, msg: Dict) -> Dict:
+        return {"n": len(self.store)}
+
+    def _op_dups(self, msg: Dict) -> Dict:
+        return {"n": self.store.duplicates_dropped}
+
+    def _op_version(self, msg: Dict) -> Dict:
+        return {"v": list(self.store._version())}
+
+    def _op_insert(self, msg: Dict) -> Dict:
+        rec = parse_line(str(msg.get("line", "")))
+        accepted = rec is not None and self.store.insert(rec)
+        return {"accepted": bool(accepted)}
+
+    def _op_lines(self, msg: Dict) -> Dict:
+        return {"n": self.store.ingest_lines(
+            str(ln) for ln in msg.get("lines", []))}
+
+    def _op_seal(self, msg: Dict) -> Dict:
+        self.store.seal()
+        return {}
+
+    def _op_scatter(self, msg: Dict) -> Dict:
+        """Worker half of a distributed query: reduce every matching
+        segment to partial states (cache-aware — the PR 4 warm path)
+        and reply with the worker-locally merged map (level 1 of the
+        two-level gather).
+
+        A request whose ``etag`` matches this plan fingerprint at the
+        store's current version short-circuits to ``not_modified`` —
+        the coordinator already holds this exact map decoded.  The
+        (sealed, buffer) version is content-stable: stores are
+        append-only between versions and a restarted worker's WAL
+        replay reproduces the pre-crash state bit-for-bit."""
+        plan = ScatterPlan.from_state(msg["plan"])
+        version = list(self.store._version())
+        etag = msg.get("etag")
+        if (isinstance(etag, list) and len(etag) == 2
+                and etag[0] == plan.fingerprint
+                and list(etag[1]) == version):
+            return {"not_modified": True, "version": version}
+        stats: Dict[str, int] = {}
+        try:
+            pmap = splunklite.scatter_partials(
+                self.store, plan, cache=self.store.partial_cache,
+                stats=stats)
+        except _Fallback:
+            # mirror in-process semantics: the coordinator re-plans the
+            # whole query as an exact gather
+            return {"fallback": True}
+        return {"groups": remote.encode_partial_map(pmap), "stats": stats,
+                "version": version}
+
+    def _op_gather(self, msg: Dict) -> Dict:
+        stages = [[str(t) for t in toks] for toks in msg.get("stages", [])]
+        ts, rows, _rest = splunklite.gather_filtered(self.store, stages)
+        return {"ts": remote.encode_array(np.asarray(ts, np.float64)),
+                "rows": remote.encode_rows(rows)}
+
+    def _op_scan(self, msg: Dict) -> Dict:
+        sc = self.store.scan(job=msg.get("job"), kind=msg.get("kind"),
+                             since=msg.get("since"), until=msg.get("until"),
+                             fields=tuple(msg.get("fields") or ()))
+        return {"scan": remote.encode_scan(sc)}
+
+    def _op_records(self, msg: Dict) -> Dict:
+        return {"lines": [encode_line(r) for r in self.store.records]}
+
+    def _op_select(self, msg: Dict) -> Dict:
+        return {"lines": [encode_line(r) for r in self.store.select(
+            job=msg.get("job"), kind=msg.get("kind"),
+            since=msg.get("since"), until=msg.get("until"))]}
+
+    def _op_vocab(self, msg: Dict) -> Dict:
+        which = msg.get("which")
+        if which == "jobs":
+            return {"values": self.store.jobs()}
+        if which == "kinds":
+            return {"values": self.store.kinds()}
+        if which == "hosts":
+            return {"values": self.store.hosts(msg.get("job"))}
+        raise remote.RemoteProtocolError(f"unknown vocab {which!r}")
+
+    def _op_cache_stats(self, msg: Dict) -> Dict:
+        pc = self.store.partial_cache
+        return {"hits": pc.hits, "misses": pc.misses,
+                "evictions": pc.evictions, "entries": len(pc)}
+
+    def _op_clear_cache(self, msg: Dict) -> Dict:
+        self.store.partial_cache.clear()
+        return {}
+
+    def _op_explain(self, msg: Dict) -> Dict:
+        fp = str(msg.get("fingerprint", ""))
+        sealed = cached = 0
+        for _seg, uid in self.store.segment_units(include_buffer=False):
+            sealed += 1
+            if self.store.partial_cache.peek((uid, fp)):
+                cached += 1
+        pc = self.store.partial_cache
+        return {"sealed": sealed, "cached": cached,
+                "buffer_rows": len(self.store._buffer),
+                "cache": {"hits": pc.hits, "misses": pc.misses,
+                          "evictions": pc.evictions, "entries": len(pc)}}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-shard-worker",
+        description="Serve one shard store directory over the repro "
+                    "remote wire protocol (docs/remote.md).")
+    ap.add_argument("--dir", required=True,
+                    help="store directory to serve (created if missing)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="listen port; 0 picks an ephemeral one")
+    ap.add_argument("--seal-threshold", type=int, default=4096)
+    ap.add_argument("--dedup-horizon-s", type=float, default=None)
+    ap.add_argument("--wal-fsync", action="store_true")
+    ap.add_argument("--partial-cache-entries", type=int, default=512)
+    ap.add_argument("--idle-timeout-s", type=float, default=None,
+                    help="exit after this long with no client activity "
+                         "(orphan protection for CI)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the READY line")
+    args = ap.parse_args(argv)
+    worker = ShardWorker(
+        args.dir, host=args.host, port=args.port,
+        seal_threshold=args.seal_threshold,
+        dedup_horizon_s=args.dedup_horizon_s,
+        wal_fsync=args.wal_fsync,
+        partial_cache_entries=args.partial_cache_entries,
+        idle_timeout_s=args.idle_timeout_s)
+    if not args.quiet:
+        print(f"{remote.READY_PREFIX} host={worker.address[0]} "
+              f"port={worker.address[1]}", flush=True)
+    worker.serve_forever()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

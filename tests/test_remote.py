@@ -1,0 +1,648 @@
+"""Remote shard execution: wire codec properties, worker lifecycle,
+and the remote parity sweep.
+
+Acceptance contract (ISSUE 5 / docs/remote.md): the shared parity
+query sweep — including dashboards and detectors — returns
+**byte-identical** rows on a :class:`RemoteShardedAggregator` (shards
+in worker processes) vs the in-process :class:`ShardedAggregator`, for
+shard counts {1, 2, 4}, including after a worker restart and in
+degraded (dead-worker fallback) mode.  Byte-identical is possible
+because both sides run the same partial/merge/finalize algebra in the
+same deterministic order and the wire codec round-trips every float
+exactly (shortest-repr JSON serialization).
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import assert_rows_equal, random_records, random_store
+from test_engine_parity import AGG_QUERIES, PIPELINE_QUERIES, SEARCH_QUERIES
+from test_incremental import rows_identical
+
+from repro.core import remote as rm
+from repro.core.columnar import ColumnarMetricStore
+from repro.core.remote import (LocalWorkerProcess, RemoteShardedAggregator,
+                               WorkerClient, decode_partial_map,
+                               decode_rows, decode_value, encode_partial_map,
+                               encode_rows, encode_value)
+from repro.core.schema import MetricRecord, encode_line
+from repro.core.shards import ShardedAggregator
+from repro.core.sketches import P2Summary
+from repro.core.splunklite import (ScatterPlan, _split_pipeline,
+                                   compile_scatter_plan, query,
+                                   scatter_partials, merge_partial_maps,
+                                   finalize_partial_rows, run_stages)
+
+ALL_QUERIES = SEARCH_QUERIES + AGG_QUERIES + PIPELINE_QUERIES
+REMOTE_SHARD_COUNTS = [1, 2, 4]
+SEAL = 53
+IDLE_S = 300.0  # workers self-exit if a wedged run leaks them
+
+RECORDS = random_records(seed=5, n=420)
+
+FLEET_Q = ("search kind=perf gflops>10 | stats avg(gflops) p90(gflops) "
+           "count by job | sort -avg_gflops | head 10")
+
+
+def wire_trip(obj):
+    """Encode → strict JSON → decode (what actually crosses a socket).
+    ``allow_nan=False`` proves the payload never leans on Python's
+    non-standard NaN/Infinity JSON extensions."""
+    return json.loads(json.dumps(obj, allow_nan=False))
+
+
+def make_remote(directory, n, records=RECORDS):
+    agg = RemoteShardedAggregator(num_shards=n, directory=directory,
+                                  seal_threshold=SEAL,
+                                  worker_idle_timeout_s=IDLE_S)
+    for rec in records:
+        agg.insert(rec)
+    return agg
+
+
+# ===========================================================================
+# Value codec: every partial kind round-trips (satellite)
+# ===========================================================================
+
+PARTIAL_STATE_CASES = [
+    # count
+    ("count", 0), ("count", 17),
+    # sum/avg: (n, sum)
+    ("sum", (0, 0.0)), ("avg", (3, 1.5)), ("sum", (2, -0.0)),
+    # min/max/range: (n, min, max) — empty groups carry ±inf
+    ("min", (0, math.inf, -math.inf)), ("max", (4, -1.25, 7.5)),
+    ("range", (1, 3.0, 3.0)),
+    # stdev (Welford): (n, mean, M2)
+    ("stdev", (0, 0.0, 0.0)), ("stdev", (5, 2.0, 3.75)),
+    # dc: exact label sets (strings, incl. the missing-label "")
+    ("dc", set()), ("dc", {"a", "b", ""}), ("dc", {"42", "3.5"}),
+    # quantiles: lists of P2Summary — empty, raw<=32, knotted
+    ("p90", [P2Summary.from_values([], 0.9)]),
+    ("p50", [P2Summary.from_values([1.0, 2.0, 3.0], 0.5)]),
+    ("p99", [P2Summary.from_values(list(np.linspace(0, 1, 100)), 0.99)]),
+    ("median", [P2Summary.from_values([5.0] * 40, 0.5),
+                P2Summary.from_values([1.0], 0.5)]),
+]
+
+
+def test_codec_round_trips_every_partial_kind():
+    for name, state in PARTIAL_STATE_CASES:
+        back = decode_value(wire_trip(encode_value(state)))
+        assert back == state, (name, state, back)
+        assert type(back) is type(state), (name, state, back)
+
+
+def test_codec_round_trips_nonfinite_and_scalars():
+    for v in [math.inf, -math.inf, 0.0, -0.0, 1e-300, 1.5, 3, True, False,
+              None, "", "häst", "a b=c"]:
+        back = decode_value(wire_trip(encode_value(v)))
+        assert back == v and type(back) is type(v), v
+        if isinstance(v, float):
+            assert math.copysign(1.0, back) == math.copysign(1.0, v)
+    nan_back = decode_value(wire_trip(encode_value(math.nan)))
+    assert isinstance(nan_back, float) and math.isnan(nan_back)
+
+
+def test_codec_round_trips_rows_and_keys():
+    rows = [{"host": "n0", "gflops": 812.25, "step": 7, "ok": True},
+            {"host": "n1", "v": math.nan, "s": "x=1 y=2"},
+            {}]
+    back = decode_rows(wire_trip(encode_rows(rows)))
+    rows_identical(back, rows, "<rows codec>")
+    key = (1080.0, "alpha.1", "", "7")  # timechart bucket + labels
+    assert decode_value(wire_trip(encode_value(key))) == key
+    # tuple/list/set distinction survives (merge kernels rely on it)
+    assert decode_value(wire_trip(encode_value((1, 2.0)))) == (1, 2.0)
+    assert decode_value(wire_trip(encode_value([1, 2.0]))) == [1, 2.0]
+    assert decode_value(wire_trip(encode_value({"x"}))) == {"x"}
+
+
+def test_codec_rejects_unknown():
+    with pytest.raises(TypeError):
+        encode_value(object())
+    with pytest.raises(rm.RemoteProtocolError):
+        decode_value(["zz", []])
+    with pytest.raises(rm.RemoteProtocolError):
+        decode_value(["f", "huge"])
+    with pytest.raises(ValueError):
+        P2Summary.from_state(("bad",))
+
+
+MERGEABLE = [q for q in ALL_QUERIES
+             if compile_scatter_plan(_split_pipeline(q)) is not None]
+
+
+@given(st.integers(min_value=0, max_value=200))
+@settings(max_examples=15, deadline=None)
+def test_codec_merge_finalize_parity_property(seed):
+    """Property (satellite): encode/decode every per-shard partial map
+    of every mergeable parity query, merge + finalize the *decoded*
+    maps, and require byte-identical rows vs the in-process sharded
+    path.  Covers count/sum/minmax/Welford/dc/P² (raw and knotted) and
+    empty groups on randomized workloads."""
+    from repro.core.splunklite import _Fallback
+    recs = random_records(seed=seed, n=120)
+    sharded = random_store(records=recs, shards=3, seal_threshold=17)
+    for q in MERGEABLE[:: 4 if seed % 3 else 1]:  # rotate coverage
+        plan = compile_scatter_plan(_split_pipeline(q))
+        try:
+            maps = [scatter_partials(s, plan) for s in sharded.shards]
+        except _Fallback:
+            continue  # runtime fallback (e.g. bool eval): exact-gather
+            # territory, exercised by the full remote parity sweep
+        wired = [decode_partial_map(wire_trip(encode_partial_map(m)))
+                 for m in maps]
+        for m, w in zip(maps, wired):
+            assert w == m, q
+        rows = run_stages(
+            finalize_partial_rows(merge_partial_maps(wired, plan.aggs),
+                                  plan), plan.tail)
+        rows_identical(rows, sharded.query(q), q)
+
+
+def test_plan_state_round_trip_preserves_fingerprint():
+    for q in MERGEABLE:
+        plan = compile_scatter_plan(_split_pipeline(q))
+        back = ScatterPlan.from_state(wire_trip(plan.state()))
+        assert back.fingerprint == plan.fingerprint, q
+        assert back.cmd == plan.cmd and back.span == plan.span, q
+        assert back.by == list(plan.by) and back.tail == [
+            list(t) for t in plan.tail], q
+    with pytest.raises(ValueError):
+        ScatterPlan.from_state({"v": 999})
+    with pytest.raises(ValueError):
+        ScatterPlan.from_state({"v": 1, "terms": []})
+
+
+# ===========================================================================
+# Remote parity sweep: shard counts {1, 2, 4}
+# ===========================================================================
+
+@pytest.fixture(scope="module", params=REMOTE_SHARD_COUNTS)
+def remote_pair(request, tmp_path_factory):
+    n = request.param
+    inproc = random_store(records=RECORDS, shards=n, seal_threshold=SEAL)
+    agg = make_remote(tmp_path_factory.mktemp(f"remote{n}") / "fleet", n)
+    yield inproc, agg
+    agg.close()
+    inproc.close()
+
+
+def test_remote_parity_full_sweep(remote_pair):
+    inproc, agg = remote_pair
+    assert len(agg) == len(inproc) == len(RECORDS)
+    for q in ALL_QUERIES:
+        rows_identical(query(agg, q), query(inproc, q), q)
+
+
+def test_remote_rows_engine_oracle(remote_pair):
+    inproc, agg = remote_pair
+    for q in (FLEET_Q, "search kind=perf | dedup host", "head 5"):
+        rows_identical(query(agg, q, engine="rows"),
+                       query(inproc, q, engine="rows"), q)
+
+
+def test_remote_store_surface(remote_pair):
+    inproc, agg = remote_pair
+    assert agg.jobs() == inproc.jobs()
+    assert agg.kinds() == inproc.kinds()
+    assert agg.hosts() == inproc.hosts()
+    assert agg.hosts("alpha.1") == inproc.hosts("alpha.1")
+    assert [encode_line(r) for r in agg.records] == \
+        [encode_line(r) for r in inproc.records]
+    got = [encode_line(r) for r in agg.select(job="beta.2", kind="perf")]
+    want = [encode_line(r) for r in inproc.select(job="beta.2",
+                                                  kind="perf")]
+    assert got == want
+    a = inproc.scan(kind="perf", fields=("gflops", "step"))
+    b = agg.scan(kind="perf", fields=("gflops", "step"))
+    assert a.n == b.n
+
+    def key_set(sc):
+        v, p = sc.field("gflops")
+        return sorted(
+            (float(t), str(sc.host_vocab[h]),
+             float(v[i]) if p[i] and not np.isnan(v[i]) else None)
+            for i, (t, h) in enumerate(zip(sc.ts, sc.host_codes)))
+    assert key_set(a) == key_set(b)
+
+
+def test_remote_scatter_overlaps_transport(remote_pair):
+    """The scatter path must issue every shard request before consuming
+    any reply — transport overlaps with worker compute."""
+    _inproc, agg = remote_pair
+    query(agg, FLEET_Q)
+    stats = agg.last_query_stats
+    assert stats["mode"] == "scatter_gather" and stats["remote"]
+    assert stats["overlap"] is True
+    sends = [j for j, (k, _) in enumerate(agg.last_io_trace) if k == "send"]
+    recvs = [j for j, (k, _) in enumerate(agg.last_io_trace) if k == "recv"]
+    assert len(sends) == len(recvs) == agg.num_shards
+    assert max(sends) < min(recvs)
+
+
+def test_remote_warm_path_uses_worker_caches(remote_pair):
+    """Workers consult their own segment-keyed partial caches, and an
+    unchanged worker short-circuits the whole exchange with a
+    conditional-scatter ``not_modified`` reply."""
+    inproc, agg = remote_pair
+    first = query(agg, FLEET_Q)
+    # identical store: every worker answers not_modified from its etag
+    rows_identical(query(agg, FLEET_Q), first, FLEET_Q)
+    stats = agg.last_query_stats
+    assert stats["segments_computed"] == 0
+    assert stats["shards_unchanged"] == agg.num_shards
+    ex = agg.explain(FLEET_Q)
+    assert ex["mode"] == "scatter_gather" and ex["remote"]
+    assert ex["segments"]["sealed"] > 0
+    assert ex["segments"]["cached"] == ex["segments"]["sealed"]
+    assert all(w["alive"] for w in ex["workers"])
+    # new data: only the touched shard recomputes, and only its buffer
+    extra = MetricRecord(9999.0, "n0", "alpha.1", "perf", {"gflops": 50.0})
+    assert agg.insert(extra) and inproc.insert(extra)
+    rows_identical(query(agg, FLEET_Q), query(inproc, FLEET_Q), FLEET_Q)
+    stats = agg.last_query_stats
+    assert stats["segments_computed"] == 0
+    assert stats["shards_unchanged"] == agg.num_shards - 1
+    assert agg.partial_cache_hits > 0
+
+
+def test_remote_dedup_matches_inprocess(remote_pair):
+    inproc, agg = remote_pair
+    before = agg.duplicates_dropped
+    for rec in RECORDS[::40]:  # at-least-once retransmits
+        assert not agg.insert(rec)
+        assert not inproc.insert(rec)
+    assert agg.duplicates_dropped - before == len(RECORDS[::40])
+    assert len(agg) == len(inproc)
+
+
+# ===========================================================================
+# Restart + degraded mode (acceptance)
+# ===========================================================================
+
+@pytest.fixture()
+def fleet2(tmp_path):
+    agg = make_remote(tmp_path / "fleet", 2)
+    yield agg
+    agg.close()
+
+
+SWEEP = [FLEET_Q,
+         "stats stdev(gflops) range(gflops) dc(host) dc(app) by kind",
+         "stats median(gflops) p25(gflops) p90(gflops) by job",
+         "search kind=perf | stats first(app) last(gflops)",  # exact gather
+         "search kind=perf | sort -gflops | head 7",
+         "dedup job app"]
+
+
+def test_remote_parity_after_worker_restart(fleet2):
+    inproc = random_store(records=RECORDS, shards=2, seal_threshold=SEAL)
+    want = {q: query(inproc, q) for q in SWEEP}
+    agg = fleet2
+    agg.kill_worker(0)
+    agg.restart_worker(0)  # fresh process re-adopts the durable dir
+    assert all(agg.workers_alive())
+    for q in SWEEP:
+        rows_identical(query(agg, q), want[q], q)
+    assert agg.last_query_stats["degraded_shards"] == 0
+    # dedup keys survived the restart (segments + WAL replay)
+    assert not agg.insert(RECORDS[0])
+
+
+def test_remote_degraded_dead_worker_falls_back_locally(fleet2):
+    inproc = random_store(records=RECORDS, shards=2, seal_threshold=SEAL)
+    agg = fleet2
+    want = {q: query(inproc, q) for q in SWEEP}
+    agg.kill_worker(1)
+    for q in SWEEP:
+        rows_identical(query(agg, q), want[q], q)
+        assert agg.last_query_stats["degraded_shards"] == 1, q
+    assert agg.degraded_queries >= len(SWEEP)
+    assert agg.shards[1].degraded_calls > 0
+    ex = agg.explain(FLEET_Q)
+    assert ex["degraded_shards"] == 1
+    assert [w["alive"] for w in ex["workers"]] == [True, False]
+    assert agg.workers_alive() == [True, False]
+    # the store surface degrades too (dashboards keep rendering)
+    assert agg.jobs() == inproc.jobs()
+    assert len(agg) == len(inproc)
+    # a restart brings the shard back out of degraded mode
+    agg.restart_worker(1)
+    for q in SWEEP[:2]:
+        rows_identical(query(agg, q), want[q], q)
+        assert agg.last_query_stats["degraded_shards"] == 0
+
+
+def test_remote_degraded_disabled_raises(tmp_path):
+    """degraded_ok=False covers the *whole* store surface, not just
+    query(): scan/records/vocabs must refuse to serve stale read-only
+    snapshots too."""
+    agg = RemoteShardedAggregator(num_shards=2, directory=tmp_path / "f",
+                                  seal_threshold=SEAL, degraded_ok=False,
+                                  worker_idle_timeout_s=IDLE_S)
+    try:
+        for rec in RECORDS[:40]:
+            agg.insert(rec)
+        agg.kill_worker(0)
+        with pytest.raises(rm.WorkerUnavailable):
+            query(agg, FLEET_Q)
+        with pytest.raises(rm.WorkerUnavailable):
+            agg.scan(kind="perf", fields=("gflops",))
+        with pytest.raises(rm.WorkerUnavailable):
+            agg.jobs()
+        with pytest.raises(rm.WorkerUnavailable):
+            agg.records
+    finally:
+        agg.close()
+
+
+def test_remote_reply_streams_resync_after_midmerge_error(tmp_path):
+    """Regression: an error raised part-way through the reply-merge
+    loop (here: degraded execution disabled + a dead worker) must not
+    leave other workers' replies buffered on their sockets — a later
+    query would consume a stale frame as its own answer and serve
+    wrong results forever.  The affected connections are dropped and
+    reconnect on the next send."""
+    agg = RemoteShardedAggregator(num_shards=2, directory=tmp_path / "f",
+                                  seal_threshold=SEAL, degraded_ok=False,
+                                  worker_idle_timeout_s=IDLE_S)
+    try:
+        for rec in RECORDS[:80]:
+            agg.insert(rec)
+        want = query(agg, FLEET_Q)
+        agg.kill_worker(0)
+        with pytest.raises(rm.WorkerUnavailable):
+            query(agg, FLEET_Q)  # worker 1's reply must not linger
+        agg.restart_worker(0)
+        for _ in range(3):  # repeated queries stay in sync
+            rows_identical(query(agg, FLEET_Q), want, FLEET_Q)
+            assert agg.last_query_stats["degraded_shards"] == 0
+    finally:
+        agg.close()
+
+
+def test_close_leaves_externally_managed_workers_running(tmp_path):
+    """A coordinator attached via addresses= does not own the workers:
+    close() must detach without shutting the shared fleet down."""
+    ext = LocalWorkerProcess(tmp_path / "f" / "shard-00",
+                             seal_threshold=SEAL, idle_timeout_s=IDLE_S)
+    try:
+        agg = RemoteShardedAggregator(
+            num_shards=1, directory=tmp_path / "f",
+            seal_threshold=SEAL, addresses=[ext.address])
+        assert agg.insert(RECORDS[0])
+        agg.close()
+        assert ext.alive  # still serving
+        again = RemoteShardedAggregator(
+            num_shards=1, directory=tmp_path / "f",
+            seal_threshold=SEAL, addresses=[ext.address])
+        assert len(again) == 1  # same worker, data intact
+        again.close()
+        assert ext.alive
+    finally:
+        ext.stop(timeout_s=5.0)
+
+
+def test_remote_overlap_true_after_runtime_scatter_fallback(fleet2):
+    """A plan that compiles but falls back at runtime re-runs as an
+    exact gather; the overlap invariant is judged on the gather's own
+    trace, not the aborted scatter's."""
+    agg = fleet2
+    q = "eval hot=gflops>750 | stats sum(hot) by job"  # bool eval
+    inproc = random_store(records=RECORDS, shards=2, seal_threshold=SEAL)
+    rows_identical(query(agg, q), query(inproc, q), q)
+    stats = agg.last_query_stats
+    assert stats["mode"] == "exact_gather"
+    assert stats["overlap"] is True
+    # the combined trace still records both phases for operators
+    kinds = [k for k, _i in agg.last_io_trace]
+    assert kinds.count("send") == 2 * agg.num_shards
+
+
+def test_remote_bulk_ingest_lines_matches_per_record(fleet2):
+    agg = fleet2
+    extra = [MetricRecord(50000.0 + i, f"n{i % 4}", "bulk.1", "perf",
+                          {"v": float(i)}) for i in range(20)]
+    lines = [encode_line(r) for r in extra]
+    assert agg.ingest_lines(lines) == 20
+    assert agg.ingest_lines(lines) == 0  # dedup via the batched path
+    rows = query(agg, "search job=bulk.1 | stats count sum(v)")
+    assert rows == [{"count": 20, "sum_v": float(sum(range(20)))}]
+
+
+def test_remote_adopt_store_dir_refused(fleet2, tmp_path):
+    src = random_store(records=RECORDS[:30], directory=tmp_path / "src",
+                       seal_threshold=10)
+    src.close()
+    with pytest.raises(RuntimeError, match="not supported"):
+        fleet2.adopt_store_dir(tmp_path / "src")
+
+
+def test_remote_constructor_misuse_rejected(tmp_path):
+    with pytest.raises(ValueError, match="directory"):
+        RemoteShardedAggregator(num_shards=2)
+    with pytest.raises(ValueError, match="addresses"):
+        RemoteShardedAggregator(num_shards=2, directory=tmp_path / "f",
+                                spawn=False)
+    with pytest.raises(ValueError, match="not both"):
+        RemoteShardedAggregator(num_shards=1, directory=tmp_path / "f",
+                                spawn=True, addresses=[("127.0.0.1", 1)])
+    from repro.core.aggregator import Aggregator
+    with pytest.raises(ValueError, match="shards"):
+        Aggregator(tmp_path / "inbox", remote_workers=True,
+                   store_dir=tmp_path / "f")
+
+
+def test_remote_close_is_idempotent_and_guards_use(tmp_path):
+    agg = make_remote(tmp_path / "fleet", 2, records=RECORDS[:60])
+    procs = [sh.process for sh in agg.shards]
+    agg.close()
+    agg.close()
+    assert all(not p.alive for p in procs)  # workers shut down
+    with pytest.raises(RuntimeError, match="closed"):
+        agg.query("stats count")
+    with pytest.raises(RuntimeError, match="closed"):
+        agg.insert(RECORDS[0])
+
+
+# ===========================================================================
+# Dashboards / detectors / streaming over the wire
+# ===========================================================================
+
+def _fill_dash(store):
+    for h in range(3):
+        for s in range(20):
+            stalled = h == 2 and s > 10
+            store.insert(MetricRecord(
+                1000.0 + s * 10.0 + h * 0.1, f"n{h}", "jobA", "perf",
+                {"gflops": 0.0 if stalled else 500.0, "mfu": 0.4,
+                 "steps_per_s": 0.0 if stalled else 1.0, "step": s}))
+            store.insert(MetricRecord(
+                1000.0 + s * 10.0 + h * 0.1 + 0.01, f"n{h}", "jobA",
+                "device", {"hbm_frac_used": 0.5, "local_devices": 4}))
+    return store
+
+
+def test_dashboards_and_detectors_identical_over_remote(tmp_path):
+    from repro.core.aggregator import MetricStore
+    from repro.core.daemon import JobManifest
+    from repro.core.dashboards import (job_metric_series,
+                                       job_statistical_view,
+                                       view_idle_accelerators)
+    from repro.core.detectors import DetectorBank
+    single = _fill_dash(MetricStore(seal_threshold=16))
+    agg = RemoteShardedAggregator(num_shards=2, directory=tmp_path / "d",
+                                  seal_threshold=16,
+                                  worker_idle_timeout_s=IDLE_S)
+    try:
+        _fill_dash(agg)
+        assert job_metric_series(single, "jobA", "gflops") == \
+            job_metric_series(agg, "jobA", "gflops")
+        assert job_statistical_view(single, "jobA", "gflops") == \
+            job_statistical_view(agg, "jobA", "gflops")
+        assert_rows_equal(view_idle_accelerators(agg),
+                          view_idle_accelerators(single), "idle_view")
+        manifests = {"jobA": JobManifest(job_id="jobA", num_hosts=3)}
+        key = lambda e: (e.detector, e.job,  # noqa: E731
+                         sorted(e.fields.items()))
+        assert sorted(map(key, DetectorBank().scan(single, manifests))) == \
+            sorted(map(key, DetectorBank().scan(agg, manifests)))
+    finally:
+        agg.close()
+
+
+def test_aggregator_watch_streams_over_remote_fleet(tmp_path):
+    """`Aggregator(remote_workers=True)`: pump → watch refresh runs
+    the scatter over worker processes, with partial updates flowing
+    into the handle (QueryHandle.refresh is the consuming surface)."""
+    from repro.core.aggregator import Aggregator
+
+    def rec(ts, host, v):
+        return MetricRecord(ts, host, "j1", "perf", {"v": v, "step": int(ts)})
+
+    agg = Aggregator(tmp_path / "inbox", shards=2, remote_workers=True,
+                     store_dir=tmp_path / "fleet")
+    try:
+        assert isinstance(agg.store, RemoteShardedAggregator)
+        inbox = tmp_path / "inbox" / "a.log"
+        lines = [encode_line(rec(1000.0 + i, f"n{i % 3}", float(i)))
+                 for i in range(9)]
+        inbox.write_text("".join(ln + "\n" for ln in lines))
+        handle = agg.watch("stats sum(v) count by host")
+        assert agg.pump() == 9
+        rows = handle.refresh()
+        assert sum(r["count"] for r in rows) == 9
+        assert handle.refresh() is rows  # version-gated: no re-query
+        inbox.write_text("".join(ln + "\n" for ln in lines) +
+                         encode_line(rec(2000.0, "n9", 5.0)) + "\n")
+        assert agg.pump() == 1  # replays dedup, the new line lands
+        rows2 = agg.refresh_watches()["stats sum(v) count by host"]
+        assert sum(r["count"] for r in rows2) == 10
+    finally:
+        agg.close()
+
+
+# ===========================================================================
+# Worker process / CLI lifecycle
+# ===========================================================================
+
+def test_worker_cli_serves_and_shuts_down(tmp_path):
+    """The `repro-shard-worker` entry point (same `main` as `python -m
+    repro.core.workers`): spawn, handshake, ingest, query ops, clean
+    shutdown within a hard deadline."""
+    proc = LocalWorkerProcess(tmp_path / "s0", seal_threshold=8,
+                              idle_timeout_s=IDLE_S)
+    try:
+        client = WorkerClient(proc.address, op_timeout_s=20.0)
+        hello = client.connect()
+        assert hello["nrecords"] == 0 and hello["pid"] == proc.proc.pid
+        line = encode_line(MetricRecord(1.0, "n0", "j", "perf", {"v": 2.0}))
+        assert client.rpc("insert", line=line)["accepted"]
+        assert not client.rpc("insert", line=line)["accepted"]  # dedup
+        assert client.rpc("len")["n"] == 1
+        assert client.rpc("dups")["n"] == 1
+        assert client.rpc("vocab", which="jobs")["values"] == ["j"]
+        bad = client.rpc("ping")  # unknown ops error without killing it
+        assert bad["ok"]
+        with pytest.raises(rm.WorkerError):
+            client.rpc("no_such_op")
+        with pytest.raises(rm.WorkerError):
+            client.rpc("scatter", plan={"v": 999})  # malformed plan state
+        assert client.rpc("ping")["ok"]  # connection survived the errors
+        client.rpc("shutdown")
+        client.close()
+        proc.proc.wait(timeout=10)
+        assert proc.proc.returncode == 0
+    finally:
+        proc.stop(timeout_s=5.0)
+
+
+def test_worker_idle_timeout_self_exits(tmp_path):
+    """Orphan protection: an unattended worker exits on its own, so a
+    wedged coordinator cannot leak processes past CI's hard timeout."""
+    proc = LocalWorkerProcess(tmp_path / "s0", idle_timeout_s=1.0)
+    try:
+        proc.proc.wait(timeout=20)
+        assert proc.proc.returncode == 0
+    finally:
+        proc.stop(timeout_s=5.0)
+
+
+def test_worker_version_mismatch_refused(tmp_path, monkeypatch):
+    proc = LocalWorkerProcess(tmp_path / "s0", idle_timeout_s=IDLE_S)
+    try:
+        client = WorkerClient(proc.address, op_timeout_s=20.0)
+        monkeypatch.setattr(rm, "PROTOCOL_VERSION", 999)
+        with pytest.raises((rm.WorkerError, rm.RemoteProtocolError)):
+            client.connect()
+        client.close()
+    finally:
+        proc.stop(timeout_s=5.0)
+
+
+def test_worker_topology_recorded_in_manifest(tmp_path):
+    from repro.core import segmentio
+    agg = make_remote(tmp_path / "fleet", 2, records=RECORDS[:10])
+    try:
+        man = segmentio.load_shardset_manifest(tmp_path / "fleet")
+        workers = man["workers"]
+        assert [w["shard"] for w in workers] == [0, 1]
+        assert all(w["pid"] and w["port"] for w in workers)
+        with pytest.raises(ValueError):
+            segmentio.update_shardset_manifest(tmp_path / "fleet",
+                                               {"num_shards": 7})
+    finally:
+        agg.close()
+
+
+# ===========================================================================
+# Read-only store opens (the degraded-mode primitive)
+# ===========================================================================
+
+def test_read_only_store_open_is_side_effect_free(tmp_path):
+    live = random_store(records=RECORDS[:120], seal_threshold=29,
+                        directory=tmp_path / "s")
+    want = query(live, FLEET_Q)
+    live.close()
+    wal_before = (tmp_path / "s" / "wal.log").read_bytes()
+    ro = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=29,
+                             read_only=True)
+    rows_identical(query(ro, FLEET_Q), want, FLEET_Q)
+    with pytest.raises(RuntimeError, match="read-only"):
+        ro.insert(RECORDS[0])
+    with pytest.raises(RuntimeError, match="read-only"):
+        ro.seal()
+    ro.close()
+    # nothing on disk moved: the WAL was replayed, never rewritten
+    assert (tmp_path / "s" / "wal.log").read_bytes() == wal_before
+    # and the real owner can still open the directory normally
+    back = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=29)
+    rows_identical(query(back, FLEET_Q), want, FLEET_Q)
+    back.close()
+    with pytest.raises(ValueError):
+        ColumnarMetricStore(read_only=True)  # requires a directory

@@ -192,6 +192,60 @@ def test_skewed_shard_parity(skew, shards, single):
         assert_sharded_rows(query(store, q), query(single, q), q)
 
 
+# ------------------------------------------------------- routing golden --
+
+def test_hash_route_golden_values():
+    """`_hash_route` is a wire contract, not just an implementation
+    detail: remote workers and coordinators (possibly on different
+    platforms / Python versions) must agree on record placement, and
+    durable shard sets must reopen with identical routing.  Pin the
+    blake2b-64 host digests and the derived shard indices for a fixed
+    host list — if this test ever fails, the hash changed and every
+    persisted shard set on disk would silently mis-route."""
+    import hashlib
+    from repro.core.shards import _hash_route
+    golden = {
+        # host: (little-endian blake2b-64 digest, %2, %4, %7)
+        "n0": (14278672310350874025, 1, 1, 5),
+        "n1": (18235861091803621825, 1, 1, 6),
+        "n2": (14616293611457783150, 0, 2, 3),
+        "n3": (4982723058291715516, 0, 0, 3),
+        "node000-0": (11489254741126860214, 0, 2, 6),
+        "node042-7": (4320719588347712696, 0, 0, 6),
+        "cobra-e01": (15046485132095626312, 0, 0, 5),
+        "draco.17": (16332559337239019389, 1, 1, 4),
+        "": (13020603013274838756, 0, 0, 5),
+    }
+    for host, (digest, m2, m4, m7) in golden.items():
+        raw = int.from_bytes(
+            hashlib.blake2b(host.encode("utf-8"), digest_size=8).digest(),
+            "little")
+        assert raw == digest, (host, raw)
+        assert _hash_route(host, 2) == m2, host
+        assert _hash_route(host, 4) == m4, host
+        assert _hash_route(host, 7) == m7, host
+
+
+# -------------------------------------------------------- close lifecycle --
+
+def test_close_is_idempotent_and_guards_use_after_close():
+    """Regression: a query() after close() used to silently recreate
+    the shard thread pool over closed stores.  close() must be
+    idempotent and later use must fail loudly."""
+    store = random_store(records=RECORDS[:80], shards=2, seal_threshold=17)
+    assert query(store, "stats count")[0]["count"] == 80
+    store.close()
+    store.close()  # idempotent
+    assert store._pool is None
+    for call in (lambda: store.query("stats count"),
+                 lambda: store.insert(RECORDS[0]),
+                 lambda: store.seal(),
+                 lambda: store.scan(kind="perf")):
+        with pytest.raises(RuntimeError, match="closed"):
+            call()
+    assert store._pool is None  # nothing revived the pool
+
+
 # ------------------------------------------------------------ plan choice --
 
 def test_scatter_plan_used_for_mergeable_aggregations(single):
