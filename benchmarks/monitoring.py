@@ -15,6 +15,9 @@ table/figure/claim.
 * ``bench_incremental``   — repeated fleet queries through the
   segment-keyed partial-aggregate cache: cold vs warm vs
   append-then-requery (docs/incremental.md).
+* ``bench_compaction``    — docs/storage.md tiers: cold query pre/post
+  segment compaction, compressed-tier byte ratio, rollup query vs the
+  raw columnar scan it must match.
 * ``bench_restart``       — §4.3 retention: aggregator cold-start from
   persisted columnar segments (mmap) vs full wire-line replay.
 * ``bench_remote``        — remote shard execution (docs/remote.md):
@@ -520,6 +523,94 @@ def bench_restart(out_dir: Path):
                 f"{n}records,wal_replayed={wal_lines},"
                 f"{speedup:.1f}x_vs_line_replay"),
             row("restart.line_replay", us_replay, f"{n}records"),
+        ]
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def bench_compaction(out_dir: Path):
+    """Segment compaction + tiered storage (docs/storage.md) on the
+    ≥100k-record fleet workload sealed into hundreds of small segments
+    (a long-running aggregator's steady state).  Measures the *cold*
+    fleet query — fresh read-only open per call, so every manifest and
+    payload is re-read from disk — before vs after compaction into
+    compressed cold-tier segments, the compressed-vs-raw byte ratio,
+    and a rollup-tier aggregate vs the same query forced down the raw
+    columnar scan.  Asserts the ISSUE 6 acceptance floors: >= 10x
+    segment-count reduction, >= 3x cold-query speedup, identical rows
+    pre/post compaction, and rollup aggregates matching the raw scan."""
+    import shutil
+    import tempfile
+    from repro.core.aggregator import MetricStore
+    from repro.core.splunklite import query
+    tmp = Path(tempfile.mkdtemp())
+    try:
+        store = MetricStore(seal_threshold=128, directory=tmp / "store")
+        _fleet_store(n_jobs=110, hosts_per_job=8, samples=60, store=store)
+        store.seal()
+        n = len(store)
+        segs_before = len(store._sealed)
+        bytes_raw = store.storage_stats()["bytes"]
+        store.close()
+        q = ("search kind=perf gflops>0 "
+             "| stats avg(gflops) p90(step_time_s) count by job "
+             "| sort -avg_gflops | head 10")
+
+        def cold_query():
+            st = MetricStore(seal_threshold=128, directory=tmp / "store",
+                             read_only=True)
+            try:
+                return query(st, q)
+            finally:
+                st.close()
+
+        want = cold_query()
+        us_pre = timeit(cold_query, warmup=1, iters=3)
+        rw = MetricStore(seal_threshold=128, directory=tmp / "store")
+        cstats = rw.compact()
+        segs_after = len(rw._sealed)
+        storage = rw.storage_stats()
+        cold_tier = storage["tiers"]["cold"]
+        rw.close()
+        assert cold_query() == want, "rows diverged after compaction"
+        us_post = timeit(cold_query, warmup=1, iters=3)
+        reduction = segs_before / max(segs_after, 1)
+        speedup = us_pre / max(us_post, 1e-9)
+        # acceptance floors from ISSUE 6 (measured with headroom)
+        assert reduction >= 10.0, (segs_before, segs_after)
+        assert speedup >= 3.0, (us_pre, us_post)
+        byte_ratio = cold_tier["bytes"] / max(cold_tier["raw_bytes"], 1)
+        # rollup tier: bucketed partial-aggregate columns answer the
+        # fleet aggregate without touching any raw segment
+        ru = MetricStore(seal_threshold=128, directory=tmp / "store")
+        ru.apply_retention(rollups=[(60.0, 0.0)])
+        rq = "kind=perf ts>=0 | stats avg(gflops) count by job"
+        got_ru = {r["job"]: r for r in query(ru, rq)}
+        want_ru = {r["job"]: r
+                   for r in query(ru, rq, engine="columnar")}
+        assert got_ru.keys() == want_ru.keys()
+        for job, w in want_ru.items():
+            assert got_ru[job]["count"] == w["count"]
+            assert abs(got_ru[job]["avg_gflops"] - w["avg_gflops"]) <= 1e-6
+        assert ru.last_query_stats["rollup_segments"] > 0
+        us_rollup = timeit(lambda: query(ru, rq), warmup=1, iters=5)
+        us_raw = timeit(lambda: query(ru, rq, engine="columnar"),
+                        warmup=1, iters=5)
+        ru.close()
+        return [
+            row("compaction.cold_query_pre", us_pre,
+                f"{n}records,{segs_before}segments,uncompacted"),
+            row("compaction.cold_query_post", us_post,
+                f"{segs_after}segments,{reduction:.0f}x_fewer,"
+                f"{speedup:.1f}x_faster,"
+                f"{cstats['rows']}rows_merged"),
+            row("compaction.compressed_bytes", cold_tier["bytes"],
+                f"{byte_ratio:.2f}x_of_raw,{bytes_raw}raw_bytes"),
+            row("compaction.rollup_query", us_rollup,
+                f"gran=60s,{us_raw / max(us_rollup, 1e-9):.1f}"
+                "x_vs_raw_scan"),
+            row("compaction.rollup_query_raw", us_raw,
+                "same_run_raw_columnar_scan"),
         ]
     finally:
         shutil.rmtree(tmp, ignore_errors=True)

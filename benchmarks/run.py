@@ -14,6 +14,8 @@ trajectory is tracked across PRs.
   sharded       — multi-aggregator scatter/gather fan-out vs single store
   incremental   — segment-keyed partial-aggregate cache: cold vs warm
   remote        — worker-process shard fleet vs in-process sharded
+  compaction    — segment compaction + compressed tiers: cold query
+                  pre/post, byte ratio, rollup vs raw scan
   restart       — aggregator cold-start: mmap segments vs line replay
   transport     — rsyslog-analog throughput
   kernels.*     — Pallas kernels vs jnp oracles (interpret mode)
@@ -55,6 +57,7 @@ def main() -> None:
         mbench.bench_sharded,
         mbench.bench_incremental,
         mbench.bench_remote,
+        mbench.bench_compaction,
         mbench.bench_restart,
         mbench.bench_transport,
         kbench.bench_flash_attention,

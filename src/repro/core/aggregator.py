@@ -50,6 +50,18 @@ class Aggregator:
     :meth:`load_archive` still reads old archives (e.g. to migrate one
     into a ``store_dir``).  Pass a pre-configured ``store`` instead to
     control sealing / dedup-eviction / durability.
+
+    ``compaction_policy`` turns on background index maintenance (the
+    Splunk bucket-aging analog — docs/storage.md): after any pump that
+    ingested data, once ``every_seals`` new sealed segments have
+    accumulated since the last run, the store is compacted (small
+    sealed segments merged into large compressed ones) and, when the
+    policy carries a ``retention`` sub-dict, retention/rollup tiers are
+    applied.  Keys: ``every_seals`` (default 16) plus any of
+    ``small_rows``/``target_rows``/``min_run``/``compress`` forwarded
+    to compaction, and ``retention`` forwarded to
+    ``apply_retention`` (e.g. ``{"rollups": [(60.0, 3600.0)],
+    "raw_max_age_s": 86400.0}``).
     """
 
     def __init__(self, inbox_dir: os.PathLike,
@@ -59,7 +71,8 @@ class Aggregator:
                  wal_fsync: bool = False,
                  shards: Optional[int] = None,
                  shard_policy="hash",
-                 remote_workers: bool = False) -> None:
+                 remote_workers: bool = False,
+                 compaction_policy: Optional[Dict] = None) -> None:
         self.inbox_dir = Path(inbox_dir)
         self.inbox_dir.mkdir(parents=True, exist_ok=True)
         if remote_workers and store is None and shards is None:
@@ -87,6 +100,11 @@ class Aggregator:
         self.persist_path = Path(persist_path) if persist_path else None
         self._on_record: List[Callable[[MetricRecord], None]] = []
         self.watches: List = []
+        self.compaction_policy = (dict(compaction_policy)
+                                  if compaction_policy else None)
+        self.last_maintenance: Optional[Dict] = None
+        self._last_compact_seals = (self._seal_count()
+                                    if self.compaction_policy else 0)
 
     def on_record(self, cb: Callable[[MetricRecord], None]) -> None:
         """Attach a streaming consumer (e.g. a detector bank)."""
@@ -141,7 +159,51 @@ class Aggregator:
         finally:
             if archive is not None:
                 archive.close()
+        if n and self.compaction_policy is not None:
+            self.maybe_compact()
         return n
+
+    # ------------------------------------------------ index maintenance --
+    def _seal_count(self) -> int:
+        """Sealed-segment count across the backing store (any shape)."""
+        st = self.store
+        if hasattr(st, "_sealed"):
+            return len(st._sealed)
+        shards = getattr(st, "shards", None)
+        if shards is not None and all(hasattr(s, "_sealed")
+                                      for s in shards):
+            return sum(len(s._sealed) for s in shards)
+        return int(st.storage_stats().get("segments", 0))
+
+    def maybe_compact(self, force: bool = False) -> Optional[Dict]:
+        """Run the configured maintenance pass if it is due.
+
+        Due means at least ``every_seals`` segments sealed since the
+        last pass (``force=True`` skips the check).  Returns the stats
+        dict (also kept as :attr:`last_maintenance`) or ``None`` when
+        nothing ran.  :meth:`pump` calls this after every ingesting
+        batch, so steady-state operation keeps the index compacted
+        without an external scheduler — the Splunk index aging the
+        paper leans on (§4.3) as a managed service.
+        """
+        pol = self.compaction_policy
+        if pol is None:
+            return None
+        every = max(1, int(pol.get("every_seals", 16)))
+        if not force and self._seal_count() - self._last_compact_seals < every:
+            return None
+        kw = {k: pol[k] for k in ("small_rows", "target_rows", "min_run",
+                                  "compress") if k in pol}
+        compact = getattr(self.store, "compact", None)
+        if compact is None:
+            compact = self.store.compact_all
+        stats: Dict = {"compact": compact(**kw)}
+        retention = pol.get("retention")
+        if retention:
+            stats["retention"] = self.store.apply_retention(**retention)
+        self._last_compact_seals = self._seal_count()
+        self.last_maintenance = stats
+        return stats
 
     def load_archive(self, path: os.PathLike) -> int:
         """Fallback reader: replay a legacy consolidated line archive.

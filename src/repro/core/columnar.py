@@ -49,6 +49,7 @@ paths.
 from __future__ import annotations
 
 import hashlib
+import json
 import math
 import os
 from collections import deque
@@ -60,6 +61,31 @@ import numpy as np
 from repro.core.schema import MetricRecord, encode_line, parse_line
 
 _RESERVED = ("ts", "host", "job", "kind")
+
+
+def _stem_seqs(stem: str) -> Optional[Tuple[int, ...]]:
+    """Sequence numbers embedded in a segment file stem, or ``None``
+    for foreign names.  Plain seals are ``seg-NNNNNNNN`` -> ``(N,)``;
+    compaction/rollup artifacts are ``seg-NNNNNNNN-mMMMMMMMM`` ->
+    ``(N, M)`` where ``N`` picks the artifact's *sort position* (the
+    first seq of the run it replaced, so reloaded segment order matches
+    the in-memory swap) and ``M`` is the mint counter that keeps the
+    stem globally unique."""
+    parts = stem.split("-")
+    if len(parts) < 2 or parts[0] != "seg":
+        return None
+    try:
+        seq = int(parts[1])
+    except ValueError:
+        return None
+    if len(parts) == 2:
+        return (seq,)
+    if len(parts) == 3 and parts[2].startswith("m"):
+        try:
+            return (seq, int(parts[2][1:]))
+        except ValueError:
+            return None
+    return None
 
 
 class _Missing:
@@ -137,8 +163,15 @@ class PartialAggregateCache:
 
     def drop_segment(self, uid: str) -> int:
         """Invalidate every plan's entry for one segment (the unit of
-        invalidation; stores never mutate sealed segments, so this only
-        matters to external managers that retire segment files)."""
+        invalidation).  Sealed segments are immutable, so entries only
+        go stale when a segment is *retired* — compaction merging it
+        into a bigger one, or retention dropping it behind a rollup.
+        Compaction calls this per retired uid; in the remote topology
+        the worker additionally reports retired uids to the
+        coordinator, which evicts its decoded-partial-map scatter memos
+        for that shard (``RemoteShard.compact``) — otherwise the
+        ``not_modified`` fast path could keep serving maps merged from
+        segments that no longer exist."""
         stale = [k for k in self._d if k[0] == uid]
         for k in stale:
             del self._d[k]
@@ -300,15 +333,23 @@ class Segment:
     ``field_names`` lists the actual metric-field columns.  ``uid`` is
     the content-derived identity (:func:`segment_uid`) assigned at
     seal/load time; it stays ``None`` for transient buffer segments.
+    ``tier`` names the storage tier holding the segment (``"hot"`` raw
+    seals, ``"cold"`` compacted+compressed, ``"rollup-<gran>"`` for
+    downsampled tiers); ``rollup`` is ``None`` for raw segments and the
+    rollup descriptor ``{"gran", "covers", "excluded"}`` for bucketed
+    rollup segments (see ``repro.core.compaction``).
     """
 
     __slots__ = ("n", "cols", "attrs", "field_names", "ts_min", "ts_max",
-                 "uid", "_zones")
+                 "uid", "tier", "rollup", "_zones", "_keys")
 
     def __init__(self, n: int, attrs: Dict[str, object],
                  field_cols: Dict[str, object]) -> None:
         self.n = n
         self.uid = None
+        self.tier = "hot"
+        self.rollup = None
+        self._keys = None  # dedup keys, stashed at seal (compaction input)
         self.attrs = attrs
         self.field_names = list(field_cols)
         self.cols = dict(attrs)
@@ -334,6 +375,20 @@ class Segment:
                     z = (math.inf, -math.inf)
             self._zones[name] = z
         return z
+
+
+def _segment_logical_bytes(seg: Segment) -> int:
+    """Raw-equivalent byte estimate for an in-memory segment (matches
+    the hot-tier ``.bin`` column encoding: 10B/row numeric, 4B/row
+    dictionary code, 1B/row obj presence)."""
+    total = 0
+    for name in ("ts", "host", "job", "kind"):
+        col = seg.attrs[name]
+        total += (10 if col.kind == "num" else 4) * seg.n
+    for name in seg.field_names:
+        col = seg.cols[name]
+        total += {"num": 10, "str": 4, "obj": 1}[col.kind] * seg.n
+    return total
 
 
 def columns_from_records(records: List[MetricRecord]) -> Segment:
@@ -583,6 +638,10 @@ class ColumnarMetricStore:
         self.seal_threshold = int(seal_threshold)
         self.dedup_horizon_s = dedup_horizon_s
         self._sealed: List[Segment] = []
+        self._sealed_stems: List[Optional[str]] = []
+        self._rollups: List[Segment] = []
+        self._rollup_stems: List[Optional[str]] = []
+        self.last_compaction: Optional[Dict] = None
         self._buffer: List[MetricRecord] = []
         self._buffer_keys: Set[bytes] = set()
         self._seen: Set[bytes] = set()
@@ -610,8 +669,14 @@ class ColumnarMetricStore:
     def __len__(self) -> int:
         return sum(s.n for s in self._sealed) + len(self._buffer)
 
-    def _version(self) -> Tuple[int, int]:
-        return (len(self._sealed), len(self._buffer))
+    def _version(self) -> Tuple[int, int, int]:
+        # _next_seq is a monotonic mutation generation: it advances on
+        # every seal, compaction and retention pass (even memory-only),
+        # and is restart-stable (recovered from segment filenames), so
+        # a compaction that leaves (sealed, buffer) counts unchanged
+        # still changes the version — remote etag checks can never
+        # serve a pre-compaction cached reply for post-compaction state.
+        return (len(self._sealed), len(self._buffer), self._next_seq)
 
     def insert(self, rec: MetricRecord) -> bool:
         if self.read_only and not self._replaying:
@@ -666,13 +731,20 @@ class ColumnarMetricStore:
         seg = columns_from_records(self._buffer)
         keys = self._buffer_keys
         seg.uid = segment_uid(keys)
+        seg._keys = frozenset(keys)
+        stem = None
         if self.directory is not None:
             from repro.core import segmentio
-            segmentio.save_segment(
-                self.directory / "segments",
-                segmentio.SEGMENT_STEM_FMT.format(self._next_seq), seg, keys)
-            self._next_seq += 1
+            stem = segmentio.SEGMENT_STEM_FMT.format(self._next_seq)
+            # durability at seal is governed by wal_fsync, like the WAL
+            # itself: the sealed rows stay replayable from the WAL until
+            # _rewrite_wal below, so an unsynced seal loses nothing a
+            # synced WAL would have kept
+            segmentio.save_segment(self.directory / "segments", stem, seg,
+                                   keys, fsync=self.wal_fsync)
+        self._next_seq += 1
         self._sealed.append(seg)
+        self._sealed_stems.append(stem)
         if self.dedup_horizon_s is not None:
             self._epochs.append((seg.ts_max, keys))
         self._buffer = []
@@ -706,22 +778,69 @@ class ColumnarMetricStore:
         from repro.core import segmentio
         seg_dir = self.directory / "segments"
         seg_dir.mkdir(parents=True, exist_ok=True)
-        loaded: List[Tuple[int, "segmentio.MappedSegment"]] = []
+        # Pass 1: committed manifests only (a .bin without its .json is
+        # an interrupted seal/compaction and is simply invisible).  A
+        # compacted manifest's "replaces" list names stems it retired;
+        # if a crash hit the window between manifest commit and retired-
+        # file deletion, both the merged segment and its inputs exist —
+        # the replaced stems must be skipped (and cleaned up) or every
+        # merged row would load twice.
+        entries: List[Tuple[int, str, Path, Dict]] = []
+        replaced: Set[str] = set()
+        seq_floor = -1
         for man_path in sorted(seg_dir.glob("seg-*.json")):
+            seqs = _stem_seqs(man_path.stem)
+            if seqs is None:
+                continue
+            seq_floor = max(seq_floor, *seqs)
             try:
-                seq = int(man_path.stem.split("-")[1])
-            except (IndexError, ValueError):
+                with open(man_path, encoding="utf-8") as f:
+                    man = json.load(f)
+            except (OSError, ValueError):
+                self.segment_load_errors += 1
+                continue
+            if isinstance(man, dict):
+                for stem in man.get("replaces", ()):
+                    replaced.add(str(stem))
+                    rseqs = _stem_seqs(str(stem))
+                    if rseqs is not None:
+                        seq_floor = max(seq_floor, *rseqs)
+            entries.append((seqs[0], man_path.stem, man_path, man))
+        # never re-mint a stem some live manifest claims to replace, or
+        # a stem whose sort position is already taken
+        self._next_seq = max(self._next_seq, seq_floor + 1)
+        entries.sort(key=lambda t: (t[0], t[1]))
+        loaded: List[Tuple[int, "segmentio.MappedSegment"]] = []
+        retired_paths: List[Path] = []
+        for seq, stem, man_path, man in entries:
+            if stem in replaced:
+                retired_paths.append(man_path)
                 continue
             try:
-                loaded.append((seq, segmentio.load_segment(man_path)))
+                seg = segmentio.load_segment(man_path, manifest=man)
             except (OSError, ValueError, KeyError, TypeError):
                 self.segment_load_errors += 1
-        loaded.sort(key=lambda t: t[0])
-        for seq, seg in loaded:
-            self._sealed.append(seg)
-            self._next_seq = max(self._next_seq, seq + 1)
+                continue
+            if seg.rollup is not None:
+                self._rollups.append(seg)
+                self._rollup_stems.append(stem)
+            else:
+                loaded.append((seq, seg))
+                self._sealed_stems.append(stem)
             if seg.ts_max > self._watermark:
                 self._watermark = seg.ts_max
+        for seq, seg in loaded:
+            self._sealed.append(seg)
+        if retired_paths and not self.read_only:
+            # finish the interrupted swap: manifest first (uncommits the
+            # retired segment), then its data file
+            for man_path in retired_paths:
+                for victim in (man_path, man_path.with_suffix(".bin")):
+                    try:
+                        victim.unlink()
+                    except OSError:
+                        pass
+            segmentio.fsync_dir(seg_dir)
         cutoff = (-math.inf if self.dedup_horizon_s is None
                   else self._watermark - self.dedup_horizon_s)
         last_seg = loaded[-1][1] if loaded else None
@@ -800,18 +919,20 @@ class ColumnarMetricStore:
         row count.
         """
         from repro.core import segmentio
+        stem = None
         if self.directory is not None:
-            # always fsync, matching save_segment's seal commit —
-            # wal_fsync only governs per-append WAL durability
+            # always fsync, matching migration semantics — adoption has
+            # no WAL backstop, the copied files are the only copy here
+            stem = segmentio.SEGMENT_STEM_FMT.format(self._next_seq)
             man_path = segmentio.copy_segment_files(
-                manifest_path, self.directory / "segments",
-                segmentio.SEGMENT_STEM_FMT.format(self._next_seq),
+                manifest_path, self.directory / "segments", stem,
                 fsync=True)
             self._next_seq += 1
             seg = segmentio.load_segment(man_path)
         else:
             seg = segmentio.load_segment(manifest_path)
         self._sealed.append(seg)
+        self._sealed_stems.append(stem)
         if self._cache:
             self._cache.clear()
         if seg.ts_max > self._watermark:
@@ -846,6 +967,69 @@ class ColumnarMetricStore:
                 self._cache["transient"] = cached
             units.append((cached[1], None))
         return units
+
+    def rollup_units(self) -> List[Tuple[Segment, str]]:
+        """``(segment, uid)`` pairs for downsampled rollup segments.
+
+        Rollups are *not* part of :meth:`segments` /
+        :meth:`segment_units` — row-level reads never see them.  Only
+        the incremental planner (``splunklite.scatter_partials``)
+        consults them, and only when the plan is provably answerable
+        from bucketed partial-aggregate columns (docs/storage.md).
+        """
+        return [(seg, seg.uid) for seg in self._rollups]
+
+    def compact(self, **kwargs) -> Dict:
+        """Merge runs of small sealed segments into large cold-tier
+        (compressed) ones; see :class:`repro.core.compaction.Compactor`.
+        Returns the compaction stats dict (also kept as
+        ``last_compaction``)."""
+        from repro.core.compaction import Compactor
+        return Compactor(self).compact(**kwargs)
+
+    def apply_retention(self, **kwargs) -> Dict:
+        """Build/refresh time-bucketed rollup tiers and (optionally)
+        drop raw segments past the retention age; see
+        :class:`repro.core.compaction.Compactor`."""
+        from repro.core.compaction import Compactor
+        return Compactor(self).apply_retention(**kwargs)
+
+    def storage_stats(self) -> Dict:
+        """Per-tier storage accounting: segment/file counts, stored vs
+        raw-equivalent bytes, rows, plus the last compaction's stats.
+        Pure bookkeeping — reads manifests already in memory, never the
+        ``.bin`` payloads."""
+        tiers: Dict[str, Dict] = {}
+
+        def acc(seg: Segment, stem: Optional[str]) -> None:
+            t = tiers.setdefault(seg.tier, {
+                "segments": 0, "files": 0, "rows": 0,
+                "bytes": 0, "raw_bytes": 0})
+            t["segments"] += 1
+            t["rows"] += seg.n
+            if stem is not None:
+                t["files"] += 2
+            man = getattr(seg, "_man", None)
+            if man is not None:
+                t["bytes"] += int(man.get("bin_bytes", 0))
+                t["raw_bytes"] += int(man.get("raw_bytes",
+                                              man.get("bin_bytes", 0)))
+            else:
+                est = _segment_logical_bytes(seg)
+                t["bytes"] += est
+                t["raw_bytes"] += est
+
+        for seg, stem in zip(self._sealed, self._sealed_stems):
+            acc(seg, stem)
+        for seg, stem in zip(self._rollups, self._rollup_stems):
+            acc(seg, stem)
+        total = {k: sum(t[k] for t in tiers.values())
+                 for k in ("segments", "files", "rows", "bytes",
+                           "raw_bytes")}
+        total["tiers"] = tiers
+        total["buffer_rows"] = len(self._buffer)
+        total["last_compaction"] = self.last_compaction
+        return total
 
     def _build_transient(self) -> Segment:
         """Transient segment over the append buffer, built

@@ -1,0 +1,444 @@
+"""Segment compaction, cold-tier compression, and retention rollups.
+
+The paper's Splunk backend stays interactive over months of per-job
+data because its indexes *age*: fresh events live in small hot buckets,
+then roll to large warm/cold buckets, and summary indexing keeps
+fleet-wide dashboards off the raw events entirely (§4.3).  Our columnar
+store seals one segment per ``seal_threshold`` records, so a streaming
+fleet becomes file-count-bound long before it is bandwidth-bound: a
+cold query pays a manifest load, an mmap and per-segment planner
+overhead for every tiny seal.  This module adds the aging machinery:
+
+* :class:`Compactor.compact` merges runs of small, time-adjacent sealed
+  segments into large ones — string dictionaries re-encoded, zone maps
+  rebuilt, the content-derived ``Segment.uid`` recomputed from the
+  union of the inputs' dedup keys (so the same rows always produce the
+  same uid, wherever compacted).  Durable stores write the merged
+  segment with the **cold-tier** compressed encoding
+  (``segmentio.save_segment(compress=True)``) and then atomically swap:
+  the merged manifest — carrying a ``replaces`` list naming the retired
+  stems — is the commit point; retired file pairs are deleted after
+  (manifest first, then data).  A crash anywhere in the window leaves
+  either the old segments (merged ``.bin`` orphaned, invisible) or
+  both (the loader skips and deletes the replaced stems).  Retired
+  uids are dropped from the :class:`PartialAggregateCache`; the merged
+  uid warms on first touch.
+
+* :class:`Compactor.apply_retention` builds time-bucketed **rollup
+  segments** (raw → 1m → 1h, mirroring Splunk summary indexing): one
+  row per ``(bucket, host, job, kind)`` holding mergeable
+  partial-aggregate columns (count / numeric count / sum / min / max /
+  M2) per metric field.  The incremental query planner substitutes
+  them for the raw segments they cover when — and only when — the plan
+  is provably answerable from buckets (docs/storage.md lists the
+  eligibility rules).  With ``raw_max_age_s`` set, raw segments old
+  enough *and* covered by a rollup are dropped entirely — the
+  retention trade: row-level reads over that range are gone, bucketed
+  aggregates remain.
+
+Both operations refuse ``read_only`` stores and bump the store's
+mutation generation (``_version()``), so remote etag caches can never
+serve pre-compaction replies for post-compaction state.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import math
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.columnar import (ColumnarMetricStore, NumColumn, Segment,
+                                 StrColumn, _segment_logical_bytes,
+                                 _stem_seqs, merge_transient_segments,
+                                 segment_uid)
+
+# Rollup segments store partial-aggregate stat columns under reserved
+# names; ``__ru_rows__`` is the per-bucket row count (plain `count`).
+ROLLUP_ROWS = "__ru_rows__"
+ROLLUP_STATS = ("cnt", "num", "sum", "min", "max", "m2")
+ROLLUP_DIMS = ("host", "job", "kind")
+
+
+def rollup_stat_col(stat: str, field: str) -> str:
+    return f"__ru_{stat}__{field}"
+
+
+def _seg_keys(seg: Segment) -> Optional[Set[bytes]]:
+    """A sealed segment's dedup keys: stashed at seal for in-process
+    segments, read from the manifest for mapped ones."""
+    keys = getattr(seg, "_keys", None)
+    if keys is not None:
+        return set(keys)
+    reader = getattr(seg, "dedup_keys", None)
+    if reader is not None:
+        return set(reader())
+    return None
+
+
+def _seg_bytes(seg: Segment) -> int:
+    man = getattr(seg, "_man", None)
+    if man is not None:
+        return int(man.get("bin_bytes", 0))
+    return _segment_logical_bytes(seg)
+
+
+def rollup_safe(seg: Segment) -> bool:
+    """A raw segment is rollup-eligible only when no metric field
+    shadows a reserved attribute: the rollup's bucket keys come from
+    the query *view* columns, and a shadowed ``ts``/dim can be missing
+    or non-string per row, which bucket rows cannot represent."""
+    return not any(k in seg.field_names for k in ("ts",) + ROLLUP_DIMS)
+
+
+def rollup_uid(gran: float, covers: Sequence[str]) -> str:
+    """Content-derived rollup identity: a pure function of the
+    granularity and the covered segments' uids, so rebuilding the same
+    rollup anywhere yields the same uid (cache-key semantics match
+    :func:`repro.core.columnar.segment_uid`)."""
+    canon = ("rollup", float(gran), tuple(sorted(covers)))
+    return hashlib.blake2b(repr(canon).encode("utf-8"),
+                           digest_size=16).hexdigest()
+
+
+def build_rollup(segs: Sequence[Segment], gran: float
+                 ) -> Optional[Segment]:
+    """One rollup segment over ``segs``: a row per
+    ``(bucket, host, job, kind)`` with partial-aggregate stat columns
+    per metric field.  Fields with an object-typed column anywhere in
+    the inputs cannot be aggregated from buckets and are recorded in
+    ``rollup["excluded"]`` (a plan touching them falls back to raw).
+    Returns ``None`` when the inputs hold no rows."""
+    gran = float(gran)
+    total = int(sum(s.n for s in segs))
+    if total == 0 or gran <= 0:
+        return None
+    # ---- gather bucket + dim keys across segments -----------------------
+    ts = np.concatenate([s.attrs["ts"].vals for s in segs])
+    bucket = np.floor(ts / gran) * gran
+    ub, binv = np.unique(bucket, return_inverse=True)
+    dim_codes: List[np.ndarray] = []
+    dim_indexes: List[Dict[str, int]] = []
+    for dim in ROLLUP_DIMS:
+        index: Dict[str, int] = {}
+        codes = np.empty(total, np.int64)
+        pos = 0
+        for s in segs:
+            col = s.attrs[dim]
+            remap = (np.array([index.setdefault(v, len(index))
+                               for v in col.vocab.tolist()], np.int64)
+                     if len(col.vocab) else np.empty(0, np.int64))
+            codes[pos:pos + s.n] = remap[col.codes]
+            pos += s.n
+        dim_codes.append(codes)
+        dim_indexes.append(index)
+    sizes = [len(ub)] + [max(len(ix), 1) for ix in dim_indexes]
+    combined = binv.astype(np.int64)
+    for codes, size in zip(dim_codes, sizes[1:]):
+        combined = combined * size + codes
+    uniq, inv = np.unique(combined, return_inverse=True)
+    G = len(uniq)
+    # decompose group tokens back into per-key indices (bucket index is
+    # the most significant digit, so groups come out time-sorted — the
+    # Segment invariant)
+    token = uniq.copy()
+    key_idx: List[np.ndarray] = []
+    for size in reversed(sizes[1:]):
+        key_idx.append(token % size)
+        token //= size
+    key_idx.append(token)
+    key_idx.reverse()  # [bucket, host, job, kind]
+    attrs: Dict[str, object] = {
+        "ts": NumColumn(ub[key_idx[0]], np.ones(G, bool),
+                        np.zeros(G, bool))}
+    for j, dim in enumerate(ROLLUP_DIMS):
+        index = dim_indexes[j]
+        vocab = np.array(list(index), dtype=object)
+        attrs[dim] = StrColumn(key_idx[j + 1].astype(np.int32), vocab,
+                               dict(index))
+    # ---- per-field partial-aggregate columns ----------------------------
+    names: Dict[str, None] = {}
+    for s in segs:
+        for k in s.field_names:
+            names.setdefault(k)
+    excluded: List[str] = []
+    field_cols: Dict[str, object] = {}
+    ones = np.ones(G, bool)
+    zeros_b = np.zeros(G, bool)
+    for fname in names:
+        kinds = {s.cols[fname].kind for s in segs if fname in s.cols}
+        if "obj" in kinds:
+            excluded.append(fname)
+            continue
+        present = np.zeros(total, bool)
+        numeric = np.zeros(total, bool)
+        vals = np.zeros(total)
+        pos = 0
+        for s in segs:
+            col = s.cols.get(fname) if fname in set(s.field_names) else None
+            if col is not None:
+                if col.kind == "num":
+                    p = col.present
+                    nm = p & ~np.isnan(col.vals)
+                    present[pos:pos + s.n] = p
+                    numeric[pos:pos + s.n] = nm
+                    vals[pos:pos + s.n] = np.where(nm, col.vals, 0.0)
+                else:  # str: present, never numeric
+                    present[pos:pos + s.n] = col.codes >= 0
+            pos += s.n
+        cnt = np.bincount(inv[present], minlength=G).astype(float)
+        ngids = inv[numeric]
+        nvals = vals[numeric]
+        num = np.bincount(ngids, minlength=G).astype(float)
+        sums = (np.bincount(ngids, weights=nvals, minlength=G)
+                if ngids.size else np.zeros(G))
+        mins = np.full(G, np.inf)
+        maxs = np.full(G, -np.inf)
+        if ngids.size:
+            np.minimum.at(mins, ngids, nvals)
+            np.maximum.at(maxs, ngids, nvals)
+        means = sums / np.maximum(num, 1)
+        m2 = (np.bincount(ngids, weights=(nvals - means[ngids]) ** 2,
+                          minlength=G) if ngids.size else np.zeros(G))
+        has_num = num > 0
+        field_cols[rollup_stat_col("cnt", fname)] = \
+            NumColumn(cnt, ones, ones.copy())
+        field_cols[rollup_stat_col("num", fname)] = \
+            NumColumn(num, ones, ones.copy())
+        field_cols[rollup_stat_col("sum", fname)] = \
+            NumColumn(sums, ones, zeros_b.copy())
+        field_cols[rollup_stat_col("min", fname)] = \
+            NumColumn(np.where(has_num, mins, np.nan), has_num,
+                      zeros_b.copy())
+        field_cols[rollup_stat_col("max", fname)] = \
+            NumColumn(np.where(has_num, maxs, np.nan), has_num,
+                      zeros_b.copy())
+        field_cols[rollup_stat_col("m2", fname)] = \
+            NumColumn(m2, ones, zeros_b.copy())
+    field_cols[ROLLUP_ROWS] = NumColumn(
+        np.bincount(inv, minlength=G).astype(float), ones, ones.copy())
+    out = Segment(G, attrs, field_cols)
+    covers = sorted(s.uid for s in segs if s.uid is not None)
+    out.tier = f"rollup-{gran:g}"
+    out.rollup = {"gran": gran, "covers": covers,
+                  "excluded": sorted(excluded)}
+    out.uid = rollup_uid(gran, covers)
+    return out
+
+
+class Compactor:
+    """Compaction + retention over one :class:`ColumnarMetricStore`.
+
+    Stateless apart from the store reference; aggregators construct one
+    per call (``store.compact(...)`` / ``store.apply_retention(...)``
+    delegate here).  Refuses read-only stores — a degraded-mode
+    coordinator inspecting a dead worker's directory must never rewrite
+    it under the worker's feet.
+    """
+
+    def __init__(self, store: ColumnarMetricStore) -> None:
+        if getattr(store, "read_only", False):
+            raise RuntimeError("compaction refused: store is read-only")
+        self.store = store
+
+    # ---------------------------------------------------------- compact --
+    def compact(self, small_rows: int = 4096, target_rows: int = 65536,
+                min_run: int = 2, compress: bool = True) -> Dict:
+        """Merge consecutive runs of small sealed segments.
+
+        A sealed segment with fewer than ``small_rows`` rows joins the
+        current run; a run seals at ``target_rows`` merged rows and is
+        only merged at all when it has at least ``min_run`` members.
+        Durable stores persist merged segments compressed
+        (``compress=True`` → cold tier) and atomically swap the files;
+        memory-only stores just swap the in-memory list.  Returns (and
+        records as ``store.last_compaction``) a stats dict including
+        ``retired_uids`` — the remote tier forwards those to the
+        coordinator so its decoded-scatter memos are dropped too.
+        """
+        store = self.store
+        t0 = time.monotonic()
+        small_rows = int(small_rows)
+        target_rows = int(target_rows)
+        min_run = max(2, int(min_run))
+        # A raw segment referenced by any rollup's ``covers`` must keep
+        # its uid: merging it would mint a new uid the rollup doesn't
+        # know, so the planner could no longer prove the rollup and the
+        # live segment set are disjoint (and a retention drop of the
+        # old uid would then lose rows).  Such segments are pinned
+        # until retention retires them.
+        covered: set = set()
+        for rseg in getattr(store, "_rollups", ()):
+            covered.update((rseg.rollup or {}).get("covers", ()))
+        runs: List[List[int]] = []
+        run: List[int] = []
+        run_rows = 0
+        for i, seg in enumerate(store._sealed):
+            mergeable = (seg.n < small_rows
+                         and _seg_keys(seg) is not None
+                         and seg.uid not in covered)
+            if mergeable and run_rows + seg.n > target_rows and run:
+                if len(run) >= min_run:
+                    runs.append(run)
+                run, run_rows = [], 0
+            if mergeable:
+                run.append(i)
+                run_rows += seg.n
+            else:
+                if len(run) >= min_run:
+                    runs.append(run)
+                run, run_rows = [], 0
+        if len(run) >= min_run:
+            runs.append(run)
+        stats: Dict = {
+            "runs": len(runs), "segments_merged": 0, "segments_created": 0,
+            "rows": 0, "retired_uids": [], "bytes_before": 0,
+            "bytes_after": 0,
+        }
+        seg_dir = (store.directory / "segments"
+                   if store.directory is not None else None)
+        for run in reversed(runs):  # reverse: earlier indices stay valid
+            segs = [store._sealed[i] for i in run]
+            stems = [store._sealed_stems[i] for i in run]
+            key_union: Set[bytes] = set()
+            for s in segs:
+                key_union |= _seg_keys(s)
+            merged = functools.reduce(merge_transient_segments, segs)
+            merged.uid = segment_uid(key_union)
+            merged._keys = frozenset(key_union)
+            bytes_before = sum(_seg_bytes(s) for s in segs)
+            new_stem = None
+            if seg_dir is not None:
+                from repro.core import segmentio
+                first = _stem_seqs(stems[0])
+                mint = store._next_seq
+                new_stem = "seg-{:08d}-m{:08d}".format(
+                    first[0] if first else mint, mint)
+                man_path = segmentio.save_segment(
+                    seg_dir, new_stem, merged, key_union,
+                    compress=compress, fsync=True,
+                    extra={"replaces": [s for s in stems if s is not None]})
+                # swap in the mapped (lazily decoded) form — frees the
+                # small in-memory segments and exercises the exact
+                # restart read path
+                merged = segmentio.load_segment(man_path)
+            store._next_seq += 1  # mutation generation
+            store._sealed[run[0]:run[-1] + 1] = [merged]
+            store._sealed_stems[run[0]:run[-1] + 1] = [new_stem]
+            for s in segs:
+                if s.uid is not None:
+                    store.partial_cache.drop_segment(s.uid)
+                    stats["retired_uids"].append(s.uid)
+            if seg_dir is not None:
+                from repro.core import segmentio
+                # retire inputs: manifest first (uncommits), then data
+                for stem in stems:
+                    if stem is None:
+                        continue
+                    for suffix in (".json", ".bin"):
+                        try:
+                            (seg_dir / (stem + suffix)).unlink()
+                        except OSError:
+                            pass
+                segmentio.fsync_dir(seg_dir)
+            stats["segments_merged"] += len(segs)
+            stats["segments_created"] += 1
+            stats["rows"] += merged.n
+            stats["bytes_before"] += bytes_before
+            stats["bytes_after"] += _seg_bytes(merged)
+        if runs:
+            store._cache.clear()
+        stats["segment_count"] = len(store._sealed)
+        stats["duration_s"] = round(time.monotonic() - t0, 6)
+        store.last_compaction = stats
+        return stats
+
+    # -------------------------------------------------------- retention --
+    def apply_retention(self,
+                        rollups: Sequence = ((60.0, 0.0), (3600.0, 0.0)),
+                        raw_max_age_s: Optional[float] = None) -> Dict:
+        """Build missing rollup tiers; optionally drop covered raw.
+
+        ``rollups`` — ``(granularity_s, min_age_s)`` pairs (bare floats
+        mean age 0): sealed raw segments whose newest timestamp is at
+        least ``min_age_s`` behind the store watermark, and that no
+        existing rollup of that granularity covers, are bucketed into
+        one new rollup segment per granularity.  Tiers are built
+        coarsest-independent (each rolls the raw directly, so 1m and 1h
+        tiers are both exact).  ``raw_max_age_s`` — when set, raw
+        segments older than this *and* covered by at least one rollup
+        are deleted (files too); their bucketed aggregates remain
+        queryable, their rows are gone.
+        """
+        store = self.store
+        t0 = time.monotonic()
+        stats: Dict = {"rollups_created": 0, "rollup_rows": 0,
+                       "covered_segments": 0, "dropped_segments": 0,
+                       "dropped_rows": 0}
+        wm = store._watermark
+        changed = False
+        seg_dir = (store.directory / "segments"
+                   if store.directory is not None else None)
+        for tier in rollups:
+            gran, min_age = ((float(tier), 0.0)
+                             if isinstance(tier, (int, float))
+                             else (float(tier[0]), float(tier[1])))
+            covered: Set[str] = set()
+            for rseg in store._rollups:
+                if float(rseg.rollup["gran"]) == gran:
+                    covered.update(rseg.rollup.get("covers", ()))
+            cands = [seg for seg in store._sealed
+                     if seg.uid is not None and seg.uid not in covered
+                     and wm - seg.ts_max >= min_age and rollup_safe(seg)]
+            if not cands:
+                continue
+            rseg = build_rollup(cands, gran)
+            if rseg is None:
+                continue
+            stem = None
+            if seg_dir is not None:
+                from repro.core import segmentio
+                mint = store._next_seq
+                stem = "seg-{0:08d}-m{0:08d}".format(mint)
+                segmentio.save_segment(
+                    seg_dir, stem, rseg, (), compress=True, fsync=True,
+                    extra={"tier": rseg.tier, "rollup": rseg.rollup})
+            store._next_seq += 1
+            store._rollups.append(rseg)
+            store._rollup_stems.append(stem)
+            stats["rollups_created"] += 1
+            stats["rollup_rows"] += rseg.n
+            stats["covered_segments"] += len(cands)
+            changed = True
+        if raw_max_age_s is not None:
+            all_covered: Set[str] = set()
+            for rseg in store._rollups:
+                all_covered.update(rseg.rollup.get("covers", ()))
+            for i in range(len(store._sealed) - 1, -1, -1):
+                seg = store._sealed[i]
+                if seg.uid is None or seg.uid not in all_covered:
+                    continue
+                if not (wm - seg.ts_max >= float(raw_max_age_s)):
+                    continue
+                store._sealed.pop(i)
+                stem = store._sealed_stems.pop(i)
+                store.partial_cache.drop_segment(seg.uid)
+                if seg_dir is not None and stem is not None:
+                    for suffix in (".json", ".bin"):
+                        try:
+                            (seg_dir / (stem + suffix)).unlink()
+                        except OSError:
+                            pass
+                stats["dropped_segments"] += 1
+                stats["dropped_rows"] += seg.n
+                changed = True
+            if stats["dropped_segments"] and seg_dir is not None:
+                from repro.core import segmentio
+                segmentio.fsync_dir(seg_dir)
+        if changed:
+            store._cache.clear()
+        stats["duration_s"] = round(time.monotonic() - t0, 6)
+        return stats

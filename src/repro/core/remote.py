@@ -745,6 +745,52 @@ class RemoteShard:
         return _CacheStatsSnapshot(st["hits"], st["misses"],
                                    st["evictions"], st["entries"])
 
+    # -------------------------------------------------- maintenance tier --
+    def compact(self, **kwargs) -> Dict:
+        """Run segment compaction on the worker (``compact`` op).
+
+        No degraded fallback: the read-only snapshot a dead worker
+        leaves behind must refuse compaction (it cannot atomically
+        swap manifests the live worker will reopen), so an unavailable
+        worker propagates :class:`WorkerUnavailable`.
+
+        When the worker reports retired segment uids, every
+        coordinator-side decoded partial map for this shard is evicted:
+        those maps were merged from segments that no longer exist, and
+        serving one via the ``not_modified`` fast path would pin
+        pre-compaction state forever.  The stale read-only fallback
+        snapshot is dropped for the same reason."""
+        reply = self.rpc("compact", **kwargs)
+        stats = reply["stats"]
+        if stats.get("retired_uids") or stats.get("runs"):
+            self.drop_scatter_memo()
+            self._drop_fallback()
+        return stats
+
+    def apply_retention(self, **kwargs) -> Dict:
+        """Apply retention/rollup tiers on the worker (``retention``
+        op).  Rollup tier tuples are shipped as JSON lists.  Like
+        :meth:`compact`, a mutation (new rollups or dropped raw
+        segments) evicts this shard's scatter memos and fallback
+        snapshot."""
+        if "rollups" in kwargs and kwargs["rollups"] is not None:
+            kwargs["rollups"] = [list(t) if isinstance(t, (list, tuple))
+                                 else t for t in kwargs["rollups"]]
+        reply = self.rpc("retention", **kwargs)
+        stats = reply["stats"]
+        if stats.get("rollups_created") or stats.get("dropped_segments"):
+            self.drop_scatter_memo()
+            self._drop_fallback()
+        return stats
+
+    def storage_stats(self) -> Dict:
+        """Worker-side storage accounting (``storage`` op); degraded
+        fallback reads the shard directory directly."""
+        try:
+            return self.rpc("storage")["storage"]
+        except WorkerUnavailable:
+            return self._degraded().storage_stats()
+
     # ---------------------------------------------------------- lifecycle --
     def ping(self) -> bool:
         try:
@@ -1001,15 +1047,19 @@ class RemoteShardedAggregator(ShardedAggregator):
             if pending[k]:
                 self.shards[k].client.close()
 
-    def query(self, q: str, engine: Optional[str] = None) -> List[Dict]:
+    def query(self, q: str, engine: Optional[str] = None,
+              tolerance: Optional[float] = None) -> List[Dict]:
         """Distributed splunklite execution (see class docstring).
         ``engine="rows"`` gathers every record and runs the legacy row
-        executor locally (the parity oracle), as in-process."""
+        executor locally (the parity oracle), as in-process.
+        ``tolerance`` rides inside the serialized plan, so each worker
+        makes the same rollup-tier eligibility decision the coordinator
+        would make in-process (docs/storage.md)."""
         self._check_open()
         if engine == "rows":
             return super().query(q, engine="rows")
         stages = splunklite._split_pipeline(q)
-        plan = splunklite.compile_scatter_plan(stages)
+        plan = splunklite.compile_scatter_plan(stages, tolerance=tolerance)
         self.last_io_trace = trace = []
         if plan is not None:
             rows = self._scatter_remote(plan, trace)
@@ -1053,10 +1103,12 @@ class RemoteShardedAggregator(ShardedAggregator):
         stats = {"mode": "scatter_gather", "remote": True,
                  "shards": self.num_shards, "fingerprint": plan.fingerprint,
                  "segments_cached": 0, "segments_computed": 0,
-                 "buffer_rows": 0, "degraded_shards": 0,
+                 "buffer_rows": 0, "rollup_segments": 0,
+                 "rollup_replaced": 0, "degraded_shards": 0,
                  "shards_unchanged": 0}
         counter_keys = ("segments_cached", "segments_computed",
-                        "buffer_rows")
+                        "buffer_rows", "rollup_segments",
+                        "rollup_replaced")
         merged: Dict[tuple, Dict[str, Any]] = {}
         fell_back = False
         i = -1
@@ -1078,6 +1130,10 @@ class RemoteShardedAggregator(ShardedAggregator):
                             _v, pmap, summary = hit
                             stats["segments_cached"] += summary["segments"]
                             stats["buffer_rows"] += summary["buffer_rows"]
+                            stats["rollup_segments"] += summary.get(
+                                "rollup_segments", 0)
+                            stats["rollup_replaced"] += summary.get(
+                                "rollup_replaced", 0)
                             stats["shards_unchanged"] += 1
                         else:
                             wstats = reply.get("stats", {})
@@ -1094,7 +1150,11 @@ class RemoteShardedAggregator(ShardedAggregator):
                                      int(wstats.get("segments_cached", 0)) +
                                      int(wstats.get("segments_computed", 0)),
                                      "buffer_rows":
-                                     int(wstats.get("buffer_rows", 0))})
+                                     int(wstats.get("buffer_rows", 0)),
+                                     "rollup_segments":
+                                     int(wstats.get("rollup_segments", 0)),
+                                     "rollup_replaced":
+                                     int(wstats.get("rollup_replaced", 0))})
                     except WorkerUnavailable:
                         pending[i] = False
                 if not pending[i]:
@@ -1193,13 +1253,19 @@ class RemoteShardedAggregator(ShardedAggregator):
     # ------------------------------------------------------------ explain --
     def explain(self, q: str) -> Dict[str, Any]:
         """Parent-shaped explain plus per-worker liveness, degraded-call
-        counters, and each worker's own cache state for the plan's
-        fingerprint.  Pure introspection (one RPC per live worker)."""
+        counters, each worker's own cache state for the plan's
+        fingerprint, and a fleet ``storage`` block (per-tier
+        segment/file/byte totals plus last compaction stats) merged
+        from the workers' accounting.  Pure introspection (at most two
+        RPCs per live worker); a dead worker's storage is read from its
+        shard directory when degraded execution is allowed, otherwise
+        skipped."""
         stages = splunklite._split_pipeline(q)
         plan = splunklite.compile_scatter_plan(stages)
         workers = []
         sealed = cached = buffer_rows = 0
         hits = misses = entries = 0
+        storage_parts: List[Dict[str, Any]] = []
         for sh in self.shards:
             info: Dict[str, Any] = {"shard": sh.index,
                                     "degraded_calls": sh.degraded_calls}
@@ -1213,14 +1279,20 @@ class RemoteShardedAggregator(ShardedAggregator):
                     cached += r["cached"]
                     buffer_rows += r["buffer_rows"]
                     st = r["cache"]
+                    storage_parts.append(r["storage"])
                 else:
                     st = sh.rpc("cache_stats")
                     info["alive"] = True
+                    storage_parts.append(sh.rpc("storage")["storage"])
                 hits += st["hits"]
                 misses += st["misses"]
                 entries += st["entries"]
             except WorkerUnavailable:
                 info["alive"] = False
+                try:
+                    storage_parts.append(sh._degraded().storage_stats())
+                except WorkerUnavailable:
+                    pass
             workers.append(info)
         out: Dict[str, Any] = {
             "remote": True,
@@ -1228,6 +1300,7 @@ class RemoteShardedAggregator(ShardedAggregator):
             "workers": workers,
             "degraded_shards": sum(1 for w in workers if not w["alive"]),
             "cache": {"hits": hits, "misses": misses, "entries": entries},
+            "storage": self._merge_storage_stats(storage_parts),
         }
         if plan is not None:
             out.update({

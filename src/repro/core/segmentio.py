@@ -28,15 +28,28 @@ objects lazily: a column's array views are only constructed — and its
 pages only faulted in — when a query actually touches it.  Zone maps
 and dictionaries live in the manifest, so segment pruning never touches
 the ``.bin`` at all.
+
+**Cold tier** (``save_segment(..., compress=True)``, format tag
+``repro-colseg-z1``): the same two-file commit protocol, but column
+arrays are stored compressed — delta-of-delta timestamps, run-length
+string codes, byte-shuffled float64 values, bit-packed boolean masks,
+each finished with zlib.  Decoding is *per column on first access*
+(the ``MappedSegment`` lazy-column machinery), so a zone-map-pruned
+cold segment never pays any decode cost: pruning reads only the
+manifest, exactly as in the raw tier.  All codecs are bit-exact
+round-trips (delta-of-delta runs on the float64 *bit patterns* in
+modular uint64 arithmetic), so cold reads are byte-identical to raw
+reads.  See docs/storage.md for the codec table and tier lifecycle.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import zlib
 from collections.abc import Mapping
 from pathlib import Path
-from typing import Dict, Iterable, List, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -44,6 +57,8 @@ from repro.core.columnar import (MISSING, NumColumn, ObjColumn, Segment,
                                  StrColumn, segment_uid)
 
 FORMAT = "repro-colseg-v1"
+FORMAT_COLD = "repro-colseg-z1"
+FORMATS = (FORMAT, FORMAT_COLD)
 SHARDSET_FORMAT = "repro-shardset-v1"
 SEGMENT_STEM_FMT = "seg-{:08d}"
 SHARDSET_MANIFEST = "shards.json"
@@ -77,57 +92,182 @@ class _BinWriter:
 
     def add(self, arr: np.ndarray) -> List[int]:
         """Append an array; returns its ``[offset, count]`` descriptor."""
+        return self.add_bytes(np.ascontiguousarray(arr).tobytes(),
+                              count=int(arr.size))
+
+    def add_bytes(self, data: bytes, count: int = None) -> List[int]:
+        """Append raw bytes; returns ``[offset, count-or-nbytes]``."""
         pad = (-self.size) % _ALIGN
         if pad:
             self.chunks.append(b"\0" * pad)
             self.size += pad
         off = self.size
-        data = np.ascontiguousarray(arr).tobytes()
         self.chunks.append(data)
         self.size += len(data)
-        return [off, int(arr.size)]
+        return [off, len(data) if count is None else count]
 
 
-def _col_spec(col, w: _BinWriter) -> Dict:
+# ------------------------------------------------------------- cold codecs --
+#
+# Every codec is a bit-exact round trip; zlib finishes each payload.
+#   bits   bool mask        -> np.packbits
+#   shuf8  float64 values   -> byte transpose (all byte-0s, then byte-1s, ...)
+#   dod    float64 ts       -> double delta over the uint64 bit patterns
+#                              (wrapping arithmetic, exact) + byte transpose
+#   rle32  int32 dict codes -> run values ++ run lengths
+
+def _shuffle8(a: np.ndarray) -> bytes:
+    return np.ascontiguousarray(
+        a.reshape(-1).view(np.uint8).reshape(-1, 8).T).tobytes()
+
+
+def _unshuffle8(data: bytes, n: int) -> np.ndarray:
+    u8 = np.frombuffer(data, np.uint8)
+    if u8.size != n * 8:
+        raise ValueError("corrupt shuffled column payload")
+    return np.ascontiguousarray(u8.reshape(8, n).T).reshape(-1).view("<u8")
+
+
+def _encode_array(arr: np.ndarray, codec: str) -> bytes:
+    if codec == "bits":
+        return zlib.compress(np.packbits(arr.view(np.uint8)).tobytes())
+    if codec == "shuf8":
+        return zlib.compress(
+            _shuffle8(np.ascontiguousarray(arr, "<f8").view("<u8")))
+    if codec == "dod":
+        a = np.ascontiguousarray(arr, "<f8").view("<u8")
+        d1 = np.empty_like(a)
+        d2 = np.empty_like(a)
+        if a.size:
+            d1[0] = a[0]
+            np.subtract(a[1:], a[:-1], out=d1[1:])
+            d2[0] = d1[0]
+            np.subtract(d1[1:], d1[:-1], out=d2[1:])
+        return zlib.compress(_shuffle8(d2))
+    if codec == "rle32":
+        codes = np.ascontiguousarray(arr, "<i4")
+        if codes.size:
+            starts = np.concatenate(
+                [[0], np.flatnonzero(codes[1:] != codes[:-1]) + 1])
+            runs = np.concatenate(
+                [codes[starts],
+                 np.diff(np.concatenate([starts, [codes.size]]))])
+        else:
+            runs = codes
+        return zlib.compress(runs.astype("<i4", copy=False).tobytes())
+    raise ValueError(f"unknown segment codec {codec!r}")
+
+
+def _decode_array(data: bytes, codec: str, n: int) -> np.ndarray:
+    if codec == "bits":
+        out = np.unpackbits(np.frombuffer(data, np.uint8), count=n)
+        out = out.view(np.bool_)
+    elif codec == "shuf8":
+        out = _unshuffle8(data, n).view("<f8")
+    elif codec == "dod":
+        d2 = _unshuffle8(data, n)
+        d1 = np.add.accumulate(d2, dtype=np.uint64)
+        out = np.add.accumulate(d1, dtype=np.uint64).view("<f8")
+    elif codec == "rle32":
+        runs = np.frombuffer(data, "<i4")
+        half = runs.size // 2
+        out = np.repeat(runs[:half], runs[half:]).astype("<i4", copy=False)
+    else:
+        raise ValueError(f"unknown segment codec {codec!r}")
+    if out.size != n:
+        raise ValueError(f"codec {codec!r}: decoded {out.size} of {n} rows")
+    out.flags.writeable = False  # immutability parity with mmap views
+    return out
+
+
+def _zref(w: _BinWriter, arr: np.ndarray, codec: str) -> List:
+    """Encoded-array descriptor ``[codec, offset, nbytes]``."""
+    data = _encode_array(arr, codec)
+    off, nbytes = w.add_bytes(data)
+    return [codec, off, nbytes]
+
+
+def _col_logical_bytes(col) -> int:
+    """Bytes the raw (hot-tier) ``.bin`` encoding of this column takes —
+    the compression denominator reported as ``raw_bytes``."""
+    n = len(col.present) if col.kind != "str" else len(col.codes)
     if col.kind == "num":
+        return 10 * n          # 8B value + present + is_int per row
+    if col.kind == "str":
+        return 4 * n           # int32 dictionary code per row
+    return n                   # obj: present mask (values live in JSON)
+
+
+def _col_spec(col, w: _BinWriter, compress: bool = False,
+              dod: bool = False) -> Dict:
+    if col.kind == "num":
+        if compress:
+            return {"kind": "num", "n": len(col.vals),
+                    "zvals": _zref(w, col.vals, "dod" if dod else "shuf8"),
+                    "zpresent": _zref(w, col.present, "bits"),
+                    "zis_int": _zref(w, col.is_int, "bits")}
         return {"kind": "num",
                 "vals": w.add(col.vals.astype("<f8", copy=False)),
                 "present": w.add(col.present),
                 "is_int": w.add(col.is_int)}
     if col.kind == "str":
-        return {"kind": "str",
-                "codes": w.add(col.codes.astype("<i4", copy=False)),
+        spec = {"kind": "str",
                 "vocab": [str(v) for v in col.vocab.tolist()]}
+        if compress:
+            spec["n"] = len(col.codes)
+            spec["zcodes"] = _zref(w, col.codes, "rle32")
+        else:
+            spec["codes"] = w.add(col.codes.astype("<i4", copy=False))
+        return spec
     # obj fallback: values are wire scalars (insert() canonicalizes every
     # record through encode_line, so nothing non-JSON-able can get here);
     # the explicit present mask disambiguates absent rows.
     values = [v if p else None
               for v, p in zip(col.vals.tolist(), col.present.tolist())]
-    return {"kind": "obj", "values": values, "present": w.add(col.present)}
+    spec = {"kind": "obj", "values": values}
+    if compress:
+        spec["zpresent"] = _zref(w, col.present, "bits")
+    else:
+        spec["present"] = w.add(col.present)
+    return spec
 
 
 def save_segment(seg_dir: os.PathLike, stem: str, seg: Segment,
-                 dedup_keys: Iterable[bytes]) -> Path:
+                 dedup_keys: Iterable[bytes], compress: bool = False,
+                 fsync: bool = True, extra: Dict = None) -> Path:
     """Persist one sealed segment; returns the committed manifest path.
 
     Commit protocol: ``.bin`` first (fsync + rename), manifest last
     (fsync + rename).  A crash at any point leaves either nothing or an
     orphan ``.bin`` — never a manifest describing missing data.
+
+    ``compress=True`` writes the cold-tier encoding (format tag
+    ``repro-colseg-z1``; see module docstring).  ``fsync=False`` skips
+    the per-file fsyncs (callers whose durability window is already
+    covered by the WAL, e.g. streaming seals under ``wal_fsync=False``).
+    ``extra`` merges additional manifest keys — the compaction tier uses
+    it for ``tier``/``replaces``/``rollup`` annotations.
     """
     seg_dir = Path(seg_dir)
     seg_dir.mkdir(parents=True, exist_ok=True)
     w = _BinWriter()
-    attrs = {k: _col_spec(seg.attrs[k], w)
+    attrs = {k: _col_spec(seg.attrs[k], w, compress=compress,
+                          dod=(k == "ts"))
              for k in ("ts", "host", "job", "kind")}
-    fields = {k: _col_spec(seg.cols[k], w) for k in seg.field_names}
+    fields = {k: _col_spec(seg.cols[k], w, compress=compress)
+              for k in seg.field_names}
     zones = {name: list(seg.zone(name))
              for name, col in seg.cols.items() if col.kind == "num"}
+    raw_bytes = sum(_col_logical_bytes(seg.attrs[k])
+                    for k in ("ts", "host", "job", "kind"))
+    raw_bytes += sum(_col_logical_bytes(seg.cols[k])
+                     for k in seg.field_names)
     keys = sorted(dedup_keys)
     karr = (np.frombuffer(b"".join(keys), dtype=np.uint8)
             if keys else np.zeros(0, np.uint8))
     digest_size = len(keys[0]) if keys else 12
     manifest = {
-        "format": FORMAT,
+        "format": FORMAT_COLD if compress else FORMAT,
         "n": seg.n,
         "uid": seg.uid if seg.uid is not None else segment_uid(keys),
         "ts_min": seg.ts_min,
@@ -138,23 +278,30 @@ def save_segment(seg_dir: os.PathLike, stem: str, seg: Segment,
         "dedup": {"digest_size": digest_size, "count": len(keys),
                   "keys": w.add(karr)},
         "bin_bytes": w.size,
+        "raw_bytes": raw_bytes,
+        "tier": "cold" if compress else "hot",
     }
+    if extra:
+        manifest.update(extra)
     bin_path = seg_dir / (stem + ".bin")
     man_path = seg_dir / (stem + ".json")
     tmp = Path(str(bin_path) + ".tmp")
     with open(tmp, "wb") as f:
         for chunk in w.chunks:
             f.write(chunk)
-        f.flush()
-        os.fsync(f.fileno())
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
     os.replace(tmp, bin_path)
     tmp = Path(str(man_path) + ".tmp")
     with open(tmp, "w", encoding="utf-8") as f:
         json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
     os.replace(tmp, man_path)
-    fsync_dir(seg_dir)
+    if fsync:
+        fsync_dir(seg_dir)
     return man_path
 
 
@@ -218,6 +365,8 @@ class MappedSegment(Segment):
         self.uid = uid if uid is not None else segment_uid(self.dedup_keys())
         self.ts_min = float(manifest["ts_min"])
         self.ts_max = float(manifest["ts_max"])
+        self.tier = manifest.get("tier", "hot")
+        self.rollup = manifest.get("rollup")
         self._zones = {k: (float(v[0]), float(v[1]))
                        for k, v in manifest["zones"].items()}
         self.attrs = _LazyCols(self._attr_col, manifest["attrs"])
@@ -234,9 +383,24 @@ class MappedSegment(Segment):
             raise ValueError("column extends past end of .bin")
         return self._mm[off:end].view(dt)
 
+    def _zarr(self, zref: List, n: int) -> np.ndarray:
+        """Decode one cold-tier encoded array ``[codec, off, nbytes]``.
+        Runs once per column per open (cached via the lazy-column maps),
+        and never runs at all for zone-map-pruned segments."""
+        codec, off, nbytes = zref[0], int(zref[1]), int(zref[2])
+        if off + nbytes > self._mm.size:
+            raise ValueError("encoded column extends past end of .bin")
+        return _decode_array(zlib.decompress(self._mm[off:off + nbytes]),
+                             codec, n)
+
     def _build(self, spec: Dict):
         kind = spec["kind"]
         if kind == "num":
+            if "zvals" in spec:
+                n = int(spec["n"])
+                return NumColumn(self._zarr(spec["zvals"], n),
+                                 self._zarr(spec["zpresent"], n),
+                                 self._zarr(spec["zis_int"], n))
             return NumColumn(self._arr(spec["vals"], "<f8"),
                              self._arr(spec["present"], "|b1"),
                              self._arr(spec["is_int"], "|b1"))
@@ -245,8 +409,12 @@ class MappedSegment(Segment):
             vocab = np.empty(len(vocab_list), dtype=object)
             vocab[:] = vocab_list
             index = {v: i for i, v in enumerate(vocab_list)}
-            return StrColumn(self._arr(spec["codes"], "<i4"), vocab, index)
-        present = self._arr(spec["present"], "|b1")
+            codes = (self._zarr(spec["zcodes"], int(spec["n"]))
+                     if "zcodes" in spec else self._arr(spec["codes"], "<i4"))
+            return StrColumn(codes, vocab, index)
+        present = (self._zarr(spec["zpresent"], self.n)
+                   if "zpresent" in spec
+                   else self._arr(spec["present"], "|b1"))
         vals = np.empty(self.n, dtype=object)
         for i, v in enumerate(spec["values"]):
             vals[i] = v if present[i] else MISSING
@@ -291,8 +459,11 @@ def copy_segment_files(src_manifest: os.PathLike, dest_dir: os.PathLike,
     src_manifest = Path(src_manifest)
     with open(src_manifest, encoding="utf-8") as f:
         manifest = json.load(f)
-    if not isinstance(manifest, dict) or manifest.get("format") != FORMAT:
+    if not isinstance(manifest, dict) or manifest.get("format") not in FORMATS:
         raise ValueError(f"not a {FORMAT} manifest: {src_manifest}")
+    # "replaces" names *source-store* stems retired by a compaction; the
+    # stems are meaningless (and possibly colliding) in the destination
+    manifest.pop("replaces", None)
     dest_dir = Path(dest_dir)
     dest_dir.mkdir(parents=True, exist_ok=True)
     bin_path = dest_dir / (stem + ".bin")
@@ -395,14 +566,18 @@ def update_shardset_manifest(directory: os.PathLike, extra: Dict) -> Dict:
     return manifest
 
 
-def load_segment(manifest_path: os.PathLike) -> MappedSegment:
+def load_segment(manifest_path: os.PathLike,
+                 manifest: Optional[Dict] = None) -> MappedSegment:
     """Map one committed segment.  Raises ``ValueError``/``OSError`` on
     missing, foreign-format, or truncated files (callers skip those —
-    an interrupted seal's rows are recovered from the WAL instead)."""
+    an interrupted seal's rows are recovered from the WAL instead).
+    ``manifest`` short-circuits the JSON read for callers that already
+    parsed it (the store's restart loader)."""
     manifest_path = Path(manifest_path)
-    with open(manifest_path, encoding="utf-8") as f:
-        manifest = json.load(f)
-    if not isinstance(manifest, dict) or manifest.get("format") != FORMAT:
+    if manifest is None:
+        with open(manifest_path, encoding="utf-8") as f:
+            manifest = json.load(f)
+    if not isinstance(manifest, dict) or manifest.get("format") not in FORMATS:
         raise ValueError(f"not a {FORMAT} manifest: {manifest_path}")
     bin_path = manifest_path.with_suffix(".bin")
     mm = np.memmap(bin_path, dtype=np.uint8, mode="r")

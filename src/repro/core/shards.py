@@ -319,8 +319,65 @@ class ShardedAggregator:
             return next(iter(hosts))
         return None
 
+    # --------------------------------------------------- compaction tier --
+    def compact_all(self, **kwargs) -> Dict:
+        """Run segment compaction on every shard (see
+        :meth:`ColumnarMetricStore.compact`).  Returns per-shard stats
+        plus fleet totals, including every retired segment uid."""
+        self._check_open()
+        per_shard = [shard.compact(**kwargs) for shard in self.shards]
+        return self._merge_maintenance_stats(per_shard)
+
+    def apply_retention(self, **kwargs) -> Dict:
+        """Apply retention/rollup tiers on every shard (see
+        :meth:`ColumnarMetricStore.apply_retention`)."""
+        self._check_open()
+        per_shard = [shard.apply_retention(**kwargs) for shard in
+                     self.shards]
+        return self._merge_maintenance_stats(per_shard)
+
+    @staticmethod
+    def _merge_maintenance_stats(per_shard: List[Dict]) -> Dict:
+        total: Dict[str, Any] = {}
+        for st in per_shard:
+            for k, v in st.items():
+                if isinstance(v, (int, float)) and k != "duration_s":
+                    total[k] = total.get(k, 0) + v
+                elif isinstance(v, list):
+                    total.setdefault(k, []).extend(v)
+        total["shards"] = per_shard
+        return total
+
+    def storage_stats(self) -> Dict:
+        """Fleet storage accounting: per-tier totals over every shard
+        (see :meth:`ColumnarMetricStore.storage_stats`)."""
+        per_shard = [shard.storage_stats() for shard in self.shards]
+        return self._merge_storage_stats(per_shard)
+
+    @staticmethod
+    def _merge_storage_stats(per_shard: List[Dict]) -> Dict:
+        total: Dict[str, Any] = {k: 0 for k in ("segments", "files",
+                                                "rows", "bytes",
+                                                "raw_bytes", "buffer_rows")}
+        tiers: Dict[str, Dict] = {}
+        for st in per_shard:
+            for k in ("segments", "files", "rows", "bytes", "raw_bytes",
+                      "buffer_rows"):
+                total[k] += st.get(k, 0)
+            for name, t in (st.get("tiers") or {}).items():
+                agg = tiers.setdefault(name, {
+                    "segments": 0, "files": 0, "rows": 0,
+                    "bytes": 0, "raw_bytes": 0})
+                for k in agg:
+                    agg[k] += t.get(k, 0)
+        total["tiers"] = tiers
+        total["last_compaction"] = [st.get("last_compaction")
+                                    for st in per_shard]
+        return total
+
     # -------------------------------------------------------------- query --
-    def query(self, q: str, engine: Optional[str] = None) -> List[Dict]:
+    def query(self, q: str, engine: Optional[str] = None,
+              tolerance: Optional[float] = None) -> List[Dict]:
         """Execute a splunklite pipeline across the shards.
 
         ``engine="rows"`` forces the legacy row executor over the
@@ -329,6 +386,8 @@ class ShardedAggregator:
         each shard's segment-keyed partial-aggregate cache, so repeated
         fleet queries recompute only append buffers and newly sealed
         segments — and anything else takes the exact-gather path.
+        ``tolerance`` opts the scatter plan into approximate
+        rollup-tier answers (docs/storage.md).
         ``last_query_stats`` records the mode and, for scatter/gather,
         the fleet-wide cached/recomputed segment counts.
         """
@@ -340,7 +399,7 @@ class ShardedAggregator:
             if not stages:
                 return rows
             return splunklite.run_stages(rows, stages, implicit_first=True)
-        plan = splunklite.compile_scatter_plan(stages)
+        plan = splunklite.compile_scatter_plan(stages, tolerance=tolerance)
         if plan is not None:
             # one stats dict per shard: _map_shards touches each shard
             # from exactly one worker, so the scatter fills these (and
@@ -363,6 +422,9 @@ class ShardedAggregator:
                     for k in ("segments_cached", "segments_computed",
                               "buffer_rows"):
                         stats[k] += st.get(k, 0)
+                    for k in ("rollup_segments", "rollup_replaced"):
+                        if st.get(k):
+                            stats[k] = stats.get(k, 0) + st[k]
                     if st.get("cache_bypassed"):
                         stats["cache_bypassed"] = True
                 self.last_query_stats = stats
@@ -393,6 +455,7 @@ class ShardedAggregator:
             "misses": self.partial_cache_misses,
             "entries": sum(len(s.partial_cache) for s in self.shards),
         }
+        storage = self.storage_stats()
         if plan is not None:
             sealed = cached = 0
             for shard in self.shards:
@@ -413,6 +476,7 @@ class ShardedAggregator:
                              "buffer_rows": sum(len(s._buffer)
                                                 for s in self.shards)},
                 "cache": cache_info,
+                "storage": storage,
             }
         terms, rest = splunklite._leading_terms(stages)
         cols = splunklite.referenced_columns(rest)
@@ -423,6 +487,7 @@ class ShardedAggregator:
             "columns": sorted(cols) if cols is not None else None,
             "stages": [t[0] for t in rest],
             "cache": cache_info,
+            "storage": storage,
         }
 
     def _gather_rows(self, stages: List[List[str]]):

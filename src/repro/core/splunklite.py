@@ -1420,15 +1420,24 @@ class ScatterPlan:
     JSON-safe dict — the wire form shipped to remote shard workers
     (``repro.core.remote``).  The fingerprint is *recomputed* from the
     same canonical tuple on reconstruction, so worker-side partial
-    caches key identically to the coordinator's."""
+    caches key identically to the coordinator's.
+
+    ``tolerance`` (seconds, default ``None``) opts the plan into
+    *approximate* rollup-tier answers: time-range bounds within
+    ``tolerance`` of a rollup bucket boundary are snapped to it
+    (docs/storage.md).  ``None`` means rollups substitute only when the
+    result is exactly equivalent to the raw scan.  A non-``None``
+    tolerance joins the fingerprint canon (snapping changes results, so
+    tolerant and exact runs must never share cached partials); ``None``
+    is omitted so pre-existing fingerprints are unchanged."""
 
     __slots__ = ("terms", "prefix", "cols", "cmd", "aggs", "by", "span",
-                 "tail", "term_tokens", "fingerprint")
+                 "tail", "term_tokens", "tolerance", "fingerprint")
 
     STATE_VERSION = 1
 
     def __init__(self, terms, prefix, cols, cmd, aggs, by, span,
-                 tail, term_tokens) -> None:
+                 tail, term_tokens, tolerance=None) -> None:
         # term_tokens is deliberately required: the fingerprint is a
         # correctness-critical cache key, and defaulting the predicate
         # tokens to () would let two plans with different predicates
@@ -1444,6 +1453,8 @@ class ScatterPlan:
         self.span = span
         self.tail = tail
         self.term_tokens = list(term_tokens)
+        self.tolerance = (float(tolerance) if tolerance is not None
+                          else None)
         canon = ("plan-v1", cmd, float(span) if span is not None else None,
                  tuple(term_tokens),
                  tuple(tuple(toks) for toks in prefix),
@@ -1451,6 +1462,8 @@ class ScatterPlan:
                        for name, fieldname, out in aggs),
                  tuple(by),
                  tuple(sorted(cols)) if cols is not None else None)
+        if self.tolerance is not None:
+            canon = canon + ("tol", self.tolerance)
         self.fingerprint = hashlib.blake2b(
             repr(canon).encode("utf-8"), digest_size=12).hexdigest()
 
@@ -1467,6 +1480,7 @@ class ScatterPlan:
             "by": list(self.by),
             "cols": (sorted(self.cols) if self.cols is not None else None),
             "tail": [list(toks) for toks in self.tail],
+            "tolerance": self.tolerance,
         }
 
     @classmethod
@@ -1493,15 +1507,20 @@ class ScatterPlan:
                 by=[str(b) for b in state["by"]],
                 span=state["span"],
                 tail=[[str(t) for t in toks] for toks in state["tail"]],
-                term_tokens=term_tokens)
+                term_tokens=term_tokens,
+                tolerance=state.get("tolerance"))
         except (KeyError, TypeError) as exc:
             raise ValueError(f"malformed scatter-plan state: {exc}") from exc
 
 
-def compile_scatter_plan(stages: List[List[str]]) -> Optional[ScatterPlan]:
+def compile_scatter_plan(stages: List[List[str]],
+                         tolerance: Optional[float] = None
+                         ) -> Optional[ScatterPlan]:
     """Compile a pipeline into a scatter/gather plan, or ``None`` when
     it is not distributable (no leading row-local prefix ending in a
-    ``stats``/``timechart``, or a non-mergeable aggregate)."""
+    ``stats``/``timechart``, or a non-mergeable aggregate).
+    ``tolerance`` opts the plan into approximate rollup-tier answers
+    (see :class:`ScatterPlan`)."""
     stages = list(stages)
     if not stages:
         return None
@@ -1541,7 +1560,8 @@ def compile_scatter_plan(stages: List[List[str]]) -> Optional[ScatterPlan]:
         prefix = prefix[1:]
     cols = referenced_columns(prefix + [stages[k]])
     return ScatterPlan(terms, prefix, cols, cmd, aggs, by, span,
-                       stages[k + 1:], term_tokens=term_tokens)
+                       stages[k + 1:], term_tokens=term_tokens,
+                       tolerance=tolerance)
 
 
 def _batch_partials(batch: _Batch, plan: ScatterPlan
@@ -1590,6 +1610,242 @@ def _segment_partials(seg, plan: ScatterPlan) -> Dict[tuple, Dict[str, Any]]:
     return _batch_partials(batch, plan)
 
 
+# ------------------------------------------------- rollup-tier planning ---
+#
+# Retention (repro.core.compaction) downsamples raw segments into
+# rollup segments: one row per (bucket, host, job, kind) carrying
+# mergeable partial-aggregate stat columns per metric field.  The
+# scatter planner substitutes a rollup for the raw segments it covers
+# when the plan is *provably* answerable from buckets — the result is
+# then the exact partial algebra over pre-reduced rows.  Plans that
+# fail any rule below simply scan raw (no behavior change).  The full
+# eligibility table lives in docs/storage.md.
+
+_ROLLUP_AGG_NAMES = frozenset(
+    ("count", "sum", "avg", "mean", "min", "max", "range", "stdev"))
+
+
+def _plan_rollup_shape(plan: ScatterPlan) -> Optional[tuple]:
+    """Split a plan's predicate terms for rollup evaluation, or ``None``
+    when the plan can never be answered from rollup segments: it must
+    have no prefix stages, group only by rollup dimensions, use only
+    bucket-derivable aggregations over non-reserved fields, and filter
+    only on dimension equality or ``ts`` range terms."""
+    if plan.prefix:
+        return None
+    from repro.core.compaction import ROLLUP_DIMS
+    if any(b not in ROLLUP_DIMS for b in plan.by):
+        return None
+    for name, fieldname, _out in plan.aggs:
+        if name not in _ROLLUP_AGG_NAMES:
+            return None
+        if name == "count" and not fieldname:
+            continue  # bare count: physical rows per bucket
+        if not fieldname or fieldname == "ts" or fieldname in ROLLUP_DIMS:
+            return None  # reserved names may be shadowed by fields
+    dim_terms: List[_Term] = []
+    ts_terms: List[_Term] = []
+    for t in plan.terms:
+        if t.key == "ts" and t.num is not None and \
+                t.op in (">", ">=", "<", "<="):
+            ts_terms.append(t)
+        elif t.key in ROLLUP_DIMS and t.op in ("=", "!="):
+            dim_terms.append(t)
+        else:
+            return None  # full-text / field predicates need raw rows
+    return dim_terms, ts_terms
+
+
+def _rollup_ts_bounds(ts_terms: List[_Term], gran: float,
+                      tolerance: Optional[float]) -> Optional[tuple]:
+    """``[lo, hi)`` bucket bounds equivalent to the plan's ``ts`` range
+    terms, or ``None`` when a bound cannot be expressed on bucket
+    boundaries.  Exact equivalence needs ``>=``/``<`` with a
+    granularity-aligned value; with ``tolerance`` opted in, any bound
+    within ``tolerance`` seconds of a boundary snaps to it (``>`` is
+    then read as ``>=`` and ``<=`` as ``<``)."""
+    lo, hi = -math.inf, math.inf
+    for t in ts_terms:
+        x = float(t.num)
+        aligned = math.floor(x / gran) * gran
+        exact = x == aligned
+        snap = math.floor(x / gran + 0.5) * gran
+        if t.op == ">=" and exact:
+            lo = max(lo, x)
+        elif t.op == "<" and exact:
+            hi = min(hi, x)
+        elif tolerance is not None and abs(x - snap) <= tolerance:
+            if t.op in (">", ">="):
+                lo = max(lo, snap)
+            else:
+                hi = min(hi, snap)
+        else:
+            return None
+    return lo, hi
+
+
+def _rollup_eligible(plan: ScatterPlan, rseg,
+                     shape: tuple) -> Optional[tuple]:
+    """Bucket ``[lo, hi)`` bounds for evaluating ``plan`` against one
+    rollup segment, or ``None`` when this rollup cannot answer it:
+    timechart spans must be whole multiples of the granularity, no
+    aggregated field may be in the rollup's ``excluded`` list (object-
+    typed somewhere in the covered raw), and the time range must land
+    on bucket boundaries (see :func:`_rollup_ts_bounds`)."""
+    info = rseg.rollup
+    gran = float(info["gran"])
+    if gran <= 0:
+        return None
+    if plan.cmd == "timechart":
+        k = plan.span / gran
+        if not (abs(k - round(k)) < 1e-9 and round(k) >= 1):
+            return None
+    excluded = info.get("excluded") or ()
+    if excluded:
+        for _name, fieldname, _out in plan.aggs:
+            if fieldname and fieldname in excluded:
+                return None
+    return _rollup_ts_bounds(shape[1], gran, plan.tolerance)
+
+
+def _select_rollups(store, plan: ScatterPlan):
+    """Pick rollup segments to substitute for the raw segments they
+    cover.  Returns ``(chosen, skip_uids, shape)`` where ``chosen`` is
+    ``[(rollup segment, uid, ts-bounds)]`` and ``skip_uids`` the live
+    raw uids those rollups replace.
+
+    Coarsest granularity first; a rollup is selected when the plan is
+    answerable from it and its covers don't overlap an already-selected
+    rollup's.  A rollup whose covers include retired raw uids
+    (retention dropped the rows) is the *only* remaining source for
+    them — retention guarantees a dropped uid is covered at the
+    coarsest granularity, so the coarsest-first order accounts for
+    every dropped row exactly once."""
+    units = getattr(store, "rollup_units", None)
+    units = units() if units is not None else []
+    if not units:
+        return [], frozenset(), None
+    shape = _plan_rollup_shape(plan)
+    if shape is None:
+        return [], frozenset(), None
+    live = {uid for _seg, uid in store.segment_units(include_buffer=False)
+            if uid is not None}
+    order = sorted(range(len(units)),
+                   key=lambda i: -float(units[i][0].rollup["gran"]))
+    chosen: List[tuple] = []
+    claimed: set = set()
+    for i in order:
+        rseg, ruid = units[i]
+        covers = set(rseg.rollup.get("covers") or ())
+        if not covers or covers & claimed:
+            continue
+        bounds = _rollup_eligible(plan, rseg, shape)
+        if bounds is None:
+            continue
+        chosen.append((rseg, ruid, bounds))
+        claimed |= covers
+    return chosen, frozenset(claimed & live), shape
+
+
+def _rollup_partials(rseg, plan: ScatterPlan, bounds: tuple,
+                     shape: tuple) -> Dict[tuple, Dict[str, Any]]:
+    """Partial states of one rollup segment under a plan — same
+    cacheable unit as :func:`_segment_partials`, derived from the stat
+    columns instead of raw rows.  Bucket rows are filtered by the dim
+    terms and snapped ts bounds, grouped exactly like raw rows (bucket
+    starts land in the same timechart buckets because the span is a
+    whole multiple of the granularity), and each group's states are the
+    exact merge of its buckets' pre-reduced partials."""
+    from repro.core.compaction import ROLLUP_ROWS, rollup_stat_col
+    dim_terms, _ts_terms = shape
+    idx = _segment_match_idx(rseg, dim_terms)
+    if idx is None or not len(idx):
+        return {}
+    lo, hi = bounds
+    if lo != -math.inf or hi != math.inf:
+        ts = rseg.attrs["ts"].vals[idx]
+        idx = idx[(ts >= lo) & (ts < hi)]
+        if not len(idx):
+            return {}
+    need = {ROLLUP_ROWS, "ts"} | set(plan.by)
+    for _name, fieldname, _out in plan.aggs:
+        if fieldname:
+            need.update(rollup_stat_col(s, fieldname)
+                        for s in ("cnt", "num", "sum", "min", "max", "m2"))
+    batch = _merge_parts([(rseg, idx)], frozenset(need))
+    if plan.cmd == "timechart":
+        buckets = np.floor(batch.cols["ts"].vals / plan.span) * plan.span
+        u, inv = np.unique(buckets, return_inverse=True)
+        grouping = _group(batch, plan.by,
+                          extra=(inv.astype(np.int64), u.tolist()))
+    else:
+        grouping = _group(batch, plan.by)
+    G, gid = grouping.G, grouping.gid
+    out: List[Dict[str, Any]] = [dict() for _ in range(G)]
+
+    def wsum(weights: np.ndarray) -> np.ndarray:
+        return np.bincount(gid, weights=weights, minlength=G)
+
+    def stat(fieldname: str, s: str) -> Optional[np.ndarray]:
+        col = batch.cols.get(rollup_stat_col(s, fieldname))
+        return col.vals if col is not None else None
+
+    for name, fieldname, outname in plan.aggs:
+        if not fieldname:  # bare count
+            n = wsum(batch.cols[ROLLUP_ROWS].vals)
+            for g in range(G):
+                out[g][outname] = int(n[g])
+            continue
+        num = stat(fieldname, "num")
+        if num is None:
+            # field absent from every covered raw segment: the same
+            # empty states the raw partial kernels produce
+            empty = {"count": 0, "sum": (0, 0.0), "avg": (0, 0.0),
+                     "mean": (0, 0.0), "min": (0, math.inf, -math.inf),
+                     "max": (0, math.inf, -math.inf),
+                     "range": (0, math.inf, -math.inf),
+                     "stdev": (0, 0.0, 0.0)}[name]
+            for g in range(G):
+                out[g][outname] = empty
+            continue
+        if name == "count":
+            n = wsum(stat(fieldname, "cnt"))
+            for g in range(G):
+                out[g][outname] = int(n[g])
+        elif name in ("sum", "avg", "mean"):
+            n = wsum(num)
+            s = wsum(stat(fieldname, "sum"))
+            for g in range(G):
+                out[g][outname] = (int(n[g]), float(s[g]))
+        elif name in ("min", "max", "range"):
+            n = wsum(num)
+            mn = np.full(G, math.inf)
+            mx = np.full(G, -math.inf)
+            sel = num > 0
+            if sel.any():
+                np.minimum.at(mn, gid[sel], stat(fieldname, "min")[sel])
+                np.maximum.at(mx, gid[sel], stat(fieldname, "max")[sel])
+            for g in range(G):
+                c = int(n[g])
+                out[g][outname] = ((c, float(mn[g]), float(mx[g]))
+                                   if c else (0, math.inf, -math.inf))
+        elif name == "stdev":
+            s_i = stat(fieldname, "sum")
+            m2_i = stat(fieldname, "m2")
+            n = wsum(num)
+            s = wsum(s_i)
+            means = s / np.maximum(n, 1)
+            # Chan et al. in closed form: per-bucket M2 plus each
+            # bucket's squared mean deviation from the group mean
+            mean_i = s_i / np.maximum(num, 1)
+            m2 = wsum(m2_i + num * (mean_i - means[gid]) ** 2)
+            for g in range(G):
+                c = int(n[g])
+                out[g][outname] = ((c, float(means[g]), float(m2[g]))
+                                   if c else (0, 0.0, 0.0))
+    return {key: out[g] for g, key in enumerate(grouping.keys)}
+
+
 def scatter_partials(store: ColumnarMetricStore, plan: ScatterPlan,
                      cache=None, stats: Optional[Dict[str, int]] = None
                      ) -> Dict[tuple, Dict[str, Any]]:
@@ -1623,12 +1879,34 @@ def scatter_partials(store: ColumnarMetricStore, plan: ScatterPlan,
         units = store.segment_units()
     else:  # pragma: no cover - stores always expose segment_units
         units = [(seg, None) for seg in store.segments()]
+    rollups, skip_uids, shape = _select_rollups(store, plan)
     if cache is not None and cache.max_entries < sum(
             1 for _seg, uid in units if uid is not None):
         cache = None
         if stats is not None:
             stats["cache_bypassed"] = True
+    for rseg, ruid, rbounds in rollups:
+        key = (ruid, plan.fingerprint)
+        if stats is not None:
+            stats["rollup_segments"] = stats.get("rollup_segments", 0) + 1
+        if cache is not None:
+            hit = cache.get(key)
+            if hit is not None:
+                maps.append(hit)
+                if stats is not None:
+                    stats["segments_cached"] = \
+                        stats.get("segments_cached", 0) + 1
+                continue
+        pmap = _rollup_partials(rseg, plan, rbounds, shape)
+        if cache is not None:
+            cache.put(key, pmap)
+        maps.append(pmap)
     for seg, uid in units:
+        if uid is not None and uid in skip_uids:
+            if stats is not None:
+                stats["rollup_replaced"] = \
+                    stats.get("rollup_replaced", 0) + 1
+            continue
         key = (uid, plan.fingerprint) if uid is not None else None
         if cache is not None and key is not None:
             hit = cache.get(key)
@@ -1921,18 +2199,21 @@ def run_stages(rows: List[Row], stages: List[List[str]],
 
 def _incremental_query(store: ColumnarMetricStore,
                        stages: List[List[str]],
-                       plan: Optional[ScatterPlan] = None):
+                       plan: Optional[ScatterPlan] = None,
+                       tolerance: Optional[float] = None):
     """Cache-aware execution of a pipeline against a single store.
 
     Returns ``(rows, stats)``.  Mergeable pipelines run per-segment
-    partials through the store's :class:`PartialAggregateCache`;
-    anything else — and any ``_Fallback`` from mixed-type data — runs
-    the exact columnar executor (``stats["mode"] == "full"``).
-    ``plan`` skips recompilation when the caller (a
-    :class:`QueryHandle`) already compiled these stages.
+    partials through the store's :class:`PartialAggregateCache` —
+    consulting rollup tiers when eligible (``tolerance`` opts into
+    approximate time bounds; see :class:`ScatterPlan`); anything else —
+    and any ``_Fallback`` from mixed-type data — runs the exact
+    columnar executor (``stats["mode"] == "full"``).  ``plan`` skips
+    recompilation when the caller (a :class:`QueryHandle`) already
+    compiled these stages.
     """
     if plan is None:
-        plan = compile_scatter_plan(stages)
+        plan = compile_scatter_plan(stages, tolerance=tolerance)
     if plan is not None:
         stats = {"mode": "incremental", "fingerprint": plan.fingerprint,
                  "segments_cached": 0, "segments_computed": 0,
@@ -1964,11 +2245,12 @@ class QueryHandle:
     consults the per-shard caches on every query).
     """
 
-    def __init__(self, store, q: str) -> None:
+    def __init__(self, store, q: str,
+                 tolerance: Optional[float] = None) -> None:
         self.store = store
         self.q = q
         self._stages = _split_pipeline(q)
-        self.plan = compile_scatter_plan(self._stages)
+        self.plan = compile_scatter_plan(self._stages, tolerance=tolerance)
         self.refreshes = 0
         self.last_rows: Optional[List[Row]] = None
         self.last_stats: Optional[Dict] = None
@@ -2023,6 +2305,7 @@ def explain_store(store: ColumnarMetricStore, q: str) -> Dict[str, Any]:
         "shards": 1,
         "cache": {"hits": cache.hits, "misses": cache.misses,
                   "entries": len(cache), "evictions": cache.evictions},
+        "storage": store.storage_stats(),
     }
     if plan is None:
         terms, rest = _leading_terms(stages)
@@ -2037,6 +2320,7 @@ def explain_store(store: ColumnarMetricStore, q: str) -> Dict[str, Any]:
     sealed = store.segment_units(include_buffer=False)
     cached = sum(1 for _seg, uid in sealed
                  if cache.peek((uid, plan.fingerprint)))
+    rollups, skip_uids, _shape = _select_rollups(store, plan)
     out.update({
         "mode": "incremental",
         "fingerprint": plan.fingerprint,
@@ -2045,7 +2329,9 @@ def explain_store(store: ColumnarMetricStore, q: str) -> Dict[str, Any]:
         "columns": sorted(plan.cols) if plan.cols is not None else None,
         "tail_stages": [t[0] for t in plan.tail],
         "segments": {"sealed": len(sealed), "cached": cached,
-                     "buffer_rows": len(store._buffer)},
+                     "buffer_rows": len(store._buffer),
+                     "rollup_segments": len(rollups),
+                     "rollup_replaced": len(skip_uids)},
     })
     return out
 
@@ -2054,7 +2340,8 @@ def explain_store(store: ColumnarMetricStore, q: str) -> Dict[str, Any]:
 
 def query(source: Union[ColumnarMetricStore, Sequence[Row],
                         Sequence[MetricRecord]],
-          q: str, engine: Optional[str] = None) -> List[Row]:
+          q: str, engine: Optional[str] = None,
+          tolerance: Optional[float] = None) -> List[Row]:
     """Run an SPL-like pipeline over a store / record list / row list.
 
     ``engine`` — ``None`` (auto: columnar for stores, rows otherwise),
@@ -2064,13 +2351,26 @@ def query(source: Union[ColumnarMetricStore, Sequence[Row],
     falls back to the exact columnar path).  A sharded store
     (``repro.core.shards.ShardedAggregator``) plans its own distributed
     execution — cache-aware by default — and is dispatched to directly.
+
+    ``tolerance`` (seconds) opts scatter-planned paths into approximate
+    rollup-tier answers: time-range bounds within ``tolerance`` of a
+    rollup bucket boundary snap to it (docs/storage.md).  Without it,
+    rollups substitute only when exactly equivalent to the raw scan.
     """
     if getattr(source, "is_sharded", False):
-        return source.query(q, engine=engine)
+        return source.query(q, engine=engine, tolerance=tolerance)
     stages = _split_pipeline(q)
     if isinstance(source, ColumnarMetricStore):
+        # rollup tiers live behind the scatter planner; once a store
+        # has them (or the caller opted into snapping), auto dispatch
+        # must go through it — the plain columnar scan would re-read
+        # raw segments retention may already have dropped
+        if engine is None and (tolerance is not None
+                               or getattr(source, "_rollups", None)):
+            engine = "incremental"
         if engine == "incremental":
-            rows, stats = _incremental_query(source, stages)
+            rows, stats = _incremental_query(source, stages,
+                                             tolerance=tolerance)
             source.last_query_stats = stats
             return rows
         if engine != "rows":

@@ -297,7 +297,31 @@ class ShardWorker:
         return {"sealed": sealed, "cached": cached,
                 "buffer_rows": len(self.store._buffer),
                 "cache": {"hits": pc.hits, "misses": pc.misses,
-                          "evictions": pc.evictions, "entries": len(pc)}}
+                          "evictions": pc.evictions, "entries": len(pc)},
+                "storage": self.store.storage_stats()}
+
+    def _op_compact(self, msg: Dict) -> Dict:
+        """Run segment compaction on the worker's store.  The reply
+        carries ``retired_uids`` so the coordinator can evict its own
+        decoded-scatter memos for the retired segments (the stale-etag
+        window after compaction; see RemoteShard.compact)."""
+        kwargs = {k: msg[k] for k in ("small_rows", "target_rows",
+                                      "min_run", "compress") if k in msg}
+        return {"stats": self.store.compact(**kwargs),
+                "version": list(self.store._version())}
+
+    def _op_retention(self, msg: Dict) -> Dict:
+        kwargs: Dict = {}
+        if "rollups" in msg:
+            kwargs["rollups"] = [tuple(t) if isinstance(t, list) else t
+                                 for t in msg["rollups"]]
+        if "raw_max_age_s" in msg:
+            kwargs["raw_max_age_s"] = msg["raw_max_age_s"]
+        return {"stats": self.store.apply_retention(**kwargs),
+                "version": list(self.store._version())}
+
+    def _op_storage(self, msg: Dict) -> Dict:
+        return {"storage": self.store.storage_stats()}
 
 
 def main(argv=None) -> int:

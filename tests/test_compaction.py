@@ -1,0 +1,458 @@
+"""Segment compaction, tiered compressed storage, and retention.
+
+Acceptance contract (ISSUE 6 / docs/storage.md): compacting a store —
+merging small sealed segments into large compressed cold-tier ones —
+changes *nothing* observable through the query surface: the shared
+parity sweep returns byte-identical rows (numeric tolerance only where
+float accumulation order legitimately differs) on compacted +
+compressed stores vs the uncompacted rows-engine oracle, across
+in-process single stores, sharded fleets, and remote worker fleets,
+including after a crash anywhere inside the compaction swap window.
+Retention rollups are consulted by the planner only when the plan is
+exactly answerable from bucketed partials (or the caller opted into
+``tolerance=``), and aggregate results survive raw-segment drops.
+"""
+
+import shutil
+
+import pytest
+
+from conftest import assert_rows_equal, random_records, random_store
+from test_engine_parity import AGG_QUERIES, PIPELINE_QUERIES, SEARCH_QUERIES
+from test_sharded_parity import assert_sharded_rows
+
+from repro.core.columnar import ColumnarMetricStore
+from repro.core.compaction import Compactor, build_rollup, rollup_uid
+from repro.core.schema import encode_line
+from repro.core.shards import ShardedAggregator
+from repro.core.splunklite import (_select_rollups, _split_pipeline,
+                                   compile_scatter_plan, query)
+
+ALL_QUERIES = SEARCH_QUERIES + AGG_QUERIES + PIPELINE_QUERIES
+SEAL = 29  # small segments -> many compaction candidates
+RECORDS = random_records(seed=11, n=420)
+
+FLEET_Q = "search kind=perf | stats avg(gflops) count by job"
+
+
+def oracle_rows(q):
+    """Uncompacted rows-engine oracle over the shared workload."""
+    return query(_ORACLE, q, engine="rows")
+
+
+_ORACLE = random_store(records=RECORDS, seal_threshold=SEAL)
+
+
+def compacted_single(directory=None, compress=True):
+    st = random_store(records=RECORDS, seal_threshold=SEAL,
+                      directory=directory)
+    stats = st.compact(compress=compress)
+    assert stats["segments_merged"] > 0
+    return st
+
+
+# ===========================================================================
+# Parity: compacted + compressed stores vs the uncompacted oracle
+# ===========================================================================
+
+@pytest.fixture(scope="module")
+def single_compacted():
+    return compacted_single()
+
+
+@pytest.mark.parametrize("q", ALL_QUERIES)
+def test_compaction_parity_single(q, single_compacted):
+    assert_rows_equal(query(single_compacted, q), oracle_rows(q), q)
+
+
+@pytest.mark.parametrize("shards", [2, 3])
+def test_compaction_parity_sharded(shards):
+    agg = random_store(records=RECORDS, shards=shards, seal_threshold=SEAL)
+    stats = agg.compact_all()
+    assert stats["segments_merged"] > 0
+    assert len(stats["shards"]) == shards
+    assert stats["retired_uids"]
+    for q in ALL_QUERIES:
+        # quantile sketches merge approximately and are layout-
+        # dependent; everything else must match the oracle exactly
+        assert_sharded_rows(agg.query(q), oracle_rows(q), q,
+                            records=RECORDS)
+
+
+def test_compaction_parity_durable_and_after_reload(tmp_path):
+    st = compacted_single(directory=tmp_path / "s")
+    for q in ALL_QUERIES:
+        assert_rows_equal(query(st, q), oracle_rows(q), q)
+    n_segments = len(st._sealed)
+    uids = {seg.uid for seg in st._sealed}
+    st.close()
+    back = ColumnarMetricStore(directory=tmp_path / "s",
+                               seal_threshold=SEAL)
+    assert len(back._sealed) == n_segments
+    assert {seg.uid for seg in back._sealed} == uids
+    for q in ALL_QUERIES:
+        assert_rows_equal(query(back, q), oracle_rows(q), q)
+    back.close()
+
+
+def test_compact_reduces_segments_and_bytes(tmp_path):
+    st = random_store(records=RECORDS, seal_threshold=SEAL,
+                      directory=tmp_path / "s")
+    before = st.storage_stats()
+    assert "hot" in before["tiers"]
+    stats = st.compact()
+    after = st.storage_stats()
+    assert after["segments"] < before["segments"]
+    assert stats["segment_count"] == len(st._sealed)
+    # the merged tier is compressed: stored bytes beat the raw layout
+    cold = after["tiers"]["cold"]
+    assert cold["segments"] >= 1
+    assert cold["bytes"] < cold["raw_bytes"]
+    assert stats["bytes_after"] < stats["bytes_before"]
+    assert st.last_compaction is stats
+    st.close()
+
+
+def test_compact_is_idempotent_when_nothing_qualifies():
+    st = compacted_single()
+    again = st.compact()
+    assert again["runs"] == 0
+    assert again["segments_merged"] == 0
+
+
+# ===========================================================================
+# Crash windows inside the compaction swap (satellite)
+# ===========================================================================
+
+def test_orphan_merged_bin_is_invisible(tmp_path):
+    """Crash after writing the merged ``.bin`` but before the manifest
+    commit: the orphan payload has no ``.json``, so reload never sees
+    it and the original small segments still answer everything."""
+    st = random_store(records=RECORDS, seal_threshold=SEAL,
+                      directory=tmp_path / "s")
+    n_segments = len(st._sealed)
+    st.close()
+    seg_dir = tmp_path / "s" / "segments"
+    (seg_dir / "seg-00000000-m99999999.bin").write_bytes(b"\x00" * 128)
+    back = ColumnarMetricStore(directory=tmp_path / "s",
+                               seal_threshold=SEAL)
+    assert len(back._sealed) == n_segments
+    for q in ALL_QUERIES[:6] + [FLEET_Q]:
+        assert_rows_equal(query(back, q), oracle_rows(q), q)
+    back.close()
+
+
+def test_committed_manifest_with_undeleted_inputs_heals(tmp_path):
+    """Crash after the merged manifest committed but before the retired
+    input files were unlinked: reload must adopt the merged segment
+    exactly once (the ``replaces`` skip), never double-count the
+    retired inputs, and clean them from disk."""
+    st = random_store(records=RECORDS, seal_threshold=SEAL,
+                      directory=tmp_path / "s")
+    seg_dir = tmp_path / "s" / "segments"
+    saved = tmp_path / "saved"
+    saved.mkdir()
+    for f in seg_dir.iterdir():
+        shutil.copy2(f, saved / f.name)
+    st.compact()
+    n_segments = len(st._sealed)
+    total = len(st)
+    st.close()
+    # resurrect the retired inputs next to the committed merged files
+    for f in saved.iterdir():
+        target = seg_dir / f.name
+        if not target.exists():
+            shutil.copy2(f, target)
+    back = ColumnarMetricStore(directory=tmp_path / "s",
+                               seal_threshold=SEAL)
+    assert len(back) == total
+    assert len(back._sealed) == n_segments
+    for q in ALL_QUERIES[:6] + [FLEET_Q]:
+        assert_rows_equal(query(back, q), oracle_rows(q), q)
+    # the loader garbage-collected the superseded files
+    leftover = {p.stem for p in seg_dir.glob("*.json")}
+    assert leftover == {s for s in back._sealed_stems if s}
+    back.close()
+
+
+def test_wal_buffer_rows_survive_compaction_crash(tmp_path):
+    """Unsealed rows ride the WAL across a compaction + crash: the
+    merged cold segments and the replayed buffer interleave back into
+    the exact pre-crash row set."""
+    head, tail = RECORDS[:400], RECORDS[400:]  # tail stays unsealed
+    st = random_store(records=head, seal_threshold=SEAL,
+                      directory=tmp_path / "s")
+    for rec in tail:
+        st.insert(rec)
+    assert st._buffer
+    st.compact()
+    assert st._buffer  # compaction never touches the buffer
+    st.close()
+    back = ColumnarMetricStore(directory=tmp_path / "s",
+                               seal_threshold=SEAL)
+    assert len(back) == len(RECORDS)
+    for q in ALL_QUERIES[:6] + [FLEET_Q]:
+        assert_rows_equal(query(back, q), oracle_rows(q), q)
+    back.close()
+
+
+def test_read_only_store_refuses_compaction(tmp_path):
+    st = random_store(records=RECORDS[:100], seal_threshold=SEAL,
+                      directory=tmp_path / "s")
+    st.close()
+    ro = ColumnarMetricStore(directory=tmp_path / "s", read_only=True)
+    with pytest.raises(RuntimeError, match="read-only"):
+        ro.compact()
+    with pytest.raises(RuntimeError, match="read-only"):
+        ro.apply_retention()
+    with pytest.raises(RuntimeError, match="read-only"):
+        Compactor(ro)
+    ro.close()
+
+
+# ===========================================================================
+# Cache invalidation: retired uids dropped, merged uid warms on touch
+# ===========================================================================
+
+def test_partial_cache_retired_and_rewarmed():
+    st = random_store(records=RECORDS, seal_threshold=SEAL)
+    query(st, FLEET_Q, engine="incremental")  # warm per-segment entries
+    plan = compile_scatter_plan(_split_pipeline(FLEET_Q))
+    old_uids = [seg.uid for seg in st._sealed]
+    assert all(st.partial_cache.peek((u, plan.fingerprint))
+               for u in old_uids)
+    stats = st.compact()
+    for uid in stats["retired_uids"]:
+        assert not st.partial_cache.peek((uid, plan.fingerprint))
+    e0 = st.explain(FLEET_Q)
+    assert e0["segments"]["cached"] == 0  # merged uids are cold
+    assert_rows_equal(query(st, FLEET_Q, engine="incremental"),
+                      oracle_rows(FLEET_Q), FLEET_Q)
+    e1 = st.explain(FLEET_Q)  # ... and warm after first touch
+    assert e1["segments"]["cached"] == e1["segments"]["sealed"] > 0
+
+
+# ===========================================================================
+# Retention rollups: planner eligibility, tolerance gating, drops
+# ===========================================================================
+
+def rolled_store():
+    st = random_store(records=RECORDS, seal_threshold=SEAL)
+    st.seal()  # bufferless: every row lives in a covered segment
+    stats = st.apply_retention(rollups=[(60.0, 0.0), (600.0, 0.0)])
+    assert stats["rollups_created"] == 2
+    return st
+
+
+def rollup_count(store, q, tolerance=None):
+    plan = compile_scatter_plan(_split_pipeline(q), tolerance=tolerance)
+    assert plan is not None, q
+    chosen, _skip, _shape = _select_rollups(store, plan)
+    return len(chosen)
+
+
+def test_rollup_chosen_only_when_exactly_aligned():
+    st = rolled_store()
+    aligned = "kind=perf ts>=1020 ts<2040 | stats avg(gflops) count by host"
+    assert rollup_count(st, aligned) > 0
+    assert_rows_equal(query(st, aligned), oracle_rows(aligned), aligned)
+    # unaligned bound, p90 agg, non-dim group key: all planner-refused
+    for q in ("kind=perf ts>=1010 ts<2040 | stats avg(gflops) by host",
+              "ts>=1020 ts<2040 | stats p90(gflops) by host",
+              "ts>=1020 ts<2040 | stats avg(gflops) by app"):
+        assert rollup_count(st, q) == 0
+        assert_rows_equal(query(st, q), oracle_rows(q), q)
+
+
+def test_rollup_tolerance_snaps_bounds():
+    st = rolled_store()
+    q = "kind=perf ts>=1010 ts<2050 | stats avg(gflops) count by host"
+    assert rollup_count(st, q) == 0          # exact mode: refused
+    assert rollup_count(st, q, tolerance=60.0) > 0
+    snapped = "kind=perf ts>=1020 ts<2040 | stats avg(gflops) count by host"
+    assert_rows_equal(query(st, q, tolerance=60.0), oracle_rows(snapped), q)
+    # a tolerance too small to reach the nearest bucket edge: refused
+    assert rollup_count(st, q, tolerance=5.0) == 0
+    assert_rows_equal(query(st, q, tolerance=5.0), oracle_rows(q), q)
+
+
+def test_rollup_full_range_aggregate_matches_exactly():
+    st = rolled_store()
+    for q in ("ts>=0 | stats count by host",
+              "ts>=0 | stats sum(gflops) min(gflops) max(gflops) by kind",
+              "ts>=0 | stats stdev(gflops) by job",
+              "kind=perf ts>=0 | timechart span=600 avg(gflops) by host"):
+        assert rollup_count(st, q) > 0, q
+        assert_rows_equal(query(st, q), oracle_rows(q), q)
+
+
+def test_rollup_survives_raw_segment_drop():
+    st = random_store(records=RECORDS, seal_threshold=SEAL)
+    st.seal()
+    q = "ts>=0 | stats count sum(gflops) by host"
+    before = query(st, q)
+    stats = st.apply_retention(rollups=[(60.0, 0.0)], raw_max_age_s=0.0)
+    assert stats["dropped_segments"] > 0
+    assert len(st._sealed) == 0
+    assert_rows_equal(query(st, q), before, q)  # aggregates intact
+    # row-level reads honestly reflect the drop (data is gone)
+    assert len(st) < len(RECORDS) or len(st) == 0
+
+
+def test_rollup_durable_reload(tmp_path):
+    st = random_store(records=RECORDS, seal_threshold=SEAL,
+                      directory=tmp_path / "s")
+    st.seal()
+    st.apply_retention(rollups=[(60.0, 0.0)])
+    n_rollups = len(st._rollups)
+    ruids = {seg.uid for seg in st._rollups}
+    q = "ts>=0 | stats count avg(gflops) by host"
+    want = query(st, q)
+    st.close()
+    back = ColumnarMetricStore(directory=tmp_path / "s",
+                               seal_threshold=SEAL)
+    assert len(back._rollups) == n_rollups
+    assert {seg.uid for seg in back._rollups} == ruids
+    assert rollup_count(back, q) > 0
+    assert_rows_equal(query(back, q), want, q)
+    back.close()
+
+
+def test_compaction_pins_rollup_covered_segments():
+    """A raw segment referenced by a rollup's ``covers`` keeps its uid:
+    merging it would orphan the cover and break the planner's
+    disjointness proof."""
+    st = random_store(records=RECORDS, seal_threshold=SEAL)
+    st.seal()
+    st.apply_retention(rollups=[(60.0, 0.0)])
+    covered = set()
+    for rseg in st._rollups:
+        covered.update(rseg.rollup["covers"])
+    stats = st.compact()
+    assert stats["segments_merged"] == 0  # everything is pinned
+    assert {seg.uid for seg in st._sealed} >= covered
+
+
+def test_rollup_uid_is_content_derived():
+    segs = [s for s, _u in
+            random_store(records=RECORDS,
+                         seal_threshold=SEAL).segment_units(
+                             include_buffer=False)][:3]
+    a = build_rollup(segs, 60.0)
+    b = build_rollup(segs, 60.0)
+    assert a.uid == b.uid == rollup_uid(60.0, [s.uid for s in segs])
+    assert build_rollup(segs, 600.0).uid != a.uid
+    assert build_rollup(segs[:2], 60.0).uid != a.uid
+
+
+# ===========================================================================
+# explain(): storage block (satellite)
+# ===========================================================================
+
+def test_explain_storage_block_single(tmp_path):
+    st = compacted_single(directory=tmp_path / "s")
+    e = st.explain(FLEET_Q)
+    storage = e["storage"]
+    assert storage["segments"] == len(st._sealed)
+    assert storage["tiers"]["cold"]["bytes"] < \
+        storage["tiers"]["cold"]["raw_bytes"]
+    assert storage["last_compaction"]["segments_merged"] > 0
+    assert e["segments"]["rollup_segments"] == 0
+    st.seal()
+    st.apply_retention(rollups=[(60.0, 0.0)])
+    e2 = st.explain("ts>=0 | stats count by host")
+    assert e2["segments"]["rollup_segments"] > 0
+    assert any(t.startswith("rollup-") for t in e2["storage"]["tiers"])
+    st.close()
+
+
+def test_explain_storage_block_sharded(tmp_path):
+    agg = random_store(records=RECORDS, shards=2, seal_threshold=SEAL,
+                       directory=tmp_path / "f")
+    agg.compact_all()
+    e = agg.explain(FLEET_Q)
+    assert e["storage"]["segments"] == sum(len(s._sealed)
+                                           for s in agg.shards)
+    assert "cold" in e["storage"]["tiers"]
+    assert len(e["storage"]["last_compaction"]) == 2
+    e_full = agg.explain("search kind=perf | sort -gflops | head 3")
+    assert "storage" in e_full  # exact-gather shape carries it too
+
+
+# ===========================================================================
+# Remote fleet: compaction RPCs, memo eviction, storage block, parity
+# ===========================================================================
+
+def test_remote_compaction_full_surface(tmp_path):
+    """One worker fleet exercises the whole remote maintenance surface:
+    ``compact``/``retention``/``storage`` ops, coordinator scatter-memo
+    eviction on retirement (the drop_segment satellite), the explain
+    storage block, tolerance over the wire, and the parity sweep over
+    the compacted + compressed + rolled-up fleet."""
+    from repro.core.remote import RemoteShardedAggregator
+    agg = RemoteShardedAggregator(num_shards=2, directory=tmp_path / "f",
+                                  seal_threshold=SEAL,
+                                  worker_idle_timeout_s=300.0)
+    try:
+        for rec in RECORDS:
+            agg.insert(rec)
+        agg.query(FLEET_Q)  # warm coordinator-side decoded maps
+        assert any(sh._scatter_memo for sh in agg.shards)
+        before = agg.storage_stats()
+        stats = agg.compact_all()
+        assert stats["segments_merged"] > 0 and stats["retired_uids"]
+        # satellite: retired uids evict the coordinator's decoded maps
+        assert all(not sh._scatter_memo for sh in agg.shards)
+        after = agg.storage_stats()
+        assert after["segments"] < before["segments"]
+        assert "cold" in after["tiers"]
+        for q in ALL_QUERIES:
+            assert_sharded_rows(agg.query(q), oracle_rows(q), q,
+                                records=RECORDS)
+        # retention + tolerance ride the same wire protocol (buffers
+        # sealed first: only covered segments may answer with snapped
+        # bounds, so the comparison against the snapped oracle is exact)
+        for sh in agg.shards:
+            sh.seal()
+        rstats = agg.apply_retention(rollups=[(60.0, 0.0)])
+        assert rstats["rollups_created"] > 0
+        tq = "kind=perf ts>=1010 ts<2050 | stats avg(gflops) count by host"
+        rows_t = agg.query(tq, tolerance=60.0)
+        tstats = dict(agg.last_query_stats)
+        assert tstats["rollup_segments"] > 0
+        snapped = ("kind=perf ts>=1020 ts<2040 | "
+                   "stats avg(gflops) count by host")
+        assert_rows_equal(rows_t, oracle_rows(snapped), tq)
+        e = agg.explain(FLEET_Q)
+        assert e["storage"]["segments"] == agg.storage_stats()["segments"]
+        assert any(t.startswith("rollup-") for t in e["storage"]["tiers"])
+        assert all(lc is not None for lc in e["storage"]["last_compaction"])
+    finally:
+        agg.close()
+
+
+# ===========================================================================
+# Aggregator: background maintenance trigger (policy config)
+# ===========================================================================
+
+def test_aggregator_background_compaction(tmp_path):
+    from repro.core.aggregator import Aggregator
+    inbox = tmp_path / "inbox"
+    inbox.mkdir()
+    agg = Aggregator(inbox, store_dir=tmp_path / "store",
+                     compaction_policy={"every_seals": 4, "min_run": 2})
+    agg.store.seal_threshold = SEAL
+    with open(inbox / "s.log", "w", encoding="utf-8") as f:
+        for rec in RECORDS:
+            f.write(encode_line(rec) + "\n")
+    assert agg.pump() == len(RECORDS)
+    assert agg.last_maintenance is not None
+    assert agg.last_maintenance["compact"]["segments_merged"] > 0
+    for q in ALL_QUERIES[:6] + [FLEET_Q]:
+        assert_rows_equal(query(agg.store, q), oracle_rows(q), q)
+    # below-threshold growth does not re-trigger
+    before = agg.last_maintenance
+    agg.maybe_compact()
+    assert agg.last_maintenance is before
+    assert agg.maybe_compact(force=True) is not None
+    agg.close()
