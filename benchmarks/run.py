@@ -57,6 +57,7 @@ def main() -> None:
         mbench.bench_sharded,
         mbench.bench_incremental,
         mbench.bench_remote,
+        mbench.bench_service,
         mbench.bench_compaction,
         mbench.bench_restart,
         mbench.bench_transport,

@@ -1,0 +1,141 @@
+"""Multi-tenant query service over a remote worker fleet
+(docs/service.md).
+
+Three tenant classes share one 4-worker `RemoteShardedAggregator`
+through a `QueryService`:
+
+* ``dashboard`` — six refresher threads re-running the same small set
+  of watch queries (the refresh-storm case: in-flight dedup + the
+  version-keyed result cache collapse them to ~one execution per
+  query per store version, and under backpressure refreshes shed to
+  their previous rows instead of queueing);
+* ``analyst``  — one ad-hoc session issuing distinct exploratory
+  queries at interactive priority;
+* ``admin``    — one fleet-sweep loop running expensive scans at
+  *batch* priority, capped to half the worker lanes so it can never
+  starve the dashboards, and throttled by a small per-tenant quota.
+
+    PYTHONPATH=src python examples/multi_tenant.py
+"""
+
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import MetricRecord, QueryService, QuotaExceeded
+from repro.core.dashboards import markdown_table
+from repro.core.remote import RemoteShardedAggregator
+
+WATCH_QS = [
+    "search kind=perf | stats avg(gflops) count by job | sort job | head 8",
+    "search kind=perf | timechart span=60 avg(gflops)",
+]
+ANALYST_QS = [
+    "search kind=perf gflops>400 | stats p90(gflops) by job | sort job",
+    "search kind=perf step>=10 | stats avg(step_time_s) by host "
+    "| sort host | head 6",
+    "search job=job.00* | stats count dc(host) by job | sort job",
+]
+ADMIN_QS = [
+    f"search kind=perf gflops>{x} | stats avg(gflops) p99(step_time_s) "
+    "dc(host) by job | sort -avg_gflops | head 10"
+    for x in (0, 150, 300, 450, 600, 750)
+]
+
+
+def synth_records(n_jobs=16, hosts_per_job=4, samples=40, seed=0):
+    rng = np.random.default_rng(seed)
+    for j in range(n_jobs):
+        base = rng.uniform(200, 900)
+        for h in range(hosts_per_job):
+            for s in range(samples):
+                yield MetricRecord(
+                    1000.0 + s * 10.0, f"node{j:02d}-{h}", f"job.{j:03d}",
+                    "perf", {"gflops": float(base + rng.normal(0, 20)),
+                             "step_time_s": float(rng.uniform(0.9, 1.2)),
+                             "step": s})
+
+
+def main() -> None:
+    fleet_dir = Path(tempfile.mkdtemp()) / "fleet"
+    print(f"== spawning 4 shard workers under {fleet_dir}")
+    fleet = RemoteShardedAggregator(num_shards=4, directory=fleet_dir,
+                                    seal_threshold=256,
+                                    worker_idle_timeout_s=300.0)
+    svc = QueryService(fleet, max_concurrency=4, queue_limit=8,
+                       tenant_quota=4)
+    try:
+        n = sum(fleet.insert(rec) for rec in synth_records())
+        print(f"   ingested {n} records over the wire\n")
+
+        quota_hits = [0]
+        shed_hits = [0]
+
+        def dashboard(i):
+            for r in range(12):
+                q = WATCH_QS[r % len(WATCH_QS)]
+                try:
+                    _rows, stats = svc.query_with_stats(
+                        q, tenant="dashboard", shed_ok=True)
+                except QuotaExceeded:
+                    # all six panels share the "dashboard" tenant: at
+                    # the quota, keep the previous panel like a shed
+                    shed_hits[0] += 1
+                    continue
+                if stats.get("shed"):
+                    shed_hits[0] += 1  # keep the previous panel
+
+        def analyst():
+            for q in ANALYST_QS * 2:
+                svc.query(q, tenant="analyst")
+
+        def admin():
+            for q in ADMIN_QS:
+                while True:
+                    try:
+                        svc.submit(q, tenant="admin",
+                                   priority="batch").result(timeout=30)
+                        break
+                    except QuotaExceeded:
+                        quota_hits[0] += 1
+                        time.sleep(0.01)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=dashboard, args=(i,))
+                   for i in range(6)]
+        threads += [threading.Thread(target=analyst),
+                    threading.Thread(target=admin)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall_ms = (time.perf_counter() - t0) * 1e3
+
+        c = svc.stats()
+        print(f"== 8 tenant threads done in {wall_ms:.0f} ms")
+        print(f"   submitted={c['submitted']}  executed={c['executed']}  "
+              f"deduped={c['deduped']}  cached={c['result_cache_hits']}")
+        print(f"   shed={c['shed']} (dashboards kept stale panels "
+              f"{shed_hits[0]}x)  quota_rejections={c['quota_rejections']} "
+              f"(admin backed off {quota_hits[0]}x)")
+        collapsed = c["submitted"] - c["executed"] - c["shed"]
+        print(f"   -> {collapsed} of {c['submitted']} submissions served "
+              "without a private execution\n")
+
+        print("== fleet overview (admin's widest scan)")
+        print(markdown_table(svc.query(ADMIN_QS[0], tenant="admin",
+                                       priority="batch")))
+    finally:
+        svc.close()
+        fleet.close()
+        print("== fleet shut down")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,8 +11,9 @@ from repro.core.detectors import DetectorBank, DetectorEvent
 from repro.core.hooks import TrainMonitor, load_manifests
 from repro.core.remote import RemoteShardedAggregator
 from repro.core.schema import MetricRecord, encode_line, parse_line
+from repro.core.service import QueryResult, QueryService, QuotaExceeded
 from repro.core.shards import ShardedAggregator
-from repro.core.splunklite import query
+from repro.core.splunklite import query, query_with_stats
 
 __all__ = [
     "Aggregator", "MetricStore", "ColumnarMetricStore", "ColumnScan",
@@ -21,4 +22,5 @@ __all__ = [
     "DetectorBank", "DetectorEvent", "RemoteShardedAggregator",
     "ShardedAggregator", "TrainMonitor",
     "load_manifests", "MetricRecord", "encode_line", "parse_line", "query",
+    "query_with_stats", "QueryService", "QueryResult", "QuotaExceeded",
 ]

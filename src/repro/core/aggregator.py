@@ -51,6 +51,12 @@ class Aggregator:
     into a ``store_dir``).  Pass a pre-configured ``store`` instead to
     control sealing / dedup-eviction / durability.
 
+    ``query_service`` routes :meth:`watch` refreshes through a
+    :class:`~repro.core.service.QueryService` (docs/service.md) so
+    concurrent dashboards share executions and back off under load.
+    Pass ``True`` to build one over the store with defaults (closed by
+    :meth:`close`), or a pre-configured instance (caller closes it).
+
     ``compaction_policy`` turns on background index maintenance (the
     Splunk bucket-aging analog — docs/storage.md): after any pump that
     ingested data, once ``every_seals`` new sealed segments have
@@ -72,7 +78,8 @@ class Aggregator:
                  shards: Optional[int] = None,
                  shard_policy="hash",
                  remote_workers: bool = False,
-                 compaction_policy: Optional[Dict] = None) -> None:
+                 compaction_policy: Optional[Dict] = None,
+                 query_service=None) -> None:
         self.inbox_dir = Path(inbox_dir)
         self.inbox_dir.mkdir(parents=True, exist_ok=True)
         if remote_workers and store is None and shards is None:
@@ -96,6 +103,13 @@ class Aggregator:
                                      wal_fsync=wal_fsync)
         else:
             self.store = MetricStore()
+        if query_service is True:
+            from repro.core.service import QueryService
+            self.query_service = QueryService(self.store)
+            self._owns_service = True
+        else:
+            self.query_service = query_service
+            self._owns_service = False
         self._readers: Dict[str, TailReader] = {}
         self.persist_path = Path(persist_path) if persist_path else None
         self._on_record: List[Callable[[MetricRecord], None]] = []
@@ -120,15 +134,45 @@ class Aggregator:
         refresh pays only for the unsealed buffer and segments sealed
         since the last pump (docs/incremental.md).  The handle is also
         kept in :attr:`watches` for :meth:`refresh_watches`.
+
+        With a ``query_service`` configured, refreshes are submitted
+        through it as tenant ``"watch"`` with ``shed_ok=True``: many
+        watches on the same query coalesce into one execution, and at
+        saturation a refresh is shed (the handle keeps its previous
+        rows) instead of piling onto the backlog — docs/service.md.
+        Drop a watch with :meth:`unwatch` (or ``handle.close()``) when
+        its dashboard goes away; :attr:`watches` would otherwise grow,
+        and refresh, forever.
         """
         from repro.core.splunklite import QueryHandle
-        handle = QueryHandle(self.store, q)
+        handle = QueryHandle(self.store, q, service=self.query_service,
+                             shed_ok=self.query_service is not None)
         self.watches.append(handle)
         return handle
 
+    def unwatch(self, handle) -> bool:
+        """Close and deregister a watch; ``True`` if it was registered.
+
+        Closing is what matters (``refresh_watches`` skips closed
+        handles); deregistering keeps :attr:`watches` from accumulating
+        dead entries in long-lived processes.
+        """
+        handle.close()
+        try:
+            self.watches.remove(handle)
+            return True
+        except ValueError:
+            return False
+
     def refresh_watches(self) -> Dict[str, List[Dict]]:
-        """Refresh every registered watch; ``{query: current rows}``."""
-        return {h.q: h.refresh() for h in self.watches}
+        """Refresh every open watch; ``{query: current rows}``.
+
+        Closed handles are skipped and dropped from :attr:`watches`.
+        """
+        live = [h for h in self.watches if not h.closed]
+        if len(live) != len(self.watches):
+            self.watches = live
+        return {h.q: h.refresh() for h in live}
 
     def pump(self) -> int:
         """Batch-ingest all new lines from all inbox files.
@@ -222,4 +266,6 @@ class Aggregator:
 
     def close(self) -> None:
         """Release the store's WAL handle (durable stores)."""
+        if self._owns_service and self.query_service is not None:
+            self.query_service.close()
         self.store.close()

@@ -52,6 +52,7 @@ import hashlib
 import json
 import math
 import os
+import threading
 from collections import deque
 from pathlib import Path
 from typing import Deque, Dict, Iterable, Iterator, List, Optional, Set, Tuple
@@ -126,9 +127,14 @@ class PartialAggregateCache:
 
     Consumers must treat cached maps as read-only;
     ``splunklite.merge_partial_maps`` copies before merging.
+
+    All operations are thread-safe: the LRU pop-then-reinsert dance in
+    ``_lru_memo_get`` is not atomic on its own, and concurrent
+    ``QueryService`` callers share one cache per store.
     """
 
-    __slots__ = ("max_entries", "hits", "misses", "evictions", "_d")
+    __slots__ = ("max_entries", "hits", "misses", "evictions", "_d",
+                 "_lock")
 
     def __init__(self, max_entries: int = 512) -> None:
         self.max_entries = int(max_entries)
@@ -136,25 +142,28 @@ class PartialAggregateCache:
         self.misses = 0
         self.evictions = 0
         self._d: Dict[tuple, dict] = {}
+        self._lock = threading.Lock()
 
     def get(self, key: tuple):
         """Cached value or ``None``; counts a hit/miss and refreshes
         the entry's LRU position."""
-        val = _lru_memo_get(self._d, key)
-        if val is None:
-            self.misses += 1
-        else:
-            self.hits += 1
-        return val
+        with self._lock:
+            val = _lru_memo_get(self._d, key)
+            if val is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return val
 
     def put(self, key: tuple, value: dict) -> None:
         if self.max_entries <= 0:
             return  # caching disabled: every lookup stays a miss
-        if key in self._d:
-            del self._d[key]  # overwrite must not evict a neighbor
-        elif len(self._d) >= self.max_entries:
-            self.evictions += 1
-        _lru_memo_put(self._d, key, value, self.max_entries)
+        with self._lock:
+            if key in self._d:
+                del self._d[key]  # overwrite must not evict a neighbor
+            elif len(self._d) >= self.max_entries:
+                self.evictions += 1
+            _lru_memo_put(self._d, key, value, self.max_entries)
 
     def peek(self, key: tuple) -> bool:
         """Membership probe that does not touch counters or LRU order
@@ -172,13 +181,15 @@ class PartialAggregateCache:
         for that shard (``RemoteShard.compact``) — otherwise the
         ``not_modified`` fast path could keep serving maps merged from
         segments that no longer exist."""
-        stale = [k for k in self._d if k[0] == uid]
-        for k in stale:
-            del self._d[k]
-        return len(stale)
+        with self._lock:
+            stale = [k for k in self._d if k[0] == uid]
+            for k in stale:
+                del self._d[k]
+            return len(stale)
 
     def clear(self) -> None:
-        self._d.clear()
+        with self._lock:
+            self._d.clear()
 
     def __len__(self) -> int:
         return len(self._d)
@@ -654,6 +665,12 @@ class ColumnarMetricStore:
         self._transient_base: Optional[Tuple[int, Segment]] = None
         self.partial_cache = PartialAggregateCache(partial_cache_entries)
         self.last_query_stats: Optional[Dict] = None
+        # Re-entrancy: one lock serializes every structural mutation
+        # (insert/seal/adopt/compact) and every version-scoped memo
+        # access, so concurrent QueryService readers see consistent
+        # (segments, version) snapshots while ingest proceeds.  RLock
+        # because insert() seals at threshold and seal() re-enters.
+        self._lock = threading.RLock()
         self.directory = Path(directory) if directory is not None else None
         self.wal_fsync = bool(wal_fsync)
         self.read_only = bool(read_only)
@@ -667,7 +684,8 @@ class ColumnarMetricStore:
 
     # ------------------------------------------------------------- ingest --
     def __len__(self) -> int:
-        return sum(s.n for s in self._sealed) + len(self._buffer)
+        with self._lock:
+            return sum(s.n for s in self._sealed) + len(self._buffer)
 
     def _version(self) -> Tuple[int, int, int]:
         # _next_seq is a monotonic mutation generation: it advances on
@@ -676,11 +694,16 @@ class ColumnarMetricStore:
         # a compaction that leaves (sealed, buffer) counts unchanged
         # still changes the version — remote etag checks can never
         # serve a pre-compaction cached reply for post-compaction state.
-        return (len(self._sealed), len(self._buffer), self._next_seq)
+        with self._lock:
+            return (len(self._sealed), len(self._buffer), self._next_seq)
 
     def insert(self, rec: MetricRecord) -> bool:
         if self.read_only and not self._replaying:
             raise RuntimeError("store is read-only")
+        with self._lock:
+            return self._insert_locked(rec)
+
+    def _insert_locked(self, rec: MetricRecord) -> bool:
         encoded = encode_line(rec)
         key = hashlib.blake2b(encoded.encode(), digest_size=12).digest()
         if key in self._seen:
@@ -726,6 +749,10 @@ class ColumnarMetricStore:
         """
         if self.read_only:
             raise RuntimeError("store is read-only")
+        with self._lock:
+            self._seal_locked()
+
+    def _seal_locked(self) -> None:
         if not self._buffer:
             return
         seg = columns_from_records(self._buffer)
@@ -919,30 +946,32 @@ class ColumnarMetricStore:
         row count.
         """
         from repro.core import segmentio
-        stem = None
-        if self.directory is not None:
-            # always fsync, matching migration semantics — adoption has
-            # no WAL backstop, the copied files are the only copy here
-            stem = segmentio.SEGMENT_STEM_FMT.format(self._next_seq)
-            man_path = segmentio.copy_segment_files(
-                manifest_path, self.directory / "segments", stem,
-                fsync=True)
-            self._next_seq += 1
-            seg = segmentio.load_segment(man_path)
-        else:
-            seg = segmentio.load_segment(manifest_path)
-        self._sealed.append(seg)
-        self._sealed_stems.append(stem)
-        if self._cache:
-            self._cache.clear()
-        if seg.ts_max > self._watermark:
-            self._watermark = seg.ts_max
-        keys = seg.dedup_keys()
-        self._seen |= keys
-        if self.dedup_horizon_s is not None:
-            self._epochs.append((seg.ts_max, keys))
-            self._evict_dedup()
-        return seg.n
+        with self._lock:
+            stem = None
+            if self.directory is not None:
+                # always fsync, matching migration semantics — adoption
+                # has no WAL backstop, the copied files are the only
+                # copy here
+                stem = segmentio.SEGMENT_STEM_FMT.format(self._next_seq)
+                man_path = segmentio.copy_segment_files(
+                    manifest_path, self.directory / "segments", stem,
+                    fsync=True)
+                self._next_seq += 1
+                seg = segmentio.load_segment(man_path)
+            else:
+                seg = segmentio.load_segment(manifest_path)
+            self._sealed.append(seg)
+            self._sealed_stems.append(stem)
+            if self._cache:
+                self._cache.clear()
+            if seg.ts_max > self._watermark:
+                self._watermark = seg.ts_max
+            keys = seg.dedup_keys()
+            self._seen |= keys
+            if self.dedup_horizon_s is not None:
+                self._epochs.append((seg.ts_max, keys))
+                self._evict_dedup()
+            return seg.n
 
     # -------------------------------------------------------------- reads --
     def segments(self) -> List[Segment]:
@@ -957,16 +986,17 @@ class ColumnarMetricStore:
         buffer segment (present only with ``include_buffer``) has uid
         ``None`` and is always recomputed by incremental queries.
         """
-        units: List[Tuple[Segment, Optional[str]]] = [
-            (seg, seg.uid) for seg in self._sealed]
-        if include_buffer and self._buffer:
-            v = self._version()
-            cached = self._cache.get("transient")
-            if cached is None or cached[0] != v:
-                cached = (v, self._build_transient())
-                self._cache["transient"] = cached
-            units.append((cached[1], None))
-        return units
+        with self._lock:
+            units: List[Tuple[Segment, Optional[str]]] = [
+                (seg, seg.uid) for seg in self._sealed]
+            if include_buffer and self._buffer:
+                v = self._version()
+                cached = self._cache.get("transient")
+                if cached is None or cached[0] != v:
+                    cached = (v, self._build_transient())
+                    self._cache["transient"] = cached
+                units.append((cached[1], None))
+            return units
 
     def rollup_units(self) -> List[Tuple[Segment, str]]:
         """``(segment, uid)`` pairs for downsampled rollup segments.
@@ -977,7 +1007,8 @@ class ColumnarMetricStore:
         consults them, and only when the plan is provably answerable
         from bucketed partial-aggregate columns (docs/storage.md).
         """
-        return [(seg, seg.uid) for seg in self._rollups]
+        with self._lock:
+            return [(seg, seg.uid) for seg in self._rollups]
 
     def compact(self, **kwargs) -> Dict:
         """Merge runs of small sealed segments into large cold-tier
@@ -985,14 +1016,16 @@ class ColumnarMetricStore:
         Returns the compaction stats dict (also kept as
         ``last_compaction``)."""
         from repro.core.compaction import Compactor
-        return Compactor(self).compact(**kwargs)
+        with self._lock:
+            return Compactor(self).compact(**kwargs)
 
     def apply_retention(self, **kwargs) -> Dict:
         """Build/refresh time-bucketed rollup tiers and (optionally)
         drop raw segments past the retention age; see
         :class:`repro.core.compaction.Compactor`."""
         from repro.core.compaction import Compactor
-        return Compactor(self).apply_retention(**kwargs)
+        with self._lock:
+            return Compactor(self).apply_retention(**kwargs)
 
     def storage_stats(self) -> Dict:
         """Per-tier storage accounting: segment/file counts, stored vs
@@ -1019,17 +1052,18 @@ class ColumnarMetricStore:
                 t["bytes"] += est
                 t["raw_bytes"] += est
 
-        for seg, stem in zip(self._sealed, self._sealed_stems):
-            acc(seg, stem)
-        for seg, stem in zip(self._rollups, self._rollup_stems):
-            acc(seg, stem)
-        total = {k: sum(t[k] for t in tiers.values())
-                 for k in ("segments", "files", "rows", "bytes",
-                           "raw_bytes")}
-        total["tiers"] = tiers
-        total["buffer_rows"] = len(self._buffer)
-        total["last_compaction"] = self.last_compaction
-        return total
+        with self._lock:
+            for seg, stem in zip(self._sealed, self._sealed_stems):
+                acc(seg, stem)
+            for seg, stem in zip(self._rollups, self._rollup_stems):
+                acc(seg, stem)
+            total = {k: sum(t[k] for t in tiers.values())
+                     for k in ("segments", "files", "rows", "bytes",
+                               "raw_bytes")}
+            total["tiers"] = tiers
+            total["buffer_rows"] = len(self._buffer)
+            total["last_compaction"] = self.last_compaction
+            return total
 
     def _build_transient(self) -> Segment:
         """Transient segment over the append buffer, built
@@ -1054,15 +1088,16 @@ class ColumnarMetricStore:
     @property
     def records(self) -> List[MetricRecord]:
         """Row-materializing compatibility path (segment order)."""
-        v = self._version()
-        cached = self._cache.get("records")
-        if cached is None or cached[0] != v:
-            recs: List[MetricRecord] = []
-            for seg in self.segments():
-                recs.extend(_segment_records(seg, np.arange(seg.n)))
-            cached = (v, recs)
-            self._cache["records"] = cached
-        return cached[1]
+        with self._lock:
+            v = self._version()
+            cached = self._cache.get("records")
+            if cached is None or cached[0] != v:
+                recs: List[MetricRecord] = []
+                for seg in self.segments():
+                    recs.extend(_segment_records(seg, np.arange(seg.n)))
+                cached = (v, recs)
+                self._cache["records"] = cached
+            return cached[1]
 
     def _segment_mask(self, seg: Segment, job, kind, since, until
                       ) -> Optional[np.ndarray]:
@@ -1102,15 +1137,16 @@ class ColumnarMetricStore:
         """
         fields = tuple(fields)
         memo_key = (job, kind, since, until, fields)
-        memo = self._cache.get("scans")
-        if memo is None or memo[0] != self._version():
-            memo = (self._version(), {})
-            self._cache["scans"] = memo
-        sc = _lru_memo_get(memo[1], memo_key)
-        if sc is None:
-            sc = self._scan_uncached(job, kind, since, until, fields)
-            _lru_memo_put(memo[1], memo_key, sc, SCAN_MEMO_MAX)
-        return sc
+        with self._lock:
+            memo = self._cache.get("scans")
+            if memo is None or memo[0] != self._version():
+                memo = (self._version(), {})
+                self._cache["scans"] = memo
+            sc = _lru_memo_get(memo[1], memo_key)
+            if sc is None:
+                sc = self._scan_uncached(job, kind, since, until, fields)
+                _lru_memo_put(memo[1], memo_key, sc, SCAN_MEMO_MAX)
+            return sc
 
     def explain(self, q: str) -> Dict:
         """Describe how ``q`` would execute incrementally against this

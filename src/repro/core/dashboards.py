@@ -428,14 +428,22 @@ class StreamingView:
     comes from the store's segment-keyed partial-aggregate cache; see
     docs/incremental.md).  Post-processing and rendering re-run only
     when the underlying rows actually changed.
+
+    ``service`` routes refreshes through a
+    :class:`~repro.core.service.QueryService` (tenant ``"dashboard"``,
+    ``shed_ok``): many concurrent views over the same query share one
+    execution, and at saturation a refresh returns the previous rows
+    instead of joining the backlog — docs/service.md.
     """
 
     def __init__(self, store: StoreLike, q: str,
                  postprocess: Optional[Callable[[List[Dict]], List[Dict]]]
                  = None,
-                 render: Optional[Callable[[List[Dict]], str]] = None
-                 ) -> None:
-        self.handle = QueryHandle(store, q)
+                 render: Optional[Callable[[List[Dict]], str]] = None,
+                 service=None) -> None:
+        self.handle = QueryHandle(store, q, service=service,
+                                  tenant="dashboard",
+                                  shed_ok=service is not None)
         self.postprocess = postprocess
         self.render = render
         self.renders = 0
@@ -480,7 +488,8 @@ def streaming_specialized_views(store: StoreLike,
                                     Dict[str, JobManifest]] = None,
                                 idle_max_frac: float = 0.05,
                                 memory_max_frac: float = 0.25,
-                                participation_min_frac: float = 0.5
+                                participation_min_frac: float = 0.5,
+                                service=None
                                 ) -> Dict[str, StreamingView]:
     """The paper's specialized views as streaming dashboards.
 
@@ -490,20 +499,25 @@ def streaming_specialized_views(store: StoreLike,
     refreshes cost only buffer work.  The idle-accelerator view's
     threshold lives in a *tail* stage, so it shares cached per-segment
     partials with the memory view's identical aggregation prefix.
+    ``service`` is forwarded to every view (see
+    :class:`StreamingView`).
     """
     if manifests is None:  # keep the caller's dict: postprocess closes
         manifests = {}     # over it and re-reads it on every refresh
     return {
         "idle_accelerators": StreamingView(
-            store, _IDLE_ACCEL_Q.format(max_frac=idle_max_frac)),
+            store, _IDLE_ACCEL_Q.format(max_frac=idle_max_frac),
+            service=service),
         "memory_underuse": StreamingView(
             store, _MEMORY_PEAK_Q,
             postprocess=lambda rows: _memory_underuse_rows(
-                rows, manifests, memory_max_frac)),
+                rows, manifests, memory_max_frac),
+            service=service),
         "low_participation": StreamingView(
             store, _PARTICIPATION_Q,
             postprocess=lambda rows: _low_participation_rows(
-                rows, manifests, participation_min_frac)),
+                rows, manifests, participation_min_frac),
+            service=service),
     }
 
 

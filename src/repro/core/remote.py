@@ -68,6 +68,7 @@ import socket
 import struct
 import subprocess
 import sys
+import threading
 import time
 from pathlib import Path
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
@@ -546,6 +547,7 @@ class RemoteShard:
         self.index = int(index)
         self.shard_dir = Path(shard_dir)
         self.process = process
+        self._op_timeout_s = float(op_timeout_s)
         self.client = WorkerClient(address if address is not None
                                    else process.address,
                                    op_timeout_s=op_timeout_s)
@@ -560,32 +562,117 @@ class RemoteShard:
         # survive reconnects.  Bounded LRU — one entry per actively
         # refreshed plan.
         self._scatter_memo: Dict[str, tuple] = {}
+        # connection pool: the primary ``client`` plus up to
+        # POOL_MAX - 1 extra sockets, so concurrent scatters to the
+        # same worker hold independent connections instead of
+        # serializing (or worse, interleaving frames) on one.  The lock
+        # also guards the scatter memo, the degraded-fallback store,
+        # and the counters.
+        self._lock = threading.RLock()
+        self._idle: List[WorkerClient] = []
+        self._primary_busy = False
 
     SCATTER_MEMO_MAX = 32
+    POOL_MAX = 4
 
     def scatter_etag(self, fingerprint: str) -> Optional[list]:
         """``[fingerprint, version]`` for a cached decoded map, or
         ``None`` — sent with a scatter so an unchanged worker can reply
         ``not_modified`` instead of recomputing and reshipping."""
-        from repro.core.columnar import _lru_memo_get
-        hit = _lru_memo_get(self._scatter_memo, fingerprint)
+        hit = self.scatter_memo_get(fingerprint)
         if hit is None:
             return None
         return [fingerprint, list(hit[0])]
 
     def scatter_memo_get(self, fingerprint: str) -> Optional[tuple]:
         from repro.core.columnar import _lru_memo_get
-        return _lru_memo_get(self._scatter_memo, fingerprint)
+        with self._lock:
+            return _lru_memo_get(self._scatter_memo, fingerprint)
 
     def scatter_memo_put(self, fingerprint: str, version, pmap,
                          summary: Dict[str, int]) -> None:
         from repro.core.columnar import _lru_memo_put
-        _lru_memo_put(self._scatter_memo, fingerprint,
-                      (tuple(version), pmap, dict(summary)),
-                      self.SCATTER_MEMO_MAX)
+        with self._lock:
+            _lru_memo_put(self._scatter_memo, fingerprint,
+                          (tuple(version), pmap, dict(summary)),
+                          self.SCATTER_MEMO_MAX)
 
     def drop_scatter_memo(self) -> None:
-        self._scatter_memo.clear()
+        with self._lock:
+            self._scatter_memo.clear()
+
+    # -------------------------------------------------- connection pool --
+    def acquire(self) -> WorkerClient:
+        """Check out a connected client for an exclusive send/recv
+        session.  The scatter/gather paths hold one per query so
+        concurrent queries' reply frames cannot interleave; plain
+        :meth:`rpc` calls check one out per round trip.  Prefers the
+        primary persistent client, then an idle pooled socket, and
+        opens a fresh connection (to the primary's *current* address,
+        so restarts are honored) only under real concurrency.  Raises
+        :class:`WorkerUnavailable` when the worker cannot be reached."""
+        with self._lock:
+            if not self._primary_busy:
+                self._primary_busy = True
+                if not self.client.connected:
+                    try:
+                        self.connect()
+                    except (WorkerUnavailable, RemoteProtocolError, OSError):
+                        self._primary_busy = False
+                        raise
+                return self.client
+            if self._idle:
+                return self._idle.pop()
+            address = self.client.address
+        c = WorkerClient(address, op_timeout_s=self._op_timeout_s)
+        try:
+            c.connect()
+        except RemoteProtocolError:
+            c.close()
+            raise
+        return c
+
+    def release(self, c: WorkerClient, broken: bool = False) -> None:
+        """Return a checked-out client.  ``broken`` (socket trouble or
+        an unread reply left in flight) closes it instead of pooling;
+        the primary client reconnects lazily on its next use."""
+        with self._lock:
+            if c is self.client:
+                self._primary_busy = False
+                if broken:
+                    c.close()
+                return
+            if (not broken and c.connected
+                    and c.address == self.client.address
+                    and len(self._idle) < self.POOL_MAX - 1):
+                self._idle.append(c)
+                return
+        c.close()
+
+    def close_pool(self) -> None:
+        """Drop every idle pooled connection (restart/kill/close)."""
+        with self._lock:
+            idle, self._idle = self._idle, []
+        for c in idle:
+            c.close()
+
+    def session_send(self, c: WorkerClient, op: str, **kw) -> None:
+        """Send ``op`` on a checked-out client, with the same single
+        reconnect attempt :meth:`send` performs on the primary."""
+        msg = {"op": op}
+        msg.update(kw)
+        try:
+            c.send(msg)
+        except WorkerUnavailable:
+            if self.process is not None and not self.process.alive:
+                raise
+            try:
+                c.connect()
+            except (RemoteProtocolError, OSError) as exc:
+                raise WorkerUnavailable(str(exc))
+            with self._lock:
+                self._drop_fallback()
+            c.send(msg)
 
     # ------------------------------------------------------------- wiring --
     def connect(self) -> Dict:
@@ -618,22 +705,38 @@ class RemoteShard:
         return self.client.recv()
 
     def rpc(self, op: str, **kw) -> Dict:
-        self.send(op, **kw)
-        return self.recv()
+        """One pooled round trip — safe to call from any thread; a
+        concurrent rpc checks out its own connection instead of
+        interleaving frames with an in-flight scatter."""
+        c = self.acquire()
+        broken = True
+        try:
+            self.session_send(c, op, **kw)
+            reply = c.recv()
+            broken = False
+            return reply
+        except (QueryError, WorkerError):
+            # error *reply*: the frame was fully consumed, the
+            # connection is still in protocol sync
+            broken = False
+            raise
+        finally:
+            self.release(c, broken=broken)
 
     # ----------------------------------------------------- degraded reads --
     def local_store(self) -> ColumnarMetricStore:
         """Read-only in-process open of the shard directory (degraded
         mode).  Invalidated whenever the worker connection comes back —
         a revived worker may accept new inserts this snapshot missed."""
-        if self._fallback is None:
-            kw = {k: self._store_kwargs[k]
-                  for k in ("seal_threshold", "dedup_horizon_s",
-                            "partial_cache_entries")
-                  if k in self._store_kwargs}
-            self._fallback = ColumnarMetricStore(
-                directory=self.shard_dir, read_only=True, **kw)
-        return self._fallback
+        with self._lock:
+            if self._fallback is None:
+                kw = {k: self._store_kwargs[k]
+                      for k in ("seal_threshold", "dedup_horizon_s",
+                                "partial_cache_entries")
+                      if k in self._store_kwargs}
+                self._fallback = ColumnarMetricStore(
+                    directory=self.shard_dir, read_only=True, **kw)
+            return self._fallback
 
     def _degraded(self) -> ColumnarMetricStore:
         """Every degraded read funnels through here, so disabling
@@ -643,13 +746,15 @@ class RemoteShard:
             raise WorkerUnavailable(
                 f"shard {self.index} worker unavailable and degraded "
                 "execution is disabled")
-        self.degraded_calls += 1
+        with self._lock:
+            self.degraded_calls += 1
         return self.local_store()
 
     def _drop_fallback(self) -> None:
-        if self._fallback is not None:
-            self._fallback.close()
-            self._fallback = None
+        with self._lock:
+            fallback, self._fallback = self._fallback, None
+        if fallback is not None:
+            fallback.close()
 
     # ------------------------------------------------------ store surface --
     def insert(self, rec: MetricRecord) -> bool:
@@ -812,6 +917,7 @@ class RemoteShard:
             except (WorkerUnavailable, WorkerError, RemoteProtocolError):
                 pass
         self.client.close()
+        self.close_pool()
         if self.process is not None:
             self.process.stop()
         self._drop_fallback()
@@ -971,6 +1077,7 @@ class RemoteShardedAggregator(ShardedAggregator):
                                "call reconnect_worker()")
         sh = self.shards[i]
         sh.client.close()
+        sh.close_pool()
         if sh.process is not None:
             sh.process.stop()
         sh.process = LocalWorkerProcess(sh.shard_dir,
@@ -978,7 +1085,7 @@ class RemoteShardedAggregator(ShardedAggregator):
         sh.client = WorkerClient(sh.process.address,
                                  op_timeout_s=self._op_timeout_s)
         sh.connect()
-        self._cache.clear()
+        self._drop_memos()
         self._record_topology()
 
     def reconnect_worker(self, i: int) -> bool:
@@ -992,6 +1099,7 @@ class RemoteShardedAggregator(ShardedAggregator):
         if sh.process is not None:
             sh.process.kill()
         sh.client.close()
+        sh.close_pool()
 
     def workers_alive(self) -> List[bool]:
         return [sh.ping() for sh in self.shards]
@@ -1018,8 +1126,8 @@ class RemoteShardedAggregator(ShardedAggregator):
         total = 0
         for i, batch in sorted(by_shard.items()):
             total += self.shards[i].ingest_lines(batch)
-        if total and self._cache:
-            self._cache.clear()
+        if total:
+            self._drop_memos()
         return total
 
     def adopt_store_dir(self, src_directory: os.PathLike) -> int:
@@ -1035,71 +1143,93 @@ class RemoteShardedAggregator(ShardedAggregator):
             "directory, then reopen it with RemoteShardedAggregator")
 
     # -------------------------------------------------------------- query --
-    def _drop_unread_replies(self, pending: List[bool], start: int) -> None:
-        """A reply-merge loop that fails after shard ``start - 1`` (a
-        worker error envelope, a protocol violation, degraded execution
-        disabled) leaves every later issued request's reply buffered on
-        its socket — consuming one as the answer to a *future* request
-        would silently serve stale results forever.  Drop those
-        connections instead; they reconnect transparently on the next
-        send."""
-        for k in range(start, self.num_shards):
-            if pending[k]:
-                self.shards[k].client.close()
+    def _release_unread(self, sessions: List[Optional["WorkerClient"]]
+                        ) -> None:
+        """A reply-merge loop that fails mid-way leaves later issued
+        requests' replies buffered on their sockets — consuming one as
+        the answer to a *future* request would silently serve stale
+        results forever.  Drop those connections instead; fresh ones
+        are opened transparently on the next checkout."""
+        for k, c in enumerate(sessions):
+            if c is not None:
+                self.shards[k].release(c, broken=True)
+                sessions[k] = None
 
-    def query(self, q: str, engine: Optional[str] = None,
-              tolerance: Optional[float] = None) -> List[Dict]:
-        """Distributed splunklite execution (see class docstring).
+    def query_with_stats(self, q: str, engine: Optional[str] = None,
+                         tolerance: Optional[float] = None
+                         ) -> Tuple[List[Dict], Dict]:
+        """Distributed splunklite execution (see class docstring),
+        returning ``(rows, stats)`` — the re-entrant contract.  Each
+        call checks its own connections out of the per-shard pools and
+        carries its own stats/trace, so concurrent callers neither
+        interleave reply frames nor cross-contaminate stats.
         ``engine="rows"`` gathers every record and runs the legacy row
         executor locally (the parity oracle), as in-process.
         ``tolerance`` rides inside the serialized plan, so each worker
         makes the same rollup-tier eligibility decision the coordinator
-        would make in-process (docs/storage.md)."""
+        would make in-process (docs/storage.md).  ``last_query_stats``/
+        ``last_io_trace`` stay best-effort aliases."""
         self._check_open()
         if engine == "rows":
-            return super().query(q, engine="rows")
+            return super().query_with_stats(q, engine="rows")
         stages = splunklite._split_pipeline(q)
         plan = splunklite.compile_scatter_plan(stages, tolerance=tolerance)
-        self.last_io_trace = trace = []
+        trace: List[Tuple[str, int]] = []
         if plan is not None:
-            rows = self._scatter_remote(plan, trace)
+            rows, stats = self._scatter_remote(plan, trace)
             if rows is not None:
-                return rows
-        self.fallback_queries += 1
+                self.last_io_trace = trace
+                self.last_query_stats = stats
+                return rows, stats
+        with self._lock:
+            self.fallback_queries += 1
         # the gather gets its own trace: its overlap invariant must not
         # be judged against the aborted scatter's events
         gather_trace: List[Tuple[str, int]] = []
-        rows, rest = self._gather_remote(stages, gather_trace)
+        rows, rest, stats = self._gather_remote(stages, gather_trace)
         self.last_io_trace = trace + gather_trace
-        return splunklite.run_stages(rows, rest)
+        self.last_query_stats = stats
+        return splunklite.run_stages(rows, rest), stats
 
     def _scatter_remote(self, plan: ScatterPlan,
-                        trace: List[Tuple[str, int]]) -> Optional[List[Dict]]:
+                        trace: List[Tuple[str, int]]
+                        ) -> Tuple[Optional[List[Dict]], Optional[Dict]]:
         """Two-level gather: issue the serialized plan to every live
         worker first, then merge per-worker partial maps **in shard
         order** as replies drain (deterministic merges, overlapped
         transport), finalize, and run the tail.  Dead workers compute
         locally in their slot while the remaining workers keep
-        crunching.  Returns ``None`` when any shard's data defeats the
-        partial kernels (the caller re-plans as an exact gather —
-        identical to in-process semantics).
+        crunching.  Returns ``(None, None)`` when any shard's data
+        defeats the partial kernels (the caller re-plans as an exact
+        gather — identical to in-process semantics).
 
         The streaming refresh path: every scatter carries an etag
         ``[fingerprint, last seen worker version]`` when the
         coordinator already holds that worker's decoded partial map —
         an unchanged worker answers ``not_modified`` (no recompute, no
         reshipping, no re-decode), so a repeated dashboard/watch query
-        pays per shard only for data that actually arrived."""
+        pays per shard only for data that actually arrived.  The memo
+        hit is captured *at send time*: a concurrent query may replace
+        the memo entry before this query's reply drains, and a
+        ``not_modified`` answer is relative to the etag that was sent,
+        not to whatever the memo holds by the time it arrives."""
         state = plan.state()
-        pending: List[bool] = []
+        sessions: List[Optional[WorkerClient]] = [None] * self.num_shards
+        hits: List[Optional[tuple]] = [None] * self.num_shards
         for i, sh in enumerate(self.shards):
+            hit = sh.scatter_memo_get(plan.fingerprint)
+            hits[i] = hit
+            c = None
             try:
-                sh.send("scatter", plan=state,
-                        etag=sh.scatter_etag(plan.fingerprint))
-                pending.append(True)
+                c = sh.acquire()
+                etag = ([plan.fingerprint, list(hit[0])]
+                        if hit is not None else None)
+                sh.session_send(c, "scatter", plan=state, etag=etag)
+                sessions[i] = c
                 trace.append(("send", i))
             except WorkerUnavailable:
-                pending.append(False)
+                if c is not None:
+                    sh.release(c, broken=True)
         stats = {"mode": "scatter_gather", "remote": True,
                  "shards": self.num_shards, "fingerprint": plan.fingerprint,
                  "segments_cached": 0, "segments_computed": 0,
@@ -1111,53 +1241,58 @@ class RemoteShardedAggregator(ShardedAggregator):
                         "rollup_replaced")
         merged: Dict[tuple, Dict[str, Any]] = {}
         fell_back = False
-        i = -1
         try:
             for i, sh in enumerate(self.shards):
                 pmap = None
-                if pending[i]:
+                reply = None
+                c = sessions[i]
+                if c is not None:
                     try:
-                        reply = sh.recv()
+                        reply = c.recv()
                         trace.append(("recv", i))
-                        if reply.get("fallback"):
-                            fell_back = True
-                        elif reply.get("not_modified"):
-                            hit = sh.scatter_memo_get(plan.fingerprint)
-                            if hit is None:
-                                raise RemoteProtocolError(
-                                    f"worker {i} sent not_modified without "
-                                    "a coordinator-side cached map")
-                            _v, pmap, summary = hit
-                            stats["segments_cached"] += summary["segments"]
-                            stats["buffer_rows"] += summary["buffer_rows"]
-                            stats["rollup_segments"] += summary.get(
-                                "rollup_segments", 0)
-                            stats["rollup_replaced"] += summary.get(
-                                "rollup_replaced", 0)
-                            stats["shards_unchanged"] += 1
-                        else:
-                            wstats = reply.get("stats", {})
-                            for k in counter_keys:
-                                stats[k] += int(wstats.get(k, 0))
-                            if wstats.get("cache_bypassed"):
-                                stats["cache_bypassed"] = True
-                            if not fell_back:
-                                pmap = decode_partial_map(reply["groups"])
-                                sh.scatter_memo_put(
-                                    plan.fingerprint,
-                                    reply.get("version", ()), pmap,
-                                    {"segments":
-                                     int(wstats.get("segments_cached", 0)) +
-                                     int(wstats.get("segments_computed", 0)),
-                                     "buffer_rows":
-                                     int(wstats.get("buffer_rows", 0)),
-                                     "rollup_segments":
-                                     int(wstats.get("rollup_segments", 0)),
-                                     "rollup_replaced":
-                                     int(wstats.get("rollup_replaced", 0))})
+                        sessions[i] = None
+                        sh.release(c)
                     except WorkerUnavailable:
-                        pending[i] = False
-                if not pending[i]:
+                        sessions[i] = None
+                        sh.release(c, broken=True)
+                if reply is not None:
+                    if reply.get("fallback"):
+                        fell_back = True
+                    elif reply.get("not_modified"):
+                        hit = hits[i]
+                        if hit is None:
+                            raise RemoteProtocolError(
+                                f"worker {i} sent not_modified without "
+                                "a coordinator-side cached map")
+                        _v, pmap, summary = hit
+                        stats["segments_cached"] += summary["segments"]
+                        stats["buffer_rows"] += summary["buffer_rows"]
+                        stats["rollup_segments"] += summary.get(
+                            "rollup_segments", 0)
+                        stats["rollup_replaced"] += summary.get(
+                            "rollup_replaced", 0)
+                        stats["shards_unchanged"] += 1
+                    else:
+                        wstats = reply.get("stats", {})
+                        for k in counter_keys:
+                            stats[k] += int(wstats.get(k, 0))
+                        if wstats.get("cache_bypassed"):
+                            stats["cache_bypassed"] = True
+                        if not fell_back:
+                            pmap = decode_partial_map(reply["groups"])
+                            sh.scatter_memo_put(
+                                plan.fingerprint,
+                                reply.get("version", ()), pmap,
+                                {"segments":
+                                 int(wstats.get("segments_cached", 0)) +
+                                 int(wstats.get("segments_computed", 0)),
+                                 "buffer_rows":
+                                 int(wstats.get("buffer_rows", 0)),
+                                 "rollup_segments":
+                                 int(wstats.get("rollup_segments", 0)),
+                                 "rollup_replaced":
+                                 int(wstats.get("rollup_replaced", 0))})
+                else:
                     if not self.degraded_ok:
                         raise WorkerUnavailable(
                             f"shard {i} worker unavailable and degraded "
@@ -1179,50 +1314,58 @@ class RemoteShardedAggregator(ShardedAggregator):
                     merged = (splunklite.merge_partial_maps(
                         [merged, pmap], plan.aggs) if merged else pmap)
         except BaseException:
-            self._drop_unread_replies(pending, i + 1)
+            self._release_unread(sessions)
             raise
         stats["overlap"] = _trace_overlaps(trace)
-        if stats["degraded_shards"]:
-            self.degraded_queries += 1
+        with self._lock:
+            if stats["degraded_shards"]:
+                self.degraded_queries += 1
+            if not fell_back:
+                self.scatter_queries += 1
+                self.remote_queries += 1
         if fell_back:
-            return None
-        self.scatter_queries += 1
-        self.remote_queries += 1
-        self.last_query_stats = stats
+            return None, None
         rows = splunklite.finalize_partial_rows(merged, plan)
-        return splunklite.run_stages(rows, plan.tail)
+        return splunklite.run_stages(rows, plan.tail), stats
 
     def _gather_remote(self, stages: List[List[str]],
                        trace: List[Tuple[str, int]]):
         """Exact gather across workers: every worker filters + projects
         its rows (requests issued before any reply is read), the
-        coordinator restores canonical (ts, shard, local) order."""
+        coordinator restores canonical (ts, shard, local) order.
+        Returns ``(rows, rest_stages, stats)``."""
         wire_stages = [[str(t) for t in toks] for toks in stages]
-        pending: List[bool] = []
+        sessions: List[Optional[WorkerClient]] = [None] * self.num_shards
         for i, sh in enumerate(self.shards):
+            c = None
             try:
-                sh.send("gather", stages=wire_stages)
-                pending.append(True)
+                c = sh.acquire()
+                sh.session_send(c, "gather", stages=wire_stages)
+                sessions[i] = c
                 trace.append(("send", i))
             except WorkerUnavailable:
-                pending.append(False)
+                if c is not None:
+                    sh.release(c, broken=True)
         _terms, rest = splunklite._leading_terms(stages)
         ts_parts: List[np.ndarray] = []
         row_parts: List[List[Dict]] = []
         degraded = 0
-        i = -1
         try:
             for i, sh in enumerate(self.shards):
                 ts = rows = None
-                if pending[i]:
+                c = sessions[i]
+                if c is not None:
                     try:
-                        reply = sh.recv()
+                        reply = c.recv()
                         trace.append(("recv", i))
+                        sessions[i] = None
+                        sh.release(c)
                         ts = decode_array(reply["ts"])
                         rows = decode_rows(reply["rows"])
                     except WorkerUnavailable:
-                        pending[i] = False
-                if not pending[i]:
+                        sessions[i] = None
+                        sh.release(c, broken=True)
+                if ts is None:
                     if not self.degraded_ok:
                         raise WorkerUnavailable(
                             f"shard {i} worker unavailable and degraded "
@@ -1235,20 +1378,21 @@ class RemoteShardedAggregator(ShardedAggregator):
                 ts_parts.append(np.asarray(ts, np.float64))
                 row_parts.append(rows)
         except BaseException:
-            self._drop_unread_replies(pending, i + 1)
+            self._release_unread(sessions)
             raise
-        self.remote_queries += 1
-        if degraded:
-            self.degraded_queries += 1
-        self.last_query_stats = {
+        with self._lock:
+            self.remote_queries += 1
+            if degraded:
+                self.degraded_queries += 1
+        stats = {
             "mode": "exact_gather", "remote": True,
             "shards": self.num_shards, "degraded_shards": degraded,
             "overlap": _trace_overlaps(trace)}
         all_rows = [r for part in row_parts for r in part]
         if not all_rows:
-            return [], rest
+            return [], rest, stats
         order = np.argsort(np.concatenate(ts_parts), kind="stable")
-        return [all_rows[i] for i in order.tolist()], rest
+        return [all_rows[i] for i in order.tolist()], rest, stats
 
     # ------------------------------------------------------------ explain --
     def explain(self, q: str) -> Dict[str, Any]:

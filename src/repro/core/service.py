@@ -1,0 +1,411 @@
+"""Multi-tenant query service: admission control, dedup, result cache.
+
+The direct paths (``splunklite.query_with_stats``, the sharded
+aggregators) execute whatever they are handed, immediately, on the
+caller's thread.  That is the right contract for a library — and the
+wrong one for a monitoring frontend, where hundreds of dashboard
+refreshes, ad-hoc analyst queries and fleet-wide admin scans hit the
+same store concurrently.  :class:`QueryService` is the thin scheduling
+layer in between:
+
+* **Admission control** — per-tenant quotas on *outstanding* work (a
+  tenant with a stuck dashboard cannot monopolise the pool) and a bound
+  on total queued flights.  Over the queue bound, a submission either
+  blocks until the backlog drains (*delay*) or, if the caller marked it
+  ``shed_ok``, resolves instantly as *shed* — the caller keeps showing
+  its previous answer.  Ingest-driven watch refreshes are the intended
+  shed customers: stale-but-recent beats a refresh convoy at
+  saturation.
+* **In-flight dedup** — identical concurrent plans coalesce onto one
+  execution whose result fans out to every waiter.  "Identical" is
+  decided by :meth:`_plan_key`, which extends
+  ``ScatterPlan.fingerprint`` (deliberately tail-agnostic, see
+  docs/incremental.md) with the tail stages, engine and tolerance so
+  deduped answers are byte-identical to a private execution.
+* **Shared result cache** — a bounded LRU keyed ``(plan_key, store
+  version)`` layered *above* the per-segment partial caches.  Partial
+  caches make re-execution cheap; the result cache makes repetition
+  free.  An entry is stored only when the store version is unchanged
+  across the execution, so a result computed while ingest was racing is
+  never served for the new version; version-keying makes invalidation
+  implicit.
+* **Fairness** — two admission classes.  ``interactive`` flights
+  (watch/dashboard refreshes, cheap incremental re-aggregations) are
+  scheduled first; ``batch`` flights (cold scans, fleet sweeps) are
+  capped to half the worker pool so a burst of expensive scans can
+  never starve the dashboards.
+
+Results are byte-identical to the direct path: the service runs the
+same :func:`repro.core.splunklite.query_with_stats` everybody else
+does, just fewer times.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict, deque
+from typing import Any, Dict, List, Optional, Tuple
+
+from .splunklite import _split_pipeline, compile_scatter_plan, \
+    query_with_stats as _direct_query_with_stats
+
+__all__ = ["QueryService", "QueryResult", "Ticket", "QuotaExceeded"]
+
+Row = Dict[str, Any]
+
+#: Admission classes, in scheduling-priority order.
+INTERACTIVE = "interactive"
+BATCH = "batch"
+
+
+class QuotaExceeded(RuntimeError):
+    """A tenant is at its outstanding-query quota."""
+
+
+class QueryResult:
+    """Outcome of one submission.
+
+    ``rows``/``stats`` carry the executor's answer (``rows is None``
+    only for shed submissions, whose ``stats`` is ``{"shed": True}``).
+    ``source`` says how the service satisfied it: ``"executed"`` (this
+    submission ran the query), ``"deduped"`` (attached to another
+    submission's in-flight execution), ``"cached"`` (shared result
+    cache), or ``"shed"`` (dropped under backpressure).
+    """
+
+    __slots__ = ("rows", "stats", "source")
+
+    def __init__(self, rows: Optional[List[Row]], stats: Dict,
+                 source: str) -> None:
+        self.rows = rows
+        self.stats = stats
+        self.source = source
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        n = "None" if self.rows is None else len(self.rows)
+        return f"QueryResult(rows={n}, source={self.source!r})"
+
+
+class _Flight:
+    """One scheduled execution; every coalesced ticket points here."""
+
+    __slots__ = ("key", "q", "engine", "tolerance", "priority", "tickets",
+                 "done", "rows", "stats", "error")
+
+    def __init__(self, key: tuple, q: str, engine: Optional[str],
+                 tolerance: Optional[float], priority: str) -> None:
+        self.key = key
+        self.q = q
+        self.engine = engine
+        self.tolerance = tolerance
+        self.priority = priority
+        self.tickets: List["Ticket"] = []
+        self.done = threading.Event()
+        self.rows: Optional[List[Row]] = None
+        self.stats: Optional[Dict] = None
+        self.error: Optional[BaseException] = None
+
+
+class Ticket:
+    """A caller's claim on one submission.
+
+    :meth:`result` blocks until the backing flight lands (or returns
+    immediately for cached/shed tickets) and returns a
+    :class:`QueryResult`; an execution error re-raises in every waiter.
+    """
+
+    __slots__ = ("tenant", "source", "_flight", "_result")
+
+    def __init__(self, tenant: str, source: str,
+                 flight: Optional[_Flight] = None,
+                 result: Optional[QueryResult] = None) -> None:
+        self.tenant = tenant
+        self.source = source
+        self._flight = flight
+        self._result = result
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None or self._flight.done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> QueryResult:
+        if self._result is not None:
+            return self._result
+        fl = self._flight
+        if not fl.done.wait(timeout):
+            raise TimeoutError(f"query not done after {timeout}s: {fl.q!r}")
+        if fl.error is not None:
+            raise fl.error
+        self._result = QueryResult(fl.rows, fl.stats, self.source)
+        return self._result
+
+
+class QueryService:
+    """Concurrent scheduler over one store (single, sharded or remote).
+
+    See the module docstring for semantics.  ``max_concurrency`` bounds
+    worker threads (spawned lazily, daemonic); ``queue_limit`` bounds
+    *queued* flights before backpressure kicks in; ``tenant_quota``
+    bounds one tenant's outstanding submissions (``0``/``None``
+    disables the quota); ``result_cache_size`` bounds the shared LRU
+    (``0`` disables it).  Use as a context manager or call
+    :meth:`close`.
+    """
+
+    def __init__(self, store, max_concurrency: int = 4,
+                 queue_limit: int = 32,
+                 tenant_quota: Optional[int] = 16,
+                 result_cache_size: int = 128) -> None:
+        if max_concurrency < 1:
+            raise ValueError("max_concurrency must be >= 1")
+        if queue_limit < 1:
+            # 0 would block every non-shed submission forever
+            raise ValueError("queue_limit must be >= 1")
+        self.store = store
+        self.max_concurrency = int(max_concurrency)
+        self.queue_limit = int(queue_limit)
+        self.tenant_quota = int(tenant_quota or 0)
+        self.result_cache_size = int(result_cache_size)
+        # batch flights may hold at most half the lanes (min 1), so a
+        # convoy of cold scans leaves room for interactive refreshes
+        self.batch_slots = max(1, self.max_concurrency // 2)
+
+        self._cond = threading.Condition()
+        self._queues: Dict[str, deque] = {INTERACTIVE: deque(),
+                                          BATCH: deque()}
+        self._inflight: Dict[tuple, _Flight] = {}
+        self._result_cache: "OrderedDict[tuple, Tuple[List[Row], Dict]]" = \
+            OrderedDict()
+        self._outstanding: Dict[str, int] = {}
+        self._threads: List[threading.Thread] = []
+        self._idle = 0
+        self._active = 0
+        self._active_batch = 0
+        self._closed = False
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "executed": 0, "deduped": 0,
+            "result_cache_hits": 0, "shed": 0, "quota_rejections": 0,
+        }
+
+    # ------------------------------------------------------------ admission --
+    def _plan_key(self, q: str, engine: Optional[str],
+                  tolerance: Optional[float]) -> tuple:
+        """Dedup/cache identity of a submission.
+
+        ``ScatterPlan.fingerprint`` is shared by plans that differ only
+        in tail stages (that is what lets the partial caches serve
+        them), so byte-identical coalescing must add the tail back —
+        plus engine and tolerance, which both change the answer.
+        """
+        stages = _split_pipeline(q)
+        plan = compile_scatter_plan(stages, tolerance=tolerance)
+        if plan is not None:
+            return (plan.fingerprint, repr(plan.tail), engine, tolerance)
+        return ("nonmergeable", repr(stages), engine, tolerance)
+
+    def _store_version(self) -> Optional[tuple]:
+        ver = getattr(self.store, "_version", None)
+        return ver() if callable(ver) else None
+
+    def submit(self, q: str, tenant: str = "default",
+               engine: Optional[str] = None,
+               tolerance: Optional[float] = None,
+               priority: str = INTERACTIVE,
+               shed_ok: bool = False) -> Ticket:
+        """Admit a query; returns a :class:`Ticket` immediately.
+
+        Raises :class:`QuotaExceeded` when ``tenant`` is at its quota.
+        Over ``queue_limit`` queued flights the call blocks until the
+        backlog drains — unless ``shed_ok``, which instead returns an
+        already-resolved shed ticket (``rows=None``,
+        ``stats={"shed": True}``).
+        """
+        if priority not in self._queues:
+            raise ValueError(f"unknown priority {priority!r}")
+        tenant = str(tenant)
+        key = self._plan_key(q, engine, tolerance)
+        with self._cond:
+            while True:
+                if self._closed:
+                    raise RuntimeError("QueryService is closed")
+                self.counters["submitted"] += 1
+                if (self.tenant_quota
+                        and self._outstanding.get(tenant, 0)
+                        >= self.tenant_quota):
+                    self.counters["quota_rejections"] += 1
+                    raise QuotaExceeded(
+                        f"tenant {tenant!r} has "
+                        f"{self._outstanding[tenant]} outstanding queries "
+                        f"(quota {self.tenant_quota})")
+                version = self._store_version()
+                if version is not None and self.result_cache_size:
+                    hit = self._result_cache.get((key, version))
+                    if hit is not None:
+                        self._result_cache.move_to_end((key, version))
+                        self.counters["result_cache_hits"] += 1
+                        rows, stats = hit
+                        return Ticket(tenant, "cached", result=QueryResult(
+                            rows, stats, "cached"))
+                fl = self._inflight.get(key)
+                if fl is not None:
+                    self.counters["deduped"] += 1
+                    t = Ticket(tenant, "deduped", flight=fl)
+                    fl.tickets.append(t)
+                    self._outstanding[tenant] = \
+                        self._outstanding.get(tenant, 0) + 1
+                    return t
+                queued = sum(len(dq) for dq in self._queues.values())
+                if queued >= self.queue_limit:
+                    if shed_ok:
+                        self.counters["shed"] += 1
+                        return Ticket(tenant, "shed", result=QueryResult(
+                            None, {"shed": True}, "shed"))
+                    # delay: wait for a worker to drain the backlog,
+                    # then re-run admission from scratch (the flight we
+                    # want may be in flight or cached by then)
+                    self.counters["submitted"] -= 1
+                    self._cond.wait()
+                    continue
+                fl = _Flight(key, q, engine, tolerance, priority)
+                t = Ticket(tenant, "executed", flight=fl)
+                fl.tickets.append(t)
+                self._outstanding[tenant] = \
+                    self._outstanding.get(tenant, 0) + 1
+                self._inflight[key] = fl
+                self._queues[priority].append(fl)
+                if self._idle == 0 \
+                        and len(self._threads) < self.max_concurrency:
+                    th = threading.Thread(
+                        target=self._worker_main, daemon=True,
+                        name=f"query-service-{len(self._threads)}")
+                    self._threads.append(th)
+                    th.start()
+                self._cond.notify()
+                return t
+
+    # ---------------------------------------------------------- convenience --
+    def query_with_stats(self, q: str, tenant: str = "default",
+                         engine: Optional[str] = None,
+                         tolerance: Optional[float] = None,
+                         priority: str = INTERACTIVE,
+                         shed_ok: bool = False,
+                         timeout: Optional[float] = None
+                         ) -> Tuple[Optional[List[Row]], Dict]:
+        """Blocking submit; returns ``(rows, stats)`` like the direct
+        path (``(None, {"shed": True})`` for shed submissions)."""
+        res = self.submit(q, tenant=tenant, engine=engine,
+                          tolerance=tolerance, priority=priority,
+                          shed_ok=shed_ok).result(timeout)
+        return res.rows, res.stats
+
+    def query(self, q: str, tenant: str = "default",
+              engine: Optional[str] = None,
+              tolerance: Optional[float] = None,
+              priority: str = INTERACTIVE,
+              timeout: Optional[float] = None) -> List[Row]:
+        rows, _stats = self.query_with_stats(
+            q, tenant=tenant, engine=engine, tolerance=tolerance,
+            priority=priority, timeout=timeout)
+        return rows
+
+    def stats(self) -> Dict[str, Any]:
+        """Snapshot of counters plus live queue/pool state."""
+        with self._cond:
+            out: Dict[str, Any] = dict(self.counters)
+            out["inflight"] = len(self._inflight)
+            out["queued"] = sum(len(dq) for dq in self._queues.values())
+            out["threads"] = len(self._threads)
+            out["result_cache_entries"] = len(self._result_cache)
+            out["outstanding"] = {t: n for t, n in
+                                  self._outstanding.items() if n}
+            return out
+
+    # ------------------------------------------------------------- scheduler --
+    def _next_flight(self) -> Optional[_Flight]:
+        """Pick under the lock: interactive first, batch only while
+        under ``batch_slots``."""
+        if self._queues[INTERACTIVE]:
+            return self._queues[INTERACTIVE].popleft()
+        if self._queues[BATCH] and self._active_batch < self.batch_slots:
+            return self._queues[BATCH].popleft()
+        return None
+
+    def _worker_main(self) -> None:
+        while True:
+            with self._cond:
+                fl = self._next_flight()
+                while fl is None:
+                    if self._closed:
+                        return
+                    self._idle += 1
+                    try:
+                        self._cond.wait()
+                    finally:
+                        self._idle -= 1
+                    fl = self._next_flight()
+                self._active += 1
+                if fl.priority == BATCH:
+                    self._active_batch += 1
+                # backlog shrank: wake any submitter delayed on it
+                self._cond.notify_all()
+
+            error: Optional[BaseException] = None
+            rows: Optional[List[Row]] = None
+            stats: Optional[Dict] = None
+            v0 = self._store_version()
+            try:
+                rows, stats = _direct_query_with_stats(
+                    self.store, fl.q, engine=fl.engine,
+                    tolerance=fl.tolerance)
+            except BaseException as exc:  # fan the error out to waiters
+                error = exc
+            v1 = self._store_version()
+
+            with self._cond:
+                self.counters["executed"] += 1
+                if (error is None and self.result_cache_size
+                        and v0 is not None and v0 == v1):
+                    # stable version across the run: safe to share
+                    self._result_cache[(fl.key, v0)] = (rows, stats)
+                    self._result_cache.move_to_end((fl.key, v0))
+                    while len(self._result_cache) > self.result_cache_size:
+                        self._result_cache.popitem(last=False)
+                fl.rows, fl.stats, fl.error = rows, stats, error
+                # unpublish before waking waiters so a submitter that
+                # races the completion either joins this flight (and is
+                # woken now) or starts a fresh one — never attaches to
+                # a completed-and-forgotten flight
+                if self._inflight.get(fl.key) is fl:
+                    del self._inflight[fl.key]
+                for t in fl.tickets:
+                    n = self._outstanding.get(t.tenant, 0) - 1
+                    if n > 0:
+                        self._outstanding[t.tenant] = n
+                    else:
+                        self._outstanding.pop(t.tenant, None)
+                fl.done.set()
+                self._active -= 1
+                if fl.priority == BATCH:
+                    self._active_batch -= 1
+                self._cond.notify_all()
+
+    # --------------------------------------------------------------- closing --
+    def close(self, timeout: float = 5.0) -> None:
+        """Drain queued flights, then stop the workers.
+
+        New submissions are refused immediately; flights already
+        admitted still complete so no ticket-holder hangs.
+        """
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        deadline = timeout
+        for th in self._threads:
+            th.join(timeout=deadline)
+
+    def __enter__(self) -> "QueryService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -52,6 +52,7 @@ from __future__ import annotations
 import hashlib
 import math
 import os
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
@@ -154,9 +155,15 @@ class ShardedAggregator:
         self.fallback_queries = 0
         self.segments_adopted = 0
         self.records_reingested = 0
+        # best-effort alias for the last query_with_stats() result —
+        # racy under concurrent callers by construction; concurrent
+        # code must use the stats returned alongside the rows
         self.last_query_stats: Optional[Dict] = None
         self._cache: Dict[str, tuple] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
+        # guards the version memos, counters, and lazy pool creation so
+        # the aggregator is re-entrant under a concurrent QueryService
+        self._lock = threading.RLock()
 
     def _make_shards(self, num_shards: int,
                      **store_kwargs) -> List[ColumnarMetricStore]:
@@ -179,17 +186,19 @@ class ShardedAggregator:
 
     def _map_shards(self, fn):
         """Run ``fn`` once per shard — in parallel for multi-shard sets
-        (each shard is touched by exactly one worker, so per-shard lazy
-        caches stay single-threaded; NumPy kernels release the GIL).
-        Results come back in shard order, keeping every gather
-        deterministic."""
+        (shard stores and their partial caches are internally locked,
+        so concurrent queries may touch the same shard from different
+        workers; NumPy kernels release the GIL).  Results come back in
+        shard order, keeping every gather deterministic."""
         if self.num_shards == 1 or not self.parallel:
             return [fn(shard) for shard in self.shards]
-        if self._pool is None:
-            self._pool = ThreadPoolExecutor(
-                max_workers=min(self.num_shards, 8),
-                thread_name_prefix="shard-query")
-        return list(self._pool.map(fn, self.shards))
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=min(self.num_shards, 8),
+                    thread_name_prefix="shard-query")
+            pool = self._pool
+        return list(pool.map(fn, self.shards))
 
     @staticmethod
     def _shard_dirname(i: int) -> str:
@@ -212,12 +221,17 @@ class ShardedAggregator:
     def insert(self, rec: MetricRecord) -> bool:
         self._check_open()
         accepted = self.shards[self.shard_index(rec)].insert(rec)
-        if accepted and self._cache:
+        if accepted:
             # aggregator-level version memos (records/scans) are stale
             # the moment any shard's version moves; the shards' own
             # per-segment partial caches are untouched by design
-            self._cache.clear()
+            self._drop_memos()
         return accepted
+
+    def _drop_memos(self) -> None:
+        with self._lock:
+            if self._cache:
+                self._cache.clear()
 
     def ingest_lines(self, lines: Iterable[str]) -> int:
         n = 0
@@ -231,8 +245,7 @@ class ShardedAggregator:
         self._check_open()
         for shard in self.shards:
             shard.seal()
-        if self._cache:
-            self._cache.clear()
+        self._drop_memos()
 
     def close(self) -> None:
         """Shut down the shard backends and the query thread pool.
@@ -297,8 +310,7 @@ class ShardedAggregator:
             rec = parse_line(line)
             if rec is not None and self.insert(rec):
                 total += 1
-        if self._cache:
-            self._cache.clear()
+        self._drop_memos()
         return total
 
     def _segment_route(self, seg) -> Optional[int]:
@@ -389,21 +401,39 @@ class ShardedAggregator:
         ``tolerance`` opts the scatter plan into approximate
         rollup-tier answers (docs/storage.md).
         ``last_query_stats`` records the mode and, for scatter/gather,
-        the fleet-wide cached/recomputed segment counts.
+        the fleet-wide cached/recomputed segment counts — as a
+        *best-effort alias*; concurrent callers must use
+        :meth:`query_with_stats`.
         """
+        rows, _stats = self.query_with_stats(q, engine=engine,
+                                             tolerance=tolerance)
+        return rows
+
+    def query_with_stats(self, q: str, engine: Optional[str] = None,
+                         tolerance: Optional[float] = None
+                         ) -> Tuple[List[Dict], Dict]:
+        """:meth:`query` returning ``(rows, stats)`` with per-call
+        stats — the re-entrant contract: nothing here is read back from
+        shared attributes, so any number of threads can query one
+        aggregator without cross-contaminating their stats.  The
+        ``last_query_stats`` attribute is still *written* (best-effort,
+        racy) for backwards compatibility."""
         self._check_open()
         stages = splunklite._split_pipeline(q)
         if engine == "rows":
-            self.last_query_stats = {"mode": "rows"}
+            stats = {"mode": "rows"}
+            self.last_query_stats = stats
             rows = [r.as_dict() for r in self.records]
             if not stages:
-                return rows
-            return splunklite.run_stages(rows, stages, implicit_first=True)
+                return rows, stats
+            return splunklite.run_stages(rows, stages,
+                                         implicit_first=True), stats
         plan = splunklite.compile_scatter_plan(stages, tolerance=tolerance)
         if plan is not None:
-            # one stats dict per shard: _map_shards touches each shard
-            # from exactly one worker, so the scatter fills these (and
-            # the per-shard caches) without cross-thread sharing
+            # one stats dict per shard *per call*: concurrent queries
+            # each carry their own dicts, so the scatter fills them
+            # without cross-thread sharing even when two queries touch
+            # the same shard at once
             stats_by_shard = {id(s): {} for s in self.shards}
             try:
                 maps = self._map_shards(
@@ -412,7 +442,8 @@ class ShardedAggregator:
                         stats=stats_by_shard[id(shard)]))
                 merged = splunklite.merge_partial_maps(maps, plan.aggs)
                 rows = splunklite.finalize_partial_rows(merged, plan)
-                self.scatter_queries += 1
+                with self._lock:
+                    self.scatter_queries += 1
                 stats = {"mode": "scatter_gather",
                          "shards": self.num_shards,
                          "fingerprint": plan.fingerprint,
@@ -428,13 +459,15 @@ class ShardedAggregator:
                     if st.get("cache_bypassed"):
                         stats["cache_bypassed"] = True
                 self.last_query_stats = stats
-                return splunklite.run_stages(rows, plan.tail)
+                return splunklite.run_stages(rows, plan.tail), stats
             except _Fallback:
                 pass  # shard data defeated a partial kernel: go exact
-        self.fallback_queries += 1
-        self.last_query_stats = {"mode": "exact_gather"}
+        with self._lock:
+            self.fallback_queries += 1
+        stats = {"mode": "exact_gather"}
+        self.last_query_stats = stats
         rows, rest = self._gather_rows(stages)
-        return splunklite.run_stages(rows, rest)
+        return splunklite.run_stages(rows, rest), stats
 
     @property
     def partial_cache_hits(self) -> int:
@@ -509,19 +542,20 @@ class ShardedAggregator:
     @property
     def records(self) -> List[MetricRecord]:
         """All records in canonical (ts, shard, local) order."""
-        v = self._version()
-        cached = self._cache.get("records")
-        if cached is None or cached[0] != v:
-            recs: List[MetricRecord] = []
-            ts: List[float] = []
-            for shard in self.shards:
-                part = shard.records
-                recs.extend(part)
-                ts.extend(float(r.ts) for r in part)
-            order = np.argsort(np.asarray(ts), kind="stable")
-            cached = (v, [recs[i] for i in order.tolist()])
-            self._cache["records"] = cached
-        return cached[1]
+        with self._lock:
+            v = self._version()
+            cached = self._cache.get("records")
+            if cached is None or cached[0] != v:
+                recs: List[MetricRecord] = []
+                ts: List[float] = []
+                for shard in self.shards:
+                    part = shard.records
+                    recs.extend(part)
+                    ts.extend(float(r.ts) for r in part)
+                order = np.argsort(np.asarray(ts), kind="stable")
+                cached = (v, [recs[i] for i in order.tolist()])
+                self._cache["records"] = cached
+            return cached[1]
 
     def select(self, job: Optional[str] = None, kind: Optional[str] = None,
                since: Optional[float] = None,
@@ -549,15 +583,16 @@ class ShardedAggregator:
         self._check_open()
         fields = tuple(fields)
         memo_key = (job, kind, since, until, fields)
-        memo = self._cache.get("scans")
-        if memo is None or memo[0] != self._version():
-            memo = (self._version(), {})
-            self._cache["scans"] = memo
-        sc = _lru_memo_get(memo[1], memo_key)
-        if sc is None:
-            sc = self._scan_uncached(job, kind, since, until, fields)
-            _lru_memo_put(memo[1], memo_key, sc, SCAN_MEMO_MAX)
-        return sc
+        with self._lock:
+            memo = self._cache.get("scans")
+            if memo is None or memo[0] != self._version():
+                memo = (self._version(), {})
+                self._cache["scans"] = memo
+            sc = _lru_memo_get(memo[1], memo_key)
+            if sc is None:
+                sc = self._scan_uncached(job, kind, since, until, fields)
+                _lru_memo_put(memo[1], memo_key, sc, SCAN_MEMO_MAX)
+            return sc
 
     def _scan_uncached(self, job, kind, since, until,
                        fields: Tuple[str, ...]) -> ColumnScan:

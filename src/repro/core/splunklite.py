@@ -2243,12 +2243,33 @@ class QueryHandle:
     per-segment partials cover the rest.  Works over a single
     :class:`ColumnarMetricStore` or a sharded store (whose scatter path
     consults the per-shard caches on every query).
+
+    ``service`` routes every refresh through a
+    :class:`repro.core.service.QueryService` (as tenant ``tenant``):
+    a thousand registered watchers on the same plan then cost one
+    execution per store version — the service's in-flight dedup and
+    shared result cache collapse them.  Results are byte-identical to
+    the direct path.  ``shed_ok=True`` additionally lets the service
+    drop a refresh under backpressure, in which case :meth:`refresh`
+    returns the previous rows unchanged (stale beats a refresh convoy
+    at saturation; the next quiet refresh catches up).
+
+    :meth:`close` retires the handle: long-lived processes register
+    and drop watches constantly, and an unclosed handle would otherwise
+    be refreshed forever by ``Aggregator.refresh_watches``.
     """
 
     def __init__(self, store, q: str,
-                 tolerance: Optional[float] = None) -> None:
+                 tolerance: Optional[float] = None,
+                 service=None, tenant: str = "watch",
+                 shed_ok: bool = False) -> None:
         self.store = store
         self.q = q
+        self.tolerance = tolerance
+        self.service = service
+        self.tenant = str(tenant)
+        self.shed_ok = bool(shed_ok)
+        self.closed = False
         self._stages = _split_pipeline(q)
         self.plan = compile_scatter_plan(self._stages, tolerance=tolerance)
         self.refreshes = 0
@@ -2256,16 +2277,36 @@ class QueryHandle:
         self.last_stats: Optional[Dict] = None
         self._last_version = None
 
+    def close(self) -> None:
+        """Retire the handle.  Idempotent; a closed handle refuses
+        :meth:`refresh` and is skipped by ``refresh_watches``."""
+        self.closed = True
+
     def refresh(self, force: bool = False) -> List[Row]:
+        if self.closed:
+            raise RuntimeError("QueryHandle is closed")
         store = self.store
         version = store._version() if hasattr(store, "_version") else None
         if (not force and self.last_rows is not None
                 and version is not None
                 and version == self._last_version):
             return self.last_rows
-        if getattr(store, "is_sharded", False):
-            rows = store.query(self.q)
-            stats = dict(store.last_query_stats or {})
+        if self.service is not None:
+            # "incremental" preserves the direct path's executor choice
+            # for single stores; sharded stores plan their own
+            # execution and ignore the hint's single-store meaning
+            engine = (None if getattr(store, "is_sharded", False)
+                      else "incremental")
+            rows, stats = self.service.query_with_stats(
+                self.q, tenant=self.tenant, engine=engine,
+                tolerance=self.tolerance,
+                # only shed when there is a previous answer to keep
+                shed_ok=self.shed_ok and self.last_rows is not None)
+            if stats.get("shed"):
+                return self.last_rows  # stale, refreshed next round
+        elif getattr(store, "is_sharded", False):
+            rows, stats = store.query_with_stats(self.q,
+                                                 tolerance=self.tolerance)
         elif isinstance(store, ColumnarMetricStore):
             if self.plan is None:  # not mergeable: skip recompiling
                 rows, stats = _columnar_query(store, self._stages), \
@@ -2275,8 +2316,7 @@ class QueryHandle:
                                                  plan=self.plan)
             store.last_query_stats = stats
         else:
-            rows = query(store, self.q)
-            stats = {"mode": "full"}
+            rows, stats = query_with_stats(store, self.q)
         self.refreshes += 1
         self.last_rows = rows
         self.last_stats = stats
@@ -2357,8 +2397,28 @@ def query(source: Union[ColumnarMetricStore, Sequence[Row],
     rollup bucket boundary snap to it (docs/storage.md).  Without it,
     rollups substitute only when exactly equivalent to the raw scan.
     """
+    rows, _stats = query_with_stats(source, q, engine=engine,
+                                    tolerance=tolerance)
+    return rows
+
+
+def query_with_stats(source: Union[ColumnarMetricStore, Sequence[Row],
+                                   Sequence[MetricRecord]],
+                     q: str, engine: Optional[str] = None,
+                     tolerance: Optional[float] = None
+                     ) -> Tuple[List[Row], Dict]:
+    """:func:`query` returning ``(rows, stats)``.
+
+    This is the re-entrant contract for concurrent callers (the
+    ``QueryService``): stats travel with the call instead of through
+    the shared ``last_query_stats`` attribute, which two concurrent
+    queries would cross-contaminate.  ``last_query_stats`` is still
+    *written* where it used to be, as a best-effort backwards-compat
+    alias — never read it after a concurrent query.
+    """
     if getattr(source, "is_sharded", False):
-        return source.query(q, engine=engine, tolerance=tolerance)
+        return source.query_with_stats(q, engine=engine,
+                                       tolerance=tolerance)
     stages = _split_pipeline(q)
     if isinstance(source, ColumnarMetricStore):
         # rollup tiers live behind the scatter planner; once a store
@@ -2372,15 +2432,16 @@ def query(source: Union[ColumnarMetricStore, Sequence[Row],
             rows, stats = _incremental_query(source, stages,
                                              tolerance=tolerance)
             source.last_query_stats = stats
-            return rows
+            return rows, stats
         if engine != "rows":
-            return _columnar_query(source, stages)
+            return _columnar_query(source, stages), {"mode": "full"}
         rows: List[Row] = [r.as_dict() for r in source.records]
     else:
         if engine == "columnar":
             raise QueryError("columnar engine requires a ColumnarMetricStore")
         rows = [r.as_dict() if isinstance(r, MetricRecord) else dict(r)
                 for r in source]
+    stats = {"mode": "rows" if engine == "rows" else "full"}
     if not stages:
-        return rows
-    return run_stages(rows, stages, implicit_first=True)
+        return rows, stats
+    return run_stages(rows, stages, implicit_first=True), stats

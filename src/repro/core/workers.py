@@ -18,11 +18,14 @@ Run one directly::
 
 The worker prints one ``REPRO_WORKER_READY host=... port=...`` line on
 stdout once it is listening (``--port 0`` picks an ephemeral port);
-fleet spawners parse it.  Requests from one client are served at a
-time (the store is single-threaded by design); a disconnected client
-can reconnect — the listener survives.  ``--idle-timeout-s`` makes an
-orphaned worker exit on its own, so a wedged coordinator cannot leak
-processes in CI.
+fleet spawners parse it.  Connections are served **overlapped** — one
+thread per client, so a coordinator's pooled connections (concurrent
+scatters from a multi-tenant ``QueryService``) don't serialize on the
+accept loop; store operations themselves run one at a time under a
+worker-wide lock, which keeps the version-then-compute sequence of a
+conditional scatter atomic.  A disconnected client can reconnect — the
+listener survives.  ``--idle-timeout-s`` makes an orphaned worker exit
+on its own, so a wedged coordinator cannot leak processes in CI.
 """
 
 from __future__ import annotations
@@ -30,8 +33,9 @@ from __future__ import annotations
 import argparse
 import socket
 import struct
+import threading
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -71,6 +75,11 @@ class ShardWorker:
         self.requests_served = 0
         self._shutdown = False
         self._last_activity = time.monotonic()
+        # one thread per connection; ops serialize on this lock so a
+        # scatter's version read and its partial computation see one
+        # consistent store state even while another connection ingests
+        self._op_lock = threading.RLock()
+        self._conn_threads: List[threading.Thread] = []
 
     # ------------------------------------------------------------ serving --
     def _idle_expired(self) -> bool:
@@ -84,12 +93,22 @@ class ShardWorker:
                     conn, _addr = self.sock.accept()
                 except socket.timeout:
                     continue
-                with conn:
-                    conn.setsockopt(socket.IPPROTO_TCP,
-                                    socket.TCP_NODELAY, 1)
-                    self._serve_conn(conn)
+                t = threading.Thread(target=self._conn_main, args=(conn,),
+                                     daemon=True,
+                                     name=f"worker-conn-{self.address[1]}")
+                t.start()
+                self._conn_threads.append(t)
+                self._conn_threads = [x for x in self._conn_threads
+                                      if x.is_alive()]
         finally:
+            for t in self._conn_threads:
+                t.join(timeout=2.0)
             self.close()
+
+    def _conn_main(self, conn: socket.socket) -> None:
+        with conn:
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._serve_conn(conn)
 
     def _serve_conn(self, conn: socket.socket) -> None:
         conn.settimeout(0.5)
@@ -164,7 +183,8 @@ class ShardWorker:
             return {"ok": False, "kind": "RemoteProtocolError",
                     "error": f"unknown op {op!r}"}
         try:
-            out = fn(msg) or {}
+            with self._op_lock:
+                out = fn(msg) or {}
         except QueryError as exc:
             return {"ok": False, "kind": "QueryError", "error": str(exc)}
         except Exception as exc:  # noqa: BLE001 - must never kill the loop

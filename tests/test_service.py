@@ -1,0 +1,431 @@
+"""Multi-tenant query service: concurrency parity, admission control,
+in-flight dedup, result caching, fairness, and backpressure.
+
+Acceptance contract (ISSUE 7 / docs/service.md): 8 threads issuing the
+full parity sweep through a :class:`QueryService` — over a single
+store, an in-process shard set, and a remote worker fleet — get rows
+**byte-identical** to a serial direct-path run, with ingest pumped
+between rounds; K identical concurrent submissions execute exactly
+once; per-tenant quotas, interactive-over-batch fairness and
+shed-under-backpressure behave as documented; and concurrent callers
+never see each other's stats (the re-entrancy satellite).
+"""
+
+import threading
+import time
+
+import pytest
+
+from conftest import random_records
+from test_engine_parity import AGG_QUERIES, PIPELINE_QUERIES, SEARCH_QUERIES
+from test_incremental import rows_identical
+
+import repro.core.service as service_mod
+from repro.core.aggregator import Aggregator
+from repro.core.schema import MetricRecord, encode_line
+from repro.core.service import QueryService, QuotaExceeded
+from repro.core.splunklite import QueryHandle, query, query_with_stats
+
+ALL_QUERIES = SEARCH_QUERIES + AGG_QUERIES + PIPELINE_QUERIES
+N_THREADS = 8
+IDLE_S = 300.0
+
+
+def _record_batches(rounds=3, per_round=150):
+    recs = random_records(seed=11, n=rounds * per_round)
+    return [recs[i * per_round:(i + 1) * per_round] for i in range(rounds)]
+
+
+def _make_agg(tmp_path, shape):
+    if shape == "single":
+        return Aggregator(tmp_path / "inbox", store_dir=tmp_path / "store")
+    if shape == "sharded":
+        return Aggregator(tmp_path / "inbox", store_dir=tmp_path / "store",
+                          shards=3)
+    from repro.core.remote import RemoteShardedAggregator
+    store = RemoteShardedAggregator(num_shards=2,
+                                    directory=tmp_path / "store",
+                                    seal_threshold=53,
+                                    worker_idle_timeout_s=IDLE_S)
+    return Aggregator(tmp_path / "inbox", store=store)
+
+
+def _pump_round(agg, recs, round_no):
+    inbox = agg.inbox_dir / "stream.log"
+    with open(inbox, "a", encoding="utf-8") as f:
+        for rec in recs:
+            f.write(encode_line(rec) + "\n")
+    assert agg.pump() == len(recs)
+
+
+def _sweep_concurrently(svc, serial, n_threads=N_THREADS):
+    """Every thread runs the whole sweep; byte-identical per call."""
+    failures = []
+
+    def run(tid):
+        try:
+            for q in ALL_QUERIES:
+                rows, stats = svc.query_with_stats(q, tenant=f"t{tid}")
+                assert isinstance(stats, dict) and stats, \
+                    f"{q!r}: stats missing"
+                rows_identical(rows, serial[q], q)
+        except BaseException as exc:  # pragma: no cover - diagnostics
+            failures.append((tid, exc))
+
+    threads = [threading.Thread(target=run, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not failures, failures[0]
+
+
+# ===========================================================================
+# Tentpole: N-thread parity sweep with interleaved ingest, all 3 shapes
+# ===========================================================================
+
+@pytest.mark.parametrize("shape", ["single", "sharded", "remote"])
+def test_concurrent_sweep_parity(tmp_path, shape):
+    agg = _make_agg(tmp_path, shape)
+    try:
+        svc = QueryService(agg.store, max_concurrency=4,
+                           tenant_quota=0)  # sweep threads run unthrottled
+        with svc:
+            for rnd, recs in enumerate(_record_batches()):
+                _pump_round(agg, recs, rnd)
+                # quiesced store: the serial direct path is the oracle
+                serial = {q: query(agg.store, q) for q in ALL_QUERIES}
+                _sweep_concurrently(svc, serial)
+            st = svc.stats()
+            # the sweep repeats identical plans 8x per round: the
+            # service must have collapsed most of that repetition
+            assert st["result_cache_hits"] + st["deduped"] > 0
+            assert st["executed"] < st["submitted"]
+    finally:
+        agg.close()
+
+
+def test_concurrent_queries_during_ingest(tmp_path):
+    """True-concurrency smoke: readers race a live writer thread.
+
+    Byte-identical parity is only defined on a quiesced store, so this
+    asserts no errors/cross-talk while racing and exact parity after
+    the writer finishes."""
+    agg = _make_agg(tmp_path, "sharded")
+    try:
+        recs = random_records(seed=23, n=600)
+        stop = threading.Event()
+        failures = []
+
+        def writer():
+            try:
+                for rec in recs:
+                    agg.store.insert(rec)
+            finally:
+                stop.set()
+
+        def reader(tid):
+            try:
+                while not stop.is_set():
+                    for q in ALL_QUERIES[::4]:
+                        rows, stats = query_with_stats(agg.store, q)
+                        assert isinstance(rows, list)
+                        assert isinstance(stats, dict)
+            except BaseException as exc:  # pragma: no cover
+                failures.append((tid, exc))
+
+        threads = [threading.Thread(target=reader, args=(i,))
+                   for i in range(4)]
+        wt = threading.Thread(target=writer)
+        for t in threads:
+            t.start()
+        wt.start()
+        wt.join()
+        for t in threads:
+            t.join()
+        assert not failures, failures[0]
+        with QueryService(agg.store) as svc:
+            for q in ALL_QUERIES[::4]:
+                rows_identical(svc.query(q), query(agg.store, q), q)
+    finally:
+        agg.close()
+
+
+# ===========================================================================
+# Satellite: stats travel with the call — no cross-talk between threads
+# ===========================================================================
+
+def test_no_stats_cross_talk(tmp_path):
+    agg = _make_agg(tmp_path, "single")
+    try:
+        for rec in random_records(seed=7, n=300):
+            agg.store.insert(rec)
+        q = "search kind=perf | stats avg(gflops) by job | sort job"
+        want = {"rows": "rows", "incremental": "incremental",
+                None: "full"}
+        failures = []
+
+        def run(engine):
+            try:
+                for _ in range(30):
+                    _rows, stats = query_with_stats(agg.store, q,
+                                                    engine=engine)
+                    assert stats["mode"] == want[engine], \
+                        f"engine {engine!r} saw {stats['mode']!r}"
+            except BaseException as exc:  # pragma: no cover
+                failures.append(exc)
+
+        threads = [threading.Thread(target=run, args=(e,))
+                   for e in ("rows", "incremental", None) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not failures, failures[0]
+    finally:
+        agg.close()
+
+
+# ===========================================================================
+# In-flight dedup, quotas, fairness, backpressure (gated executor)
+# ===========================================================================
+
+@pytest.fixture()
+def gated(monkeypatch):
+    """Pause every service execution until its per-query gate opens.
+
+    Returns ``(gate_for, started, calls)``: ``gate_for(q).set()``
+    releases executions of ``q``; ``started[q]`` is set once one is
+    running; ``calls`` counts executions per query string."""
+    real = service_mod._direct_query_with_stats
+    gates, started, calls = {}, {}, {}
+    lock = threading.Lock()
+
+    def gate_for(q):
+        with lock:
+            return gates.setdefault(q, threading.Event())
+
+    def started_for(q):
+        with lock:
+            return started.setdefault(q, threading.Event())
+
+    def slow(store, q, **kw):
+        with lock:
+            calls[q] = calls.get(q, 0) + 1
+        started_for(q).set()
+        assert gate_for(q).wait(10), f"gate for {q!r} never opened"
+        return real(store, q, **kw)
+
+    monkeypatch.setattr(service_mod, "_direct_query_with_stats", slow)
+    return gate_for, started_for, calls
+
+
+@pytest.fixture()
+def small_store():
+    from repro.core.aggregator import MetricStore
+    store = MetricStore(seal_threshold=64)
+    for rec in random_records(seed=3, n=200):
+        store.insert(rec)
+    return store
+
+
+DEDUP_Q = "search kind=perf | stats avg(gflops) count by job | sort job"
+
+
+def test_inflight_dedup_k_to_one(small_store, gated):
+    gate_for, _started, calls = gated
+    with QueryService(small_store, max_concurrency=4,
+                      result_cache_size=0) as svc:
+        tickets = [svc.submit(DEDUP_Q, tenant=f"t{i}") for i in range(8)]
+        gate_for(DEDUP_Q).set()
+        results = [t.result(timeout=10) for t in tickets]
+        assert calls[DEDUP_Q] == 1  # K submissions, one execution
+        assert svc.counters["executed"] == 1
+        assert svc.counters["deduped"] == 7
+        first = results[0].rows
+        assert all(r.rows == first for r in results)
+        assert sorted(r.source for r in results) == \
+            ["deduped"] * 7 + ["executed"]
+
+
+def test_tenant_quota(small_store, gated):
+    gate_for, _started, _calls = gated
+    q2 = "stats count by job | sort job"
+    with QueryService(small_store, max_concurrency=1,
+                      tenant_quota=2, result_cache_size=0) as svc:
+        t1 = svc.submit(DEDUP_Q, tenant="greedy")
+        t2 = svc.submit(q2, tenant="greedy")
+        with pytest.raises(QuotaExceeded):
+            svc.submit("stats count", tenant="greedy")
+        # other tenants are unaffected by greedy's backlog
+        t3 = svc.submit(DEDUP_Q, tenant="polite")
+        assert svc.counters["quota_rejections"] == 1
+        for q in (DEDUP_Q, q2, "stats count"):
+            gate_for(q).set()
+        for t in (t1, t2, t3):
+            t.result(timeout=10)
+        # quota is on *outstanding* work: it frees up on completion
+        svc.submit("stats count", tenant="greedy").result(timeout=10)
+
+
+def test_batch_never_starves_interactive(small_store, gated):
+    gate_for, started_for, _calls = gated
+    b1, b2 = "stats count by job | sort job", "stats count by host | sort host"
+    i1 = "stats count"
+    with QueryService(small_store, max_concurrency=2,
+                      result_cache_size=0) as svc:
+        assert svc.batch_slots == 1
+        tb1 = svc.submit(b1, priority="batch")
+        assert started_for(b1).wait(5)
+        tb2 = svc.submit(b2, priority="batch")   # queued: batch slot held
+        ti = svc.submit(i1)                      # interactive jumps it
+        assert started_for(i1).wait(5)
+        assert not started_for(b2).is_set()      # b2 still waiting
+        for q in (b1, b2, i1):
+            gate_for(q).set()
+        for t in (tb1, tb2, ti):
+            t.result(timeout=10)
+
+
+def test_backpressure_shed_and_delay(small_store, gated):
+    gate_for, started_for, _calls = gated
+    q1, q2, q3 = "stats count", "stats count by job", "stats count by host"
+    with QueryService(small_store, max_concurrency=1, queue_limit=1,
+                      result_cache_size=0) as svc:
+        t1 = svc.submit(q1)
+        assert started_for(q1).wait(5)
+        t2 = svc.submit(q2)              # fills the queue
+        shed = svc.submit(q3, shed_ok=True)
+        res = shed.result()
+        assert res.source == "shed" and res.rows is None \
+            and res.stats == {"shed": True}
+        assert svc.counters["shed"] == 1
+
+        delayed = []
+
+        def blocked_submit():
+            delayed.append(svc.submit(q3).result(timeout=10))
+
+        th = threading.Thread(target=blocked_submit)
+        th.start()
+        time.sleep(0.1)
+        assert not delayed               # still delayed behind the queue
+        for q in (q1, q2, q3):
+            gate_for(q).set()
+        th.join(timeout=10)
+        assert delayed and delayed[0].rows is not None
+        t1.result(timeout=10), t2.result(timeout=10)
+
+
+# ===========================================================================
+# Shared result cache: version-keyed, bounded
+# ===========================================================================
+
+def test_result_cache_version_keying(small_store):
+    with QueryService(small_store, result_cache_size=8) as svc:
+        first = svc.query(DEDUP_Q)
+        assert svc.counters["result_cache_hits"] == 0
+        again = svc.query(DEDUP_Q)
+        assert svc.counters["result_cache_hits"] == 1
+        assert again == first
+        # any ingest moves the store version: the entry is dead
+        small_store.insert(MetricRecord(ts=9999.0, host="n0", job="alpha.1",
+                                        kind="perf",
+                                        fields={"gflops": 123.0}))
+        refreshed = svc.query(DEDUP_Q)
+        assert svc.counters["result_cache_hits"] == 1
+        assert svc.counters["executed"] == 2
+        rows_identical(refreshed, query(small_store, DEDUP_Q), DEDUP_Q)
+
+
+def test_result_cache_bounded(small_store):
+    with QueryService(small_store, result_cache_size=2) as svc:
+        for q in ("stats count", "stats count by job",
+                  "stats count by host"):
+            svc.query(q)
+        assert svc.stats()["result_cache_entries"] <= 2
+
+
+def test_dedup_key_includes_tail_and_engine(small_store):
+    """Plans sharing a fingerprint but differing in tail/engine must
+    not collide in the cache (byte-identical invariant)."""
+    shared_prefix = "search kind=perf | stats avg(gflops) by job"
+    with QueryService(small_store) as svc:
+        a = svc.query(shared_prefix + " | sort job")
+        b = svc.query(shared_prefix + " | sort -avg_gflops | head 2")
+        rows_identical(a, query(small_store, shared_prefix + " | sort job"),
+                       "tail a")
+        rows_identical(
+            b, query(small_store,
+                     shared_prefix + " | sort -avg_gflops | head 2"),
+            "tail b")
+        c = svc.query(shared_prefix + " | sort job", engine="rows")
+        rows_identical(
+            c, query(small_store, shared_prefix + " | sort job",
+                     engine="rows"), "rows engine")
+
+
+# ===========================================================================
+# Watch lifecycle: close / unwatch / service routing (satellite)
+# ===========================================================================
+
+def test_unwatch_and_closed_handles(tmp_path):
+    agg = Aggregator(tmp_path / "inbox")
+    for rec in random_records(seed=9, n=120):
+        agg.store.insert(rec)
+    h1 = agg.watch("stats count by job | sort job")
+    h2 = agg.watch("stats count")
+    assert len(agg.watches) == 2
+    h1.refresh()
+    assert agg.unwatch(h1) and not agg.unwatch(h1)  # idempotent
+    assert agg.watches == [h2]
+    with pytest.raises(RuntimeError):
+        h1.refresh()
+    h2.close()  # closing without unwatch: refresh_watches reaps it
+    assert agg.refresh_watches() == {}
+    assert agg.watches == []
+
+
+def test_watch_routes_through_service(tmp_path):
+    agg = Aggregator(tmp_path / "inbox", query_service=True)
+    try:
+        for rec in random_records(seed=13, n=150):
+            agg.store.insert(rec)
+        q = "search kind=perf | stats avg(gflops) by job | sort job"
+        h = agg.watch(q)
+        assert h.service is agg.query_service and h.shed_ok
+        rows_identical(h.refresh(), query(agg.store, q), q)
+        assert agg.query_service.counters["executed"] == 1
+        # unchanged store: the handle's own version check short-circuits
+        h.refresh()
+        assert agg.query_service.counters["executed"] == 1
+    finally:
+        agg.close()
+
+
+def test_handle_returns_stale_rows_when_shed(small_store, gated):
+    gate_for, started_for, _calls = gated
+    blocker, filler = "stats count by host", "stats count"
+    watched = "stats count by job | sort job"
+    svc = QueryService(small_store, max_concurrency=1, queue_limit=1,
+                       result_cache_size=0)
+    with svc:
+        h = QueryHandle(small_store, watched, service=svc, shed_ok=True)
+        gate_for(watched).set()
+        first = h.refresh()
+        # saturate: one flight executing, one queued — the full queue
+        # sheds every further shed_ok submission
+        tb = svc.submit(blocker)
+        assert started_for(blocker).wait(5)
+        tf = svc.submit(filler)
+        small_store.insert(MetricRecord(ts=9999.0, host="n9", job="beta.2",
+                                        kind="perf",
+                                        fields={"gflops": 1.0}))
+        assert h.refresh() is first          # shed → stale rows, no wait
+        assert svc.counters["shed"] == 1
+        for q in (blocker, filler):
+            gate_for(q).set()
+        tb.result(timeout=10), tf.result(timeout=10)
+        refreshed = h.refresh()              # quiet again: catches up
+        rows_identical(refreshed, query(small_store, watched), watched)
