@@ -14,6 +14,8 @@ trajectory is tracked across PRs.
   sharded       — multi-aggregator scatter/gather fan-out vs single store
   incremental   — segment-keyed partial-aggregate cache: cold vs warm
   remote        — worker-process shard fleet vs in-process sharded
+  replication   — replicated shards: hedged-scatter p99 vs unhedged
+                  with one artificially slow member
   compaction    — segment compaction + compressed tiers: cold query
                   pre/post, byte ratio, rollup vs raw scan
   restart       — aggregator cold-start: mmap segments vs line replay
@@ -43,6 +45,7 @@ def _parse_row(line: str):
 def main() -> None:
     from benchmarks import kernels as kbench
     from benchmarks import monitoring as mbench
+    from benchmarks.bench_replication import bench_replication
     only = set(sys.argv[1:])
     out = EXPERIMENTS
     out.mkdir(parents=True, exist_ok=True)
@@ -57,6 +60,7 @@ def main() -> None:
         mbench.bench_sharded,
         mbench.bench_incremental,
         mbench.bench_remote,
+        bench_replication,
         mbench.bench_service,
         mbench.bench_compaction,
         mbench.bench_restart,

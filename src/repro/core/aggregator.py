@@ -78,12 +78,18 @@ class Aggregator:
                  shards: Optional[int] = None,
                  shard_policy="hash",
                  remote_workers: bool = False,
+                 replicas: int = 1,
+                 hedge: bool = True,
+                 hedge_delay_s: Optional[float] = None,
                  compaction_policy: Optional[Dict] = None,
                  query_service=None) -> None:
         self.inbox_dir = Path(inbox_dir)
         self.inbox_dir.mkdir(parents=True, exist_ok=True)
         if remote_workers and store is None and shards is None:
             raise ValueError("remote_workers=True requires shards=N")
+        if replicas > 1 and not remote_workers:
+            raise ValueError("replicas > 1 requires remote_workers=True "
+                             "(replication lives in the worker fleet)")
         if store is not None:
             self.store = store
         elif shards is not None and remote_workers:
@@ -91,7 +97,10 @@ class Aggregator:
             self.store = RemoteShardedAggregator(num_shards=shards,
                                                  policy=shard_policy,
                                                  directory=store_dir,
-                                                 wal_fsync=wal_fsync)
+                                                 wal_fsync=wal_fsync,
+                                                 replicas=replicas,
+                                                 hedge=hedge,
+                                                 hedge_delay_s=hedge_delay_s)
         elif shards is not None:
             from repro.core.shards import ShardedAggregator
             self.store = ShardedAggregator(num_shards=shards,

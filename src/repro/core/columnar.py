@@ -960,6 +960,20 @@ class ColumnarMetricStore:
                 seg = segmentio.load_segment(man_path)
             else:
                 seg = segmentio.load_segment(manifest_path)
+            if getattr(seg, "rollup", None) is not None:
+                # rollup segments route to the rollup tier, exactly as
+                # the restart loader does — appending one to _sealed
+                # would expose its bucketed partial rows to row-level
+                # reads.  Replica catch-up must ship rollups (retention
+                # may have dropped the raw segments they cover), so
+                # adoption has to route them correctly too.
+                self._rollups.append(seg)
+                self._rollup_stems.append(stem)
+                if self._cache:
+                    self._cache.clear()
+                if seg.ts_max > self._watermark:
+                    self._watermark = seg.ts_max
+                return seg.n
             self._sealed.append(seg)
             self._sealed_stems.append(stem)
             if self._cache:
@@ -972,6 +986,48 @@ class ColumnarMetricStore:
                 self._epochs.append((seg.ts_max, keys))
                 self._evict_dedup()
             return seg.n
+
+    def adopt_buffer(self, lines: Iterable[str],
+                     next_seq: Optional[int] = None) -> int:
+        """Replace the append buffer wholesale with *lines* — the WAL
+        tail a replication primary ships during catch-up
+        (docs/replication.md).  The current buffer rows are discarded
+        and their dedup keys forgotten; the shipped lines land directly
+        in the buffer (no threshold seal — the primary decides when to
+        seal), and ``next_seq`` fast-forwards the mutation generation,
+        so after segment adoption + ``adopt_buffer`` the replica's
+        ``(sealed, buffer, seq)`` version equals the primary's exactly.
+        Returns the new buffer length."""
+        from repro.core.schema import parse_line
+        if self.read_only:
+            raise RuntimeError("store is read-only")
+        with self._lock:
+            self._seen -= self._buffer_keys
+            self._buffer = []
+            self._buffer_keys = set()
+            self._transient_base = None
+            if self._cache:
+                self._cache.clear()
+            for line in lines:
+                rec = parse_line(line)
+                if rec is None:
+                    continue
+                encoded = encode_line(rec)
+                key = hashlib.blake2b(encoded.encode(),
+                                      digest_size=12).digest()
+                if key in self._seen:
+                    continue
+                self._seen.add(key)
+                self._buffer_keys.add(key)
+                self._buffer.append(rec)
+                ts = float(rec.ts)
+                if ts > self._watermark:
+                    self._watermark = ts
+            if next_seq is not None:
+                self._next_seq = max(self._next_seq, int(next_seq))
+            if self.directory is not None:
+                self._rewrite_wal()
+            return len(self._buffer)
 
     # -------------------------------------------------------------- reads --
     def segments(self) -> List[Segment]:

@@ -356,6 +356,13 @@ class WorkerClient:
     def connected(self) -> bool:
         return self._sock is not None
 
+    def fileno(self) -> int:
+        """Raw socket fd — the hedged-scatter path selects over several
+        in-flight replies (docs/replication.md)."""
+        if self._sock is None:
+            raise WorkerUnavailable(f"not connected to {self.address}")
+        return self._sock.fileno()
+
     def connect(self) -> Dict:
         self.close()
         try:
@@ -527,6 +534,29 @@ class _CacheStatsSnapshot:
         return self._entries
 
 
+class OpSession:
+    """One in-flight shard request: the checked-out ``(member, client)``
+    attempts plus the flags the stats layer reads back after the reply
+    drains.  A plain :class:`RemoteShard` session holds exactly one
+    attempt; a :class:`ReplicaSet` session may grow a hedge attempt and
+    fail over across members."""
+
+    __slots__ = ("op", "kw", "attempts", "backups", "started", "first",
+                 "hedged", "failed_over", "winner")
+
+    def __init__(self, op: str, kw: Dict[str, Any],
+                 attempts: List[Tuple[Any, WorkerClient]]) -> None:
+        self.op = op
+        self.kw = kw
+        self.attempts = attempts
+        self.backups: List[Any] = []
+        self.started = time.monotonic()
+        self.first = attempts[0][0] if attempts else None
+        self.hedged = False
+        self.failed_over = False
+        self.winner = None
+
+
 class RemoteShard:
     """Store-surface proxy for one worker-hosted shard.
 
@@ -567,10 +597,17 @@ class RemoteShard:
         # same worker hold independent connections instead of
         # serializing (or worse, interleaving frames) on one.  The lock
         # also guards the scatter memo, the degraded-fallback store,
-        # and the counters.
+        # and the counters.  _conn_gen is the pool generation: every
+        # teardown (close/kill/restart) bumps it, and a connection
+        # checked out under an older generation is closed on release
+        # instead of pooled — without this, a connection created
+        # mid-flight could be returned to the idle pool *after* the
+        # teardown drained it, leaking one socket per kill/restart
+        # cycle.
         self._lock = threading.RLock()
         self._idle: List[WorkerClient] = []
         self._primary_busy = False
+        self._conn_gen = 0
 
     SCATTER_MEMO_MAX = 32
     POOL_MAX = 4
@@ -620,29 +657,38 @@ class RemoteShard:
                     except (WorkerUnavailable, RemoteProtocolError, OSError):
                         self._primary_busy = False
                         raise
+                self.client._pool_gen = self._conn_gen
                 return self.client
             if self._idle:
-                return self._idle.pop()
+                c = self._idle.pop()
+                c._pool_gen = self._conn_gen
+                return c
             address = self.client.address
+            gen = self._conn_gen
         c = WorkerClient(address, op_timeout_s=self._op_timeout_s)
         try:
             c.connect()
         except RemoteProtocolError:
             c.close()
             raise
+        c._pool_gen = gen
         return c
 
     def release(self, c: WorkerClient, broken: bool = False) -> None:
         """Return a checked-out client.  ``broken`` (socket trouble or
         an unread reply left in flight) closes it instead of pooling;
-        the primary client reconnects lazily on its next use."""
+        the primary client reconnects lazily on its next use.  A client
+        checked out before the last teardown (stale pool generation) is
+        always closed — pooling it would resurrect a connection the
+        teardown already drained."""
         with self._lock:
+            stale = getattr(c, "_pool_gen", -1) != self._conn_gen
             if c is self.client:
                 self._primary_busy = False
-                if broken:
+                if broken or stale:
                     c.close()
                 return
-            if (not broken and c.connected
+            if (not broken and not stale and c.connected
                     and c.address == self.client.address
                     and len(self._idle) < self.POOL_MAX - 1):
                 self._idle.append(c)
@@ -655,6 +701,22 @@ class RemoteShard:
             idle, self._idle = self._idle, []
         for c in idle:
             c.close()
+
+    def invalidate_connections(self) -> None:
+        """Unified connection teardown — the one path ``close()``,
+        ``kill_worker``, and ``restart_worker`` all use.  Bumps the
+        pool generation (checked-out connections created mid-flight are
+        closed on release instead of pooled), closes the primary
+        client, and drains the idle pool."""
+        with self._lock:
+            self._conn_gen += 1
+            # _primary_busy is NOT reset here: if a query thread holds
+            # the primary client mid-recv, closing the socket fails its
+            # recv and its own release (stale generation) closes and
+            # un-busies it — resetting early would let a third thread
+            # re-check-out the same client object concurrently.
+        self.client.close()
+        self.close_pool()
 
     def session_send(self, c: WorkerClient, op: str, **kw) -> None:
         """Send ``op`` on a checked-out client, with the same single
@@ -722,6 +784,46 @@ class RemoteShard:
             raise
         finally:
             self.release(c, broken=broken)
+
+    # ------------------------------------------------------- op sessions --
+    def op_begin(self, op: str, **kw) -> OpSession:
+        """Issue ``op`` on a checked-out connection and return the
+        in-flight session — the scatter/gather fan-out issues every
+        shard's ``op_begin`` before the first ``op_finish`` (transport
+        overlaps with worker compute)."""
+        c = self.acquire()
+        try:
+            self.session_send(c, op, **kw)
+        except WorkerUnavailable:
+            self.release(c, broken=True)
+            raise
+        return OpSession(op, kw, [(self, c)])
+
+    def op_finish(self, session: OpSession) -> Dict:
+        """Drain the session's reply.  A definitive error reply
+        (``QueryError``/``WorkerError``) leaves the connection in
+        protocol sync, so it is released clean; socket trouble raises
+        :class:`WorkerUnavailable` and drops the connection."""
+        (sh, c), = session.attempts
+        session.attempts = []
+        try:
+            reply = c.recv()
+        except WorkerUnavailable:
+            sh.release(c, broken=True)
+            raise
+        except (QueryError, WorkerError):
+            sh.release(c)
+            raise
+        sh.release(c)
+        session.winner = sh
+        return reply
+
+    def op_abort(self, session: OpSession) -> None:
+        """Abandon an in-flight session (mid-merge failure): the unread
+        replies make these connections unusable, so drop them."""
+        for sh, c in session.attempts:
+            sh.release(c, broken=True)
+        session.attempts = []
 
     # ----------------------------------------------------- degraded reads --
     def local_store(self) -> ColumnarMetricStore:
@@ -916,11 +1018,605 @@ class RemoteShard:
                 self.client.rpc("shutdown")
             except (WorkerUnavailable, WorkerError, RemoteProtocolError):
                 pass
-        self.client.close()
-        self.close_pool()
+        self.invalidate_connections()
         if self.process is not None:
             self.process.stop()
         self._drop_fallback()
+
+
+class ReplicaSet:
+    """Replica-aware shard proxy: one primary plus ``k-1`` replicas
+    serving copies of the same shard data (docs/replication.md).
+
+    **Writes route only to the primary** — dedup and WAL semantics are
+    exactly the single-worker path — and every write marks the set
+    *stale*: reads pin back to the primary (replicas may be behind its
+    WAL) until the next :meth:`sync`.  ``sync`` ships each replica the
+    segments it is missing (whole-segment adoption, in primary order)
+    plus the primary's WAL tail, fast-forwarding the mutation
+    generation, so a synced replica holds the primary's exact
+    ``(sealed, buffer, seq)`` version and serves byte-identical
+    replies.
+
+    While synced, reads are **hedged**: a request goes to the
+    fastest-responding member first and a second request fires to the
+    next-best member after an adaptive delay (p95 of recent per-shard
+    latencies, clamped); the first reply at the synced version wins and
+    the loser is drained or dropped.  A member that dies mid-request
+    **fails over** to the remaining members instead of entering
+    degraded mode — degraded local execution only remains for the
+    all-members-dead (or stale-and-primary-dead) corner, where the
+    primary's durable directory is still the freshest truth."""
+
+    is_replicated = True
+
+    SCATTER_MEMO_MAX = RemoteShard.SCATTER_MEMO_MAX
+    HEDGE_DEFAULT_S = 0.05   # before enough latency samples exist
+    HEDGE_MIN_S = 0.002
+    HEDGE_MAX_S = 2.0
+    LATENCY_WINDOW = 64
+    # read ops that may fail over to a synced replica; everything else
+    # (ingest, seal, maintenance, replication control) is primary-only
+    _READ_OPS = frozenset({
+        "len", "dups", "version", "records", "select", "scan", "vocab",
+        "cache_stats", "explain", "storage", "scatter", "gather", "ping"})
+
+    def __init__(self, index: int, members: Sequence[RemoteShard],
+                 hedge: bool = True,
+                 hedge_delay_s: Optional[float] = None,
+                 degraded_ok: bool = True) -> None:
+        if not members:
+            raise ValueError("a replica set needs at least one member")
+        self.index = int(index)
+        self.members = list(members)
+        self.primary = self.members[0]
+        self.hedge_enabled = bool(hedge)
+        self.hedge_delay_s = hedge_delay_s  # fixed override; None=adaptive
+        self.degraded_ok = bool(degraded_ok)
+        self._lock = threading.RLock()
+        from collections import deque as _deque
+        self._lat = _deque(maxlen=self.LATENCY_WINDOW)
+        self._member_lat = [0.0] * len(self.members)  # EWMA seconds
+        # _synced[r]: replica r held the primary's exact version at the
+        # last sync; stale: a write landed since, so only the primary
+        # may serve reads regardless of the flags
+        self._synced = [True] + [False] * (len(self.members) - 1)
+        self._synced_version: Optional[tuple] = None
+        self.stale = True
+        self.syncs = 0
+        self.hedged_ops = 0
+        self.hedge_wins = 0
+        self.hedge_cancelled = 0
+        self.failovers = 0
+        self.stale_replies = 0
+        self.degraded_calls = 0
+        # set-level conditional-scatter memo: replies are byte-identical
+        # across synced members at one version, so one decoded map
+        # serves etags for whichever member answers
+        self._scatter_memo: Dict[str, tuple] = {}
+
+    # --------------------------------------------------- identity surface --
+    @property
+    def shard_dir(self) -> Path:
+        return self.primary.shard_dir
+
+    @property
+    def client(self) -> WorkerClient:
+        return self.primary.client
+
+    @property
+    def process(self) -> Optional[LocalWorkerProcess]:
+        return self.primary.process
+
+    def connect(self) -> Dict:
+        """Connect the primary (required); replicas best-effort."""
+        hello = self.primary.connect()
+        for m in self.members[1:]:
+            try:
+                m.connect()
+            except (WorkerUnavailable, RemoteProtocolError, OSError):
+                pass
+        return hello
+
+    def ping(self) -> bool:
+        return any(m.ping() for m in self.members)
+
+    def members_alive(self) -> List[bool]:
+        return [m.ping() for m in self.members]
+
+    def close(self) -> None:
+        for m in self.members:
+            try:
+                m.close()
+            except Exception:  # noqa: BLE001 - teardown best-effort
+                pass
+
+    def _try_reconnect(self) -> bool:
+        ok = self.primary._try_reconnect()
+        for m in self.members[1:]:
+            m._try_reconnect()
+        return ok
+
+    def invalidate_connections(self) -> None:
+        for m in self.members:
+            m.invalidate_connections()
+
+    # ------------------------------------------------------- scatter memo --
+    def scatter_etag(self, fingerprint: str) -> Optional[list]:
+        hit = self.scatter_memo_get(fingerprint)
+        if hit is None:
+            return None
+        return [fingerprint, list(hit[0])]
+
+    def scatter_memo_get(self, fingerprint: str) -> Optional[tuple]:
+        from repro.core.columnar import _lru_memo_get
+        with self._lock:
+            return _lru_memo_get(self._scatter_memo, fingerprint)
+
+    def scatter_memo_put(self, fingerprint: str, version, pmap,
+                         summary: Dict[str, int]) -> None:
+        from repro.core.columnar import _lru_memo_put
+        with self._lock:
+            _lru_memo_put(self._scatter_memo, fingerprint,
+                          (tuple(version), pmap, dict(summary)),
+                          self.SCATTER_MEMO_MAX)
+
+    def drop_scatter_memo(self) -> None:
+        with self._lock:
+            self._scatter_memo.clear()
+        for m in self.members:
+            m.drop_scatter_memo()
+
+    # --------------------------------------------------------- read order --
+    def _read_order(self) -> List[RemoteShard]:
+        """Members eligible to serve this read, fastest first.  Stale
+        sets pin to the primary: an unsynced replica answering would
+        silently miss the writes that staled the set."""
+        with self._lock:
+            if self.stale:
+                return [self.primary]
+            # an unmeasured member (EWMA 0.0) sorts *last*, not first:
+            # preference stays with members that have demonstrated
+            # latency (the primary, initially) and backups earn their
+            # spot through hedge wins and failovers
+            pairs = [(self._member_lat[i] if self._member_lat[i] > 0.0
+                      else float("inf"), i, m)
+                     for i, m in enumerate(self.members) if self._synced[i]]
+        pairs.sort(key=lambda t: (t[0], t[1]))
+        return [m for _lat, _i, m in pairs]
+
+    def _note_latency(self, member: RemoteShard, seconds: float) -> None:
+        with self._lock:
+            self._lat.append(float(seconds))
+            i = self.members.index(member)
+            old = self._member_lat[i]
+            self._member_lat[i] = (float(seconds) if old == 0.0
+                                   else 0.7 * old + 0.3 * float(seconds))
+
+    def _hedge_delay(self) -> float:
+        if self.hedge_delay_s is not None:
+            return float(self.hedge_delay_s)
+        with self._lock:
+            lats = list(self._lat)
+        if len(lats) < 8:
+            return self.HEDGE_DEFAULT_S
+        p95 = float(np.percentile(np.asarray(lats, np.float64), 95.0))
+        return min(max(p95, self.HEDGE_MIN_S), self.HEDGE_MAX_S)
+
+    # ------------------------------------------------------- op sessions --
+    def op_begin(self, op: str, **kw) -> OpSession:
+        """Issue ``op`` to the fastest eligible member; remaining
+        members are kept as hedge/failover backups for
+        :meth:`op_finish`."""
+        order = self._read_order()
+        last: Optional[Exception] = None
+        for k, m in enumerate(order):
+            try:
+                c = m.acquire()
+                try:
+                    m.session_send(c, op, **kw)
+                except WorkerUnavailable:
+                    m.release(c, broken=True)
+                    raise
+            except (WorkerUnavailable, RemoteProtocolError, OSError) as exc:
+                last = exc
+                continue
+            session = OpSession(op, kw, [(m, c)])
+            session.backups = list(order[k + 1:])
+            if k:
+                session.failed_over = True
+                with self._lock:
+                    self.failovers += 1
+            return session
+        if isinstance(last, WorkerUnavailable):
+            raise last
+        raise WorkerUnavailable(
+            f"no reachable member for shard {self.index}"
+            + (f": {last}" if last is not None else ""))
+
+    def _fire_next(self, session: OpSession, hedge: bool) -> bool:
+        """Issue the session's op to the next backup member (a hedge on
+        the timer, or an immediate failover when every in-flight
+        attempt died).  Returns whether an attempt was started."""
+        while session.backups:
+            m = session.backups.pop(0)
+            try:
+                c = m.acquire()
+                try:
+                    m.session_send(c, session.op, **session.kw)
+                except WorkerUnavailable:
+                    m.release(c, broken=True)
+                    continue
+            except (WorkerUnavailable, RemoteProtocolError, OSError):
+                continue
+            session.attempts.append((m, c))
+            with self._lock:
+                if hedge:
+                    session.hedged = True
+                    self.hedged_ops += 1
+                else:
+                    session.failed_over = True
+                    self.failovers += 1
+            return True
+        return False
+
+    def _wait_readable(self, session: OpSession,
+                       timeout: Optional[float]):
+        """Select over the in-flight attempts' sockets.  Returns the
+        first readable ``(member, client)``, or ``None`` on timeout.
+        Attempts whose socket is already gone are failed immediately."""
+        import select as _select
+        fds = {}
+        for m, c in list(session.attempts):
+            try:
+                fds[c.fileno()] = (m, c)
+            except (WorkerUnavailable, OSError):
+                m.release(c, broken=True)
+                session.attempts.remove((m, c))
+        if not fds:
+            return None
+        try:
+            ready, _w, _x = _select.select(list(fds), [], [], timeout)
+        except OSError:
+            return None
+        if not ready:
+            return None
+        return fds[ready[0]]
+
+    def _cancel_losers(self, session: OpSession) -> None:
+        """A winner was chosen: drain any loser whose reply already
+        arrived (its connection stays usable), drop the rest (an unread
+        reply in flight would desync the stream)."""
+        import select as _select
+        for m, c in list(session.attempts):
+            drained = False
+            try:
+                if _select.select([c.fileno()], [], [], 0)[0]:
+                    try:
+                        c.recv()
+                        drained = True
+                    except (QueryError, WorkerError):
+                        drained = True  # error frame fully consumed
+                    except WorkerUnavailable:
+                        drained = False
+            except (WorkerUnavailable, OSError):
+                drained = False
+            m.release(c, broken=not drained)
+            if not drained:
+                with self._lock:
+                    self.hedge_cancelled += 1
+        session.attempts = []
+
+    def op_finish(self, session: OpSession) -> Dict:
+        """Drain the first usable reply, firing the hedge when the
+        adaptive delay expires and failing over when attempts die.  A
+        non-primary reply is only accepted at the synced version — a
+        replica that somehow lags answers are discarded (counted in
+        ``stale_replies``), never served."""
+        hedge_at: Optional[float] = None
+        if self.hedge_enabled and session.backups:
+            hedge_at = session.started + self._hedge_delay()
+        op_timeout = max((c.op_timeout_s for _m, c in session.attempts),
+                         default=60.0)
+        deadline = session.started + op_timeout
+        while True:
+            if not session.attempts:
+                if not self._fire_next(session, hedge=False):
+                    raise WorkerUnavailable(
+                        f"shard {self.index}: every replica-set member "
+                        f"failed mid-{session.op}")
+                continue
+            now = time.monotonic()
+            if now > deadline:
+                self.op_abort(session)
+                raise WorkerUnavailable(
+                    f"shard {self.index}: {session.op} timed out across "
+                    "replica-set members")
+            timeout = deadline - now
+            if hedge_at is not None:
+                timeout = min(timeout, max(0.0, hedge_at - now))
+            ready = self._wait_readable(session, timeout)
+            if ready is None:
+                if hedge_at is not None and time.monotonic() >= hedge_at:
+                    hedge_at = None  # at most one hedge per op
+                    self._fire_next(session, hedge=True)
+                continue
+            m, c = ready
+            try:
+                reply = c.recv()
+            except WorkerUnavailable:
+                m.release(c, broken=True)
+                session.attempts.remove((m, c))
+                continue
+            except (QueryError, WorkerError):
+                # a definitive error reply: the query itself is bad on
+                # every member — cancel the others and propagate
+                m.release(c)
+                session.attempts.remove((m, c))
+                self._cancel_losers(session)
+                raise
+            if (m is not self.primary and "version" in reply
+                    and self._synced_version is not None
+                    and tuple(reply["version"]) != self._synced_version):
+                with self._lock:
+                    self.stale_replies += 1
+                m.release(c)
+                session.attempts.remove((m, c))
+                continue
+            session.attempts.remove((m, c))
+            session.winner = m
+            elapsed = time.monotonic() - session.started
+            self._note_latency(m, elapsed)
+            for loser, _lc in session.attempts:
+                # the loser took at least this long — teach the
+                # preference order about slow members even though they
+                # never produce a measured reply
+                self._note_latency(loser, elapsed)
+            self._cancel_losers(session)
+            m.release(c)
+            if session.hedged and m is not session.first:
+                with self._lock:
+                    self.hedge_wins += 1
+            return reply
+
+    def op_abort(self, session: OpSession) -> None:
+        for m, c in session.attempts:
+            m.release(c, broken=True)
+        session.attempts = []
+
+    # ---------------------------------------------------- failover reads --
+    def rpc(self, op: str, **kw) -> Dict:
+        """Round-trip with read failover: read ops walk the eligible
+        members; anything else goes to the primary only."""
+        if op not in self._READ_OPS:
+            return self.primary.rpc(op, **kw)
+        session = self.op_begin(op, **kw)
+        return self.op_finish(session)
+
+    def _read(self, name: str, *args, **kw):
+        """Call a store-surface method with member failover.  Members
+        are built with degraded execution disabled, so a dead worker
+        raises :class:`WorkerUnavailable` here instead of silently
+        opening its directory; only when every eligible member is dead
+        does the *set* degrade — to the primary's directory, whose WAL
+        is at least as fresh as any replica."""
+        order = self._read_order()
+        for k, m in enumerate(order):
+            try:
+                attr = getattr(m, name)
+                out = attr(*args, **kw) if callable(attr) else attr
+            except WorkerUnavailable:
+                continue
+            if k:
+                with self._lock:
+                    self.failovers += 1
+            return out
+        return self._degraded_read(name, args, kw)
+
+    def _degraded(self) -> ColumnarMetricStore:
+        if not self.degraded_ok:
+            raise WorkerUnavailable(
+                f"shard {self.index}: no replica-set member reachable "
+                "and degraded execution is disabled")
+        with self._lock:
+            self.degraded_calls += 1
+        return self.primary.local_store()
+
+    def _degraded_read(self, name: str, args, kw):
+        store = self._degraded()
+        if name == "__len__":
+            return len(store)
+        if name == "duplicates_dropped":
+            return store.duplicates_dropped
+        if name == "_version":
+            return store._version()
+        if name == "records":
+            return store.records
+        if name == "select":
+            return list(store.select(*args, **kw))
+        if name == "scan":
+            return store.scan(*args, **kw)
+        if name in ("jobs", "kinds"):
+            return getattr(store, name)()
+        if name == "hosts":
+            return store.hosts(*args, **kw)
+        if name == "storage_stats":
+            return store.storage_stats()
+        if name == "partial_cache":
+            pc = store.partial_cache
+            return _CacheStatsSnapshot(pc.hits, pc.misses, pc.evictions,
+                                       len(pc))
+        raise WorkerUnavailable(
+            f"shard {self.index}: no degraded mapping for {name!r}")
+
+    # ------------------------------------------------------ store surface --
+    def _mark_stale(self) -> None:
+        with self._lock:
+            self.stale = True
+
+    def insert(self, rec: MetricRecord) -> bool:
+        accepted = self.primary.insert(rec)
+        if accepted:
+            self._mark_stale()
+        return accepted
+
+    def ingest_lines(self, lines: Iterable[str]) -> int:
+        n = self.primary.ingest_lines(lines)
+        if n:
+            self._mark_stale()
+        return n
+
+    def seal(self) -> None:
+        self.primary.seal()
+        self._mark_stale()
+
+    def __len__(self) -> int:
+        return int(self._read("__len__"))
+
+    @property
+    def duplicates_dropped(self) -> int:
+        return int(self._read("duplicates_dropped"))
+
+    def _version(self) -> tuple:
+        return tuple(self._read("_version"))
+
+    @property
+    def records(self) -> List[MetricRecord]:
+        return self._read("records")
+
+    def select(self, job=None, kind=None, since=None, until=None):
+        # materialized so the failover decision happens here, not at
+        # first iteration of a lazily-raising generator
+        rows = self._read("select", job=job, kind=kind,
+                          since=since, until=until)
+        return iter(list(rows))
+
+    def scan(self, job=None, kind=None, since=None, until=None,
+             fields: Iterable[str] = ()) -> ColumnScan:
+        return self._read("scan", job=job, kind=kind, since=since,
+                          until=until, fields=tuple(fields))
+
+    def jobs(self) -> List[str]:
+        return self._read("jobs")
+
+    def kinds(self) -> List[str]:
+        return self._read("kinds")
+
+    def hosts(self, job=None) -> List[str]:
+        return self._read("hosts", job=job)
+
+    @property
+    def partial_cache(self) -> _CacheStatsSnapshot:
+        return self._read("partial_cache")
+
+    def storage_stats(self) -> Dict:
+        return self._read("storage_stats")
+
+    def local_store(self) -> ColumnarMetricStore:
+        return self.primary.local_store()
+
+    # -------------------------------------------------- maintenance tier --
+    def compact(self, **kwargs) -> Dict:
+        """Compaction rewrites the primary's committed history, so the
+        set goes stale (the next :meth:`sync` detects the divergence
+        and fully re-adopts each replica)."""
+        stats = self.primary.compact(**kwargs)
+        self._mark_stale()
+        self.drop_scatter_memo()
+        return stats
+
+    def apply_retention(self, **kwargs) -> Dict:
+        stats = self.primary.apply_retention(**kwargs)
+        self._mark_stale()
+        self.drop_scatter_memo()
+        return stats
+
+    # ---------------------------------------------------------- catch-up --
+    def mark_member_unsynced(self, r: int) -> None:
+        """A replica member was restarted/replaced: keep it out of the
+        read set until the next sync verifies its version."""
+        if r:
+            with self._lock:
+                self._synced[r] = False
+
+    def sync(self) -> Dict[str, Any]:
+        """Bring every reachable replica to the primary's exact
+        version: diff committed histories via ``sync_state``, ship
+        missing segments whole (``fetch_segment`` → ``adopt_replica``,
+        one segment per frame so frames stay bounded), then ship the
+        WAL tail + mutation generation.  A replica whose history is not
+        a prefix of the primary's (compaction/retention rewrote the
+        past, or a foreign directory) is reset and re-adopts
+        everything.  Returns sync stats; clears ``stale`` on success so
+        hedged/failover reads open up again."""
+        try:
+            pstate = self.primary.rpc("sync_state")
+        except (WorkerUnavailable, WorkerError):
+            # no source of truth to converge to — leave flags untouched
+            # (replicas keep serving at the last synced version)
+            return {"replicas": len(self.members) - 1, "synced": 0,
+                    "segments_shipped": 0, "resets": 0,
+                    "unreachable": 0, "primary_unreachable": True}
+        pversion = tuple(pstate["version"])
+        psealed = [(str(e["stem"]), str(e["uid"]))
+                   for e in pstate["sealed"]]
+        prollups = [(str(e["stem"]), str(e["uid"]))
+                    for e in pstate["rollups"]]
+        stats = {"replicas": len(self.members) - 1, "synced": 0,
+                 "segments_shipped": 0, "resets": 0, "unreachable": 0}
+        fetched: Dict[str, Dict] = {}
+        synced = [True] + [False] * (len(self.members) - 1)
+        for r, m in enumerate(self.members[1:], start=1):
+            try:
+                rstate = m.rpc("sync_state")
+                rsealed = [str(e["uid"]) for e in rstate["sealed"]]
+                rrollups = [str(e["uid"]) for e in rstate["rollups"]]
+                p_uids = [u for _s, u in psealed]
+                pr_uids = [u for _s, u in prollups]
+                reset = not (rsealed == p_uids[:len(rsealed)]
+                             and rrollups == pr_uids[:len(rrollups)])
+                if reset:
+                    stats["resets"] += 1
+                    m.rpc("adopt_replica", reset=True)
+                    todo = psealed + prollups
+                else:
+                    todo = (psealed[len(rsealed):]
+                            + prollups[len(rrollups):])
+                for stem, _uid in todo:
+                    payload = fetched.get(stem)
+                    if payload is None:
+                        got = self.primary.rpc("fetch_segment", stem=stem)
+                        payload = {"manifest": got["manifest"],
+                                   "bin": got["bin"]}
+                        fetched[stem] = payload
+                    m.rpc("adopt_replica", segments=[payload])
+                    stats["segments_shipped"] += 1
+                reply = m.rpc("adopt_replica",
+                              buffer_lines=pstate["buffer_lines"],
+                              seq=pstate["seq"])
+                if tuple(reply["version"]) == pversion:
+                    synced[r] = True
+                    stats["synced"] += 1
+            except (WorkerUnavailable, WorkerError):
+                stats["unreachable"] += 1
+        with self._lock:
+            self._synced = synced
+            self._synced_version = pversion
+            self.stale = False
+            self.syncs += 1
+        return stats
+
+    def replication_stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"members": len(self.members),
+                    "synced_members": sum(1 for ok in self._synced if ok),
+                    "stale": self.stale, "syncs": self.syncs,
+                    "hedged_ops": self.hedged_ops,
+                    "hedge_wins": self.hedge_wins,
+                    "hedge_cancelled": self.hedge_cancelled,
+                    "failovers": self.failovers,
+                    "stale_replies": self.stale_replies,
+                    "degraded_calls": self.degraded_calls}
 
 
 def _trace_overlaps(trace: List[Tuple[str, int]]) -> bool:
@@ -975,7 +1671,10 @@ class RemoteShardedAggregator(ShardedAggregator):
                  op_timeout_s: float = 60.0,
                  spawn_timeout_s: float = 30.0,
                  worker_idle_timeout_s: Optional[float] = None,
-                 degraded_ok: bool = True) -> None:
+                 degraded_ok: bool = True,
+                 replicas: int = 1,
+                 hedge: bool = True,
+                 hedge_delay_s: Optional[float] = None) -> None:
         if directory is None:
             raise ValueError("RemoteShardedAggregator requires a directory "
                              "(workers serve durable shard dirs)")
@@ -987,6 +1686,15 @@ class RemoteShardedAggregator(ShardedAggregator):
         if addresses is not None and len(addresses) != num_shards:
             raise ValueError(f"{len(addresses)} addresses for "
                              f"{num_shards} shards")
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if replicas > 1 and addresses is not None:
+            raise ValueError("replicas > 1 requires a spawned fleet "
+                             "(replica directory layout is coordinator-"
+                             "owned); attach external workers unreplicated")
+        self._replicas = int(replicas)
+        self._hedge = bool(hedge)
+        self._hedge_delay_s = hedge_delay_s
         self._addresses = addresses
         self._spawn = bool(spawn) if spawn is not None else addresses is None
         self._op_timeout_s = float(op_timeout_s)
@@ -1018,8 +1726,16 @@ class RemoteShardedAggregator(ShardedAggregator):
                     idle_timeout_s=self._worker_idle_timeout_s,
                     spawn_timeout_s=self._spawn_timeout_s)
 
+    def _replica_dirname(self, i: int, r: int) -> str:
+        """Replica ``r > 0`` of shard ``i`` lives beside the primary
+        directory (``shard-02.r1``) — same shard set, never listed in
+        the manifest's routing ``shard_dirs``."""
+        return f"{self._shard_dirname(i)}.r{r}"
+
     def _make_shards(self, num_shards: int, **store_kwargs):
         self._store_kwargs = dict(store_kwargs)
+        if self._replicas > 1:
+            return self._make_replica_sets(num_shards, store_kwargs)
         shards: List[RemoteShard] = []
         try:
             for i in range(num_shards):
@@ -1047,6 +1763,50 @@ class RemoteShardedAggregator(ShardedAggregator):
             raise
         return shards
 
+    def _make_replica_sets(self, num_shards: int,
+                           store_kwargs: Dict[str, Any]):
+        """Spawn ``replicas`` workers per shard and wrap each group in
+        a :class:`ReplicaSet`.  Members get ``degraded_ok=False`` so a
+        dead member surfaces as :class:`WorkerUnavailable` for the set
+        to fail over — only the *set* may degrade, and only when every
+        member is gone."""
+        shards: List[ReplicaSet] = []
+        try:
+            for i in range(num_shards):
+                members: List[RemoteShard] = []
+                try:
+                    for r in range(self._replicas):
+                        name = (self._shard_dirname(i) if r == 0
+                                else self._replica_dirname(i, r))
+                        process = LocalWorkerProcess(
+                            self.directory / name,
+                            **self._worker_spawn_kwargs())
+                        members.append(RemoteShard(
+                            i, self.directory / name, process=process,
+                            op_timeout_s=self._op_timeout_s,
+                            store_kwargs=store_kwargs,
+                            degraded_ok=False))
+                except Exception:
+                    for m in members:
+                        try:
+                            m.close()
+                        except Exception:  # noqa: BLE001
+                            pass
+                    raise
+                rset = ReplicaSet(i, members, hedge=self._hedge,
+                                  hedge_delay_s=self._hedge_delay_s,
+                                  degraded_ok=self.degraded_ok)
+                shards.append(rset)
+                rset.connect()
+        except Exception:
+            for sh in shards:
+                try:
+                    sh.close()
+                except Exception:  # noqa: BLE001 - teardown best-effort
+                    pass
+            raise
+        return shards
+
     def _record_topology(self) -> None:
         """Record the live worker topology in ``shards.json`` (purely
         informational — operators can see which processes last served
@@ -1054,37 +1814,61 @@ class RemoteShardedAggregator(ShardedAggregator):
         from repro.core import segmentio
         workers = []
         for sh in self.shards:
-            workers.append({
-                "shard": sh.index,
-                "host": sh.client.address[0],
-                "port": sh.client.address[1],
-                "pid": (sh.process.proc.pid
-                        if sh.process is not None else None),
-            })
+            members = (sh.members if getattr(sh, "is_replicated", False)
+                       else [sh])
+            for r, m in enumerate(members):
+                workers.append({
+                    "shard": sh.index,
+                    "replica": r,
+                    "dir": m.shard_dir.name,
+                    "host": m.client.address[0],
+                    "port": m.client.address[1],
+                    "pid": (m.process.proc.pid
+                            if m.process is not None else None),
+                })
         try:
             segmentio.update_shardset_manifest(self.directory,
                                                {"workers": workers})
+            if self._replicas > 1:
+                # epoch-stamped membership: every (re)spawned topology
+                # bumps the replication epoch, so two coordinators can
+                # tell which member list is the current generation
+                segmentio.stamp_replication(self.directory,
+                                            self._replicas, workers)
         except (OSError, ValueError):
             pass  # topology notes must never fail a query path
 
-    def restart_worker(self, i: int) -> None:
-        """Respawn shard ``i``'s worker process; the fresh process
-        re-adopts the durable shard directory (segments mmap back in,
-        the WAL tail replays, dedup keys reload)."""
+    def _member_target(self, i: int, member: int):
+        sh = self.shards[i]
+        if getattr(sh, "is_replicated", False):
+            return sh, sh.members[member]
+        if member:
+            raise ValueError(f"shard {i} is not replicated "
+                             f"(member={member})")
+        return sh, sh
+
+    def restart_worker(self, i: int, member: int = 0) -> None:
+        """Respawn shard ``i``'s worker process (replica ``member`` on
+        a replicated fleet); the fresh process re-adopts the durable
+        shard directory (segments mmap back in, the WAL tail replays,
+        dedup keys reload).  A restarted *replica* stays out of the
+        read set until the next :meth:`sync_replicas` verifies it
+        matches the primary's version (catch-up)."""
         if not self._spawn:
             raise RuntimeError("only a spawned fleet can be restarted here; "
                                "restart external workers out-of-band and "
                                "call reconnect_worker()")
-        sh = self.shards[i]
-        sh.client.close()
-        sh.close_pool()
-        if sh.process is not None:
-            sh.process.stop()
-        sh.process = LocalWorkerProcess(sh.shard_dir,
-                                        **self._worker_spawn_kwargs())
-        sh.client = WorkerClient(sh.process.address,
-                                 op_timeout_s=self._op_timeout_s)
-        sh.connect()
+        sh, target = self._member_target(i, member)
+        target.invalidate_connections()
+        if target.process is not None:
+            target.process.stop()
+        target.process = LocalWorkerProcess(target.shard_dir,
+                                            **self._worker_spawn_kwargs())
+        target.client = WorkerClient(target.process.address,
+                                     op_timeout_s=self._op_timeout_s)
+        target.connect()
+        if getattr(sh, "is_replicated", False):
+            sh.mark_member_unsynced(member)
         self._drop_memos()
         self._record_topology()
 
@@ -1093,16 +1877,56 @@ class RemoteShardedAggregator(ShardedAggregator):
         restarted worker).  Returns success."""
         return self.shards[i]._try_reconnect()
 
-    def kill_worker(self, i: int) -> None:
-        """Hard-kill shard ``i``'s worker (tests: degraded mode)."""
-        sh = self.shards[i]
-        if sh.process is not None:
-            sh.process.kill()
-        sh.client.close()
-        sh.close_pool()
+    def kill_worker(self, i: int, member: int = 0) -> None:
+        """Hard-kill one worker of shard ``i`` (tests: failover and
+        degraded mode).  Connection teardown goes through the same
+        :meth:`RemoteShard.invalidate_connections` path as restart and
+        close, so checked-out pooled connections created mid-flight are
+        closed on release instead of leaking."""
+        _sh, target = self._member_target(i, member)
+        if target.process is not None:
+            target.process.kill()
+        target.invalidate_connections()
 
     def workers_alive(self) -> List[bool]:
         return [sh.ping() for sh in self.shards]
+
+    def sync_replicas(self) -> List[Dict[str, Any]]:
+        """Converge every replica to its primary's exact ``(sealed,
+        buffer, seq)`` version (whole-segment adoption + WAL-tail
+        shipping — see :meth:`ReplicaSet.sync`).  Returns per-shard
+        sync stats; a no-op (empty stats) on an unreplicated fleet."""
+        out: List[Dict[str, Any]] = []
+        for sh in self.shards:
+            if getattr(sh, "is_replicated", False):
+                out.append(sh.sync())
+            else:
+                out.append({"replicas": 0, "synced": 0,
+                            "segments_shipped": 0, "resets": 0,
+                            "unreachable": 0})
+        return out
+
+    def replication_stats(self) -> Optional[Dict[str, Any]]:
+        """Fleet-wide replication counters summed over the replica
+        sets, or ``None`` on an unreplicated fleet."""
+        sets = [sh for sh in self.shards
+                if getattr(sh, "is_replicated", False)]
+        if not sets:
+            return None
+        out: Dict[str, Any] = {
+            "replica_sets": len(sets), "replicas": int(self._replicas),
+            "members": 0, "synced_members": 0, "stale_sets": 0,
+            "syncs": 0, "hedged_ops": 0, "hedge_wins": 0,
+            "hedge_cancelled": 0, "failovers": 0, "stale_replies": 0,
+            "degraded_calls": 0}
+        for sh in sets:
+            s = sh.replication_stats()
+            out["stale_sets"] += int(s["stale"])
+            for k in ("members", "synced_members", "syncs", "hedged_ops",
+                      "hedge_wins", "hedge_cancelled", "failovers",
+                      "stale_replies", "degraded_calls"):
+                out[k] += int(s[k])
+        return out
 
     def drop_scatter_memos(self) -> None:
         """Forget every coordinator-side decoded partial map (so the
@@ -1143,16 +1967,17 @@ class RemoteShardedAggregator(ShardedAggregator):
             "directory, then reopen it with RemoteShardedAggregator")
 
     # -------------------------------------------------------------- query --
-    def _release_unread(self, sessions: List[Optional["WorkerClient"]]
+    def _release_unread(self, sessions: List[Optional[OpSession]]
                         ) -> None:
         """A reply-merge loop that fails mid-way leaves later issued
         requests' replies buffered on their sockets — consuming one as
         the answer to a *future* request would silently serve stale
-        results forever.  Drop those connections instead; fresh ones
-        are opened transparently on the next checkout."""
-        for k, c in enumerate(sessions):
-            if c is not None:
-                self.shards[k].release(c, broken=True)
+        results forever.  Abort those sessions (their connections are
+        dropped); fresh ones are opened transparently on the next
+        checkout."""
+        for k, s in enumerate(sessions):
+            if s is not None:
+                self.shards[k].op_abort(s)
                 sessions[k] = None
 
     def query_with_stats(self, q: str, engine: Optional[str] = None,
@@ -1214,28 +2039,25 @@ class RemoteShardedAggregator(ShardedAggregator):
         ``not_modified`` answer is relative to the etag that was sent,
         not to whatever the memo holds by the time it arrives."""
         state = plan.state()
-        sessions: List[Optional[WorkerClient]] = [None] * self.num_shards
+        sessions: List[Optional[OpSession]] = [None] * self.num_shards
         hits: List[Optional[tuple]] = [None] * self.num_shards
         for i, sh in enumerate(self.shards):
             hit = sh.scatter_memo_get(plan.fingerprint)
             hits[i] = hit
-            c = None
             try:
-                c = sh.acquire()
                 etag = ([plan.fingerprint, list(hit[0])]
                         if hit is not None else None)
-                sh.session_send(c, "scatter", plan=state, etag=etag)
-                sessions[i] = c
+                sessions[i] = sh.op_begin("scatter", plan=state, etag=etag)
                 trace.append(("send", i))
             except WorkerUnavailable:
-                if c is not None:
-                    sh.release(c, broken=True)
+                pass
         stats = {"mode": "scatter_gather", "remote": True,
                  "shards": self.num_shards, "fingerprint": plan.fingerprint,
                  "segments_cached": 0, "segments_computed": 0,
                  "buffer_rows": 0, "rollup_segments": 0,
                  "rollup_replaced": 0, "degraded_shards": 0,
-                 "shards_unchanged": 0}
+                 "shards_unchanged": 0, "hedged_shards": 0,
+                 "failover_shards": 0}
         counter_keys = ("segments_cached", "segments_computed",
                         "buffer_rows", "rollup_segments",
                         "rollup_replaced")
@@ -1245,16 +2067,16 @@ class RemoteShardedAggregator(ShardedAggregator):
             for i, sh in enumerate(self.shards):
                 pmap = None
                 reply = None
-                c = sessions[i]
-                if c is not None:
+                s = sessions[i]
+                if s is not None:
                     try:
-                        reply = c.recv()
+                        reply = sh.op_finish(s)
                         trace.append(("recv", i))
+                        stats["hedged_shards"] += int(s.hedged)
+                        stats["failover_shards"] += int(s.failed_over)
                         sessions[i] = None
-                        sh.release(c)
                     except WorkerUnavailable:
                         sessions[i] = None
-                        sh.release(c, broken=True)
                 if reply is not None:
                     if reply.get("fallback"):
                         fell_back = True
@@ -1335,36 +2157,32 @@ class RemoteShardedAggregator(ShardedAggregator):
         coordinator restores canonical (ts, shard, local) order.
         Returns ``(rows, rest_stages, stats)``."""
         wire_stages = [[str(t) for t in toks] for toks in stages]
-        sessions: List[Optional[WorkerClient]] = [None] * self.num_shards
+        sessions: List[Optional[OpSession]] = [None] * self.num_shards
         for i, sh in enumerate(self.shards):
-            c = None
             try:
-                c = sh.acquire()
-                sh.session_send(c, "gather", stages=wire_stages)
-                sessions[i] = c
+                sessions[i] = sh.op_begin("gather", stages=wire_stages)
                 trace.append(("send", i))
             except WorkerUnavailable:
-                if c is not None:
-                    sh.release(c, broken=True)
+                pass
         _terms, rest = splunklite._leading_terms(stages)
         ts_parts: List[np.ndarray] = []
         row_parts: List[List[Dict]] = []
-        degraded = 0
+        degraded = hedged = failed_over = 0
         try:
             for i, sh in enumerate(self.shards):
                 ts = rows = None
-                c = sessions[i]
-                if c is not None:
+                s = sessions[i]
+                if s is not None:
                     try:
-                        reply = c.recv()
+                        reply = sh.op_finish(s)
                         trace.append(("recv", i))
+                        hedged += int(s.hedged)
+                        failed_over += int(s.failed_over)
                         sessions[i] = None
-                        sh.release(c)
                         ts = decode_array(reply["ts"])
                         rows = decode_rows(reply["rows"])
                     except WorkerUnavailable:
                         sessions[i] = None
-                        sh.release(c, broken=True)
                 if ts is None:
                     if not self.degraded_ok:
                         raise WorkerUnavailable(
@@ -1387,6 +2205,7 @@ class RemoteShardedAggregator(ShardedAggregator):
         stats = {
             "mode": "exact_gather", "remote": True,
             "shards": self.num_shards, "degraded_shards": degraded,
+            "hedged_shards": hedged, "failover_shards": failed_over,
             "overlap": _trace_overlaps(trace)}
         all_rows = [r for part in row_parts for r in part]
         if not all_rows:
@@ -1413,6 +2232,8 @@ class RemoteShardedAggregator(ShardedAggregator):
         for sh in self.shards:
             info: Dict[str, Any] = {"shard": sh.index,
                                     "degraded_calls": sh.degraded_calls}
+            if getattr(sh, "is_replicated", False):
+                info["replicas_alive"] = sh.members_alive()
             try:
                 if plan is not None:
                     r = sh.rpc("explain", fingerprint=plan.fingerprint)
@@ -1446,6 +2267,9 @@ class RemoteShardedAggregator(ShardedAggregator):
             "cache": {"hits": hits, "misses": misses, "entries": entries},
             "storage": self._merge_storage_stats(storage_parts),
         }
+        rep = self.replication_stats()
+        if rep is not None:
+            out["replication"] = rep
         if plan is not None:
             out.update({
                 "mode": "scatter_gather",

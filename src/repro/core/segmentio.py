@@ -566,6 +566,28 @@ def update_shardset_manifest(directory: os.PathLike, extra: Dict) -> Dict:
     return manifest
 
 
+def stamp_replication(directory: os.PathLike, k: int,
+                      members: List[Dict]) -> Dict:
+    """Record the replica-set topology in the shard-set manifest,
+    epoch-stamped (docs/replication.md).
+
+    ``members`` is one entry per ``(shard, replica)`` worker — replica
+    0 is the shard's primary (the only member that accepts writes);
+    entries carry the served directory name plus whatever liveness info
+    the caller has (host/port/pid).  Every call bumps ``epoch``, so
+    after failover/restart churn an observer can tell the current
+    topology from a stale copy.  Routing keys are still protected by
+    :func:`update_shardset_manifest` — replication is an overlay, never
+    a rewrite of how records route to shards.  Returns the
+    ``replication`` block as written."""
+    manifest = load_shardset_manifest(directory)
+    prev = manifest.get("replication") if manifest else None
+    epoch = (int(prev.get("epoch", 0)) + 1) if isinstance(prev, dict) else 1
+    block = {"k": int(k), "epoch": epoch, "members": list(members)}
+    update_shardset_manifest(directory, {"replication": block})
+    return block
+
+
 def load_segment(manifest_path: os.PathLike,
                  manifest: Optional[Dict] = None) -> MappedSegment:
     """Map one committed segment.  Raises ``ValueError``/``OSError`` on

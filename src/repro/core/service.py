@@ -317,7 +317,12 @@ class QueryService:
             out["result_cache_entries"] = len(self._result_cache)
             out["outstanding"] = {t: n for t, n in
                                   self._outstanding.items() if n}
-            return out
+        rep = getattr(self.store, "replication_stats", None)
+        if callable(rep):
+            r = rep()
+            if r:
+                out["replication"] = r
+        return out
 
     # ------------------------------------------------------------- scheduler --
     def _next_flight(self) -> Optional[_Flight]:

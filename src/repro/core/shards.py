@@ -366,6 +366,14 @@ class ShardedAggregator:
         per_shard = [shard.storage_stats() for shard in self.shards]
         return self._merge_storage_stats(per_shard)
 
+    def replication_stats(self) -> Optional[Dict[str, Any]]:
+        """Replication counters (hedges, failovers, syncs) for fleets
+        that replicate shards; ``None`` here — an in-process shard set
+        has exactly one copy of each shard.  The remote fleet overrides
+        this (docs/replication.md), and :meth:`QueryService.stats`
+        surfaces whatever the store reports."""
+        return None
+
     @staticmethod
     def _merge_storage_stats(per_shard: List[Dict]) -> Dict:
         total: Dict[str, Any] = {k: 0 for k in ("segments", "files",

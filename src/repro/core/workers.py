@@ -64,16 +64,27 @@ class ShardWorker:
                  wal_fsync: bool = False,
                  partial_cache_entries: int = 512,
                  idle_timeout_s: Optional[float] = None) -> None:
-        self.store = ColumnarMetricStore(
-            directory=directory, seal_threshold=seal_threshold,
-            dedup_horizon_s=dedup_horizon_s, wal_fsync=wal_fsync,
-            partial_cache_entries=partial_cache_entries)
+        self._store_kwargs = dict(
+            seal_threshold=seal_threshold, dedup_horizon_s=dedup_horizon_s,
+            wal_fsync=wal_fsync, partial_cache_entries=partial_cache_entries)
+        self.store = ColumnarMetricStore(directory=directory,
+                                         **self._store_kwargs)
         self.sock = socket.create_server((host, int(port)))
         self.sock.settimeout(0.5)
         self.address = self.sock.getsockname()[:2]
         self.idle_timeout_s = idle_timeout_s
         self.requests_served = 0
         self._shutdown = False
+        # fault-injection knob (``set_delay`` op): sleep before serving
+        # scatter/gather, so tests and benchmarks can make one worker
+        # artificially slow (hedged-scatter tail-latency measurements)
+        self.delay_s = 0.0
+        # _last_activity, requests_served, and the in-flight count are
+        # touched from every per-connection thread plus the accept
+        # loop's idle check — one small lock keeps the counters exact
+        # (lost += updates made them lie under thread-per-connection)
+        self._stats_lock = threading.Lock()
+        self._inflight = 0
         self._last_activity = time.monotonic()
         # one thread per connection; ops serialize on this lock so a
         # scatter's version read and its partial computation see one
@@ -82,9 +93,23 @@ class ShardWorker:
         self._conn_threads: List[threading.Thread] = []
 
     # ------------------------------------------------------------ serving --
+    def _touch(self) -> None:
+        with self._stats_lock:
+            self._last_activity = time.monotonic()
+
     def _idle_expired(self) -> bool:
-        return (self.idle_timeout_s is not None and
-                time.monotonic() - self._last_activity > self.idle_timeout_s)
+        """Idle only counts while nothing is in flight: a request whose
+        handler runs longer than ``idle_timeout_s`` (a cold fleet scan,
+        a replica catch-up) must not get its worker shut down
+        underneath it — the timer starts again when the reply is
+        sent."""
+        if self.idle_timeout_s is None:
+            return False
+        with self._stats_lock:
+            if self._inflight:
+                return False
+            idle_for = time.monotonic() - self._last_activity
+        return idle_for > self.idle_timeout_s
 
     def serve_forever(self) -> None:
         try:
@@ -112,7 +137,7 @@ class ShardWorker:
 
     def _serve_conn(self, conn: socket.socket) -> None:
         conn.settimeout(0.5)
-        self._last_activity = time.monotonic()
+        self._touch()
         while not self._shutdown:
             try:
                 msg = self._read_frame(conn)
@@ -120,13 +145,23 @@ class ShardWorker:
                 return
             except (OSError, remote.RemoteProtocolError):
                 return  # framing broken: drop the connection, keep serving
-            self._last_activity = time.monotonic()
-            reply = self.handle(msg)
+            with self._stats_lock:
+                self._inflight += 1
+                self._last_activity = time.monotonic()
+            served = False
             try:
-                remote.send_frame(conn, reply)
-            except (OSError, ValueError):
-                return
-            self.requests_served += 1
+                reply = self.handle(msg)
+                try:
+                    remote.send_frame(conn, reply)
+                    served = True
+                except (OSError, ValueError):
+                    return
+            finally:
+                with self._stats_lock:
+                    self._inflight -= 1
+                    self._last_activity = time.monotonic()
+                    if served:
+                        self.requests_served += 1
 
     def _read_frame(self, conn: socket.socket) -> Dict:
         """Read one frame, waking every 0.5s while *between* frames to
@@ -182,6 +217,10 @@ class ShardWorker:
         if fn is None or op.startswith("_"):
             return {"ok": False, "kind": "RemoteProtocolError",
                     "error": f"unknown op {op!r}"}
+        if self.delay_s > 0 and op in ("scatter", "gather"):
+            # injected slowness sleeps outside the op lock: a slow
+            # query must not also stall this worker's pings/ingest
+            time.sleep(self.delay_s)
         try:
             with self._op_lock:
                 out = fn(msg) or {}
@@ -342,6 +381,104 @@ class ShardWorker:
 
     def _op_storage(self, msg: Dict) -> Dict:
         return {"storage": self.store.storage_stats()}
+
+    def _op_set_delay(self, msg: Dict) -> Dict:
+        """Fault injection: sleep this long before every scatter/gather
+        (tests and bench_replication make one worker artificially slow
+        to exercise hedging)."""
+        self.delay_s = max(0.0, float(msg.get("s", 0.0)))
+        return {"delay_s": self.delay_s}
+
+    # ------------------------------------------------------- replication --
+    def _op_sync_state(self, msg: Dict) -> Dict:
+        """Primary half of replica catch-up (docs/replication.md): the
+        store's committed history (ordered sealed + rollup stems with
+        content uids), its WAL tail, and its mutation generation — the
+        coordinator diffs this against each replica's own sync_state to
+        plan whole-segment shipping."""
+        st = self.store
+        return {"version": list(st._version()),
+                "seq": int(st._next_seq),
+                "sealed": [{"stem": stem, "uid": seg.uid}
+                           for seg, stem in zip(st._sealed,
+                                                st._sealed_stems)],
+                "rollups": [{"stem": stem, "uid": seg.uid}
+                            for seg, stem in zip(st._rollups,
+                                                 st._rollup_stems)],
+                "buffer_lines": [encode_line(r) for r in st._buffer]}
+
+    def _op_fetch_segment(self, msg: Dict) -> Dict:
+        """Ship one committed segment's file pair (manifest JSON +
+        base64 data) for whole-segment adoption on a replica.  The stem
+        is validated against the segment naming scheme — this op serves
+        segment files, not arbitrary paths."""
+        import base64
+        import json as _json
+        from pathlib import Path
+        stem = str(msg.get("stem", ""))
+        if (not stem.startswith("seg-") or "/" in stem or "\\" in stem
+                or ".." in stem):
+            raise remote.RemoteProtocolError(f"bad segment stem {stem!r}")
+        seg_dir = Path(self.store.directory) / "segments"
+        with open(seg_dir / (stem + ".json"), encoding="utf-8") as f:
+            manifest = _json.load(f)
+        data = (seg_dir / (stem + ".bin")).read_bytes()
+        return {"manifest": manifest,
+                "bin": base64.b64encode(data).decode("ascii")}
+
+    def _op_adopt_replica(self, msg: Dict) -> Dict:
+        """Replica half of catch-up: optionally reset the store (the
+        replica's history diverged — compaction/retention rewrote the
+        primary's past), adopt shipped whole segments in primary order,
+        and finally replace the buffer with the primary's WAL tail
+        while fast-forwarding the mutation generation, so the replica's
+        ``(sealed, buffer, seq)`` version converges to the primary's
+        exactly.  Each call ships a bounded batch; the coordinator
+        sequences them (reset → segments → buffer+seq)."""
+        if msg.get("reset"):
+            self._reset_store()
+        adopted = 0
+        for item in msg.get("segments", []):
+            adopted += self._adopt_shipped(item)
+        if "buffer_lines" in msg:
+            self.store.adopt_buffer(
+                [str(ln) for ln in msg["buffer_lines"]],
+                next_seq=msg.get("seq"))
+        return {"version": list(self.store._version()), "adopted": adopted}
+
+    def _reset_store(self) -> None:
+        """Wipe and reopen the store directory (full re-adoption)."""
+        import shutil
+        from pathlib import Path
+        directory = Path(self.store.directory)
+        self.store.close()
+        for child in directory.iterdir():
+            if child.is_dir():
+                shutil.rmtree(child, ignore_errors=True)
+            else:
+                try:
+                    child.unlink()
+                except OSError:
+                    pass
+        self.store = ColumnarMetricStore(directory=directory,
+                                         **self._store_kwargs)
+
+    def _adopt_shipped(self, item: Dict) -> int:
+        """Write a shipped segment pair to a staging dir, then adopt it
+        through the store's own commit protocol (copy under its next
+        stem, fsync, route rollups to the rollup tier)."""
+        import base64
+        import json as _json
+        import tempfile
+        from pathlib import Path
+        with tempfile.TemporaryDirectory(
+                dir=self.store.directory) as td:
+            man_path = Path(td) / "shipped.json"
+            (Path(td) / "shipped.bin").write_bytes(
+                base64.b64decode(str(item["bin"])))
+            with open(man_path, "w", encoding="utf-8") as f:
+                _json.dump(item["manifest"], f)
+            return self.store.adopt_segment(man_path)
 
 
 def main(argv=None) -> int:

@@ -646,3 +646,173 @@ def test_read_only_store_open_is_side_effect_free(tmp_path):
     back.close()
     with pytest.raises(ValueError):
         ColumnarMetricStore(read_only=True)  # requires a directory
+
+
+# ===========================================================================
+# Worker liveness + connection-pool hygiene (ISSUE 8 satellites)
+# ===========================================================================
+
+class _SlowOpWorker(__import__("repro.core.workers",
+                               fromlist=["ShardWorker"]).ShardWorker):
+    """In-process worker with an op that outlives the idle timeout."""
+
+    def _op_slow(self, msg):
+        import time as _t
+        _t.sleep(float(msg.get("s", 1.0)))
+        return {}
+
+
+def _serve_inproc(worker):
+    import threading
+    t = threading.Thread(target=worker.serve_forever, daemon=True)
+    t.start()
+    return t
+
+
+def test_worker_idle_timer_gated_by_inflight_requests(tmp_path):
+    """Regression: the accept loop's idle check used to fire while a
+    connection thread was still inside handle(), killing the worker
+    mid-request.  Idle only counts while nothing is in flight — a
+    handler slower than the timeout survives, and the timer restarts
+    from the reply."""
+    worker = _SlowOpWorker(tmp_path / "s0", idle_timeout_s=0.6)
+    t = _serve_inproc(worker)
+    client = WorkerClient(worker.address, op_timeout_s=20.0)
+    client.connect()
+    assert client.rpc("slow", s=1.5)["ok"]  # 2.5x the idle timeout
+    assert t.is_alive()  # the worker did not die under the request
+    assert client.rpc("ping")["ok"]  # and still serves
+    client.close()
+    t.join(timeout=20.0)  # true idleness still self-exits
+    assert not t.is_alive()
+
+
+def test_worker_request_counters_exact_under_concurrency(tmp_path):
+    """Regression: ``requests_served``/``_last_activity`` are mutated
+    from every per-connection thread; without the stats lock the +=
+    lost updates and the counter lied.  Exact count asserted across
+    overlapped connections."""
+    import threading
+    worker = _SlowOpWorker(tmp_path / "s0", idle_timeout_s=IDLE_S)
+    t = _serve_inproc(worker)
+    n_threads, n_pings = 8, 25
+    errs = []
+
+    def hammer():
+        try:
+            c = WorkerClient(worker.address, op_timeout_s=20.0)
+            c.connect()  # hello: 1 request
+            for _ in range(n_pings):
+                assert c.rpc("ping")["ok"]
+            c.close()
+        except Exception as exc:  # noqa: BLE001 - surfaced below
+            errs.append(exc)
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30.0)
+    assert not errs
+    assert worker.requests_served == n_threads * (1 + n_pings)
+    assert worker._inflight == 0
+    worker._shutdown = True
+    t.join(timeout=10.0)
+
+
+def test_kill_worker_drains_checked_out_connections(tmp_path):
+    """Regression: kill_worker never drained pooled connections that
+    were checked out mid-flight — release() happily re-pooled them
+    after the teardown, leaking one socket per kill/restart cycle.
+    The pool generation closes them on release instead."""
+    agg = make_remote(tmp_path / "fleet", 2, records=RECORDS[:60])
+    try:
+        sh = agg.shards[0]
+        c1 = sh.acquire()           # the primary client
+        c2 = sh.acquire()           # a fresh mid-flight connection
+        assert c1 is sh.client and c2 is not sh.client
+        agg.kill_worker(0)
+        sh.release(c1)
+        sh.release(c2)              # stale generation: closed, not pooled
+        assert sh._idle == []
+        assert not c2.connected
+        agg.restart_worker(0)
+        assert sh.ping()
+    finally:
+        agg.close()
+
+
+def test_kill_restart_cycles_do_not_leak_fds(tmp_path):
+    """Five kill/restart cycles with connections checked out mid-kill:
+    the process fd count must stay flat (the pre-fix leak grew by one
+    pooled socket per cycle)."""
+    import gc
+    import os as _os
+
+    def fd_count():
+        gc.collect()
+        return len(_os.listdir("/proc/self/fd"))
+
+    inproc = random_store(records=RECORDS[:80], shards=2,
+                          seal_threshold=SEAL)
+    agg = make_remote(tmp_path / "fleet", 2, records=RECORDS[:80])
+    try:
+        want = query(inproc, FLEET_Q)
+        rows_identical(query(agg, FLEET_Q), want, FLEET_Q)
+        sh = agg.shards[0]
+        base = fd_count()
+        for _ in range(5):
+            c1 = sh.acquire()
+            c2 = sh.acquire()
+            agg.kill_worker(0)
+            sh.release(c1)
+            sh.release(c2)
+            assert sh._idle == []
+            agg.restart_worker(0)
+            rows_identical(query(agg, FLEET_Q), want, FLEET_Q)
+            assert agg.last_query_stats["degraded_shards"] == 0
+        assert fd_count() <= base + 3
+    finally:
+        agg.close()
+        inproc.close()
+
+
+def test_replicated_parity_with_member_killed_mid_scatter(tmp_path):
+    """Parity-sweep extension (acceptance): on a replicated fleet with
+    one member killed while scatters are in flight, every sweep query
+    stays byte-identical to the in-process sharded oracle and no shard
+    enters degraded mode."""
+    import threading
+    inproc = random_store(records=RECORDS, shards=2, seal_threshold=SEAL)
+    agg = RemoteShardedAggregator(num_shards=2, directory=tmp_path / "f",
+                                  seal_threshold=SEAL, replicas=2,
+                                  hedge_delay_s=0.02,
+                                  worker_idle_timeout_s=IDLE_S)
+    try:
+        for rec in RECORDS:
+            agg.insert(rec)
+        agg.sync_replicas()
+        want = {q: query(inproc, q) for q in SWEEP}
+        sh = agg.shards[0]
+        slow = sh._read_order()[0]
+        slow.rpc("set_delay", s=0.5)
+        agg.drop_scatter_memos()
+        member = sh.members.index(slow)
+        timer = threading.Timer(
+            0.1, lambda: agg.kill_worker(0, member=member))
+        timer.start()
+        try:
+            for q in SWEEP:
+                rows_identical(query(agg, q), want[q], q)
+                assert agg.last_query_stats["degraded_shards"] == 0, q
+        finally:
+            timer.join()
+        # catch-up: the killed member restarts and converges to the
+        # primary's exact version tuple
+        agg.restart_worker(0, member=member)
+        agg.sync_replicas()
+        versions = {tuple(m._version()) for m in sh.members}
+        assert len(versions) == 1
+    finally:
+        agg.close()
+        inproc.close()

@@ -1,0 +1,397 @@
+"""Replicated shard execution: hedged scatter, read failover, and
+replica catch-up (ISSUE 8 / docs/replication.md).
+
+Acceptance contract: with ``replicas=2`` per shard, killing any single
+member mid-flight leaves every parity query **byte-identical** to the
+in-process sharded oracle with ``degraded_shards == 0`` — reads fail
+over to a live synced replica instead of opening the directory
+read-only.  Byte-identity across members is possible because
+:meth:`ReplicaSet.sync` ships the primary's segments in order plus its
+WAL tail, so a synced replica holds the exact ``(sealed, buffer,
+seq)`` version and runs the same deterministic partial/merge algebra
+over the same segment sequence.
+"""
+
+import json
+import threading
+import time
+
+import pytest
+
+from conftest import random_records, random_store
+from test_incremental import rows_identical
+
+from repro.core import remote as rm
+from repro.core import segmentio
+from repro.core.remote import RemoteShardedAggregator
+from repro.core.schema import MetricRecord
+from repro.core.splunklite import query
+
+SEAL = 53
+IDLE_S = 300.0  # workers self-exit if a wedged run leaks them
+RECORDS = random_records(seed=5, n=420)
+
+FLEET_Q = ("search kind=perf gflops>10 | stats avg(gflops) p90(gflops) "
+           "count by job | sort -avg_gflops | head 10")
+
+SWEEP = [FLEET_Q,
+         "stats stdev(gflops) range(gflops) dc(host) dc(app) by kind",
+         "stats median(gflops) p25(gflops) p90(gflops) by job",
+         "search kind=perf | stats first(app) last(gflops)",  # exact gather
+         "search kind=perf | sort -gflops | head 7",
+         "dedup job app"]
+
+
+def make_replicated(directory, n, replicas=2, records=RECORDS, **kw):
+    agg = RemoteShardedAggregator(num_shards=n, directory=directory,
+                                  seal_threshold=SEAL, replicas=replicas,
+                                  worker_idle_timeout_s=IDLE_S,
+                                  spawn_timeout_s=60.0, **kw)
+    for rec in records:
+        agg.insert(rec)
+    return agg
+
+
+@pytest.fixture()
+def rep_pair(tmp_path):
+    inproc = random_store(records=RECORDS, shards=2, seal_threshold=SEAL)
+    agg = make_replicated(tmp_path / "fleet", 2)
+    agg.sync_replicas()
+    yield inproc, agg
+    agg.close()
+    inproc.close()
+
+
+# ===========================================================================
+# Sync: replicas converge to the primary's exact version
+# ===========================================================================
+
+def test_sync_converges_member_versions(rep_pair):
+    _inproc, agg = rep_pair
+    for sh in agg.shards:
+        versions = {tuple(m._version()) for m in sh.members}
+        assert len(versions) == 1, f"shard {sh.index} diverged: {versions}"
+    rs = agg.replication_stats()
+    assert rs["replica_sets"] == 2 and rs["replicas"] == 2
+    assert rs["synced_members"] == rs["members"] == 4
+    assert rs["stale_sets"] == 0 and rs["syncs"] == 2
+
+
+def test_sync_is_incremental_after_new_data(rep_pair):
+    """A second sync ships only the delta: segments sealed since the
+    last sync plus the WAL tail — never a full reset."""
+    _inproc, agg = rep_pair
+    for i in range(SEAL + 10):  # one new sealed segment + buffer tail
+        agg.insert(MetricRecord(90000.0 + i, "n0", "delta.1", "perf",
+                                {"gflops": float(i)}))
+    before = [tuple(sh.primary._version()) for sh in agg.shards]
+    stats = agg.sync_replicas()
+    assert all(s["resets"] == 0 for s in stats)
+    assert sum(s["segments_shipped"] for s in stats) >= 1
+    for sh, v in zip(agg.shards, before):
+        assert tuple(sh.members[1]._version()) == v
+
+
+def test_writes_mark_set_stale_until_next_sync(rep_pair):
+    """Write-path invariant: writes land on the primary only, and any
+    write pins subsequent reads to the primary until a sync proves the
+    replicas caught up (a replica behind the primary's WAL must never
+    answer)."""
+    _inproc, agg = rep_pair
+    sh = agg.shards[0]
+    assert not sh.stale
+    agg.insert(MetricRecord(91000.0, "n1", "stale.1", "perf",
+                            {"gflops": 1.0}))
+    assert agg.shards[agg.shard_index(
+        MetricRecord(91000.0, "n1", "stale.1", "perf", {}))].stale
+    stale_set = next(s for s in agg.shards if s.stale)
+    assert stale_set._read_order() == [stale_set.primary]
+    agg.sync_replicas()
+    assert not stale_set.stale
+    assert len(stale_set._read_order()) == 2
+
+
+# ===========================================================================
+# Failover: any single member dies, parity holds, no degraded mode
+# ===========================================================================
+
+def test_replica_killed_parity_sweep(rep_pair):
+    inproc, agg = rep_pair
+    want = {q: query(inproc, q) for q in SWEEP}
+    agg.kill_worker(0, member=1)
+    agg.kill_worker(1, member=1)
+    for q in SWEEP:
+        rows_identical(query(agg, q), want[q], q)
+        assert agg.last_query_stats["degraded_shards"] == 0, q
+
+
+def test_primary_killed_fails_over_to_replica(rep_pair):
+    inproc, agg = rep_pair
+    want = {q: query(inproc, q) for q in SWEEP}
+    query(agg, FLEET_Q)  # measure latencies: primaries become preferred
+    agg.kill_worker(0, member=0)
+    agg.kill_worker(1, member=0)
+    for q in SWEEP:
+        rows_identical(query(agg, q), want[q], q)
+        assert agg.last_query_stats["degraded_shards"] == 0, q
+    rs = agg.replication_stats()
+    assert rs["failovers"] > 0
+    assert rs["degraded_calls"] == 0
+    # the store surface fails over too (dashboards keep rendering)
+    assert agg.jobs() == inproc.jobs()
+    assert len(agg) == len(inproc)
+
+
+def test_all_members_dead_degrades_to_primary_dir(rep_pair):
+    """Only when *every* member is gone does the set degrade — and to
+    the primary's directory, whose WAL is at least as fresh as any
+    replica's state."""
+    inproc, agg = rep_pair
+    want = query(inproc, FLEET_Q)
+    for member in (0, 1):
+        agg.kill_worker(0, member=member)
+        agg.kill_worker(1, member=member)
+    rows_identical(query(agg, FLEET_Q), want, FLEET_Q)
+    assert agg.last_query_stats["degraded_shards"] == 2
+    assert agg.replication_stats()["degraded_calls"] >= 2
+
+
+def test_stale_set_with_dead_primary_degrades_not_lies(rep_pair):
+    """A stale set whose primary dies must not fail over to a replica
+    missing the staleing write: it degrades to the primary's durable
+    directory (WAL included) and still returns the full answer."""
+    inproc, agg = rep_pair
+    i = 0
+    while not all(sh.stale for sh in agg.shards):  # stale every set
+        extra = MetricRecord(92000.0 + i, f"n{i}", "alpha.1", "perf",
+                             {"gflops": 999.0 + i})
+        assert agg.insert(extra) and inproc.insert(extra)
+        i += 1
+    query(inproc, FLEET_Q)
+    agg.kill_worker(0, member=0)
+    agg.kill_worker(1, member=0)
+    rows_identical(query(agg, FLEET_Q), query(inproc, FLEET_Q), FLEET_Q)
+    assert agg.last_query_stats["degraded_shards"] == 2
+
+
+# ===========================================================================
+# Catch-up: a restarted replica converges via segments + WAL tail
+# ===========================================================================
+
+def test_restarted_replica_catches_up_and_serves(rep_pair):
+    inproc, agg = rep_pair
+    agg.restart_worker(0, member=1)
+    assert not agg.shards[0]._synced[1]  # out of the read set until sync
+    for i in range(40):  # move the primary past the replica
+        rec = MetricRecord(93000.0 + i, "n0", "catch.1", "perf",
+                           {"gflops": float(i)})
+        agg.insert(rec)
+        inproc.insert(rec)
+    stats = agg.sync_replicas()
+    assert all(s["synced"] == 1 for s in stats)
+    for sh in agg.shards:
+        assert tuple(sh.members[1]._version()) == \
+            tuple(sh.primary._version())
+    # the caught-up replica actually serves: kill both primaries
+    query(agg, FLEET_Q)
+    agg.kill_worker(0, member=0)
+    agg.kill_worker(1, member=0)
+    for q in SWEEP:
+        rows_identical(query(agg, q), query(inproc, q), q)
+        assert agg.last_query_stats["degraded_shards"] == 0, q
+
+
+def test_compaction_divergence_forces_full_reset(rep_pair):
+    """Compaction rewrites the primary's committed history, so the
+    replica's segment list stops being a prefix — sync detects it and
+    re-adopts from scratch, converging anyway."""
+    _inproc, agg = rep_pair
+    agg.compact_all(small_rows=10 ** 9, target_rows=10 ** 9)
+    stats = agg.sync_replicas()
+    assert sum(s["resets"] for s in stats) == 2
+    for sh in agg.shards:
+        assert tuple(sh.members[1]._version()) == \
+            tuple(sh.primary._version())
+
+
+def test_sync_tolerates_dead_members(rep_pair):
+    _inproc, agg = rep_pair
+    agg.kill_worker(0, member=1)
+    stats = agg.sync_replicas()
+    assert stats[0]["unreachable"] == 1 and stats[1]["unreachable"] == 0
+    agg.kill_worker(1, member=0)
+    stats = agg.sync_replicas()
+    assert stats[1].get("primary_unreachable") is True
+
+
+# ===========================================================================
+# Hedging: a slow member is raced, the fast reply wins
+# ===========================================================================
+
+def test_hedged_scatter_beats_slow_member(tmp_path):
+    inproc = random_store(records=RECORDS, shards=2, seal_threshold=SEAL)
+    agg = make_replicated(tmp_path / "fleet", 2, hedge_delay_s=0.02)
+    try:
+        agg.sync_replicas()
+        want = query(inproc, FLEET_Q)
+        rows_identical(query(agg, FLEET_Q), want, FLEET_Q)
+        sh = agg.shards[0]
+        slow = sh._read_order()[0]  # whoever is preferred right now
+        slow.rpc("set_delay", s=0.4)
+        agg.drop_scatter_memos()  # force a real scatter, not not_modified
+        t0 = time.monotonic()
+        rows_identical(query(agg, FLEET_Q), want, FLEET_Q)
+        elapsed = time.monotonic() - t0
+        stats = agg.last_query_stats
+        assert stats["hedged_shards"] >= 1
+        assert stats["degraded_shards"] == 0
+        assert elapsed < 0.4  # the hedge won without waiting out the delay
+        rs = sh.replication_stats()
+        assert rs["hedged_ops"] >= 1 and rs["hedge_wins"] >= 1
+    finally:
+        agg.close()
+        inproc.close()
+
+
+def test_member_killed_mid_scatter_hedged_reply_identical(tmp_path):
+    """Kill the preferred member *while its scatter is in flight*: the
+    hedge fires, the survivor's reply is byte-identical to the oracle,
+    and the dead loser is cancelled — never surfaced as degraded."""
+    inproc = random_store(records=RECORDS, shards=2, seal_threshold=SEAL)
+    agg = make_replicated(tmp_path / "fleet", 2, hedge_delay_s=0.02)
+    try:
+        agg.sync_replicas()
+        want = {q: query(inproc, q) for q in SWEEP}
+        sh = agg.shards[0]
+        slow = sh._read_order()[0]
+        slow.rpc("set_delay", s=0.5)
+        agg.drop_scatter_memos()
+        member = sh.members.index(slow)
+        timer = threading.Timer(0.1, lambda: agg.kill_worker(0,
+                                                             member=member))
+        timer.start()
+        try:
+            rows_identical(query(agg, FLEET_Q), want[FLEET_Q], FLEET_Q)
+        finally:
+            timer.join()
+        assert agg.last_query_stats["degraded_shards"] == 0
+        for q in SWEEP:  # the whole sweep stays identical afterwards
+            rows_identical(query(agg, q), want[q], q)
+            assert agg.last_query_stats["degraded_shards"] == 0, q
+    finally:
+        agg.close()
+        inproc.close()
+
+
+def test_hedging_disabled_never_hedges(tmp_path):
+    agg = make_replicated(tmp_path / "fleet", 2, records=RECORDS[:80],
+                          hedge=False, hedge_delay_s=0.0)
+    try:
+        agg.sync_replicas()
+        agg.shards[0]._read_order()[0].rpc("set_delay", s=0.1)
+        query(agg, FLEET_Q)
+        assert agg.last_query_stats["hedged_shards"] == 0
+        assert agg.replication_stats()["hedged_ops"] == 0
+    finally:
+        agg.close()
+
+
+# ===========================================================================
+# Manifest, stats surfaces, constructor contracts
+# ===========================================================================
+
+def test_manifest_replication_block_and_epoch_bump(tmp_path):
+    agg = make_replicated(tmp_path / "fleet", 2, records=RECORDS[:60])
+    try:
+        man = json.loads((tmp_path / "fleet" / "shards.json").read_text())
+        rep = man["replication"]
+        assert rep["k"] == 2
+        epoch0 = rep["epoch"]
+        assert epoch0 >= 1
+        assert len(rep["members"]) == 4  # 2 shards x 2 members
+        dirs = {m["dir"] for m in rep["members"]}
+        assert dirs == {"shard-00", "shard-00.r1",
+                        "shard-01", "shard-01.r1"}
+        agg.restart_worker(0, member=1)  # membership change: epoch bumps
+        man = json.loads((tmp_path / "fleet" / "shards.json").read_text())
+        assert man["replication"]["epoch"] > epoch0
+        # routing keys stay protected
+        with pytest.raises(ValueError):
+            segmentio.update_shardset_manifest(tmp_path / "fleet",
+                                               {"num_shards": 7})
+    finally:
+        agg.close()
+
+
+def test_explain_and_service_stats_surface_replication(rep_pair):
+    from repro.core.service import QueryService
+    inproc, agg = rep_pair
+    ex = agg.explain(FLEET_Q)
+    assert ex["replication"]["replica_sets"] == 2
+    assert all(w["replicas_alive"] == [True, True] for w in ex["workers"])
+    with QueryService(agg) as svc:
+        rows_identical(svc.query(FLEET_Q), query(inproc, FLEET_Q),
+                       FLEET_Q)
+        st = svc.stats()
+        assert st["replication"]["members"] == 4
+    # close_store=False default: the fleet survives the service
+    assert all(agg.workers_alive())
+
+
+def test_unreplicated_fleet_reports_no_replication(tmp_path):
+    agg = RemoteShardedAggregator(num_shards=2, directory=tmp_path / "f",
+                                  seal_threshold=SEAL,
+                                  worker_idle_timeout_s=IDLE_S)
+    try:
+        for rec in RECORDS[:40]:
+            agg.insert(rec)
+        assert agg.replication_stats() is None
+        _rows, stats = agg.query_with_stats(FLEET_Q)
+        assert stats["hedged_shards"] == 0
+        assert stats["failover_shards"] == 0
+        assert "replication" not in agg.explain(FLEET_Q)
+        assert agg.sync_replicas() == [
+            {"replicas": 0, "synced": 0, "segments_shipped": 0,
+             "resets": 0, "unreachable": 0}] * 2
+    finally:
+        agg.close()
+
+
+def test_replication_constructor_contracts(tmp_path):
+    with pytest.raises(ValueError, match="replicas"):
+        RemoteShardedAggregator(num_shards=1, directory=tmp_path / "f",
+                                replicas=0)
+    with pytest.raises(ValueError, match="spawned"):
+        RemoteShardedAggregator(num_shards=1, directory=tmp_path / "f",
+                                replicas=2, addresses=[("127.0.0.1", 1)])
+    from repro.core.aggregator import Aggregator
+    with pytest.raises(ValueError, match="remote_workers"):
+        Aggregator(tmp_path / "inbox", shards=2, replicas=2,
+                   store_dir=tmp_path / "f")
+
+
+def test_aggregator_passes_replication_kwargs(tmp_path):
+    from repro.core.aggregator import Aggregator
+    agg = Aggregator(tmp_path / "inbox", shards=1, remote_workers=True,
+                     replicas=2, hedge_delay_s=0.01,
+                     store_dir=tmp_path / "fleet")
+    try:
+        assert isinstance(agg.store, RemoteShardedAggregator)
+        assert agg.store._replicas == 2
+        assert agg.store.shards[0].hedge_delay_s == 0.01
+        assert agg.store.shards[0].is_replicated
+    finally:
+        agg.close()
+
+
+def test_stale_replica_reply_is_discarded(rep_pair):
+    """Version guard: a non-primary reply at a version other than the
+    synced one is never served — it is counted and the op retries on
+    another member."""
+    _inproc, agg = rep_pair
+    sh = agg.shards[0]
+    # sabotage: pretend the set synced at a version nobody is at
+    with sh._lock:
+        sh._synced_version = (999, 999, 999)
+    query(agg, FLEET_Q)  # primary replies are exempt from the guard
+    assert agg.last_query_stats["degraded_shards"] == 0
