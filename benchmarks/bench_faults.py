@@ -1,0 +1,107 @@
+"""Fault-tolerance overhead on the fault-free hot path (docs/faults.md).
+
+The hardening ISSUE 9 adds — crc32c trailers on every wire frame,
+per-line WAL checksums, retry bookkeeping, idempotency keys on
+mutations, per-worker circuit breakers — must cost (nearly) nothing
+when nothing is failing: the monitoring fleet spends its life on the
+fault-free path.  This bench builds the same replicated 2x2 fleet
+twice — once hardened (the defaults) and once with every robustness
+feature off (no frame checksums either direction, no retry policy, no
+breakers) — and measures the warm remote fleet query both ways.
+
+Acceptance (asserted here and guarded in CI via ``check_regression
+--max-ratio``, normalized in-run so the bound is machine-independent):
+hardened warm-query latency <= 1.15x the bare fleet's.
+"""
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+ITERS = 60
+WARMUP = 5
+MAX_RATIO = 1.15
+
+Q = ("search kind=perf gflops>0 "
+     "| stats avg(gflops) p90(step_time_s) count by job "
+     "| sort -avg_gflops | head 10")
+
+
+def _build_fleet(tmp: Path, hardened: bool):
+    from benchmarks.monitoring import _fleet_store
+    from repro.core.remote import RemoteShardedAggregator
+    kw = {} if hardened else dict(frame_checksums=False, retry=None,
+                                  breaker_threshold=0)
+    fleet = RemoteShardedAggregator(num_shards=2, directory=tmp,
+                                    seal_threshold=4096, replicas=2,
+                                    worker_idle_timeout_s=300.0,
+                                    spawn_timeout_s=60.0, **kw)
+    if not hardened:
+        # the aggregator flag covers coordinator->worker frames; turn
+        # off the workers' reply trailers too so the bare fleet pays
+        # for no checksum in either direction
+        for sh in fleet.shards:
+            for m in (sh.members if getattr(sh, "is_replicated", False)
+                      else [sh]):
+                m.rpc("set_faults", frame_checksums=False)
+    _fleet_store(n_jobs=40, hosts_per_job=4, samples=30, store=fleet)
+    fleet.seal()
+    fleet.sync_replicas()
+    return fleet
+
+
+def _measure(fleet) -> list:
+    from repro.core.splunklite import query
+    # a mutation between queries defeats the coordinator's etag memo,
+    # so every iteration exercises the full scatter wire path (plan
+    # out, worker-side warm partial cache, partial maps back)
+    from repro.core.schema import MetricRecord
+    lats = []
+    for i in range(ITERS + WARMUP):
+        fleet.insert(MetricRecord(5e6 + i, "bench-n0", "bench.1", "perf",
+                                  {"gflops": float(i)}))
+        t0 = time.perf_counter()
+        query(fleet, Q)
+        lats.append((time.perf_counter() - t0) * 1e6)
+        assert fleet.last_query_stats["degraded_shards"] == 0
+    return lats[WARMUP:]
+
+
+def bench_faults(out_dir: Path):
+    """Warm remote fleet query: hardened vs all robustness off."""
+    import shutil
+    import tempfile
+    from benchmarks.common import row
+    from repro.core.splunklite import query
+    tmp = Path(tempfile.mkdtemp())
+    rows = []
+    try:
+        results = {}
+        want = None
+        for label, hardened in (("bare", False), ("hardened", True)):
+            fleet = _build_fleet(tmp / label, hardened)
+            try:
+                got = query(fleet, Q)
+                if want is None:
+                    want = got
+                else:
+                    assert got == want, "hardened rows diverged from bare"
+                results[label] = float(np.median(_measure(fleet)))
+                if hardened:
+                    rob = fleet.robustness_stats()
+                    assert rob["retries"] == 0, rob  # fault-free run
+                    assert rob["opens"] == 0, rob
+            finally:
+                fleet.close()
+        ratio = results["hardened"] / max(results["bare"], 1e-9)
+        # acceptance: checksums + retry/idempotency/breaker bookkeeping
+        # cost <= 15% on the fault-free warm query path
+        assert ratio <= MAX_RATIO, (results, ratio)
+        rows.append(row("faults.fleet_query_hardened", results["hardened"],
+                        f"2x2workers,{ratio:.3f}x_of_bare"))
+        rows.append(row("faults.fleet_query_bare", results["bare"],
+                        "checksums_retry_breakers_off"))
+        return rows
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

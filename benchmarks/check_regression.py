@@ -16,6 +16,13 @@ same run (e.g. the legacy row-engine time for the same query), so the
 comparison is a machine-independent ratio — a CI runner slower than
 the machine that produced the committed baseline does not trip the
 guard, and a genuinely regressed code path still does.
+
+``--max-ratio`` guards an *absolute* bound instead of a trajectory:
+the current row (normalized by ``--normalize-row`` from the same run)
+must stay <= the bound regardless of what the baseline recorded — used
+for invariants like "fault-tolerance overhead <= 1.15x the unhardened
+path".  With ``--max-ratio`` the baseline file is still required on
+the command line but never consulted.
 """
 
 from __future__ import annotations
@@ -39,11 +46,31 @@ def main(argv=None) -> int:
     ap.add_argument("--row", default="splunklite.fleet_query")
     ap.add_argument("--factor", type=float, default=1.5)
     ap.add_argument("--normalize-row", default=None)
+    ap.add_argument("--max-ratio", type=float, default=None)
     args = ap.parse_args(argv)
     with open(args.baseline, encoding="utf-8") as f:
         base_doc = json.load(f)
     with open(args.current, encoding="utf-8") as f:
         cur_doc = json.load(f)
+    if args.max_ratio is not None:
+        cur = row_us(cur_doc, args.row)
+        if cur is None:
+            print(f"[bench-guard] {args.row!r} missing from current "
+                  "results")
+            return 1
+        if args.normalize_row is not None:
+            cur_n = row_us(cur_doc, args.normalize_row)
+            if not cur_n:
+                print(f"[bench-guard] normalize row "
+                      f"{args.normalize_row!r} missing from current "
+                      "results")
+                return 1
+            cur = cur / cur_n
+        ok = cur <= args.max_ratio
+        print(f"[bench-guard] {args.row}: {cur:.3f}x "
+              f"(bound {args.max_ratio:.2f}x) "
+              f"{'OK' if ok else 'OVER BOUND'}")
+        return 0 if ok else 1
     base = row_us(base_doc, args.row)
     cur = row_us(cur_doc, args.row)
     if base is None:

@@ -16,6 +16,8 @@ trajectory is tracked across PRs.
   remote        — worker-process shard fleet vs in-process sharded
   replication   — replicated shards: hedged-scatter p99 vs unhedged
                   with one artificially slow member
+  faults        — fault-tolerance overhead: hardened warm fleet query
+                  vs checksums/retry/breakers all off (<= 1.15x)
   compaction    — segment compaction + compressed tiers: cold query
                   pre/post, byte ratio, rollup vs raw scan
   restart       — aggregator cold-start: mmap segments vs line replay
@@ -45,6 +47,7 @@ def _parse_row(line: str):
 def main() -> None:
     from benchmarks import kernels as kbench
     from benchmarks import monitoring as mbench
+    from benchmarks.bench_faults import bench_faults
     from benchmarks.bench_replication import bench_replication
     only = set(sys.argv[1:])
     out = EXPERIMENTS
@@ -61,6 +64,7 @@ def main() -> None:
         mbench.bench_incremental,
         mbench.bench_remote,
         bench_replication,
+        bench_faults,
         mbench.bench_service,
         mbench.bench_compaction,
         mbench.bench_restart,

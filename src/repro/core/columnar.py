@@ -661,6 +661,7 @@ class ColumnarMetricStore:
         self.duplicates_dropped = 0
         self.dedup_evicted_keys = 0
         self.segment_load_errors = 0
+        self.quarantined_segments = 0
         self._cache: Dict[str, tuple] = {}
         self._transient_base: Optional[Tuple[int, Segment]] = None
         self.partial_cache = PartialAggregateCache(partial_cache_entries)
@@ -723,7 +724,8 @@ class ColumnarMetricStore:
         if ts > self._watermark:
             self._watermark = ts
         if self._wal is not None and not self._replaying:
-            self._wal.write(encoded + "\n")
+            from repro.core.segmentio import wal_encode_line
+            self._wal.write(wal_encode_line(encoded) + "\n")
             self._wal.flush()
             if self.wal_fsync:
                 os.fsync(self._wal.fileno())
@@ -843,6 +845,19 @@ class ColumnarMetricStore:
             if stem in replaced:
                 retired_paths.append(man_path)
                 continue
+            if segmentio.segment_crc_ok(
+                    man, man_path.with_suffix(".bin")) is False:
+                # payload bytes contradict the manifest checksum —
+                # quarantine rather than serve silently wrong rows
+                # (docs/faults.md); any acknowledged rows also in the
+                # WAL replay below exactly as for a load error
+                self.quarantined_segments += 1
+                if not self.read_only:
+                    try:
+                        segmentio.quarantine_segment_files(man_path)
+                    except OSError:
+                        pass
+                continue
             try:
                 seg = segmentio.load_segment(man_path, manifest=man)
             except (OSError, ValueError, KeyError, TypeError):
@@ -914,9 +929,10 @@ class ColumnarMetricStore:
             self._wal = None
         wal_path = self.directory / "wal.log"
         tmp = wal_path.with_suffix(".tmp")
+        from repro.core.segmentio import wal_encode_line
         with open(tmp, "w", encoding="utf-8") as f:
             for rec in self._buffer:
-                f.write(encode_line(rec) + "\n")
+                f.write(wal_encode_line(encode_line(rec)) + "\n")
             f.flush()
             if self.wal_fsync:
                 os.fsync(f.fileno())
@@ -960,6 +976,12 @@ class ColumnarMetricStore:
                 seg = segmentio.load_segment(man_path)
             else:
                 seg = segmentio.load_segment(manifest_path)
+                man = getattr(seg, "_man", None)
+                if man is not None and segmentio.segment_crc_ok(
+                        man,
+                        Path(manifest_path).with_suffix(".bin")) is False:
+                    raise ValueError("segment payload failed checksum: "
+                                     f"{manifest_path}")
             if getattr(seg, "rollup", None) is not None:
                 # rollup segments route to the rollup tier, exactly as
                 # the restart loader does — appending one to _sealed
@@ -1083,6 +1105,42 @@ class ColumnarMetricStore:
         with self._lock:
             return Compactor(self).apply_retention(**kwargs)
 
+    def quarantine_segment(self, seg: Segment) -> bool:
+        """Remove a corrupt sealed/rollup segment from the live set.
+
+        Called by the scan path when a segment's payload fails to
+        decode or checksum at query time (docs/faults.md): the segment
+        and its stem leave ``_sealed``/``_rollups``, its files move to
+        ``segments/quarantine/`` (durable, writable stores),
+        version-scoped memos drop, and the mutation generation bumps so
+        remote etags and result caches can never serve rows computed
+        against the corrupt payload.  Dedup keys stay registered — the
+        rows were accepted once; transport retransmits must still
+        dedup.  Returns True if the segment was found (and is gone).
+        """
+        from repro.core import segmentio
+        with self._lock:
+            for segs, stems in ((self._sealed, self._sealed_stems),
+                                (self._rollups, self._rollup_stems)):
+                for i, live in enumerate(segs):
+                    if live is seg:
+                        segs.pop(i)
+                        stem = stems.pop(i)
+                        self.quarantined_segments += 1
+                        self._next_seq += 1
+                        if self._cache:
+                            self._cache.clear()
+                        if (stem is not None and self.directory is not None
+                                and not self.read_only):
+                            man_path = (self.directory / "segments"
+                                        / (stem + ".json"))
+                            try:
+                                segmentio.quarantine_segment_files(man_path)
+                            except OSError:
+                                pass
+                        return True
+            return False
+
     def storage_stats(self) -> Dict:
         """Per-tier storage accounting: segment/file counts, stored vs
         raw-equivalent bytes, rows, plus the last compaction's stats.
@@ -1118,6 +1176,7 @@ class ColumnarMetricStore:
                                "raw_bytes")}
             total["tiers"] = tiers
             total["buffer_rows"] = len(self._buffer)
+            total["quarantined_segments"] = self.quarantined_segments
             total["last_compaction"] = self.last_compaction
             return total
 

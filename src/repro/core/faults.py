@@ -1,0 +1,451 @@
+"""Deterministic fault injection + robustness primitives (docs/faults.md).
+
+The paper's monitoring pipeline runs continuously on every node of a
+production HPC system, where worker crashes, flaky links, and disk
+corruption are routine — monitoring is only trustworthy if it survives
+the faults it is meant to observe.  This module is the harness that
+*proves* the fleet does: a seedable :class:`FaultPlan` draws faults
+deterministically per site, :class:`FaultyTransport` injects them into
+the wire (drop / delay / truncate / bit-flip), and a process-global
+storage hook lets ``segmentio`` tear segment commits or fail seals with
+``ENOSPC`` — all without touching production hot paths (the hooks are
+single ``None`` checks when no plan is installed).
+
+It also hosts the robustness *primitives* the hardened paths use in
+production, kept dependency-free so they are unit-testable with fake
+clocks:
+
+:class:`RetryPolicy`
+    Capped exponential backoff under an optional deadline budget.
+    ``run()`` retries a callable on the given exception types and
+    raises :class:`RetryBudgetExceeded` when the next backoff would
+    cross the deadline — callers translate that into their own typed
+    deadline error.  ``sleep``/``now`` are injectable.
+
+:class:`CircuitBreaker`
+    closed → open after N consecutive failures → half-open after a
+    reset timeout, with a **single-flight** half-open probe: exactly
+    one caller gets through to test the worker; everyone else is
+    rejected until the probe's outcome is recorded.
+
+:func:`crc32c`
+    The checksum every integrity trailer uses (wire frames, segment
+    ``.bin`` payloads, WAL lines).  Uses the C ``crc32c`` extension
+    when installed, else ``zlib.crc32`` (also C speed) — the *name* is
+    part of the format, the polynomial is pinned per deployment by
+    whichever implementation wrote the data, and both sides of every
+    checksum here run in the same process tree, so mixing cannot occur.
+
+Everything is deterministic given the seed: the chaos-parity suite
+replays fault schedules bit-for-bit, and CI runs fixed seeds.
+"""
+
+from __future__ import annotations
+
+import errno
+import random
+import threading
+import time
+import zlib
+from collections import Counter
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+try:  # optional C extension; zlib.crc32 is the baked-in fallback
+    from crc32c import crc32c as _crc32_fn  # type: ignore
+    CRC_IMPL = "crc32c"
+except ImportError:  # pragma: no cover - environment-dependent
+    _crc32_fn = zlib.crc32
+    CRC_IMPL = "crc32-zlib"
+
+
+def crc32c(data, value: int = 0) -> int:
+    """Checksum used by every integrity trailer (see module docstring).
+    Incremental: pass the previous value to continue over chunks."""
+    return _crc32_fn(data, value) & 0xFFFFFFFF
+
+
+# ===========================================================================
+# Fault plans
+# ===========================================================================
+
+#: wire fault kinds a transport site may draw
+WIRE_FAULTS = ("drop", "delay", "truncate", "bitflip")
+#: storage fault kinds the ``seal`` site may draw
+SEAL_FAULTS = ("enospc", "torn_bin", "torn_manifest")
+
+
+class FaultPlan:
+    """A deterministic, seedable schedule of faults.
+
+    ``rates`` maps an injection *site* (``"send"``, ``"recv"``,
+    ``"seal"``) to ``{fault kind: probability}``; every :meth:`draw`
+    consults the site's rates against one PRNG stream derived from
+    ``seed``, so the same seed replays the same fault sequence for the
+    same sequence of draws.  :meth:`force` enqueues scripted one-shot
+    faults that fire before any probabilistic draw — unit tests use it
+    to place exactly one fault at exactly one site.
+
+    Thread-safe: the coordinator's pooled connections draw from one
+    plan concurrently; the lock keeps the PRNG stream and the injected
+    counters coherent (the *interleaving* across threads is scheduling-
+    dependent, but single-threaded chaos suites are fully
+    deterministic).
+    """
+
+    def __init__(self, seed: int = 0,
+                 rates: Optional[Dict[str, Dict[str, float]]] = None,
+                 delay_range_s: Tuple[float, float] = (0.0005, 0.005)
+                 ) -> None:
+        self.seed = int(seed)
+        self._rng = random.Random(self.seed)
+        self._lock = threading.Lock()
+        self.rates = {site: dict(kinds)
+                      for site, kinds in (rates or {}).items()}
+        self.delay_range_s = (float(delay_range_s[0]),
+                              float(delay_range_s[1]))
+        self._forced: Dict[str, list] = {}
+        self.injected: Counter = Counter()
+
+    def force(self, site: str, kind: str, times: int = 1) -> None:
+        """Queue ``times`` scripted faults at ``site`` — consumed by
+        the next draws there, ahead of any probabilistic fault."""
+        with self._lock:
+            self._forced.setdefault(site, []).extend([kind] * int(times))
+
+    def draw(self, site: str) -> Optional[str]:
+        """The fault to inject at ``site`` now, or ``None``."""
+        with self._lock:
+            queue = self._forced.get(site)
+            if queue:
+                kind = queue.pop(0)
+                self.injected[(site, kind)] += 1
+                return kind
+            kinds = self.rates.get(site)
+            if not kinds:
+                return None
+            r = self._rng.random()
+            acc = 0.0
+            for kind, p in kinds.items():
+                acc += p
+                if r < acc:
+                    self.injected[(site, kind)] += 1
+                    return kind
+            return None
+
+    def delay_s(self) -> float:
+        lo, hi = self.delay_range_s
+        with self._lock:
+            return lo + (hi - lo) * self._rng.random()
+
+    def randrange(self, n: int) -> int:
+        with self._lock:
+            return self._rng.randrange(n)
+
+    def corrupt(self, data: bytes, skip: int = 0) -> bytes:
+        """Flip one random bit of ``data`` (beyond the first ``skip``
+        bytes).  Transports skip the 4-byte length header: a corrupted
+        *length* turns an integrity fault into a framing stall, which
+        is a different site (``truncate``/``drop`` cover it)."""
+        if len(data) <= skip:
+            return data
+        i = skip + self.randrange(len(data) - skip)
+        bit = 1 << self.randrange(8)
+        out = bytearray(data)
+        out[i] ^= bit
+        return bytes(out)
+
+    def injected_total(self) -> int:
+        with self._lock:
+            return sum(self.injected.values())
+
+
+class FaultyTransport:
+    """Socket wrapper that injects :class:`FaultPlan` wire faults.
+
+    Wraps the client-side socket of a ``WorkerClient`` (the server side
+    of the same link is exercised symmetrically — a fault on ``send``
+    corrupts what the worker reads, a fault on ``recv`` corrupts what
+    the coordinator decodes).  Fault kinds:
+
+    ``drop``      close the socket instead of transferring — the peer
+                  sees EOF, this side gets ``OSError`` (connection
+                  reset semantics).
+    ``delay``     sleep a bounded random interval, then transfer.
+    ``truncate``  transfer a strict prefix, then close — a torn frame.
+    ``bitflip``   transfer everything with one bit flipped (header
+                  bytes exempt) — caught by the frame checksum.
+
+    Only the data-path calls (``sendall``/``recv``) inject; everything
+    else proxies to the real socket, so timeouts, ``fileno()`` (the
+    hedged-scatter ``select``), and options behave normally.
+    """
+
+    def __init__(self, sock, plan: FaultPlan) -> None:
+        self._sock = sock
+        self._plan = plan
+
+    # ------------------------------------------------------------ injection --
+    def sendall(self, data: bytes) -> None:
+        kind = self._plan.draw("send")
+        if kind == "drop":
+            self.close()
+            raise OSError(errno.ECONNRESET, "injected send drop")
+        if kind == "delay":
+            time.sleep(self._plan.delay_s())
+        elif kind == "truncate" and len(data) > 1:
+            self._sock.sendall(data[:self._plan.randrange(len(data))
+                                    or 1])
+            self.close()
+            raise OSError(errno.ECONNRESET, "injected send truncation")
+        elif kind == "bitflip":
+            data = self._plan.corrupt(data, skip=4)
+        self._sock.sendall(data)
+
+    def recv(self, n: int) -> bytes:
+        kind = self._plan.draw("recv")
+        if kind == "drop":
+            self.close()
+            raise OSError(errno.ECONNRESET, "injected recv drop")
+        if kind == "delay":
+            time.sleep(self._plan.delay_s())
+        chunk = self._sock.recv(n)
+        if kind == "truncate" and chunk:
+            prefix = chunk[:self._plan.randrange(len(chunk)) or 1]
+            self.close()
+            return prefix  # EOF follows: peer reads a torn frame
+        if kind == "bitflip" and chunk:
+            if len(chunk) > 4:
+                chunk = self._plan.corrupt(chunk, skip=4)
+            else:
+                # ``recv_exact`` reads the 4-byte length word (and crc
+                # trailer) as its own recv call, so a flip here would
+                # corrupt the *length* — a framing stall only the op
+                # deadline can catch, which is the ``truncate``/``drop``
+                # site's job (see :meth:`FaultPlan.corrupt`).  Re-arm
+                # the fault so it lands on a checksummable payload read,
+                # mirroring the send-side header exemption.
+                self._plan.force("recv", "bitflip")
+        return chunk
+
+    # -------------------------------------------------------------- passthru --
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __getattr__(self, name):
+        return getattr(self._sock, name)
+
+
+# ===========================================================================
+# Storage fault hook
+# ===========================================================================
+#
+# segmentio consults this module-global before tearing into a segment
+# commit.  The cost on the production path is one attribute read and a
+# None check per *seal* (not per row); installing a plan is strictly a
+# test/bench/worker-op action.
+
+_storage_plan: Optional[FaultPlan] = None
+
+
+def install_storage_faults(plan: Optional[FaultPlan]) -> None:
+    """Install (or with ``None`` clear) the process-global storage
+    fault plan consulted by ``segmentio.save_segment``."""
+    global _storage_plan
+    _storage_plan = plan
+
+
+def storage_fault(site: str) -> Optional[str]:
+    plan = _storage_plan
+    if plan is None:
+        return None
+    return plan.draw(site)
+
+
+def enospc(path) -> OSError:
+    exc = OSError(errno.ENOSPC, "No space left on device (injected)")
+    exc.filename = str(path)
+    return exc
+
+
+# ===========================================================================
+# Retry with capped exponential backoff under a deadline budget
+# ===========================================================================
+
+
+class RetryBudgetExceeded(TimeoutError):
+    """The next backoff would cross the op's deadline budget.  Callers
+    translate this into their own typed deadline error (the remote tier
+    raises ``DeadlineExceeded``)."""
+
+
+class RetryPolicy:
+    """Capped exponential backoff: attempt ``k`` (0-based) sleeps
+    ``min(base * multiplier**k, max)`` before retrying.  ``deadline_s``
+    bounds the whole ``run()`` — when the next backoff would cross it,
+    :class:`RetryBudgetExceeded` is raised *instead of sleeping*, so an
+    op never overstays its budget just to fail again.  Stateless config
+    (safe to share across shards); ``sleep``/``now`` are injectable for
+    fake-clock tests."""
+
+    def __init__(self, max_attempts: int = 3,
+                 base_delay_s: float = 0.02,
+                 max_delay_s: float = 0.25,
+                 multiplier: float = 2.0,
+                 deadline_s: Optional[float] = None,
+                 sleep: Callable[[float], None] = time.sleep,
+                 now: Callable[[], float] = time.monotonic) -> None:
+        if max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        self.max_attempts = int(max_attempts)
+        self.base_delay_s = float(base_delay_s)
+        self.max_delay_s = float(max_delay_s)
+        self.multiplier = float(multiplier)
+        self.deadline_s = deadline_s
+        self.sleep = sleep
+        self.now = now
+
+    def backoff_s(self, attempt: int) -> float:
+        """Backoff after 0-based ``attempt`` failed."""
+        return min(self.base_delay_s * self.multiplier ** attempt,
+                   self.max_delay_s)
+
+    def run(self, fn: Callable, retry_on: Tuple[type, ...],
+            deadline_s: Optional[float] = None):
+        """Call ``fn`` until it returns, a non-retryable exception
+        escapes, attempts are exhausted (the last exception re-raises),
+        or the deadline budget is hit (:class:`RetryBudgetExceeded`)."""
+        budget = self.deadline_s if deadline_s is None else deadline_s
+        deadline = None if budget is None else self.now() + float(budget)
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except retry_on as exc:
+                attempt += 1
+                if attempt >= self.max_attempts:
+                    raise
+                delay = self.backoff_s(attempt - 1)
+                if deadline is not None and \
+                        self.now() + delay > deadline:
+                    raise RetryBudgetExceeded(
+                        f"retry budget exhausted after {attempt} "
+                        f"attempt(s): {exc}") from exc
+                self.sleep(delay)
+
+
+# ===========================================================================
+# Circuit breaker
+# ===========================================================================
+
+
+class CircuitBreaker:
+    """Per-worker circuit breaker: closed → open after
+    ``failure_threshold`` *consecutive* failures → half-open after
+    ``reset_timeout_s``, where exactly **one** probe is allowed through
+    (single-flight); the probe's success closes the circuit, its
+    failure re-opens it for another full timeout.
+
+    The breaker only *gates* (:meth:`allow`) and *observes*
+    (:meth:`record_success` / :meth:`record_failure`); the caller
+    raises its own typed error on rejection (the remote tier raises
+    ``CircuitOpen``, a ``WorkerUnavailable`` subclass, so replica-set
+    failover and degraded reads treat an open circuit exactly like a
+    dead worker — fail fast, no connect attempt).  ``now`` is
+    injectable for fake-clock tests."""
+
+    def __init__(self, failure_threshold: int = 5,
+                 reset_timeout_s: float = 1.0,
+                 now: Callable[[], float] = time.monotonic) -> None:
+        if failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        self.failure_threshold = int(failure_threshold)
+        self.reset_timeout_s = float(reset_timeout_s)
+        self.now = now
+        self._lock = threading.Lock()
+        self.state = "closed"
+        self.failures = 0            # consecutive
+        self.opened_at: Optional[float] = None
+        self._probing = False
+        self.opens = 0               # times the circuit tripped
+        self.rejections = 0          # calls refused while open/probing
+
+    def allow(self) -> bool:
+        """Whether a call may proceed now.  In half-open state, the
+        first caller becomes the single-flight probe; concurrent
+        callers are rejected until the probe reports back."""
+        with self._lock:
+            if self.state == "closed":
+                return True
+            if self.state == "open":
+                if (self.opened_at is not None and
+                        self.now() - self.opened_at >=
+                        self.reset_timeout_s):
+                    self.state = "half_open"
+                    self._probing = True
+                    return True
+                self.rejections += 1
+                return False
+            # half_open
+            if self._probing:
+                self.rejections += 1
+                return False
+            self._probing = True
+            return True
+
+    def record_success(self) -> None:
+        with self._lock:
+            self.state = "closed"
+            self.failures = 0
+            self._probing = False
+            self.opened_at = None
+
+    def record_abort(self) -> None:
+        """The gated call was abandoned without learning anything about
+        the worker (e.g. a scatter aborted mid-merge because *another*
+        shard failed): release the single-flight probe slot without
+        counting a success or failure.  A half-open circuit returns to
+        open (fresh timeout) so the next probe is again single-flight —
+        without this, an abandoned probe would reject callers forever."""
+        with self._lock:
+            self._probing = False
+            if self.state == "half_open":
+                self.state = "open"
+                self.opened_at = self.now()
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self.failures += 1
+            self._probing = False
+            if (self.state == "half_open"
+                    or self.failures >= self.failure_threshold):
+                if self.state != "open":
+                    self.opens += 1
+                self.state = "open"
+                self.opened_at = self.now()
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            return {"state": self.state,
+                    "consecutive_failures": self.failures,
+                    "opens": self.opens,
+                    "rejections": self.rejections}
+
+
+def sum_breaker_stats(snaps: Iterable[Dict[str, object]]
+                      ) -> Dict[str, int]:
+    """Fleet-level rollup of breaker snapshots (explain/stats)."""
+    out = {"breakers": 0, "open": 0, "half_open": 0,
+           "opens": 0, "rejections": 0}
+    for s in snaps:
+        out["breakers"] += 1
+        st = s.get("state")
+        if st == "open":
+            out["open"] += 1
+        elif st == "half_open":
+            out["half_open"] += 1
+        out["opens"] += int(s.get("opens", 0))
+        out["rejections"] += int(s.get("rejections", 0))
+    return out

@@ -75,16 +75,24 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import splunklite
+from repro.core import faults, splunklite
 from repro.core.columnar import ColumnScan, ColumnarMetricStore
+from repro.core.faults import CircuitBreaker, FaultPlan, RetryPolicy
 from repro.core.schema import MetricRecord, encode_line, parse_line
 from repro.core.shards import ShardedAggregator
 from repro.core.sketches import P2Summary
 from repro.core.splunklite import QueryError, ScatterPlan, _Fallback
 
-PROTOCOL_VERSION = 1
+PROTOCOL_VERSION = 2
 CODEC_VERSION = 1
 MAX_FRAME_BYTES = 1 << 28
+# Top bit of the length prefix: this frame carries a 4-byte crc32c
+# trailer after the payload (docs/faults.md).  Self-describing per
+# frame, so either side may turn checksums off (benchmarks) and a v2
+# receiver still interoperates frame by frame.  MAX_FRAME_BYTES is far
+# below the flag bit, so a flagged length can never be mistaken for a
+# huge plain frame.
+FRAME_CRC_FLAG = 0x80000000
 READY_PREFIX = "REPRO_WORKER_READY"
 
 _LEN = struct.Struct("!I")
@@ -95,8 +103,26 @@ class RemoteProtocolError(RuntimeError):
     """Malformed frame, codec violation, or version mismatch."""
 
 
+class FrameChecksumError(RemoteProtocolError):
+    """A frame's payload contradicts its crc32c trailer (bit rot or a
+    fault-injected flip).  Unlike other protocol errors this one is
+    *transient*: the connection is torn down and the op retried."""
+
+
 class WorkerUnavailable(ConnectionError):
     """The worker for a shard cannot be reached (dead or unreachable)."""
+
+
+class DeadlineExceeded(WorkerUnavailable, TimeoutError):
+    """Retries (or the op itself) exhausted the end-to-end deadline
+    budget.  Subclasses :class:`WorkerUnavailable` so every existing
+    failover/degrade catch site treats it as a dead member."""
+
+
+class CircuitOpen(WorkerUnavailable):
+    """The per-worker circuit breaker is open: the worker failed
+    consecutively and the reset timeout has not elapsed, so calls fail
+    fast without touching the socket (docs/faults.md)."""
 
 
 class WorkerError(RuntimeError):
@@ -298,12 +324,17 @@ def decode_scan(obj) -> ColumnScan:
 # Framing
 # ===========================================================================
 
-def send_frame(sock: socket.socket, obj: Dict) -> None:
+def send_frame(sock: socket.socket, obj: Dict,
+               checksum: bool = True) -> None:
     payload = json.dumps(obj, separators=(",", ":"),
                          allow_nan=False).encode("utf-8")
     if len(payload) > MAX_FRAME_BYTES:
         raise RemoteProtocolError(f"frame too large: {len(payload)}B")
-    sock.sendall(_LEN.pack(len(payload)) + payload)
+    if checksum:
+        sock.sendall(_LEN.pack(len(payload) | FRAME_CRC_FLAG) + payload
+                     + _LEN.pack(faults.crc32c(payload)))
+    else:
+        sock.sendall(_LEN.pack(len(payload)) + payload)
 
 
 def recv_exact(sock: socket.socket, n: int) -> bytes:
@@ -318,11 +349,21 @@ def recv_exact(sock: socket.socket, n: int) -> bytes:
 
 
 def recv_frame(sock: socket.socket) -> Dict:
-    (n,) = _LEN.unpack(recv_exact(sock, 4))
+    (word,) = _LEN.unpack(recv_exact(sock, 4))
+    checked = bool(word & FRAME_CRC_FLAG)
+    n = word & ~FRAME_CRC_FLAG
     if n > MAX_FRAME_BYTES:
         raise RemoteProtocolError(f"oversized frame announced: {n}B")
+    raw = recv_exact(sock, n)
+    if checked:
+        (want,) = _LEN.unpack(recv_exact(sock, 4))
+        got = faults.crc32c(raw)
+        if got != want:
+            raise FrameChecksumError(
+                f"frame checksum mismatch: got {got:#010x}, "
+                f"want {want:#010x} over {n}B")
     try:
-        obj = json.loads(recv_exact(sock, n).decode("utf-8"))
+        obj = json.loads(raw.decode("utf-8"))
     except ValueError as exc:
         raise RemoteProtocolError(f"undecodable frame: {exc}") from exc
     if not isinstance(obj, dict):
@@ -346,10 +387,14 @@ class WorkerClient:
 
     def __init__(self, address: Tuple[str, int],
                  op_timeout_s: float = 60.0,
-                 connect_timeout_s: float = 10.0) -> None:
+                 connect_timeout_s: float = 10.0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 checksums: bool = True) -> None:
         self.address = (str(address[0]), int(address[1]))
         self.op_timeout_s = float(op_timeout_s)
         self.connect_timeout_s = float(connect_timeout_s)
+        self.fault_plan = fault_plan
+        self.checksums = bool(checksums)
         self._sock: Optional[socket.socket] = None
 
     @property
@@ -373,6 +418,8 @@ class WorkerClient:
                 f"cannot connect to worker at {self.address}: {exc}")
         sock.settimeout(self.op_timeout_s)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        if self.fault_plan is not None:
+            sock = faults.FaultyTransport(sock, self.fault_plan)
         self._sock = sock
         hello = self.rpc("hello", proto=PROTOCOL_VERSION,
                          codec=CODEC_VERSION)
@@ -397,7 +444,7 @@ class WorkerClient:
         if self._sock is None:
             raise WorkerUnavailable(f"not connected to {self.address}")
         try:
-            send_frame(self._sock, msg)
+            send_frame(self._sock, msg, checksum=self.checksums)
         except (OSError, ValueError) as exc:
             self.close()
             raise WorkerUnavailable(f"send to {self.address} failed: {exc}")
@@ -407,6 +454,12 @@ class WorkerClient:
             raise WorkerUnavailable(f"not connected to {self.address}")
         try:
             reply = recv_frame(self._sock)
+        except RemoteProtocolError:
+            # oversized prefix, garbage payload or checksum mismatch:
+            # the stream position is unknowable — close so this pooled
+            # connection can never serve a desynced next request
+            self.close()
+            raise
         except (OSError, ConnectionError) as exc:
             self.close()
             raise WorkerUnavailable(f"recv from {self.address} failed: {exc}")
@@ -573,14 +626,29 @@ class RemoteShard:
                  process: Optional[LocalWorkerProcess] = None,
                  op_timeout_s: float = 60.0,
                  store_kwargs: Optional[Dict[str, Any]] = None,
-                 degraded_ok: bool = True) -> None:
+                 degraded_ok: bool = True,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 checksums: bool = True) -> None:
         self.index = int(index)
         self.shard_dir = Path(shard_dir)
         self.process = process
         self._op_timeout_s = float(op_timeout_s)
-        self.client = WorkerClient(address if address is not None
-                                   else process.address,
-                                   op_timeout_s=op_timeout_s)
+        self.retry = retry
+        self.breaker = breaker
+        self.fault_plan = fault_plan
+        self.checksums = bool(checksums)
+        self.retries = 0            # extra attempts beyond the first
+        self.checksum_errors = 0    # frames rejected by their trailer
+        self.deadline_exceeded = 0  # ops that exhausted their budget
+        # idempotency keys: unique per coordinator-shard instance —
+        # a retried mutation resends the same key and the worker
+        # replays its recorded reply instead of re-applying
+        self._idem_prefix = os.urandom(6).hex()
+        self._idem_counter = 0
+        self.client = self._make_client(address if address is not None
+                                        else process.address)
         self.degraded_ok = bool(degraded_ok)
         self.degraded_calls = 0
         self._store_kwargs = dict(store_kwargs or {})
@@ -611,6 +679,27 @@ class RemoteShard:
 
     SCATTER_MEMO_MAX = 32
     POOL_MAX = 4
+
+    def _make_client(self, address: Tuple[str, int]) -> WorkerClient:
+        """Every client this shard opens (primary, pooled, restart) is
+        built here, so fault plans and checksum settings apply to all
+        of them uniformly."""
+        return WorkerClient(address, op_timeout_s=self._op_timeout_s,
+                            fault_plan=self.fault_plan,
+                            checksums=self.checksums)
+
+    # ------------------------------------------------- circuit breaker --
+    def _breaker_ok(self) -> None:
+        if self.breaker is not None:
+            self.breaker.record_success()
+
+    def _breaker_fail(self) -> None:
+        if self.breaker is not None:
+            self.breaker.record_failure()
+
+    def _breaker_abort(self) -> None:
+        if self.breaker is not None:
+            self.breaker.record_abort()
 
     def scatter_etag(self, fingerprint: str) -> Optional[list]:
         """``[fingerprint, version]`` for a cached decoded map, or
@@ -648,6 +737,10 @@ class RemoteShard:
         opens a fresh connection (to the primary's *current* address,
         so restarts are honored) only under real concurrency.  Raises
         :class:`WorkerUnavailable` when the worker cannot be reached."""
+        if self.breaker is not None and not self.breaker.allow():
+            raise CircuitOpen(
+                f"shard {self.index} worker at {self.client.address}: "
+                "circuit open")
         with self._lock:
             if not self._primary_busy:
                 self._primary_busy = True
@@ -665,7 +758,7 @@ class RemoteShard:
                 return c
             address = self.client.address
             gen = self._conn_gen
-        c = WorkerClient(address, op_timeout_s=self._op_timeout_s)
+        c = self._make_client(address)
         try:
             c.connect()
         except RemoteProtocolError:
@@ -740,6 +833,10 @@ class RemoteShard:
     def connect(self) -> Dict:
         hello = self.client.connect()
         self._drop_fallback()
+        # a fresh successful handshake is proof of life: close the
+        # breaker immediately so a restarted worker serves without
+        # waiting out a reset timeout
+        self._breaker_ok()
         return hello
 
     def _try_reconnect(self) -> bool:
@@ -769,18 +866,72 @@ class RemoteShard:
     def rpc(self, op: str, **kw) -> Dict:
         """One pooled round trip — safe to call from any thread; a
         concurrent rpc checks out its own connection instead of
-        interleaving frames with an in-flight scatter."""
-        c = self.acquire()
+        interleaving frames with an in-flight scatter.  With a
+        :class:`~repro.core.faults.RetryPolicy` configured, transient
+        failures (socket trouble, checksum-rejected frames) retry with
+        capped backoff under the op-timeout deadline budget;
+        exhaustion raises :class:`DeadlineExceeded`.  Mutations must go
+        through :meth:`mutate` so retries carry idempotency keys."""
+        if self.retry is None:
+            return self._rpc_once(op, kw)
+        first = True
+
+        def attempt() -> Dict:
+            nonlocal first
+            if not first:
+                with self._lock:
+                    self.retries += 1
+            first = False
+            return self._rpc_once(op, kw)
+
+        try:
+            return self.retry.run(
+                attempt, retry_on=(WorkerUnavailable, FrameChecksumError),
+                deadline_s=self._op_timeout_s)
+        except faults.RetryBudgetExceeded as exc:
+            with self._lock:
+                self.deadline_exceeded += 1
+            raise DeadlineExceeded(
+                f"shard {self.index} op {op!r}: {exc}") from exc
+
+    def mutate(self, op: str, **kw) -> Dict:
+        """An :meth:`rpc` that stamps a fresh idempotency key — every
+        state-changing op routes through here so a retried send can be
+        applied at most once by the worker (docs/faults.md)."""
+        with self._lock:
+            self._idem_counter += 1
+            idem = f"{self._idem_prefix}:{self._idem_counter}"
+        return self.rpc(op, idem=idem, **kw)
+
+    def _rpc_once(self, op: str, kw: Dict) -> Dict:
+        try:
+            c = self.acquire()
+        except CircuitOpen:
+            raise  # fail-fast gate: not evidence about the worker
+        except (WorkerUnavailable, RemoteProtocolError, OSError):
+            self._breaker_fail()
+            raise
         broken = True
         try:
             self.session_send(c, op, **kw)
             reply = c.recv()
             broken = False
+            self._breaker_ok()
             return reply
         except (QueryError, WorkerError):
             # error *reply*: the frame was fully consumed, the
-            # connection is still in protocol sync
+            # connection is still in protocol sync — and the worker is
+            # demonstrably alive
             broken = False
+            self._breaker_ok()
+            raise
+        except FrameChecksumError:
+            with self._lock:
+                self.checksum_errors += 1
+            self._breaker_fail()
+            raise
+        except (WorkerUnavailable, RemoteProtocolError, OSError):
+            self._breaker_fail()
             raise
         finally:
             self.release(c, broken=broken)
@@ -791,11 +942,18 @@ class RemoteShard:
         in-flight session — the scatter/gather fan-out issues every
         shard's ``op_begin`` before the first ``op_finish`` (transport
         overlaps with worker compute)."""
-        c = self.acquire()
+        try:
+            c = self.acquire()
+        except CircuitOpen:
+            raise
+        except (WorkerUnavailable, RemoteProtocolError, OSError):
+            self._breaker_fail()
+            raise
         try:
             self.session_send(c, op, **kw)
         except WorkerUnavailable:
             self.release(c, broken=True)
+            self._breaker_fail()
             raise
         return OpSession(op, kw, [(self, c)])
 
@@ -808,21 +966,33 @@ class RemoteShard:
         session.attempts = []
         try:
             reply = c.recv()
-        except WorkerUnavailable:
+        except FrameChecksumError:
+            with sh._lock:
+                sh.checksum_errors += 1
             sh.release(c, broken=True)
+            sh._breaker_fail()
+            raise
+        except (WorkerUnavailable, RemoteProtocolError):
+            sh.release(c, broken=True)
+            sh._breaker_fail()
             raise
         except (QueryError, WorkerError):
             sh.release(c)
+            sh._breaker_ok()
             raise
         sh.release(c)
+        sh._breaker_ok()
         session.winner = sh
         return reply
 
     def op_abort(self, session: OpSession) -> None:
         """Abandon an in-flight session (mid-merge failure): the unread
-        replies make these connections unusable, so drop them."""
+        replies make these connections unusable, so drop them.  The
+        breaker records an *abort* (not a failure): nothing was learned
+        about this worker, but a half-open probe slot must be freed."""
         for sh, c in session.attempts:
             sh.release(c, broken=True)
+            sh._breaker_abort()
         session.attempts = []
 
     # ----------------------------------------------------- degraded reads --
@@ -860,13 +1030,14 @@ class RemoteShard:
 
     # ------------------------------------------------------ store surface --
     def insert(self, rec: MetricRecord) -> bool:
-        return bool(self.rpc("insert", line=encode_line(rec))["accepted"])
+        return bool(self.mutate("insert",
+                                line=encode_line(rec))["accepted"])
 
     def ingest_lines(self, lines: Iterable[str]) -> int:
-        return int(self.rpc("lines", lines=list(lines))["n"])
+        return int(self.mutate("lines", lines=list(lines))["n"])
 
     def seal(self) -> None:
-        self.rpc("seal")
+        self.mutate("seal")
 
     def __len__(self) -> int:
         try:
@@ -967,7 +1138,7 @@ class RemoteShard:
         serving one via the ``not_modified`` fast path would pin
         pre-compaction state forever.  The stale read-only fallback
         snapshot is dropped for the same reason."""
-        reply = self.rpc("compact", **kwargs)
+        reply = self.mutate("compact", **kwargs)
         stats = reply["stats"]
         if stats.get("retired_uids") or stats.get("runs"):
             self.drop_scatter_memo()
@@ -983,7 +1154,7 @@ class RemoteShard:
         if "rollups" in kwargs and kwargs["rollups"] is not None:
             kwargs["rollups"] = [list(t) if isinstance(t, (list, tuple))
                                  else t for t in kwargs["rollups"]]
-        reply = self.rpc("retention", **kwargs)
+        reply = self.mutate("retention", **kwargs)
         stats = reply["stats"]
         if stats.get("rollups_created") or stats.get("dropped_segments"):
             self.drop_scatter_memo()
@@ -1219,6 +1390,8 @@ class ReplicaSet:
                     m.release(c, broken=True)
                     raise
             except (WorkerUnavailable, RemoteProtocolError, OSError) as exc:
+                if not isinstance(exc, CircuitOpen):
+                    m._breaker_fail()
                 last = exc
                 continue
             session = OpSession(op, kw, [(m, c)])
@@ -1246,8 +1419,11 @@ class ReplicaSet:
                     m.session_send(c, session.op, **session.kw)
                 except WorkerUnavailable:
                     m.release(c, broken=True)
+                    m._breaker_fail()
                     continue
-            except (WorkerUnavailable, RemoteProtocolError, OSError):
+            except (WorkerUnavailable, RemoteProtocolError, OSError) as exc:
+                if not isinstance(exc, CircuitOpen):
+                    m._breaker_fail()
                 continue
             session.attempts.append((m, c))
             with self._lock:
@@ -1302,6 +1478,7 @@ class ReplicaSet:
             except (WorkerUnavailable, OSError):
                 drained = False
             m.release(c, broken=not drained)
+            m._breaker_abort()
             if not drained:
                 with self._lock:
                     self.hedge_cancelled += 1
@@ -1329,7 +1506,7 @@ class ReplicaSet:
             now = time.monotonic()
             if now > deadline:
                 self.op_abort(session)
-                raise WorkerUnavailable(
+                raise DeadlineExceeded(
                     f"shard {self.index}: {session.op} timed out across "
                     "replica-set members")
             timeout = deadline - now
@@ -1344,14 +1521,23 @@ class ReplicaSet:
             m, c = ready
             try:
                 reply = c.recv()
-            except WorkerUnavailable:
+            except FrameChecksumError:
+                with m._lock:
+                    m.checksum_errors += 1
                 m.release(c, broken=True)
+                m._breaker_fail()
+                session.attempts.remove((m, c))
+                continue
+            except (WorkerUnavailable, RemoteProtocolError):
+                m.release(c, broken=True)
+                m._breaker_fail()
                 session.attempts.remove((m, c))
                 continue
             except (QueryError, WorkerError):
                 # a definitive error reply: the query itself is bad on
                 # every member — cancel the others and propagate
                 m.release(c)
+                m._breaker_ok()
                 session.attempts.remove((m, c))
                 self._cancel_losers(session)
                 raise
@@ -1361,6 +1547,7 @@ class ReplicaSet:
                 with self._lock:
                     self.stale_replies += 1
                 m.release(c)
+                m._breaker_ok()  # healthy reply, just behind on version
                 session.attempts.remove((m, c))
                 continue
             session.attempts.remove((m, c))
@@ -1374,6 +1561,7 @@ class ReplicaSet:
                 self._note_latency(loser, elapsed)
             self._cancel_losers(session)
             m.release(c)
+            m._breaker_ok()
             if session.hedged and m is not session.first:
                 with self._lock:
                     self.hedge_wins += 1
@@ -1382,6 +1570,7 @@ class ReplicaSet:
     def op_abort(self, session: OpSession) -> None:
         for m, c in session.attempts:
             m.release(c, broken=True)
+            m._breaker_abort()
         session.attempts = []
 
     # ---------------------------------------------------- failover reads --
@@ -1577,7 +1766,7 @@ class ReplicaSet:
                              and rrollups == pr_uids[:len(rrollups)])
                 if reset:
                     stats["resets"] += 1
-                    m.rpc("adopt_replica", reset=True)
+                    m.mutate("adopt_replica", reset=True)
                     todo = psealed + prollups
                 else:
                     todo = (psealed[len(rsealed):]
@@ -1589,9 +1778,9 @@ class ReplicaSet:
                         payload = {"manifest": got["manifest"],
                                    "bin": got["bin"]}
                         fetched[stem] = payload
-                    m.rpc("adopt_replica", segments=[payload])
+                    m.mutate("adopt_replica", segments=[payload])
                     stats["segments_shipped"] += 1
-                reply = m.rpc("adopt_replica",
+                reply = m.mutate("adopt_replica",
                               buffer_lines=pstate["buffer_lines"],
                               seq=pstate["seq"])
                 if tuple(reply["version"]) == pversion:
@@ -1674,7 +1863,12 @@ class RemoteShardedAggregator(ShardedAggregator):
                  degraded_ok: bool = True,
                  replicas: int = 1,
                  hedge: bool = True,
-                 hedge_delay_s: Optional[float] = None) -> None:
+                 hedge_delay_s: Optional[float] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 frame_checksums: bool = True,
+                 retry: Any = "default",
+                 breaker_threshold: int = 5,
+                 breaker_reset_s: float = 1.0) -> None:
         if directory is None:
             raise ValueError("RemoteShardedAggregator requires a directory "
                              "(workers serve durable shard dirs)")
@@ -1695,6 +1889,18 @@ class RemoteShardedAggregator(ShardedAggregator):
         self._replicas = int(replicas)
         self._hedge = bool(hedge)
         self._hedge_delay_s = hedge_delay_s
+        # robustness config (docs/faults.md): ``fault_plan`` injects
+        # wire faults into every client this coordinator opens;
+        # ``frame_checksums`` adds crc32c trailers to outbound frames;
+        # ``retry="default"`` builds one shared RetryPolicy (pass None
+        # to disable, or a RetryPolicy to tune); each worker gets its
+        # own CircuitBreaker unless ``breaker_threshold`` is 0.
+        self.fault_plan = fault_plan
+        self.frame_checksums = bool(frame_checksums)
+        self._retry: Optional[RetryPolicy] = (
+            RetryPolicy() if retry == "default" else retry)
+        self._breaker_threshold = int(breaker_threshold)
+        self._breaker_reset_s = float(breaker_reset_s)
         self._addresses = addresses
         self._spawn = bool(spawn) if spawn is not None else addresses is None
         self._op_timeout_s = float(op_timeout_s)
@@ -1726,6 +1932,17 @@ class RemoteShardedAggregator(ShardedAggregator):
                     idle_timeout_s=self._worker_idle_timeout_s,
                     spawn_timeout_s=self._spawn_timeout_s)
 
+    def _robustness_kwargs(self) -> Dict[str, Any]:
+        """Per-shard robustness wiring: the retry policy is shared
+        (stateless config), the circuit breaker is per worker."""
+        return dict(retry=self._retry,
+                    breaker=(CircuitBreaker(
+                        failure_threshold=self._breaker_threshold,
+                        reset_timeout_s=self._breaker_reset_s)
+                        if self._breaker_threshold > 0 else None),
+                    fault_plan=self.fault_plan,
+                    checksums=self.frame_checksums)
+
     def _replica_dirname(self, i: int, r: int) -> str:
         """Replica ``r > 0`` of shard ``i`` lives beside the primary
         directory (``shard-02.r1``) — same shard set, never listed in
@@ -1751,7 +1968,8 @@ class RemoteShardedAggregator(ShardedAggregator):
                                     process=process,
                                     op_timeout_s=self._op_timeout_s,
                                     store_kwargs=store_kwargs,
-                                    degraded_ok=self.degraded_ok)
+                                    degraded_ok=self.degraded_ok,
+                                    **self._robustness_kwargs())
                 shards.append(shard)
                 shard.connect()
         except Exception:
@@ -1785,7 +2003,8 @@ class RemoteShardedAggregator(ShardedAggregator):
                             i, self.directory / name, process=process,
                             op_timeout_s=self._op_timeout_s,
                             store_kwargs=store_kwargs,
-                            degraded_ok=False))
+                            degraded_ok=False,
+                            **self._robustness_kwargs()))
                 except Exception:
                     for m in members:
                         try:
@@ -1864,8 +2083,7 @@ class RemoteShardedAggregator(ShardedAggregator):
             target.process.stop()
         target.process = LocalWorkerProcess(target.shard_dir,
                                             **self._worker_spawn_kwargs())
-        target.client = WorkerClient(target.process.address,
-                                     op_timeout_s=self._op_timeout_s)
+        target.client = target._make_client(target.process.address)
         target.connect()
         if getattr(sh, "is_replicated", False):
             sh.mark_member_unsynced(member)
@@ -1926,6 +2144,32 @@ class RemoteShardedAggregator(ShardedAggregator):
                       "hedge_wins", "hedge_cancelled", "failovers",
                       "stale_replies", "degraded_calls"):
                 out[k] += int(s[k])
+        return out
+
+    def _all_members(self) -> List[RemoteShard]:
+        members: List[RemoteShard] = []
+        for sh in self.shards:
+            members.extend(sh.members
+                           if getattr(sh, "is_replicated", False)
+                           else [sh])
+        return members
+
+    def robustness_stats(self) -> Dict[str, Any]:
+        """Fleet-wide robustness counters (docs/faults.md): retry /
+        checksum / deadline totals over every worker connection plus a
+        rollup of the per-worker circuit-breaker states.  Surfaced by
+        :meth:`explain` and ``QueryService.stats()``."""
+        members = self._all_members()
+        out: Dict[str, Any] = faults.sum_breaker_stats(
+            m.breaker.snapshot() for m in members
+            if m.breaker is not None)
+        out["retries"] = sum(m.retries for m in members)
+        out["checksum_errors"] = sum(m.checksum_errors for m in members)
+        out["deadline_exceeded"] = sum(m.deadline_exceeded
+                                       for m in members)
+        out["frame_checksums"] = self.frame_checksums
+        out["retry_enabled"] = self._retry is not None
+        out["crc_impl"] = faults.CRC_IMPL
         return out
 
     def drop_scatter_memos(self) -> None:
@@ -2055,12 +2299,13 @@ class RemoteShardedAggregator(ShardedAggregator):
                  "shards": self.num_shards, "fingerprint": plan.fingerprint,
                  "segments_cached": 0, "segments_computed": 0,
                  "buffer_rows": 0, "rollup_segments": 0,
-                 "rollup_replaced": 0, "degraded_shards": 0,
+                 "rollup_replaced": 0, "quarantined_segments": 0,
+                 "degraded_shards": 0,
                  "shards_unchanged": 0, "hedged_shards": 0,
                  "failover_shards": 0}
         counter_keys = ("segments_cached", "segments_computed",
                         "buffer_rows", "rollup_segments",
-                        "rollup_replaced")
+                        "rollup_replaced", "quarantined_segments")
         merged: Dict[tuple, Dict[str, Any]] = {}
         fell_back = False
         try:
@@ -2232,6 +2477,15 @@ class RemoteShardedAggregator(ShardedAggregator):
         for sh in self.shards:
             info: Dict[str, Any] = {"shard": sh.index,
                                     "degraded_calls": sh.degraded_calls}
+            mlist = (sh.members if getattr(sh, "is_replicated", False)
+                     else [sh])
+            info["retries"] = sum(m.retries for m in mlist)
+            info["checksum_errors"] = sum(m.checksum_errors
+                                          for m in mlist)
+            breakers = [m.breaker.snapshot() for m in mlist
+                        if m.breaker is not None]
+            if breakers:
+                info["breakers"] = breakers
             if getattr(sh, "is_replicated", False):
                 info["replicas_alive"] = sh.members_alive()
             try:
@@ -2270,6 +2524,7 @@ class RemoteShardedAggregator(ShardedAggregator):
         rep = self.replication_stats()
         if rep is not None:
             out["replication"] = rep
+        out["robustness"] = self.robustness_stats()
         if plan is not None:
             out.update({
                 "mode": "scatter_gather",

@@ -53,6 +53,7 @@ from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.core import faults
 from repro.core.columnar import (MISSING, NumColumn, ObjColumn, Segment,
                                  StrColumn, segment_uid)
 
@@ -62,7 +63,18 @@ FORMATS = (FORMAT, FORMAT_COLD)
 SHARDSET_FORMAT = "repro-shardset-v1"
 SEGMENT_STEM_FMT = "seg-{:08d}"
 SHARDSET_MANIFEST = "shards.json"
+QUARANTINE_DIRNAME = "quarantine"
 _ALIGN = 64
+
+
+class WalCorruptionError(ValueError):
+    """A checksummed WAL has a bad line *before* its final record.
+
+    A torn tail (crash mid-append) can only damage the last line, and
+    that line is silently truncated as before.  Corruption anywhere
+    earlier means acknowledged records were damaged at rest — replay
+    must stop with a typed error instead of silently dropping every
+    record from that point (the pre-checksum behavior)."""
 
 
 # -------------------------------------------------------------------- write --
@@ -266,6 +278,13 @@ def save_segment(seg_dir: os.PathLike, stem: str, seg: Segment,
     karr = (np.frombuffer(b"".join(keys), dtype=np.uint8)
             if keys else np.zeros(0, np.uint8))
     digest_size = len(keys[0]) if keys else 12
+    dedup_spec = {"digest_size": digest_size, "count": len(keys),
+                  "keys": w.add(karr)}
+    # the checksum covers every payload chunk — dedup keys included —
+    # so it must be computed after the final w.add above
+    crc = 0
+    for chunk in w.chunks:
+        crc = faults.crc32c(chunk, crc)
     manifest = {
         "format": FORMAT_COLD if compress else FORMAT,
         "n": seg.n,
@@ -275,16 +294,21 @@ def save_segment(seg_dir: os.PathLike, stem: str, seg: Segment,
         "attrs": attrs,
         "fields": fields,
         "zones": zones,
-        "dedup": {"digest_size": digest_size, "count": len(keys),
-                  "keys": w.add(karr)},
+        "dedup": dedup_spec,
         "bin_bytes": w.size,
         "raw_bytes": raw_bytes,
+        "crc32c": crc,
         "tier": "cold" if compress else "hot",
     }
     if extra:
         manifest.update(extra)
     bin_path = seg_dir / (stem + ".bin")
     man_path = seg_dir / (stem + ".json")
+    # fault injection (tests/bench only; a no-op None check otherwise):
+    # simulate the commit protocol's crash windows and a full disk
+    fault = faults.storage_fault("seal")
+    if fault == "enospc":
+        raise faults.enospc(bin_path)
     tmp = Path(str(bin_path) + ".tmp")
     with open(tmp, "wb") as f:
         for chunk in w.chunks:
@@ -292,6 +316,13 @@ def save_segment(seg_dir: os.PathLike, stem: str, seg: Segment,
         if fsync:
             f.flush()
             os.fsync(f.fileno())
+    if fault == "torn_bin":
+        # crash after a partial .bin rename, before the manifest: the
+        # loader must treat the stem as invisible (no commit point)
+        with open(tmp, "r+b") as f:
+            f.truncate(max(0, w.size // 2))
+        os.replace(tmp, bin_path)
+        raise faults.enospc(man_path)
     os.replace(tmp, bin_path)
     tmp = Path(str(man_path) + ".tmp")
     with open(tmp, "w", encoding="utf-8") as f:
@@ -299,6 +330,15 @@ def save_segment(seg_dir: os.PathLike, stem: str, seg: Segment,
         if fsync:
             f.flush()
             os.fsync(f.fileno())
+    if fault == "torn_manifest":
+        # crash mid-manifest-write: a garbage half-file at the final
+        # name — the loader must skip it (counted in
+        # segment_load_errors) and recover the rows from the WAL
+        blob = json.dumps(manifest)
+        with open(tmp, "w", encoding="utf-8") as f:
+            f.write(blob[:len(blob) // 2])
+        os.replace(tmp, man_path)
+        raise faults.enospc(man_path)
     os.replace(tmp, man_path)
     if fsync:
         fsync_dir(seg_dir)
@@ -447,6 +487,46 @@ class MappedSegment(Segment):
         return {raw[i * size:(i + 1) * size] for i in range(int(d["count"]))}
 
 
+def segment_crc_ok(manifest: Dict, bin_path: os.PathLike
+                   ) -> Optional[bool]:
+    """Verify a segment's ``.bin`` payload against the ``crc32c`` its
+    manifest recorded at seal.  Returns ``None`` for manifests from
+    before the checksum existed (nothing to verify), ``False`` on a
+    mismatch or unreadable file, ``True`` when the bytes are intact."""
+    want = manifest.get("crc32c")
+    if want is None:
+        return None
+    nbytes = int(manifest.get("bin_bytes", 0))
+    try:
+        mm = np.memmap(bin_path, dtype=np.uint8, mode="r") \
+            if nbytes else np.zeros(0, np.uint8)
+    except (OSError, ValueError):
+        return False
+    if mm.size < nbytes:
+        return False
+    return faults.crc32c(mm[:nbytes]) == int(want)
+
+
+def quarantine_segment_files(man_path: os.PathLike) -> Path:
+    """Move a corrupt segment's file pair into the sibling
+    ``quarantine/`` directory (kept for forensics, invisible to the
+    loader).  The ``.bin`` moves first: if quarantining itself is
+    interrupted, the survivor state is a manifest without data — an
+    interrupted seal, which the loader already skips.  Returns the
+    quarantine directory."""
+    man_path = Path(man_path)
+    qdir = man_path.parent / QUARANTINE_DIRNAME
+    qdir.mkdir(parents=True, exist_ok=True)
+    for victim in (man_path.with_suffix(".bin"), man_path):
+        try:
+            os.replace(victim, qdir / victim.name)
+        except OSError:
+            pass
+    fsync_dir(man_path.parent)
+    fsync_dir(qdir)
+    return qdir
+
+
 def copy_segment_files(src_manifest: os.PathLike, dest_dir: os.PathLike,
                        stem: str, fsync: bool = True) -> Path:
     """Copy one committed segment's file pair under a new stem (segment
@@ -470,6 +550,13 @@ def copy_segment_files(src_manifest: os.PathLike, dest_dir: os.PathLike,
     man_path = dest_dir / (stem + ".json")
     tmp = Path(str(bin_path) + ".tmp")
     shutil.copyfile(src_manifest.with_suffix(".bin"), tmp)
+    # integrity gate: adoption is how corruption would *spread* (shard
+    # migration, replica catch-up), so the copied payload is verified
+    # against the manifest checksum before it can be committed here
+    if segment_crc_ok(manifest, tmp) is False:
+        tmp.unlink(missing_ok=True)
+        raise ValueError(
+            f"segment payload failed checksum during copy: {src_manifest}")
     if fsync:
         with open(tmp, "rb") as f:
             os.fsync(f.fileno())
@@ -486,21 +573,71 @@ def copy_segment_files(src_manifest: os.PathLike, dest_dir: os.PathLike,
     return man_path
 
 
+def wal_encode_line(payload: str) -> str:
+    """One checksummed WAL line: ``<crc32c hex8> <payload>``.  The
+    checksum covers the payload bytes only — the newline terminator is
+    the framing, not part of the record."""
+    return f"{faults.crc32c(payload.encode('utf-8')):08x} {payload}"
+
+
+def _wal_decode_line(raw: bytes) -> Optional[str]:
+    """Payload of one checksummed WAL line, or ``None`` when the line
+    fails its checksum / is not checksum-framed."""
+    if len(raw) < 10 or raw[8:9] != b" ":
+        return None
+    head, payload = raw[:8], raw[9:]
+    try:
+        want = int(head, 16)
+    except ValueError:
+        return None
+    if faults.crc32c(payload) != want:
+        return None
+    try:
+        return payload.decode("utf-8")
+    except UnicodeDecodeError:
+        return None
+
+
 def read_complete_wal_lines(path: os.PathLike) -> List[str]:
     """Decoded complete lines of a write-ahead log, dropping a torn
     trailing write (a crash mid-append must never yield a partial
     record, and the torn bytes must not concatenate with the next
     accepted line).  Shared by store restart replay and shard-set
-    migration so the WAL framing rules live in one place."""
+    migration so the WAL framing rules live in one place.
+
+    Lines written since PR 9 carry a per-line crc32c prefix
+    (:func:`wal_encode_line`).  For a checksummed WAL the rules are
+    strict: only the *final* line may fail verification (that is the
+    torn-tail crash window — it is dropped, as before); a bad line with
+    valid lines after it is corruption of acknowledged records and
+    raises :class:`WalCorruptionError` instead of silently dropping
+    data.  A WAL with no verifiable line at all (legacy format, from
+    before the checksum) keeps the old lenient behavior: complete lines
+    pass through, the unterminated tail is dropped."""
     try:
         data = Path(path).read_bytes()
     except OSError:
         return []
-    end = data.rfind(b"\n")
-    if end < 0:
+    if not data:
         return []
-    return [raw.decode("utf-8", errors="replace")
-            for raw in data[:end + 1].split(b"\n") if raw]
+    raw_lines = [ln for ln in data.split(b"\n") if ln]
+    decoded = [_wal_decode_line(raw) for raw in raw_lines]
+    if not any(d is not None for d in decoded):
+        # legacy WAL (or damaged beyond recognition): pre-checksum rules
+        end = data.rfind(b"\n")
+        if end < 0:
+            return []
+        return [raw.decode("utf-8", errors="replace")
+                for raw in data[:end + 1].split(b"\n") if raw]
+    bad = [i for i, d in enumerate(decoded) if d is None]
+    if bad and bad != [len(decoded) - 1]:
+        raise WalCorruptionError(
+            f"{path}: line {bad[0] + 1} of {len(decoded)} failed its "
+            "checksum with intact records after it — mid-file "
+            "corruption, not a torn tail")
+    if bad:
+        decoded.pop()  # torn final append: truncated, as before
+    return [d for d in decoded if d is not None]
 
 
 # ---------------------------------------------------------------- shardset --

@@ -322,6 +322,11 @@ class QueryService:
             r = rep()
             if r:
                 out["replication"] = r
+        rob = getattr(self.store, "robustness_stats", None)
+        if callable(rob):
+            r = rob()
+            if r:
+                out["robustness"] = r
         return out
 
     # ------------------------------------------------------------- scheduler --

@@ -378,11 +378,12 @@ class ShardedAggregator:
     def _merge_storage_stats(per_shard: List[Dict]) -> Dict:
         total: Dict[str, Any] = {k: 0 for k in ("segments", "files",
                                                 "rows", "bytes",
-                                                "raw_bytes", "buffer_rows")}
+                                                "raw_bytes", "buffer_rows",
+                                                "quarantined_segments")}
         tiers: Dict[str, Dict] = {}
         for st in per_shard:
             for k in ("segments", "files", "rows", "bytes", "raw_bytes",
-                      "buffer_rows"):
+                      "buffer_rows", "quarantined_segments"):
                 total[k] += st.get(k, 0)
             for name, t in (st.get("tiers") or {}).items():
                 agg = tiers.setdefault(name, {

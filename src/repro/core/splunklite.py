@@ -37,6 +37,7 @@ import math
 import re
 import shlex
 import warnings
+import zlib
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Union
 
 import numpy as np
@@ -1916,7 +1917,22 @@ def scatter_partials(store: ColumnarMetricStore, plan: ScatterPlan,
                     stats["segments_cached"] = \
                         stats.get("segments_cached", 0) + 1
                 continue
-        pmap = _segment_partials(seg, plan)
+        try:
+            pmap = _segment_partials(seg, plan)
+        except (ValueError, KeyError, OSError, zlib.error):
+            # A sealed segment whose payload defeats decode (bit rot
+            # past the open-time checksum, truncated mmap, ...) must
+            # not take the whole query down: quarantine it and degrade,
+            # surfacing the count instead of crashing.  Buffer batches
+            # (uid None) have no backing files and are never corrupt
+            # this way, so decode errors there stay fatal.
+            quarantine = getattr(store, "quarantine_segment", None)
+            if uid is None or quarantine is None or not quarantine(seg):
+                raise
+            if stats is not None:
+                stats["quarantined_segments"] = \
+                    stats.get("quarantined_segments", 0) + 1
+            continue
         if cache is not None and key is not None:
             cache.put(key, pmap)
         if stats is not None:

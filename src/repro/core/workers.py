@@ -35,11 +35,12 @@ import socket
 import struct
 import threading
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import remote, splunklite
+from repro.core import faults, remote, splunklite
 from repro.core.columnar import ColumnarMetricStore
 from repro.core.schema import encode_line, parse_line
 from repro.core.splunklite import QueryError, ScatterPlan, _Fallback
@@ -58,12 +59,20 @@ class ShardWorker:
     # fresh connection is always welcome afterwards
     FRAME_STALL_S = 60.0
 
+    # bounded memory of recently applied mutation idempotency keys →
+    # their successful replies: a coordinator retry that resends a key
+    # replays the recorded reply instead of re-applying (docs/faults.md)
+    IDEM_CACHE_MAX = 512
+    MUTATION_OPS = frozenset({"insert", "lines", "seal", "adopt_replica",
+                              "compact", "retention"})
+
     def __init__(self, directory, host: str = "127.0.0.1", port: int = 0,
                  seal_threshold: int = 4096,
                  dedup_horizon_s: Optional[float] = None,
                  wal_fsync: bool = False,
                  partial_cache_entries: int = 512,
-                 idle_timeout_s: Optional[float] = None) -> None:
+                 idle_timeout_s: Optional[float] = None,
+                 frame_checksums: bool = True) -> None:
         self._store_kwargs = dict(
             seal_threshold=seal_threshold, dedup_horizon_s=dedup_horizon_s,
             wal_fsync=wal_fsync, partial_cache_entries=partial_cache_entries)
@@ -79,6 +88,14 @@ class ShardWorker:
         # scatter/gather, so tests and benchmarks can make one worker
         # artificially slow (hedged-scatter tail-latency measurements)
         self.delay_s = 0.0
+        # robustness state (docs/faults.md): crc32c trailers on reply
+        # frames, mutation idempotency replay cache, and the
+        # ``set_faults`` knobs (storage fault plan, kill countdown)
+        self.frame_checksums = bool(frame_checksums)
+        self._idem_cache: "OrderedDict[str, Dict]" = OrderedDict()
+        self._idem_replays = 0
+        self._kill_after_ops: Optional[int] = None
+        self._fault_plan: Optional[faults.FaultPlan] = None
         # _last_activity, requests_served, and the in-flight count are
         # touched from every per-connection thread plus the accept
         # loop's idle check — one small lock keeps the counters exact
@@ -152,7 +169,8 @@ class ShardWorker:
             try:
                 reply = self.handle(msg)
                 try:
-                    remote.send_frame(conn, reply)
+                    remote.send_frame(conn, reply,
+                                      checksum=self.frame_checksums)
                     served = True
                 except (OSError, ValueError):
                     return
@@ -168,10 +186,22 @@ class ShardWorker:
         honor shutdown/idle deadlines; once a frame starts, a stalled
         client is abandoned after ``FRAME_STALL_S``."""
         header = self._read_exact(conn, 4, waiting_for_frame=True)
-        (n,) = _LEN.unpack(header)
+        (word,) = _LEN.unpack(header)
+        checked = bool(word & remote.FRAME_CRC_FLAG)
+        n = word & ~remote.FRAME_CRC_FLAG
         if n > remote.MAX_FRAME_BYTES:
             raise remote.RemoteProtocolError(f"oversized frame: {n}B")
         payload = self._read_exact(conn, n, waiting_for_frame=False)
+        if checked:
+            trailer = self._read_exact(conn, 4, waiting_for_frame=False)
+            (want,) = _LEN.unpack(trailer)
+            if faults.crc32c(payload) != want:
+                # the request bytes are untrustworthy and the stream
+                # position is too: drop the connection (the caller of
+                # _read_frame treats any protocol error that way), the
+                # client sees EOF and retries on a fresh socket
+                raise remote.FrameChecksumError(
+                    "request frame checksum mismatch")
         import json
         try:
             msg = json.loads(payload.decode("utf-8"))
@@ -221,16 +251,47 @@ class ShardWorker:
             # injected slowness sleeps outside the op lock: a slow
             # query must not also stall this worker's pings/ingest
             time.sleep(self.delay_s)
+        idem = msg.get("idem")
+        if not (isinstance(idem, str) and op in self.MUTATION_OPS):
+            idem = None
         try:
             with self._op_lock:
+                if idem is not None:
+                    hit = self._idem_cache.get(idem)
+                    if hit is not None:
+                        # the mutation already applied; its reply was
+                        # lost in transit — replay it, apply nothing
+                        self._idem_cache.move_to_end(idem)
+                        self._idem_replays += 1
+                        return dict(hit)
+                self._maybe_kill()
                 out = fn(msg) or {}
+                out["ok"] = True
+                if idem is not None:
+                    # success-only: a failed mutation must stay
+                    # retryable under a fresh attempt, not replay its
+                    # error forever
+                    self._idem_cache[idem] = dict(out)
+                    while len(self._idem_cache) > self.IDEM_CACHE_MAX:
+                        self._idem_cache.popitem(last=False)
+                return out
         except QueryError as exc:
             return {"ok": False, "kind": "QueryError", "error": str(exc)}
         except Exception as exc:  # noqa: BLE001 - must never kill the loop
             return {"ok": False, "kind": type(exc).__name__,
                     "error": f"{type(exc).__name__}: {exc}"}
-        out["ok"] = True
-        return out
+
+    def _maybe_kill(self) -> None:
+        """``set_faults(kill_after_ops=k)`` countdown: the k-th
+        subsequent op hard-kills the process mid-op (no reply, no
+        cleanup) — the chaos suite's worker-crash primitive."""
+        k = self._kill_after_ops
+        if k is None:
+            return
+        if k <= 0:
+            import os
+            os._exit(1)
+        self._kill_after_ops = k - 1
 
     # ---------------------------------------------------------------- ops --
     def _op_hello(self, msg: Dict) -> Dict:
@@ -357,7 +418,9 @@ class ShardWorker:
                 "buffer_rows": len(self.store._buffer),
                 "cache": {"hits": pc.hits, "misses": pc.misses,
                           "evictions": pc.evictions, "entries": len(pc)},
-                "storage": self.store.storage_stats()}
+                "storage": self.store.storage_stats(),
+                "idem_replays": self._idem_replays,
+                "quarantined_segments": self.store.quarantined_segments}
 
     def _op_compact(self, msg: Dict) -> Dict:
         """Run segment compaction on the worker's store.  The reply
@@ -388,6 +451,48 @@ class ShardWorker:
         to exercise hedging)."""
         self.delay_s = max(0.0, float(msg.get("s", 0.0)))
         return {"delay_s": self.delay_s}
+
+    def _op_set_faults(self, msg: Dict) -> Dict:
+        """Install worker-side fault injection (chaos tests/bench only;
+        docs/faults.md).  Knobs:
+
+        ``clear``            drop any installed storage fault plan
+        ``seed``/``seal_rates``   probabilistic seal faults
+        ``seal_enospc`` / ``seal_torn_bin`` / ``seal_torn_manifest``
+                             force exactly N scripted seal faults
+        ``delay_s``          scatter/gather slowness (as ``set_delay``)
+        ``kill_after_ops``   hard-kill the process mid-op after N ops
+        ``frame_checksums``  toggle crc32c trailers on reply frames
+        """
+        if msg.get("clear"):
+            faults.install_storage_faults(None)
+            self._fault_plan = None
+        scripted = ("seal_enospc", "seal_torn_bin", "seal_torn_manifest")
+        if ("seed" in msg or "seal_rates" in msg
+                or any(k in msg for k in scripted)):
+            rates = ({"seal": dict(msg["seal_rates"])}
+                     if msg.get("seal_rates") else None)
+            plan = faults.FaultPlan(seed=int(msg.get("seed", 0)),
+                                    rates=rates)
+            for kind, key in (("enospc", "seal_enospc"),
+                              ("torn_bin", "seal_torn_bin"),
+                              ("torn_manifest", "seal_torn_manifest")):
+                times = int(msg.get(key, 0))
+                if times:
+                    plan.force("seal", kind, times=times)
+            faults.install_storage_faults(plan)
+            self._fault_plan = plan
+        if "delay_s" in msg:
+            self.delay_s = max(0.0, float(msg["delay_s"]))
+        if "kill_after_ops" in msg:
+            v = msg["kill_after_ops"]
+            self._kill_after_ops = None if v is None else int(v)
+        if "frame_checksums" in msg:
+            self.frame_checksums = bool(msg["frame_checksums"])
+        return {"installed": self._fault_plan is not None,
+                "delay_s": self.delay_s,
+                "kill_after_ops": self._kill_after_ops,
+                "frame_checksums": self.frame_checksums}
 
     # ------------------------------------------------------- replication --
     def _op_sync_state(self, msg: Dict) -> Dict:
@@ -498,6 +603,9 @@ def main(argv=None) -> int:
     ap.add_argument("--idle-timeout-s", type=float, default=None,
                     help="exit after this long with no client activity "
                          "(orphan protection for CI)")
+    ap.add_argument("--no-frame-checksums", action="store_true",
+                    help="send reply frames without crc32c trailers "
+                         "(benchmark baseline; docs/faults.md)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress the READY line")
     args = ap.parse_args(argv)
@@ -507,7 +615,8 @@ def main(argv=None) -> int:
         dedup_horizon_s=args.dedup_horizon_s,
         wal_fsync=args.wal_fsync,
         partial_cache_entries=args.partial_cache_entries,
-        idle_timeout_s=args.idle_timeout_s)
+        idle_timeout_s=args.idle_timeout_s,
+        frame_checksums=not args.no_frame_checksums)
     if not args.quiet:
         print(f"{remote.READY_PREFIX} host={worker.address[0]} "
               f"port={worker.address[1]}", flush=True)

@@ -1,0 +1,783 @@
+"""Fault injection + chaos parity (ISSUE 9 / docs/faults.md).
+
+Acceptance contract: under randomized wire faults (drop / delay /
+truncate / bit-flip), worker kills, and torn/ENOSPC seals, every query
+against a replicated remote fleet is **byte-identical** to the
+fault-free in-process oracle or fails with a *typed* error inside its
+deadline budget — never a hang, never a silently wrong answer.  The
+hardened pieces (frame checksums, WAL line checksums, retry with
+idempotency keys, per-worker circuit breakers, corrupt-segment
+quarantine) are unit-tested here with fake clocks and scripted fault
+plans; the chaos suite then replays seeded randomized schedules over a
+real fleet.
+"""
+
+import os
+import socket
+import struct
+import time
+
+import pytest
+
+from conftest import random_records, random_store
+from test_incremental import rows_identical
+
+from repro.core import faults, remote as rm, segmentio, splunklite
+from repro.core.columnar import ColumnarMetricStore
+from repro.core.faults import (CircuitBreaker, FaultPlan, RetryPolicy,
+                               RetryBudgetExceeded, crc32c)
+from repro.core.remote import RemoteShardedAggregator
+from repro.core.schema import MetricRecord
+from repro.core.splunklite import QueryError, query
+
+SEAL = 53
+IDLE_S = 300.0  # workers self-exit if a wedged run leaks them
+RECORDS = random_records(seed=9, n=420)
+
+FLEET_Q = ("search kind=perf gflops>10 | stats avg(gflops) p90(gflops) "
+           "count by job | sort -avg_gflops | head 10")
+
+SWEEP = [FLEET_Q,
+         "stats stdev(gflops) range(gflops) dc(host) dc(app) by kind",
+         "stats median(gflops) p25(gflops) p90(gflops) by job",
+         "search kind=perf | stats first(app) last(gflops)",  # exact gather
+         "search kind=perf | sort -gflops | head 7",
+         "dedup job app"]
+
+#: the only acceptable failure modes under chaos — anything else
+#: (KeyError from a half-decoded frame, struct.error, a wrong answer)
+#: is a bug the hardening must have prevented
+TYPED_ERRORS = (rm.WorkerUnavailable,     # + DeadlineExceeded, CircuitOpen
+                rm.RemoteProtocolError,   # + FrameChecksumError
+                rm.WorkerError, QueryError, TimeoutError)
+
+
+@pytest.fixture()
+def clean_storage_faults():
+    yield
+    faults.install_storage_faults(None)
+
+
+def make_fleet(directory, n=2, replicas=2, records=RECORDS, **kw):
+    agg = RemoteShardedAggregator(num_shards=n, directory=directory,
+                                  seal_threshold=SEAL, replicas=replicas,
+                                  worker_idle_timeout_s=IDLE_S,
+                                  spawn_timeout_s=60.0, **kw)
+    for rec in records:
+        agg.insert(rec)
+    return agg
+
+
+# ===========================================================================
+# crc32c + fault plans
+# ===========================================================================
+
+def test_crc32c_incremental_matches_one_shot():
+    data = os.urandom(1 << 12)
+    whole = crc32c(data)
+    acc = 0
+    for i in range(0, len(data), 100):
+        acc = crc32c(data[i:i + 100], acc)
+    assert acc == whole
+    assert crc32c(b"") == 0
+    assert faults.CRC_IMPL in ("crc32c", "crc32-zlib")
+
+
+def test_fault_plan_is_deterministic_per_seed():
+    def draws(seed):
+        plan = FaultPlan(seed, rates={"send": {"drop": 0.2,
+                                               "bitflip": 0.3}})
+        return plan, [plan.draw("send") for _ in range(50)]
+
+    a, seq = draws(7)
+    _b, replay = draws(7)
+    assert seq == replay  # same seed -> bit-for-bit the same schedule
+    assert seq != draws(8)[1]  # seeds diverge
+    assert a.injected_total() == sum(1 for k in seq if k is not None)
+
+
+def test_forced_faults_fire_before_probabilistic_draws():
+    plan = FaultPlan(0, rates={"seal": {"enospc": 1.0}})
+    plan.force("seal", "torn_bin", times=2)
+    assert [plan.draw("seal") for _ in range(3)] == \
+        ["torn_bin", "torn_bin", "enospc"]
+    assert plan.injected[("seal", "torn_bin")] == 2
+
+
+def test_corrupt_flips_exactly_one_bit_past_skip():
+    plan = FaultPlan(3)
+    data = bytes(range(64))
+    out = plan.corrupt(data, skip=4)
+    assert out[:4] == data[:4] and len(out) == len(data)
+    diff = [(a ^ b) for a, b in zip(out, data) if a != b]
+    assert len(diff) == 1 and bin(diff[0]).count("1") == 1
+    assert plan.corrupt(b"ab", skip=4) == b"ab"  # nothing past skip
+
+
+# ===========================================================================
+# Wire frames: crc32c trailers, oversized/garbage frames
+# ===========================================================================
+
+def _framed_pair():
+    a, b = socket.socketpair()
+    a.settimeout(5.0)
+    b.settimeout(5.0)
+    return a, b
+
+
+def test_frame_checksum_round_trip_and_flag_interop():
+    a, b = _framed_pair()
+    try:
+        rm.send_frame(a, {"op": "ping", "x": [1, 2.5, "s"]})
+        assert rm.recv_frame(b) == {"op": "ping", "x": [1, 2.5, "s"]}
+        # a peer with checksums disabled still interoperates: the flag
+        # bit is per frame, absent means no trailer follows
+        rm.send_frame(a, {"op": "ping"}, checksum=False)
+        assert rm.recv_frame(b) == {"op": "ping"}
+    finally:
+        a.close()
+        b.close()
+
+
+def test_bit_flipped_payload_raises_frame_checksum_error():
+    a, b = _framed_pair()
+    try:
+        payload = b'{"op": "ping"}'
+        flipped = bytearray(payload)
+        flipped[3] ^= 0x10
+        a.sendall(struct.pack("!I", len(payload) | rm.FRAME_CRC_FLAG)
+                  + bytes(flipped) + struct.pack("!I", crc32c(payload)))
+        with pytest.raises(rm.FrameChecksumError):
+            rm.recv_frame(b)
+        # FrameChecksumError is a RemoteProtocolError (typed, and the
+        # generic protocol-error handling applies), and retryable
+        assert issubclass(rm.FrameChecksumError, rm.RemoteProtocolError)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_oversized_and_garbage_frames_raise_typed_errors():
+    a, b = _framed_pair()
+    try:
+        a.sendall(struct.pack("!I", rm.MAX_FRAME_BYTES + 1))
+        with pytest.raises(rm.RemoteProtocolError):
+            rm.recv_frame(b)
+        junk = b"\x00\xffnot json"
+        a.sendall(struct.pack("!I", len(junk) | rm.FRAME_CRC_FLAG) + junk
+                  + struct.pack("!I", crc32c(junk)))
+        with pytest.raises(rm.RemoteProtocolError):
+            rm.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_client_closes_connection_on_protocol_error():
+    """Satellite: a garbage frame must not leave a desynced pooled
+    connection behind — the client closes the socket so the pool can
+    only ever hand out connections at a frame boundary."""
+    a, b = _framed_pair()
+    client = rm.WorkerClient(("127.0.0.1", 1))
+    client._sock = b
+    try:
+        a.sendall(struct.pack("!I", rm.MAX_FRAME_BYTES + 1))
+        with pytest.raises(rm.RemoteProtocolError):
+            client.recv()
+        assert not client.connected  # closed, never reusable desynced
+    finally:
+        a.close()
+        client.close()
+
+
+def test_faulty_transport_drop_and_truncate_surface_as_socket_errors():
+    plan = FaultPlan(0)
+    plan.force("send", "drop")
+    a, b = _framed_pair()
+    try:
+        t = faults.FaultyTransport(a, plan)
+        with pytest.raises(OSError):
+            t.sendall(b"x" * 64)
+        assert plan.injected[("send", "drop")] == 1
+    finally:
+        a.close()
+        b.close()
+    # truncate: the peer reads a strict prefix then EOF -> torn frame
+    plan = FaultPlan(1)
+    plan.force("send", "truncate")
+    a, b = _framed_pair()
+    try:
+        with pytest.raises(OSError):
+            faults.FaultyTransport(a, plan).sendall(b"y" * 64)
+        got = bytearray()
+        while True:
+            chunk = b.recv(4096)
+            if not chunk:
+                break
+            got += chunk
+        assert 0 < len(got) < 64
+    finally:
+        a.close()
+        b.close()
+
+
+def test_faulty_transport_bitflip_is_caught_by_frame_checksum():
+    plan = FaultPlan(2)
+    plan.force("send", "bitflip")
+    a, b = _framed_pair()
+    try:
+        rm.send_frame(faults.FaultyTransport(a, plan), {"op": "ping"})
+        with pytest.raises(rm.FrameChecksumError):
+            rm.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+# ===========================================================================
+# RetryPolicy + CircuitBreaker (fake clocks)
+# ===========================================================================
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+        self.sleeps = []
+
+    def now(self):
+        return self.t
+
+    def sleep(self, s):
+        self.sleeps.append(s)
+        self.t += s
+
+
+def test_backoff_grows_exponentially_and_caps():
+    p = RetryPolicy(max_attempts=8, base_delay_s=0.02, max_delay_s=0.25,
+                    multiplier=2.0)
+    assert [p.backoff_s(k) for k in range(6)] == \
+        [0.02, 0.04, 0.08, 0.16, 0.25, 0.25]
+
+
+def test_retry_succeeds_after_transients_and_sleeps_backoffs():
+    clk = _FakeClock()
+    p = RetryPolicy(max_attempts=4, base_delay_s=0.02, max_delay_s=0.25,
+                    sleep=clk.sleep, now=clk.now)
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise ConnectionError("transient")
+        return "ok"
+
+    assert p.run(flaky, retry_on=(ConnectionError,)) == "ok"
+    assert clk.sleeps == [0.02, 0.04]
+
+
+def test_retry_exhausts_attempts_with_last_error():
+    clk = _FakeClock()
+    p = RetryPolicy(max_attempts=3, sleep=clk.sleep, now=clk.now)
+    with pytest.raises(ConnectionError):
+        p.run(lambda: (_ for _ in ()).throw(ConnectionError("x")),
+              retry_on=(ConnectionError,))
+    assert len(clk.sleeps) == 2  # 3 attempts, 2 backoffs
+
+
+def test_non_retryable_exception_escapes_immediately():
+    clk = _FakeClock()
+    p = RetryPolicy(max_attempts=5, sleep=clk.sleep, now=clk.now)
+    with pytest.raises(KeyError):
+        p.run(lambda: (_ for _ in ()).throw(KeyError("x")),
+              retry_on=(ConnectionError,))
+    assert clk.sleeps == []
+
+
+def test_deadline_budget_raises_instead_of_overstaying():
+    """The budget check happens *before* the sleep: when the next
+    backoff would cross the deadline, RetryBudgetExceeded fires and no
+    time is burned just to fail again."""
+    clk = _FakeClock()
+    p = RetryPolicy(max_attempts=10, base_delay_s=0.1, max_delay_s=10.0,
+                    multiplier=2.0, sleep=clk.sleep, now=clk.now)
+    with pytest.raises(RetryBudgetExceeded):
+        p.run(lambda: (_ for _ in ()).throw(ConnectionError("x")),
+              retry_on=(ConnectionError,), deadline_s=0.35)
+    # slept 0.1 + 0.2 = 0.3; the next 0.4 backoff would cross 0.35
+    assert clk.sleeps == [0.1, 0.2]
+    assert clk.t <= 0.35
+    assert issubclass(RetryBudgetExceeded, TimeoutError)
+
+
+def test_breaker_trips_after_consecutive_failures_only():
+    clk = _FakeClock()
+    br = CircuitBreaker(failure_threshold=3, reset_timeout_s=5.0,
+                        now=clk.now)
+    for _ in range(2):
+        br.record_failure()
+    br.record_success()  # success resets the consecutive count
+    for _ in range(2):
+        br.record_failure()
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    assert br.state == "open" and not br.allow()
+    assert br.snapshot()["opens"] == 1
+    assert br.snapshot()["rejections"] == 1
+
+
+def test_breaker_half_open_probe_is_single_flight():
+    clk = _FakeClock()
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0,
+                        now=clk.now)
+    br.record_failure()
+    assert not br.allow()
+    clk.t = 6.0  # past the reset timeout
+    assert br.allow()           # the single-flight probe
+    assert br.state == "half_open"
+    assert not br.allow()       # concurrent callers rejected
+    assert not br.allow()
+    br.record_success()
+    assert br.state == "closed" and br.allow()
+
+
+def test_breaker_failed_probe_reopens_for_a_full_timeout():
+    clk = _FakeClock()
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0,
+                        now=clk.now)
+    br.record_failure()
+    clk.t = 5.0
+    assert br.allow()
+    br.record_failure()  # probe failed
+    assert br.state == "open"
+    clk.t = 9.9  # fresh timeout from the probe failure, not the first
+    assert not br.allow()
+    clk.t = 10.0
+    assert br.allow()
+
+
+def test_breaker_aborted_probe_releases_the_slot():
+    """A probe abandoned without an outcome (scatter aborted because a
+    *different* shard failed) must not wedge the breaker: the slot is
+    released and the circuit re-opens for another timed probe."""
+    clk = _FakeClock()
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0,
+                        now=clk.now)
+    br.record_failure()
+    clk.t = 5.0
+    assert br.allow()
+    br.record_abort()
+    assert br.state == "open"
+    clk.t = 10.0
+    assert br.allow()  # a fresh probe gets through — not wedged
+    br.record_success()
+    assert br.state == "closed"
+
+
+# ===========================================================================
+# WAL line checksums
+# ===========================================================================
+
+def test_wal_round_trip_and_torn_tail(tmp_path):
+    wal = tmp_path / "wal.log"
+    lines = [segmentio.wal_encode_line(f"payload {i}") for i in range(5)]
+    wal.write_text("\n".join(lines) + "\n")
+    assert segmentio.read_complete_wal_lines(wal) == \
+        [f"payload {i}" for i in range(5)]
+    # a torn final line (crash mid-append) is silently dropped
+    wal.write_text("\n".join(lines) + "\n"
+                   + segmentio.wal_encode_line("torn")[:-3])
+    assert segmentio.read_complete_wal_lines(wal) == \
+        [f"payload {i}" for i in range(5)]
+
+
+def test_wal_mid_file_corruption_raises_typed_error(tmp_path):
+    """Satellite: only the *final* line may fail its checksum.  A bad
+    line with valid lines after it means acknowledged records were
+    damaged at rest — replay must stop with WalCorruptionError, not
+    silently drop data."""
+    wal = tmp_path / "wal.log"
+    lines = [segmentio.wal_encode_line(f"payload {i}") for i in range(5)]
+    corrupt = lines[2][:9] + "X" + lines[2][10:]  # damage the payload
+    wal.write_text("\n".join(lines[:2] + [corrupt] + lines[3:]) + "\n")
+    with pytest.raises(segmentio.WalCorruptionError):
+        segmentio.read_complete_wal_lines(wal)
+
+
+def test_wal_legacy_bare_lines_stay_lenient(tmp_path):
+    wal = tmp_path / "wal.log"
+    wal.write_text("bare line 0\nbare line 1\nto rn")
+    assert segmentio.read_complete_wal_lines(wal) == \
+        ["bare line 0", "bare line 1"]
+
+
+def test_store_wal_is_checksummed_and_survives_reload(tmp_path):
+    st = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=29)
+    for rec in RECORDS[:40]:
+        st.insert(rec)
+    want = query(st, FLEET_Q)
+    raw = (tmp_path / "s" / "wal.log").read_text().splitlines()
+    assert raw and all(len(ln) > 9 and ln[8] == " " for ln in raw)
+    st.close()
+    back = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=29)
+    rows_identical(query(back, FLEET_Q), want, FLEET_Q)
+    back.close()
+
+
+# ===========================================================================
+# Seal faults: ENOSPC + torn segment commits
+# ===========================================================================
+
+def test_enospc_seal_fails_typed_and_store_recovers(
+        tmp_path, clean_storage_faults):
+    st = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=10**6)
+    for rec in RECORDS[:60]:
+        st.insert(rec)
+    want = query(st, FLEET_Q)
+    plan = FaultPlan(0)
+    plan.force("seal", "enospc")
+    faults.install_storage_faults(plan)
+    with pytest.raises(OSError) as ei:
+        st.seal()
+    assert ei.value.errno == 28  # ENOSPC
+    # nothing was lost: the rows stayed in the buffer + WAL
+    rows_identical(query(st, FLEET_Q), want, FLEET_Q)
+    faults.install_storage_faults(None)
+    st.seal()  # the disk "recovered": sealing now succeeds
+    rows_identical(query(st, FLEET_Q), want, FLEET_Q)
+    st.close()
+    back = ColumnarMetricStore(directory=tmp_path / "s")
+    rows_identical(query(back, FLEET_Q), want, FLEET_Q)
+    back.close()
+
+
+@pytest.mark.parametrize("kind", ["torn_bin", "torn_manifest"])
+def test_torn_seal_is_invisible_and_wal_recovers(
+        tmp_path, kind, clean_storage_faults):
+    st = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=10**6)
+    for rec in RECORDS[:60]:
+        st.insert(rec)
+    want = query(st, FLEET_Q)
+    plan = FaultPlan(0)
+    plan.force("seal", kind)
+    faults.install_storage_faults(plan)
+    with pytest.raises(OSError):
+        st.seal()
+    st.close()  # simulate the crash: reopen from disk only
+    faults.install_storage_faults(None)
+    back = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=29)
+    rows_identical(query(back, FLEET_Q), want, FLEET_Q)
+    back.close()
+
+
+# ===========================================================================
+# Quarantine: checksum mismatch degrades, never crashes
+# ===========================================================================
+
+def _flip_byte(path, offset=100):
+    data = bytearray(path.read_bytes())
+    data[min(offset, len(data) - 1)] ^= 0xFF
+    path.write_bytes(bytes(data))
+
+
+def test_corrupt_segment_quarantined_at_open(tmp_path):
+    st = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=29)
+    for rec in RECORDS[:120]:
+        st.insert(rec)
+    assert len(st._sealed) >= 2
+    st.close()
+    segs = sorted((tmp_path / "s" / "segments").glob("*.bin"))
+    _flip_byte(segs[0])
+    back = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=29)
+    assert back.quarantined_segments == 1
+    assert back.storage_stats()["quarantined_segments"] == 1
+    qdir = tmp_path / "s" / "segments" / segmentio.QUARANTINE_DIRNAME
+    assert (qdir / segs[0].name).exists()  # kept for forensics
+    assert not segs[0].exists()
+    # the store still serves every byte it can prove intact
+    assert query(back, "stats count") != []
+    back.close()
+    # reopening again does not re-count the quarantined stem
+    again = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=29)
+    assert again.quarantined_segments == 0
+    again.close()
+
+
+def test_read_only_open_skips_corrupt_segment_without_moving_it(tmp_path):
+    st = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=29)
+    for rec in RECORDS[:120]:
+        st.insert(rec)
+    st.close()
+    segs = sorted((tmp_path / "s" / "segments").glob("*.bin"))
+    _flip_byte(segs[0])
+    ro = ColumnarMetricStore(directory=tmp_path / "s", read_only=True)
+    assert ro.quarantined_segments == 1
+    assert segs[0].exists()  # read-only: counted, not moved
+    ro.close()
+
+
+def test_query_time_decode_error_quarantines_and_degrades(
+        tmp_path, monkeypatch):
+    st = ColumnarMetricStore(directory=tmp_path / "s", seal_threshold=29)
+    for rec in RECORDS[:120]:
+        st.insert(rec)
+    victim = st._sealed[0]
+    n_sealed = len(st._sealed)
+    real = splunklite._segment_partials
+
+    def boom(seg, plan):
+        if seg is victim:
+            raise ValueError("decode blew up (injected)")
+        return real(seg, plan)
+
+    monkeypatch.setattr(splunklite, "_segment_partials", boom)
+    plan = splunklite.compile_scatter_plan(
+        splunklite._split_pipeline("stats count by kind"))
+    stats = {}
+    splunklite.scatter_partials(st, plan, stats=stats)
+    assert stats["quarantined_segments"] == 1
+    assert st.quarantined_segments == 1
+    assert len(st._sealed) == n_sealed - 1
+    monkeypatch.setattr(splunklite, "_segment_partials", real)
+    # the store keeps answering on what survived, and the files moved
+    assert query(st, "stats count") != []
+    qdir = tmp_path / "s" / "segments" / segmentio.QUARANTINE_DIRNAME
+    assert len(list(qdir.glob("*.bin"))) == 1
+    st.close()
+
+
+# ===========================================================================
+# Remote fleet: idempotent retries, breakers, kill/restart
+# ===========================================================================
+
+def test_retried_mutation_applies_at_most_once(tmp_path):
+    """A reply dropped *after* the worker applied the mutation is the
+    classic at-least-once hazard: the coordinator retries, the worker
+    must recognize the idempotency key and replay the cached reply
+    instead of inserting twice."""
+    plan = FaultPlan(0)  # no rates: only the scripted drop below fires
+    agg = RemoteShardedAggregator(num_shards=1, directory=tmp_path / "f",
+                                  seal_threshold=SEAL,
+                                  worker_idle_timeout_s=IDLE_S,
+                                  spawn_timeout_s=60.0, fault_plan=plan)
+    try:
+        for rec in RECORDS[:50]:
+            agg.insert(rec)
+        n = len(agg)
+        plan.force("recv", "drop")  # lose exactly one reply in transit
+        assert agg.insert(MetricRecord(99999.0, "n0", "idem.1", "perf",
+                                       {"gflops": 1.0}))
+        assert len(agg) == n + 1  # applied exactly once
+        r = agg.shards[0].rpc("explain", fingerprint="")
+        assert r["idem_replays"] == 1
+        assert agg.robustness_stats()["retries"] >= 1
+    finally:
+        agg.close()
+
+
+def test_breaker_opens_on_dead_worker_and_probe_heals_after_restart(
+        tmp_path):
+    agg = RemoteShardedAggregator(num_shards=2, directory=tmp_path / "f",
+                                  seal_threshold=SEAL,
+                                  worker_idle_timeout_s=IDLE_S,
+                                  spawn_timeout_s=60.0,
+                                  breaker_threshold=2, breaker_reset_s=0.2,
+                                  retry=None)
+    try:
+        for rec in RECORDS[:80]:
+            agg.insert(rec)
+        want = query(agg, FLEET_Q)
+        agg.kill_worker(1)
+        for _ in range(4):  # degraded reads; failures feed the breaker
+            rows_identical(query(agg, FLEET_Q), want, FLEET_Q)
+        rob = agg.robustness_stats()
+        assert rob["opens"] >= 1
+        assert agg.shards[1].breaker.state in ("open", "half_open")
+        # fail-fast while open: CircuitOpen is a WorkerUnavailable, so
+        # the degraded path absorbs it without a connect attempt
+        assert issubclass(rm.CircuitOpen, rm.WorkerUnavailable)
+        agg.restart_worker(1)  # connect() success closes the breaker
+        assert agg.shards[1].breaker.state == "closed"
+        rows_identical(query(agg, FLEET_Q), want, FLEET_Q)
+        assert agg.last_query_stats["degraded_shards"] == 0
+    finally:
+        agg.close()
+
+
+def test_worker_kill_mid_op_fails_over_on_replicated_fleet(tmp_path):
+    oracle = random_store(records=RECORDS, shards=2, seal_threshold=SEAL)
+    agg = make_fleet(tmp_path / "f")
+    try:
+        agg.sync_replicas()
+        want = {q: query(oracle, q) for q in SWEEP}
+        # arm member (0, primary): the *next* op it serves kills it
+        agg.shards[0].members[0].rpc("set_faults", kill_after_ops=0)
+        for q in SWEEP:
+            rows_identical(query(agg, q), want[q], q)
+        rep = agg.replication_stats()
+        assert rep["failovers"] + rep["hedged_ops"] >= 1
+        agg.restart_worker(0, member=0)
+        agg.sync_replicas()
+        for q in SWEEP:
+            rows_identical(query(agg, q), want[q], q)
+    finally:
+        agg.close()
+        oracle.close()
+
+
+def test_worker_seal_faults_surface_as_typed_errors(tmp_path):
+    agg = RemoteShardedAggregator(num_shards=1, directory=tmp_path / "f",
+                                  seal_threshold=10**6,
+                                  worker_idle_timeout_s=IDLE_S,
+                                  spawn_timeout_s=60.0)
+    try:
+        for rec in RECORDS[:50]:
+            agg.insert(rec)
+        r = agg.shards[0].rpc("set_faults", seal_enospc=1)
+        assert r["installed"]
+        with pytest.raises(rm.WorkerError):
+            agg.seal()
+        agg.shards[0].rpc("set_faults", clear=True)
+        agg.seal()  # recovered
+        assert query(agg, "stats count") != []
+    finally:
+        agg.close()
+
+
+def test_robustness_counters_visible_in_explain_and_stats(tmp_path):
+    agg = make_fleet(tmp_path / "f", records=RECORDS[:100])
+    try:
+        agg.sync_replicas()
+        ex = agg.explain(FLEET_Q)
+        rob = ex["robustness"]
+        assert rob["breakers"] == 4  # 2 shards x 2 replicas
+        assert rob["frame_checksums"] and rob["retry_enabled"]
+        for key in ("retries", "checksum_errors", "deadline_exceeded",
+                    "open", "opens", "rejections", "crc_impl"):
+            assert key in rob
+        for w in ex["workers"]:
+            assert "retries" in w and "checksum_errors" in w
+            assert len(w["breakers"]) == 2
+        from repro.core.service import QueryService
+        svc = QueryService(agg)
+        try:
+            assert svc.stats()["robustness"]["breakers"] == 4
+        finally:
+            svc.close()
+    finally:
+        agg.close()
+
+
+# ===========================================================================
+# Chaos parity: randomized fault schedules over a replicated fleet
+# ===========================================================================
+
+CHAOS_SEEDS = [int(s) for s in
+               os.environ.get("CHAOS_SEEDS", "101,202,303").split(",")]
+
+#: modest per-call rates: with pooled connections a scatter makes many
+#: transport calls, so even 2-3% per call faults most queries
+CHAOS_RATES = {
+    "send": {"drop": 0.01, "truncate": 0.01, "bitflip": 0.02,
+             "delay": 0.05},
+    "recv": {"drop": 0.01, "truncate": 0.01, "bitflip": 0.02,
+             "delay": 0.05},
+}
+
+
+def _chaos_round(agg, oracle_rows, q, deadline_s):
+    """One chaos query: byte-identical to the oracle, or a typed error,
+    always inside the deadline.  Returns (ok, typed_error)."""
+    t0 = time.monotonic()
+    try:
+        got = query(agg, q)
+    except TYPED_ERRORS:
+        elapsed = time.monotonic() - t0
+        assert elapsed < deadline_s, \
+            f"typed error after {elapsed:.1f}s exceeded deadline for {q!r}"
+        return 0, 1
+    elapsed = time.monotonic() - t0
+    assert elapsed < deadline_s, \
+        f"query took {elapsed:.1f}s, deadline {deadline_s}s: {q!r}"
+    rows_identical(got, oracle_rows, q)
+    return 1, 0
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_smoke_parity_under_wire_faults(tmp_path, seed):
+    """CI smoke (three fixed seeds): randomized wire faults against a
+    replicated 2x2 fleet — every query byte-identical or a typed error,
+    within a hard wall-clock deadline (never a hang)."""
+    oracle = random_store(records=RECORDS, shards=2, seal_threshold=SEAL)
+    plan = FaultPlan(seed)  # rates activate after clean ingest
+    agg = make_fleet(tmp_path / "f", fault_plan=plan, op_timeout_s=15.0)
+    try:
+        agg.sync_replicas()
+        want = {q: query(oracle, q) for q in SWEEP}
+        plan.rates = {site: dict(kinds)
+                      for site, kinds in CHAOS_RATES.items()}
+        ok = err = 0
+        for _round in range(4):
+            for q in SWEEP:
+                a, b = _chaos_round(agg, want[q], q, deadline_s=60.0)
+                ok += a
+                err += b
+        plan.rates = {}
+        assert ok >= len(SWEEP)  # retries must absorb most faults
+        rob = agg.robustness_stats()
+        assert plan.injected_total() > 0
+        # parity holds again once the network heals
+        for q in SWEEP:
+            rows_identical(query(agg, q), want[q], q)
+        assert isinstance(rob["retries"], int)
+    finally:
+        agg.close()
+        oracle.close()
+
+
+@pytest.mark.slow
+def test_chaos_property_parity_over_randomized_schedules(tmp_path):
+    """Acceptance property: 200+ randomized fault schedules (wire fault
+    mixes + worker kills) over a replicated 4-worker fleet.  Every
+    query returns rows byte-identical to the fault-free oracle or
+    raises a typed error within its deadline — never a hang, never a
+    silently wrong answer."""
+    import random as _random
+    master = _random.Random(20260809)
+    oracle = random_store(records=RECORDS, shards=2, seal_threshold=SEAL)
+    plan = FaultPlan(0)
+    agg = make_fleet(tmp_path / "f", fault_plan=plan, op_timeout_s=15.0)
+    schedules = int(os.environ.get("CHAOS_SCHEDULES", "200"))
+    try:
+        agg.sync_replicas()
+        want = {q: query(oracle, q) for q in SWEEP}
+        ok = err = 0
+        for round_no in range(schedules):
+            rates = {}
+            for site in ("send", "recv"):
+                kinds = {}
+                for kind in faults.WIRE_FAULTS:
+                    if master.random() < 0.5:
+                        kinds[kind] = master.uniform(0.0, 0.04)
+                if kinds:
+                    rates[site] = kinds
+            plan.rates = rates
+            q = SWEEP[master.randrange(len(SWEEP))]
+            a, b = _chaos_round(agg, want[q], q, deadline_s=60.0)
+            ok += a
+            err += b
+            if round_no % 40 == 39:  # periodic worker murder + heal
+                plan.rates = {}
+                i = master.randrange(len(agg.shards))
+                member = master.randrange(2)
+                agg.kill_worker(i, member=member)
+                rows_identical(query(agg, SWEEP[0]), want[SWEEP[0]],
+                               SWEEP[0])
+                agg.restart_worker(i, member=member)
+                agg.sync_replicas()
+        plan.rates = {}
+        assert ok + err == schedules
+        assert ok > schedules // 2, (ok, err)  # hardening absorbs most
+        for q in SWEEP:  # healed fleet: full parity again
+            rows_identical(query(agg, q), want[q], q)
+    finally:
+        agg.close()
+        oracle.close()
