@@ -1,0 +1,110 @@
+"""Tracing overhead on the warm fleet query path (docs/observability.md).
+
+Observability that taxes the hot path gets turned off; ISSUE 10's
+acceptance bound is that it never has to be.  This bench builds the
+same 2-shard worker fleet twice — once with tracing on (every query
+grows a full coordinator+worker span tree, adopted over the wire,
+plus a SelfMonitor snapshot per iteration) and once with tracing off
+(the NULL_SPAN fast path; registry collectors exist but nothing
+scrapes them mid-query) — and measures the warm remote fleet query
+both ways.
+
+Acceptance (asserted here and guarded in CI via ``check_regression
+--max-ratio``, normalized in-run so the bound is machine-independent):
+traced warm-query latency <= 1.10x the bare fleet's.
+"""
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+ITERS = 60
+WARMUP = 5
+MAX_RATIO = 1.10
+
+Q = ("search kind=perf gflops>0 "
+     "| stats avg(gflops) p90(step_time_s) count by job "
+     "| sort -avg_gflops | head 10")
+
+
+def _build_fleet(tmp: Path, traced: bool):
+    from benchmarks.monitoring import _fleet_store
+    from repro.core.remote import RemoteShardedAggregator
+    from repro.core.telemetry import Telemetry
+    fleet = RemoteShardedAggregator(num_shards=2, directory=tmp,
+                                    seal_threshold=4096,
+                                    worker_idle_timeout_s=300.0,
+                                    spawn_timeout_s=60.0,
+                                    telemetry=Telemetry(tracing=traced))
+    _fleet_store(n_jobs=40, hosts_per_job=4, samples=30, store=fleet)
+    fleet.seal()
+    return fleet
+
+
+def _measure(fleet, monitor=None) -> list:
+    from repro.core.schema import MetricRecord
+    from repro.core.splunklite import query
+    # a mutation between queries defeats the coordinator's etag memo,
+    # so every iteration exercises the full scatter wire path (and,
+    # traced, records the full span tree for it)
+    lats = []
+    for i in range(ITERS + WARMUP):
+        fleet.insert(MetricRecord(5e6 + i, "bench-n0", "bench.1", "perf",
+                                  {"gflops": float(i)}))
+        t0 = time.perf_counter()
+        query(fleet, Q)
+        lats.append((time.perf_counter() - t0) * 1e6)
+        assert fleet.last_query_stats["degraded_shards"] == 0
+        if monitor is not None:
+            monitor.pump()
+    return lats[WARMUP:]
+
+
+def bench_telemetry(out_dir: Path):
+    """Warm remote fleet query: tracing + self-ingestion vs off."""
+    import shutil
+    import tempfile
+    from benchmarks.common import row
+    from repro.core.aggregator import MetricStore
+    from repro.core.splunklite import query
+    from repro.core.telemetry import SelfMonitor
+    tmp = Path(tempfile.mkdtemp())
+    rows = []
+    try:
+        results = {}
+        want = None
+        for label, traced in (("bare", False), ("traced", True)):
+            fleet = _build_fleet(tmp / label, traced)
+            try:
+                got = query(fleet, Q)
+                if want is None:
+                    want = got
+                else:
+                    assert got == want, "traced rows diverged from bare"
+                monitor = (SelfMonitor(fleet.telemetry, MetricStore(),
+                                       interval_s=0.0) if traced else None)
+                results[label] = float(np.median(_measure(fleet, monitor)))
+                if traced:
+                    tid, spans = fleet.telemetry.tracer.last_trace()
+                    assert tid is not None and len(spans) >= 5, \
+                        "tracing was supposed to be on"
+                    assert any(s["node"].startswith("worker:")
+                               for s in spans), "worker spans not adopted"
+                    assert len(query(monitor.sink,
+                                     "search kind=fleet")) == ITERS + WARMUP
+                else:
+                    assert fleet.telemetry.tracer.last_trace() == (None, [])
+            finally:
+                fleet.close()
+        ratio = results["traced"] / max(results["bare"], 1e-9)
+        # acceptance: spans + wire adoption + self-ingestion cost <= 10%
+        # on the warm query path
+        assert ratio <= MAX_RATIO, (results, ratio)
+        rows.append(row("telemetry.fleet_query_traced", results["traced"],
+                        f"2workers,{ratio:.3f}x_of_bare"))
+        rows.append(row("telemetry.fleet_query_bare", results["bare"],
+                        "tracing_off_null_spans"))
+        return rows
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

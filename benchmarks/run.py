@@ -18,6 +18,8 @@ trajectory is tracked across PRs.
                   with one artificially slow member
   faults        — fault-tolerance overhead: hardened warm fleet query
                   vs checksums/retry/breakers all off (<= 1.15x)
+  telemetry     — tracing + self-ingestion overhead: traced warm fleet
+                  query vs tracing off (<= 1.10x)
   compaction    — segment compaction + compressed tiers: cold query
                   pre/post, byte ratio, rollup vs raw scan
   restart       — aggregator cold-start: mmap segments vs line replay
@@ -49,6 +51,7 @@ def main() -> None:
     from benchmarks import monitoring as mbench
     from benchmarks.bench_faults import bench_faults
     from benchmarks.bench_replication import bench_replication
+    from benchmarks.bench_telemetry import bench_telemetry
     only = set(sys.argv[1:])
     out = EXPERIMENTS
     out.mkdir(parents=True, exist_ok=True)
@@ -65,6 +68,7 @@ def main() -> None:
         mbench.bench_remote,
         bench_replication,
         bench_faults,
+        bench_telemetry,
         mbench.bench_service,
         mbench.bench_compaction,
         mbench.bench_restart,

@@ -14,6 +14,7 @@ from repro.core.schema import MetricRecord, encode_line, parse_line
 from repro.core.service import QueryResult, QueryService, QuotaExceeded
 from repro.core.shards import ShardedAggregator
 from repro.core.splunklite import query, query_with_stats
+from repro.core.telemetry import SelfMonitor, Telemetry, format_trace
 
 __all__ = [
     "Aggregator", "MetricStore", "ColumnarMetricStore", "ColumnScan",
@@ -23,4 +24,5 @@ __all__ = [
     "ShardedAggregator", "TrainMonitor",
     "load_manifests", "MetricRecord", "encode_line", "parse_line", "query",
     "query_with_stats", "QueryService", "QueryResult", "QuotaExceeded",
+    "SelfMonitor", "Telemetry", "format_trace",
 ]

@@ -51,6 +51,17 @@ class Aggregator:
     into a ``store_dir``).  Pass a pre-configured ``store`` instead to
     control sealing / dedup-eviction / durability.
 
+    ``self_monitor`` turns on fleet self-ingestion
+    (docs/observability.md): registry snapshots from the store's
+    telemetry are pumped as ``kind=fleet`` records into a dedicated
+    in-memory ``_telemetry`` store (:attr:`telemetry_store`), so
+    splunklite queries, dashboards, and the telemetry detectors run
+    over the monitor's own vitals.  Pass ``True`` for the default 5 s
+    cadence, a float for a custom interval, or a pre-built
+    :class:`~repro.core.telemetry.SelfMonitor` (its sink becomes
+    :attr:`telemetry_store`).  :meth:`pump` piggybacks an
+    interval-gated snapshot; :meth:`close` stops any background pump.
+
     ``query_service`` routes :meth:`watch` refreshes through a
     :class:`~repro.core.service.QueryService` (docs/service.md) so
     concurrent dashboards share executions and back off under load.
@@ -82,7 +93,8 @@ class Aggregator:
                  hedge: bool = True,
                  hedge_delay_s: Optional[float] = None,
                  compaction_policy: Optional[Dict] = None,
-                 query_service=None) -> None:
+                 query_service=None,
+                 self_monitor=None) -> None:
         self.inbox_dir = Path(inbox_dir)
         self.inbox_dir.mkdir(parents=True, exist_ok=True)
         if remote_workers and store is None and shards is None:
@@ -128,6 +140,27 @@ class Aggregator:
         self.last_maintenance: Optional[Dict] = None
         self._last_compact_seals = (self._seal_count()
                                     if self.compaction_policy else 0)
+        self.telemetry_store = None
+        self.self_monitor = None
+        if self_monitor is not None and self_monitor is not False:
+            from repro.core.telemetry import SelfMonitor, Telemetry
+            if isinstance(self_monitor, SelfMonitor):
+                self.self_monitor = self_monitor
+                self.telemetry_store = self_monitor.sink
+            else:
+                interval = (5.0 if self_monitor is True
+                            else float(self_monitor))
+                tel = getattr(self.store, "telemetry", None)
+                if tel is None:
+                    # plain single-store aggregator: mint a registry and
+                    # hook the store's storage/cache collector into it
+                    tel = Telemetry()
+                    attach = getattr(self.store, "attach_telemetry", None)
+                    if attach is not None:
+                        attach(tel)
+                self.telemetry_store = MetricStore()
+                self.self_monitor = SelfMonitor(tel, self.telemetry_store,
+                                                interval_s=interval)
 
     def on_record(self, cb: Callable[[MetricRecord], None]) -> None:
         """Attach a streaming consumer (e.g. a detector bank)."""
@@ -214,6 +247,8 @@ class Aggregator:
                 archive.close()
         if n and self.compaction_policy is not None:
             self.maybe_compact()
+        if self.self_monitor is not None:
+            self.self_monitor.maybe_pump()
         return n
 
     # ------------------------------------------------ index maintenance --
@@ -275,6 +310,8 @@ class Aggregator:
 
     def close(self) -> None:
         """Release the store's WAL handle (durable stores)."""
+        if self.self_monitor is not None:
+            self.self_monitor.stop()
         if self._owns_service and self.query_service is not None:
             self.query_service.close()
         self.store.close()

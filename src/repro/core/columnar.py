@@ -666,6 +666,10 @@ class ColumnarMetricStore:
         self._transient_base: Optional[Tuple[int, Segment]] = None
         self.partial_cache = PartialAggregateCache(partial_cache_entries)
         self.last_query_stats: Optional[Dict] = None
+        # Optional telemetry registry hookup (attach_telemetry); the
+        # store never creates one itself so bare stores stay free of
+        # the dependency.
+        self.telemetry = None
         # Re-entrancy: one lock serializes every structural mutation
         # (insert/seal/adopt/compact) and every version-scoped memo
         # access, so concurrent QueryService readers see consistent
@@ -1179,6 +1183,39 @@ class ColumnarMetricStore:
             total["quarantined_segments"] = self.quarantined_segments
             total["last_compaction"] = self.last_compaction
             return total
+
+    # ---------------------------------------------------------- telemetry --
+    def telemetry_samples(self) -> Dict[str, float]:
+        """Pull-based metric samples for a telemetry ``Registry``:
+        the same storage/cache numbers that back :meth:`storage_stats`
+        and the partial-aggregate cache counters, under dotted names.
+        One source, two views — nothing here is tracked twice."""
+        st = self.storage_stats()
+        pc = self.partial_cache
+        return {
+            "storage.segments": float(st["segments"]),
+            "storage.rows": float(st["rows"]),
+            "storage.bytes": float(st["bytes"]),
+            "storage.buffer_rows": float(st["buffer_rows"]),
+            "storage.quarantined_segments":
+                float(st["quarantined_segments"]),
+            "storage.duplicates_dropped": float(self.duplicates_dropped),
+            "cache.partial.hits": float(pc.hits),
+            "cache.partial.misses": float(pc.misses),
+            "cache.partial.evictions": float(pc.evictions),
+            "cache.partial.entries": float(len(pc._d)),
+        }
+
+    def attach_telemetry(self, telemetry, name: str = "store") -> None:
+        """Register this store's :meth:`telemetry_samples` as a pull
+        collector under ``name`` and remember the registry handle so
+        cooperating components (e.g. :class:`~repro.core.compaction.
+        Compactor`) can bump counters on the same registry.  Collector
+        names are unique per registry — callers with several stores
+        (one per shard) pick distinct names or register a single
+        aggregated collector instead, as ``ShardedAggregator`` does."""
+        self.telemetry = telemetry
+        telemetry.registry.register_collector(name, self.telemetry_samples)
 
     def _build_transient(self) -> Segment:
         """Transient segment over the append buffer, built

@@ -354,6 +354,17 @@ class Compactor:
         stats["segment_count"] = len(store._sealed)
         stats["duration_s"] = round(time.monotonic() - t0, 6)
         store.last_compaction = stats
+        tel = getattr(store, "telemetry", None)
+        if tel is not None:
+            tel.registry.counter("compaction.runs").inc()
+            tel.registry.counter("compaction.segments_merged").inc(
+                stats["segments_merged"])
+            tel.registry.counter("compaction.segments_created").inc(
+                stats["segments_created"])
+            tel.registry.counter("compaction.bytes_reclaimed").inc(
+                max(0, stats["bytes_before"] - stats["bytes_after"]))
+            tel.registry.histogram("compaction.duration_s").observe(
+                stats["duration_s"])
         return stats
 
     # -------------------------------------------------------- retention --
@@ -441,4 +452,13 @@ class Compactor:
         if changed:
             store._cache.clear()
         stats["duration_s"] = round(time.monotonic() - t0, 6)
+        tel = getattr(store, "telemetry", None)
+        if tel is not None:
+            tel.registry.counter("retention.passes").inc()
+            tel.registry.counter("retention.rollups_created").inc(
+                stats["rollups_created"])
+            tel.registry.counter("retention.dropped_segments").inc(
+                stats["dropped_segments"])
+            tel.registry.counter("retention.dropped_rows").inc(
+                stats["dropped_rows"])
         return stats

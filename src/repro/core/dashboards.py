@@ -521,6 +521,72 @@ def streaming_specialized_views(store: StoreLike,
     }
 
 
+# ------------------------------------------------------ fleet health (ops) --
+#
+# The monitor monitoring itself (docs/observability.md): these views run
+# over the dedicated ``_telemetry`` store that ``telemetry.SelfMonitor``
+# pumps ``kind=fleet`` registry snapshots into — not over job metrics.
+
+FLEET_HEALTH_FIELDS = (
+    "remote.queries", "remote.degraded_queries", "remote.retries",
+    "breaker.open", "breaker.opens", "breaker.rejections",
+    "cache.partial.hits", "cache.partial.misses",
+    "storage.segments", "storage.quarantined_segments",
+    "tracer.spans_started", "tracer.slow_queries",
+)
+
+
+def _fleet_health_rows(rows: List[Dict],
+                       fields: Sequence[str] = FLEET_HEALTH_FIELDS
+                       ) -> List[Dict]:
+    """Latest snapshot row -> one {metric, value} row per listed field
+    (fields absent from the snapshot — e.g. breaker.* on a breakerless
+    fleet — are simply omitted)."""
+    if not rows:
+        return []
+    latest = max(rows, key=lambda r: float(r.get("ts", 0.0) or 0.0))
+    out = []
+    for f in fields:
+        v = latest.get(f)
+        if isinstance(v, (int, float)):
+            out.append({"metric": f, "value": float(v)})
+    return out
+
+
+def view_fleet_health(telemetry_store: StoreLike,
+                      fields: Sequence[str] = FLEET_HEALTH_FIELDS
+                      ) -> List[Dict]:
+    """Ops dashboard: the fleet's own vitals from its newest
+    self-ingested ``kind=fleet`` snapshot, as {metric, value} rows
+    (render with :func:`markdown_table`)."""
+    return _fleet_health_rows(query(telemetry_store, "search kind=fleet"),
+                              fields)
+
+
+def streaming_fleet_health(telemetry_store: StoreLike,
+                           fields: Sequence[str] = FLEET_HEALTH_FIELDS,
+                           service=None) -> StreamingView:
+    """:func:`view_fleet_health` as a :class:`StreamingView` — refresh
+    after each self-monitor pump; unchanged vitals re-render nothing."""
+    return StreamingView(
+        telemetry_store, "search kind=fleet",
+        postprocess=lambda rows: _fleet_health_rows(rows, fields),
+        service=service)
+
+
+def view_slow_queries(telemetry_store: StoreLike, limit: int = 10
+                      ) -> List[Dict]:
+    """Slowest recent queries from the self-ingested slow-query events
+    (``kind=event event=slow_query``), worst first."""
+    rows = query(telemetry_store, "search kind=event")
+    slow = [r for r in rows if r.get("event") == "slow_query"]
+    slow.sort(key=lambda r: -float(r.get("duration_s", 0.0) or 0.0))
+    return [{"trace_id": r.get("trace_id"), "name": r.get("name"),
+             "duration_s": float(r.get("duration_s", 0.0) or 0.0),
+             "ts": float(r.get("ts", 0.0) or 0.0)}
+            for r in slow[:limit]]
+
+
 def markdown_table(rows: List[Dict], columns: Optional[List[str]] = None
                    ) -> str:
     if not rows:

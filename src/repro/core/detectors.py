@@ -347,9 +347,90 @@ class StragglerDetector(Detector):
         return events
 
 
+class BreakerOpenDetector(Detector):
+    """Fleet self-monitoring (docs/observability.md): a circuit breaker
+    stuck open in the latest ``kind=fleet`` snapshot means a worker is
+    being fast-failed right now — the monitor catches its own outage."""
+
+    name = "breaker_open"
+
+    def __init__(self, min_open: int = 1) -> None:
+        self.min_open = min_open
+
+    def scan(self, store: MetricStore,
+             manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        sc = store.scan(kind="fleet", fields=("breaker.open",
+                                              "breaker.opens"))
+        if sc.n == 0:
+            return []
+        v, p = sc.field("breaker.open")
+        opens, opens_p = sc.field("breaker.opens")
+        events = []
+        for job, idx in _jobs_sorted(sc):
+            vi = idx[p[idx] & ~np.isnan(v[idx])]
+            if vi.size == 0:
+                continue
+            last = vi[np.argmax(sc.ts[vi])]
+            n_open = int(v[last])
+            if n_open >= self.min_open:
+                total_opens = (int(opens[last])
+                               if opens_p[last] and not np.isnan(opens[last])
+                               else -1)
+                events.append(DetectorEvent(
+                    ts=float(sc.ts[last]), job=job, detector=self.name,
+                    severity="critical",
+                    message=(f"{n_open} circuit breaker(s) open — worker(s) "
+                             f"fast-failing ({total_opens} opens so far)"),
+                    fields={"open": n_open, "opens": total_opens}))
+        return events
+
+
+class QuarantineGrowthDetector(Detector):
+    """Fleet self-monitoring: quarantined-segment count growing across
+    ``kind=fleet`` snapshots means payloads keep failing checksums at
+    read time (docs/faults.md) — silent data loss in progress."""
+
+    name = "quarantine_growth"
+
+    def __init__(self, min_growth: int = 1) -> None:
+        self.min_growth = min_growth
+
+    def scan(self, store: MetricStore,
+             manifests: Optional[Manifests] = None) -> List[DetectorEvent]:
+        sc = store.scan(kind="fleet",
+                        fields=("storage.quarantined_segments",))
+        if sc.n == 0:
+            return []
+        v, p = sc.field("storage.quarantined_segments")
+        events = []
+        for job, idx in _jobs_sorted(sc):
+            vi = idx[p[idx] & ~np.isnan(v[idx])]
+            if vi.size < 2:
+                continue
+            order = vi[np.argsort(sc.ts[vi], kind="stable")]
+            first, last = int(v[order[0]]), int(v[order[-1]])
+            growth = last - first
+            if growth >= self.min_growth:
+                events.append(DetectorEvent(
+                    ts=float(sc.ts[order[-1]]), job=job, detector=self.name,
+                    severity="warning",
+                    message=(f"quarantined segments grew {first} -> {last} "
+                             f"over the snapshot window — payload corruption "
+                             f"is ongoing"),
+                    fields={"first": first, "last": last,
+                            "growth": growth}))
+        return events
+
+
 DEFAULT_DETECTORS = (HangDetector, IdleAcceleratorDetector,
                      MemoryUnderuseDetector, LowParticipationDetector,
                      LowMfuDetector, StragglerDetector)
+
+# Fleet self-monitoring detectors run over the dedicated ``_telemetry``
+# store (kind=fleet snapshots pumped by ``telemetry.SelfMonitor``), not
+# the job-metric store — kept out of DEFAULT_DETECTORS so job-facing
+# banks stay unchanged.  See docs/observability.md.
+TELEMETRY_DETECTORS = (BreakerOpenDetector, QuarantineGrowthDetector)
 
 
 class DetectorBank:

@@ -449,3 +449,14 @@ def sum_breaker_stats(snaps: Iterable[Dict[str, object]]
         out["opens"] += int(s.get("opens", 0))
         out["rejections"] += int(s.get("rejections", 0))
     return out
+
+
+def breaker_telemetry_samples(snaps: Iterable[Dict[str, object]]
+                              ) -> Dict[str, float]:
+    """Breaker snapshots as pull-collector samples for a telemetry
+    ``Registry`` (``breaker.*`` dotted names).  Same rollup as
+    :func:`sum_breaker_stats` — one source of truth for explain()
+    output, fleet dashboards and the self-ingested ``_telemetry``
+    stream."""
+    agg = sum_breaker_stats(snaps)
+    return {"breaker." + k: float(v) for k, v in agg.items()}

@@ -82,6 +82,7 @@ from repro.core.schema import MetricRecord, encode_line, parse_line
 from repro.core.shards import ShardedAggregator
 from repro.core.sketches import P2Summary
 from repro.core.splunklite import QueryError, ScatterPlan, _Fallback
+from repro.core.telemetry import NULL_SPAN, Telemetry
 
 PROTOCOL_VERSION = 2
 CODEC_VERSION = 1
@@ -595,7 +596,8 @@ class OpSession:
     fail over across members."""
 
     __slots__ = ("op", "kw", "attempts", "backups", "started", "first",
-                 "hedged", "failed_over", "winner")
+                 "hedged", "failed_over", "winner", "span",
+                 "attempt_spans")
 
     def __init__(self, op: str, kw: Dict[str, Any],
                  attempts: List[Tuple[Any, WorkerClient]]) -> None:
@@ -608,6 +610,19 @@ class OpSession:
         self.hedged = False
         self.failed_over = False
         self.winner = None
+        # the caller's per-shard span (set after op_begin); hedge /
+        # failover attempts hang child spans off it, keyed by member
+        # identity so losers can be marked cancelled
+        self.span = None
+        self.attempt_spans: Dict[int, Any] = {}
+
+    def finish_attempt(self, member: Any, status: Optional[str] = None,
+                       **attrs: Any) -> None:
+        att = self.attempt_spans.pop(id(member), None)
+        if att is not None:
+            if attrs:
+                att.set(**attrs)
+            att.finish(status)
 
 
 class RemoteShard:
@@ -630,7 +645,8 @@ class RemoteShard:
                  retry: Optional[RetryPolicy] = None,
                  breaker: Optional[CircuitBreaker] = None,
                  fault_plan: Optional[FaultPlan] = None,
-                 checksums: bool = True) -> None:
+                 checksums: bool = True,
+                 telemetry: Optional[Telemetry] = None) -> None:
         self.index = int(index)
         self.shard_dir = Path(shard_dir)
         self.process = process
@@ -639,6 +655,11 @@ class RemoteShard:
         self.breaker = breaker
         self.fault_plan = fault_plan
         self.checksums = bool(checksums)
+        self.telemetry = telemetry
+        # negotiated at hello: whether this worker understands the
+        # optional ``trace`` request field (docs/observability.md) —
+        # old workers never see it
+        self.trace_capable = False
         self.retries = 0            # extra attempts beyond the first
         self.checksum_errors = 0    # frames rejected by their trailer
         self.deadline_exceeded = 0  # ops that exhausted their budget
@@ -832,12 +853,21 @@ class RemoteShard:
     # ------------------------------------------------------------- wiring --
     def connect(self) -> Dict:
         hello = self.client.connect()
+        self.trace_capable = bool(hello.get("trace"))
         self._drop_fallback()
         # a fresh successful handshake is proof of life: close the
         # breaker immediately so a restarted worker serves without
         # waiting out a reset timeout
         self._breaker_ok()
         return hello
+
+    def _adopt_spans(self, reply: Dict) -> None:
+        """Splice worker-side spans shipped in ``reply`` into the
+        coordinator's tracer (a reply only carries ``spans`` when the
+        request carried trace context)."""
+        spans = reply.pop("spans", None) if isinstance(reply, dict) else None
+        if spans and self.telemetry is not None:
+            self.telemetry.tracer.adopt(spans)
 
     def _try_reconnect(self) -> bool:
         """One reconnect attempt — covers a worker that was restarted
@@ -871,28 +901,47 @@ class RemoteShard:
         failures (socket trouble, checksum-rejected frames) retry with
         capped backoff under the op-timeout deadline budget;
         exhaustion raises :class:`DeadlineExceeded`.  Mutations must go
-        through :meth:`mutate` so retries carry idempotency keys."""
-        if self.retry is None:
-            return self._rpc_once(op, kw)
-        first = True
+        through :meth:`mutate` so retries carry idempotency keys.
+        When a traced span is active on this thread, the round trip
+        (all attempts) is recorded as one ``rpc.<op>`` child span —
+        retried attempts stay inside it, so a trace survives retries
+        with its parent/child linkage intact."""
+        span = NULL_SPAN
+        if self.telemetry is not None:
+            parent = self.telemetry.tracer.current()
+            if parent.recording:
+                span = parent.child(f"rpc.{op}",
+                                    attrs={"shard": self.index})
+                if self.trace_capable:
+                    kw = dict(kw)
+                    kw["trace"] = span.ctx()
+        with span:
+            if self.retry is None:
+                return self._rpc_once(op, kw)
+            attempts = 0
 
-        def attempt() -> Dict:
-            nonlocal first
-            if not first:
+            def attempt() -> Dict:
+                nonlocal attempts
+                if attempts:
+                    with self._lock:
+                        self.retries += 1
+                attempts += 1
+                return self._rpc_once(op, kw)
+
+            try:
+                reply = self.retry.run(
+                    attempt,
+                    retry_on=(WorkerUnavailable, FrameChecksumError),
+                    deadline_s=self._op_timeout_s)
+            except faults.RetryBudgetExceeded as exc:
                 with self._lock:
-                    self.retries += 1
-            first = False
-            return self._rpc_once(op, kw)
-
-        try:
-            return self.retry.run(
-                attempt, retry_on=(WorkerUnavailable, FrameChecksumError),
-                deadline_s=self._op_timeout_s)
-        except faults.RetryBudgetExceeded as exc:
-            with self._lock:
-                self.deadline_exceeded += 1
-            raise DeadlineExceeded(
-                f"shard {self.index} op {op!r}: {exc}") from exc
+                    self.deadline_exceeded += 1
+                span.set(attempts=attempts, deadline_exceeded=True)
+                raise DeadlineExceeded(
+                    f"shard {self.index} op {op!r}: {exc}") from exc
+            if attempts > 1:
+                span.set(attempts=attempts)
+            return reply
 
     def mutate(self, op: str, **kw) -> Dict:
         """An :meth:`rpc` that stamps a fresh idempotency key — every
@@ -917,6 +966,7 @@ class RemoteShard:
             reply = c.recv()
             broken = False
             self._breaker_ok()
+            self._adopt_spans(reply)
             return reply
         except (QueryError, WorkerError):
             # error *reply*: the frame was fully consumed, the
@@ -982,6 +1032,7 @@ class RemoteShard:
             raise
         sh.release(c)
         sh._breaker_ok()
+        sh._adopt_spans(reply)
         session.winner = sh
         return reply
 
@@ -1241,6 +1292,7 @@ class ReplicaSet:
         self.index = int(index)
         self.members = list(members)
         self.primary = self.members[0]
+        self.telemetry = getattr(self.primary, "telemetry", None)
         self.hedge_enabled = bool(hedge)
         self.hedge_delay_s = hedge_delay_s  # fixed override; None=adaptive
         self.degraded_ok = bool(degraded_ok)
@@ -1278,6 +1330,12 @@ class ReplicaSet:
     @property
     def process(self) -> Optional[LocalWorkerProcess]:
         return self.primary.process
+
+    @property
+    def trace_capable(self) -> bool:
+        """Trace context is only attached when *every* member
+        negotiated it — a hedged request may land on any of them."""
+        return all(m.trace_capable for m in self.members)
 
     def connect(self) -> Dict:
         """Connect the primary (required); replicas best-effort."""
@@ -1426,6 +1484,11 @@ class ReplicaSet:
                     m._breaker_fail()
                 continue
             session.attempts.append((m, c))
+            if session.span is not None and session.span.recording:
+                att = session.span.child(
+                    "hedge.attempt" if hedge else "failover.attempt")
+                att.set(member=self.members.index(m))
+                session.attempt_spans[id(m)] = att
             with self._lock:
                 if hedge:
                     session.hedged = True
@@ -1479,6 +1542,15 @@ class ReplicaSet:
                 drained = False
             m.release(c, broken=not drained)
             m._breaker_abort()
+            # a loser's span is marked cancelled whether its reply was
+            # drained or dropped — only the winner's worker spans are
+            # adopted into the trace
+            if id(m) not in session.attempt_spans \
+                    and session.span is not None \
+                    and session.span.recording:
+                session.attempt_spans[id(m)] = session.span.child(
+                    "attempt", attrs={"member": self.members.index(m)})
+            session.finish_attempt(m, "cancelled", drained=drained)
             if not drained:
                 with self._lock:
                     self.hedge_cancelled += 1
@@ -1527,11 +1599,13 @@ class ReplicaSet:
                 m.release(c, broken=True)
                 m._breaker_fail()
                 session.attempts.remove((m, c))
+                session.finish_attempt(m, "error", checksum_error=True)
                 continue
             except (WorkerUnavailable, RemoteProtocolError):
                 m.release(c, broken=True)
                 m._breaker_fail()
                 session.attempts.remove((m, c))
+                session.finish_attempt(m, "error")
                 continue
             except (QueryError, WorkerError):
                 # a definitive error reply: the query itself is bad on
@@ -1539,6 +1613,7 @@ class ReplicaSet:
                 m.release(c)
                 m._breaker_ok()
                 session.attempts.remove((m, c))
+                session.finish_attempt(m, "error")
                 self._cancel_losers(session)
                 raise
             if (m is not self.primary and "version" in reply
@@ -1549,8 +1624,11 @@ class ReplicaSet:
                 m.release(c)
                 m._breaker_ok()  # healthy reply, just behind on version
                 session.attempts.remove((m, c))
+                session.finish_attempt(m, "cancelled", stale=True)
                 continue
             session.attempts.remove((m, c))
+            m._adopt_spans(reply)
+            session.finish_attempt(m)
             session.winner = m
             elapsed = time.monotonic() - session.started
             self._note_latency(m, elapsed)
@@ -1571,6 +1649,7 @@ class ReplicaSet:
         for m, c in session.attempts:
             m.release(c, broken=True)
             m._breaker_abort()
+            session.finish_attempt(m, "cancelled")
         session.attempts = []
 
     # ---------------------------------------------------- failover reads --
@@ -1868,7 +1947,8 @@ class RemoteShardedAggregator(ShardedAggregator):
                  frame_checksums: bool = True,
                  retry: Any = "default",
                  breaker_threshold: int = 5,
-                 breaker_reset_s: float = 1.0) -> None:
+                 breaker_reset_s: float = 1.0,
+                 telemetry: Optional[Telemetry] = None) -> None:
         if directory is None:
             raise ValueError("RemoteShardedAggregator requires a directory "
                              "(workers serve durable shard dirs)")
@@ -1916,7 +1996,10 @@ class RemoteShardedAggregator(ShardedAggregator):
                          dedup_horizon_s=dedup_horizon_s,
                          directory=directory, wal_fsync=wal_fsync,
                          parallel=False,
-                         partial_cache_entries=partial_cache_entries)
+                         partial_cache_entries=partial_cache_entries,
+                         telemetry=telemetry)
+        self.telemetry.registry.register_collector(
+            "remote", self._remote_telemetry_samples)
         if self._spawn:
             self._record_topology()
 
@@ -1969,6 +2052,7 @@ class RemoteShardedAggregator(ShardedAggregator):
                                     op_timeout_s=self._op_timeout_s,
                                     store_kwargs=store_kwargs,
                                     degraded_ok=self.degraded_ok,
+                                    telemetry=self.telemetry,
                                     **self._robustness_kwargs())
                 shards.append(shard)
                 shard.connect()
@@ -2004,6 +2088,7 @@ class RemoteShardedAggregator(ShardedAggregator):
                             op_timeout_s=self._op_timeout_s,
                             store_kwargs=store_kwargs,
                             degraded_ok=False,
+                            telemetry=self.telemetry,
                             **self._robustness_kwargs()))
                 except Exception:
                     for m in members:
@@ -2172,6 +2257,29 @@ class RemoteShardedAggregator(ShardedAggregator):
         out["crc_impl"] = faults.CRC_IMPL
         return out
 
+    def _remote_telemetry_samples(self) -> Dict[str, float]:
+        """Registry collector (docs/observability.md): the same
+        :meth:`robustness_stats` / :meth:`replication_stats` rollups
+        that back :meth:`explain`, under dotted metric names — one
+        source, two views."""
+        with self._lock:
+            out: Dict[str, float] = {
+                "remote.queries": float(self.remote_queries),
+                "remote.degraded_queries": float(self.degraded_queries),
+            }
+        rob = self.robustness_stats()
+        for k in ("retries", "checksum_errors", "deadline_exceeded"):
+            out[f"remote.{k}"] = float(rob.get(k, 0))
+        out.update(faults.breaker_telemetry_samples(
+            m.breaker.snapshot() for m in self._all_members()
+            if m.breaker is not None))
+        rep = self.replication_stats()
+        if rep is not None:
+            for k, v in rep.items():
+                if isinstance(v, (int, float)):
+                    out[f"replication.{k}"] = float(v)
+        return out
+
     def drop_scatter_memos(self) -> None:
         """Forget every coordinator-side decoded partial map (so the
         next scatter is unconditionally recomputed — benchmarks use
@@ -2222,6 +2330,8 @@ class RemoteShardedAggregator(ShardedAggregator):
         for k, s in enumerate(sessions):
             if s is not None:
                 self.shards[k].op_abort(s)
+                if s.span is not None:
+                    s.span.finish("cancelled")
                 sessions[k] = None
 
     def query_with_stats(self, q: str, engine: Optional[str] = None,
@@ -2236,32 +2346,59 @@ class RemoteShardedAggregator(ShardedAggregator):
         executor locally (the parity oracle), as in-process.
         ``tolerance`` rides inside the serialized plan, so each worker
         makes the same rollup-tier eligibility decision the coordinator
-        would make in-process (docs/storage.md).  ``last_query_stats``/
-        ``last_io_trace`` stay best-effort aliases."""
+        would make in-process (docs/storage.md).
+
+        ``last_query_stats``/``last_io_trace`` stay best-effort
+        aliases — **thread-unsafe debugging aids**: a concurrent query
+        overwrites them, so read the ``(rows, stats)`` return value, or
+        the query's root span in the tracer ring
+        (``telemetry.tracer.last_trace()``), which carries the same
+        stats and the io trace as attributes."""
         self._check_open()
         if engine == "rows":
             return super().query_with_stats(q, engine="rows")
-        stages = splunklite._split_pipeline(q)
-        plan = splunklite.compile_scatter_plan(stages, tolerance=tolerance)
+        tracer = self.telemetry.tracer
+        root = tracer.start_span("query", parent=tracer.current(),
+                                 attrs={"q": q, "remote": True})
+        with root:
+            rows, stats, io_trace = self._query_remote_traced(
+                root, q, tolerance)
+            root.set(io_trace=[list(ev) for ev in io_trace],
+                     **{k: v for k, v in stats.items()
+                        if isinstance(v, (int, float, str, bool))})
+        return rows, stats
+
+    def _query_remote_traced(self, root, q: str,
+                             tolerance: Optional[float]
+                             ) -> Tuple[List[Dict], Dict,
+                                        List[Tuple[str, int]]]:
+        with root.child("plan.compile"):
+            stages = splunklite._split_pipeline(q)
+            plan = splunklite.compile_scatter_plan(stages,
+                                                   tolerance=tolerance)
         trace: List[Tuple[str, int]] = []
         if plan is not None:
-            rows, stats = self._scatter_remote(plan, trace)
+            rows, stats = self._scatter_remote(plan, trace, parent=root)
             if rows is not None:
                 self.last_io_trace = trace
                 self.last_query_stats = stats
-                return rows, stats
+                return rows, stats, trace
         with self._lock:
             self.fallback_queries += 1
         # the gather gets its own trace: its overlap invariant must not
         # be judged against the aborted scatter's events
         gather_trace: List[Tuple[str, int]] = []
-        rows, rest, stats = self._gather_remote(stages, gather_trace)
+        rows, rest, stats = self._gather_remote(stages, gather_trace,
+                                                parent=root)
         self.last_io_trace = trace + gather_trace
         self.last_query_stats = stats
-        return splunklite.run_stages(rows, rest), stats
+        with root.child("finalize"):
+            out = splunklite.run_stages(rows, rest)
+        return out, stats, trace + gather_trace
 
     def _scatter_remote(self, plan: ScatterPlan,
-                        trace: List[Tuple[str, int]]
+                        trace: List[Tuple[str, int]],
+                        parent=NULL_SPAN
                         ) -> Tuple[Optional[List[Dict]], Optional[Dict]]:
         """Two-level gather: issue the serialized plan to every live
         worker first, then merge per-worker partial maps **in shard
@@ -2285,16 +2422,26 @@ class RemoteShardedAggregator(ShardedAggregator):
         state = plan.state()
         sessions: List[Optional[OpSession]] = [None] * self.num_shards
         hits: List[Optional[tuple]] = [None] * self.num_shards
+        scatter = parent.child("scatter",
+                               attrs={"shards": self.num_shards})
         for i, sh in enumerate(self.shards):
             hit = sh.scatter_memo_get(plan.fingerprint)
             hits[i] = hit
+            sspan = scatter.child("shard.scatter", attrs={"shard": i})
             try:
                 etag = ([plan.fingerprint, list(hit[0])]
                         if hit is not None else None)
-                sessions[i] = sh.op_begin("scatter", plan=state, etag=etag)
+                kw: Dict[str, Any] = {"plan": state, "etag": etag}
+                if sspan.recording and getattr(sh, "trace_capable",
+                                               False):
+                    kw["trace"] = sspan.ctx()
+                sessions[i] = sh.op_begin("scatter", **kw)
+                sessions[i].span = sspan
                 trace.append(("send", i))
-            except WorkerUnavailable:
-                pass
+            except WorkerUnavailable as exc:
+                sspan.set(error=repr(exc),
+                          circuit_open=isinstance(exc, CircuitOpen))
+                sspan.finish("error")
         stats = {"mode": "scatter_gather", "remote": True,
                  "shards": self.num_shards, "fingerprint": plan.fingerprint,
                  "segments_cached": 0, "segments_computed": 0,
@@ -2313,18 +2460,27 @@ class RemoteShardedAggregator(ShardedAggregator):
                 pmap = None
                 reply = None
                 s = sessions[i]
+                sspan = (s.span if s is not None
+                         and s.span is not None else NULL_SPAN)
                 if s is not None:
                     try:
                         reply = sh.op_finish(s)
                         trace.append(("recv", i))
                         stats["hedged_shards"] += int(s.hedged)
                         stats["failover_shards"] += int(s.failed_over)
+                        if s.hedged:
+                            sspan.set(hedged=True)
+                        if s.failed_over:
+                            sspan.set(failed_over=True)
                         sessions[i] = None
-                    except WorkerUnavailable:
+                    except WorkerUnavailable as exc:
                         sessions[i] = None
+                        sspan.set(error=repr(exc))
+                        sspan.finish("error")
                 if reply is not None:
                     if reply.get("fallback"):
                         fell_back = True
+                        sspan.set(fallback=True)
                     elif reply.get("not_modified"):
                         hit = hits[i]
                         if hit is None:
@@ -2339,6 +2495,7 @@ class RemoteShardedAggregator(ShardedAggregator):
                         stats["rollup_replaced"] += summary.get(
                             "rollup_replaced", 0)
                         stats["shards_unchanged"] += 1
+                        sspan.set(not_modified=True)
                     else:
                         wstats = reply.get("stats", {})
                         for k in counter_keys:
@@ -2359,6 +2516,7 @@ class RemoteShardedAggregator(ShardedAggregator):
                                  int(wstats.get("rollup_segments", 0)),
                                  "rollup_replaced":
                                  int(wstats.get("rollup_replaced", 0))})
+                    sspan.finish()
                 else:
                     if not self.degraded_ok:
                         raise WorkerUnavailable(
@@ -2366,22 +2524,27 @@ class RemoteShardedAggregator(ShardedAggregator):
                             "execution is disabled")
                     trace.append(("local", i))
                     stats["degraded_shards"] += 1
-                    store = sh._degraded()
-                    local_stats: Dict[str, int] = {}
-                    try:
-                        pmap = splunklite.scatter_partials(
-                            store, plan, cache=store.partial_cache,
-                            stats=local_stats)
-                    except _Fallback:
-                        fell_back = True
-                        pmap = None
-                    for k in counter_keys:
-                        stats[k] += int(local_stats.get(k, 0))
+                    with scatter.child("shard.degraded",
+                                       attrs={"shard": i}):
+                        store = sh._degraded()
+                        local_stats: Dict[str, int] = {}
+                        try:
+                            pmap = splunklite.scatter_partials(
+                                store, plan, cache=store.partial_cache,
+                                stats=local_stats)
+                        except _Fallback:
+                            fell_back = True
+                            pmap = None
+                        for k in counter_keys:
+                            stats[k] += int(local_stats.get(k, 0))
                 if pmap is not None and not fell_back:
-                    merged = (splunklite.merge_partial_maps(
-                        [merged, pmap], plan.aggs) if merged else pmap)
+                    with scatter.child("merge", attrs={"shard": i}):
+                        merged = (splunklite.merge_partial_maps(
+                            [merged, pmap], plan.aggs)
+                            if merged else pmap)
         except BaseException:
             self._release_unread(sessions)
+            scatter.finish("error")
             raise
         stats["overlap"] = _trace_overlaps(trace)
         with self._lock:
@@ -2391,24 +2554,42 @@ class RemoteShardedAggregator(ShardedAggregator):
                 self.scatter_queries += 1
                 self.remote_queries += 1
         if fell_back:
+            # the plan was defeated mid-flight; the caller re-plans as
+            # an exact gather, so this phase ends cancelled, not failed
+            scatter.set(fallback=True)
+            scatter.finish("cancelled")
             return None, None
-        rows = splunklite.finalize_partial_rows(merged, plan)
-        return splunklite.run_stages(rows, plan.tail), stats
+        scatter.finish()
+        with parent.child("finalize"):
+            rows = splunklite.finalize_partial_rows(merged, plan)
+            out = splunklite.run_stages(rows, plan.tail)
+        return out, stats
 
     def _gather_remote(self, stages: List[List[str]],
-                       trace: List[Tuple[str, int]]):
+                       trace: List[Tuple[str, int]],
+                       parent=NULL_SPAN):
         """Exact gather across workers: every worker filters + projects
         its rows (requests issued before any reply is read), the
         coordinator restores canonical (ts, shard, local) order.
         Returns ``(rows, rest_stages, stats)``."""
         wire_stages = [[str(t) for t in toks] for toks in stages]
         sessions: List[Optional[OpSession]] = [None] * self.num_shards
+        gather = parent.child("gather",
+                              attrs={"shards": self.num_shards})
         for i, sh in enumerate(self.shards):
+            sspan = gather.child("shard.gather", attrs={"shard": i})
             try:
-                sessions[i] = sh.op_begin("gather", stages=wire_stages)
+                kw: Dict[str, Any] = {"stages": wire_stages}
+                if sspan.recording and getattr(sh, "trace_capable",
+                                               False):
+                    kw["trace"] = sspan.ctx()
+                sessions[i] = sh.op_begin("gather", **kw)
+                sessions[i].span = sspan
                 trace.append(("send", i))
-            except WorkerUnavailable:
-                pass
+            except WorkerUnavailable as exc:
+                sspan.set(error=repr(exc),
+                          circuit_open=isinstance(exc, CircuitOpen))
+                sspan.finish("error")
         _terms, rest = splunklite._leading_terms(stages)
         ts_parts: List[np.ndarray] = []
         row_parts: List[List[Dict]] = []
@@ -2417,17 +2598,27 @@ class RemoteShardedAggregator(ShardedAggregator):
             for i, sh in enumerate(self.shards):
                 ts = rows = None
                 s = sessions[i]
+                sspan = (s.span if s is not None
+                         and s.span is not None else NULL_SPAN)
                 if s is not None:
                     try:
                         reply = sh.op_finish(s)
                         trace.append(("recv", i))
                         hedged += int(s.hedged)
                         failed_over += int(s.failed_over)
+                        if s.hedged:
+                            sspan.set(hedged=True)
+                        if s.failed_over:
+                            sspan.set(failed_over=True)
                         sessions[i] = None
                         ts = decode_array(reply["ts"])
                         rows = decode_rows(reply["rows"])
-                    except WorkerUnavailable:
+                        sspan.set(rows=len(rows))
+                        sspan.finish()
+                    except WorkerUnavailable as exc:
                         sessions[i] = None
+                        sspan.set(error=repr(exc))
+                        sspan.finish("error")
                 if ts is None:
                     if not self.degraded_ok:
                         raise WorkerUnavailable(
@@ -2435,14 +2626,18 @@ class RemoteShardedAggregator(ShardedAggregator):
                             "execution is disabled")
                     trace.append(("local", i))
                     degraded += 1
-                    store = sh._degraded()
-                    ts, rows, _rest = splunklite.gather_filtered(store,
-                                                                 stages)
+                    with gather.child("shard.degraded",
+                                      attrs={"shard": i}):
+                        store = sh._degraded()
+                        ts, rows, _rest = splunklite.gather_filtered(
+                            store, stages)
                 ts_parts.append(np.asarray(ts, np.float64))
                 row_parts.append(rows)
         except BaseException:
             self._release_unread(sessions)
+            gather.finish("error")
             raise
+        gather.finish()
         with self._lock:
             self.remote_queries += 1
             if degraded:

@@ -47,6 +47,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from .splunklite import _split_pipeline, compile_scatter_plan, \
     query_with_stats as _direct_query_with_stats
+from .telemetry import Telemetry
 
 __all__ = ["QueryService", "QueryResult", "Ticket", "QuotaExceeded"]
 
@@ -89,10 +90,11 @@ class _Flight:
     """One scheduled execution; every coalesced ticket points here."""
 
     __slots__ = ("key", "q", "engine", "tolerance", "priority", "tickets",
-                 "done", "rows", "stats", "error")
+                 "done", "rows", "stats", "error", "span")
 
     def __init__(self, key: tuple, q: str, engine: Optional[str],
-                 tolerance: Optional[float], priority: str) -> None:
+                 tolerance: Optional[float], priority: str,
+                 span=None) -> None:
         self.key = key
         self.q = q
         self.engine = engine
@@ -103,6 +105,9 @@ class _Flight:
         self.rows: Optional[List[Row]] = None
         self.stats: Optional[Dict] = None
         self.error: Optional[BaseException] = None
+        # the submitting request's root span; the worker thread parents
+        # its execute span here and finishes it when the flight lands
+        self.span = span
 
 
 class Ticket:
@@ -154,7 +159,8 @@ class QueryService:
     def __init__(self, store, max_concurrency: int = 4,
                  queue_limit: int = 32,
                  tenant_quota: Optional[int] = 16,
-                 result_cache_size: int = 128) -> None:
+                 result_cache_size: int = 128,
+                 telemetry: Optional[Telemetry] = None) -> None:
         if max_concurrency < 1:
             raise ValueError("max_concurrency must be >= 1")
         if queue_limit < 1:
@@ -185,6 +191,12 @@ class QueryService:
             "submitted": 0, "executed": 0, "deduped": 0,
             "result_cache_hits": 0, "shed": 0, "quota_rejections": 0,
         }
+        # share the store's telemetry so service and executor spans
+        # land in one trace; plain stores get a private instance
+        self.telemetry = telemetry if telemetry is not None else (
+            getattr(store, "telemetry", None) or Telemetry(tracing=False))
+        self.telemetry.registry.register_collector(
+            "service", self._telemetry_samples)
 
     # ------------------------------------------------------------ admission --
     def _plan_key(self, q: str, engine: Optional[str],
@@ -222,7 +234,34 @@ class QueryService:
         if priority not in self._queues:
             raise ValueError(f"unknown priority {priority!r}")
         tenant = str(tenant)
-        key = self._plan_key(q, engine, tolerance)
+        root = self.telemetry.tracer.start_span(
+            "query.request", attrs={"tenant": tenant,
+                                    "priority": priority, "q": q})
+        handed_off = failed = False
+        try:
+            with root.child("plan.compile"):
+                key = self._plan_key(q, engine, tolerance)
+            adm = root.child("admission")
+            try:
+                ticket, handed_off = self._admit(
+                    q, tenant, engine, tolerance, priority, shed_ok,
+                    key, root, adm)
+            finally:
+                adm.finish()
+            return ticket
+        except BaseException:
+            failed = True
+            raise
+        finally:
+            # executed submissions hand the root span to the flight —
+            # the worker finishes it when the query lands, so the span
+            # covers the full request latency (queue wait included)
+            if not handed_off:
+                root.finish("error" if failed else None)
+
+    def _admit(self, q: str, tenant: str, engine: Optional[str],
+               tolerance: Optional[float], priority: str, shed_ok: bool,
+               key: tuple, root, adm) -> Tuple[Ticket, bool]:
         with self._cond:
             while True:
                 if self._closed:
@@ -232,6 +271,7 @@ class QueryService:
                         and self._outstanding.get(tenant, 0)
                         >= self.tenant_quota):
                     self.counters["quota_rejections"] += 1
+                    adm.set(outcome="quota_rejected")
                     raise QuotaExceeded(
                         f"tenant {tenant!r} has "
                         f"{self._outstanding[tenant]} outstanding queries "
@@ -242,30 +282,40 @@ class QueryService:
                     if hit is not None:
                         self._result_cache.move_to_end((key, version))
                         self.counters["result_cache_hits"] += 1
+                        adm.set(outcome="cached")
                         rows, stats = hit
-                        return Ticket(tenant, "cached", result=QueryResult(
-                            rows, stats, "cached"))
+                        return Ticket(tenant, "cached",
+                                      result=QueryResult(
+                                          rows, stats, "cached")), False
                 fl = self._inflight.get(key)
                 if fl is not None:
                     self.counters["deduped"] += 1
+                    adm.set(outcome="deduped")
+                    if fl.span is not None and fl.span.recording:
+                        adm.set(joined_trace=fl.span.trace_id)
                     t = Ticket(tenant, "deduped", flight=fl)
                     fl.tickets.append(t)
                     self._outstanding[tenant] = \
                         self._outstanding.get(tenant, 0) + 1
-                    return t
+                    return t, False
                 queued = sum(len(dq) for dq in self._queues.values())
                 if queued >= self.queue_limit:
                     if shed_ok:
                         self.counters["shed"] += 1
-                        return Ticket(tenant, "shed", result=QueryResult(
-                            None, {"shed": True}, "shed"))
+                        adm.set(outcome="shed")
+                        return Ticket(tenant, "shed",
+                                      result=QueryResult(
+                                          None, {"shed": True},
+                                          "shed")), False
                     # delay: wait for a worker to drain the backlog,
                     # then re-run admission from scratch (the flight we
                     # want may be in flight or cached by then)
                     self.counters["submitted"] -= 1
                     self._cond.wait()
                     continue
-                fl = _Flight(key, q, engine, tolerance, priority)
+                adm.set(outcome="executed")
+                fl = _Flight(key, q, engine, tolerance, priority,
+                             span=root)
                 t = Ticket(tenant, "executed", flight=fl)
                 fl.tickets.append(t)
                 self._outstanding[tenant] = \
@@ -280,7 +330,7 @@ class QueryService:
                     self._threads.append(th)
                     th.start()
                 self._cond.notify()
-                return t
+                return t, True
 
     # ---------------------------------------------------------- convenience --
     def query_with_stats(self, q: str, tenant: str = "default",
@@ -307,8 +357,10 @@ class QueryService:
             priority=priority, timeout=timeout)
         return rows
 
-    def stats(self) -> Dict[str, Any]:
-        """Snapshot of counters plus live queue/pool state."""
+    def _local_snapshot(self) -> Dict[str, Any]:
+        """Every service-local stat, read in ONE critical section so
+        the numbers are mutually consistent (a concurrent submit can
+        never show e.g. ``submitted`` ahead of the queue it joined)."""
         with self._cond:
             out: Dict[str, Any] = dict(self.counters)
             out["inflight"] = len(self._inflight)
@@ -317,6 +369,18 @@ class QueryService:
             out["result_cache_entries"] = len(self._result_cache)
             out["outstanding"] = {t: n for t, n in
                                   self._outstanding.items() if n}
+            return out
+
+    def stats(self) -> Dict[str, Any]:
+        """Consistent snapshot of counters plus live queue/pool state.
+
+        Service-local fields come from a single locked snapshot
+        (:meth:`_local_snapshot` — also the telemetry registry's
+        ``service`` collector, so the two views share one source).
+        Store-side ``replication``/``robustness`` blocks are collected
+        afterwards, outside the service lock: they take the store's own
+        locks and must not nest inside ours."""
+        out = self._local_snapshot()
         rep = getattr(self.store, "replication_stats", None)
         if callable(rep):
             r = rep()
@@ -327,6 +391,16 @@ class QueryService:
             r = rob()
             if r:
                 out["robustness"] = r
+        return out
+
+    def _telemetry_samples(self) -> Dict[str, float]:
+        """Registry collector: the numeric slice of
+        :meth:`_local_snapshot` under ``service.*`` names."""
+        snap = self._local_snapshot()
+        out = {"service." + k: float(v) for k, v in snap.items()
+               if isinstance(v, (int, float))}
+        out["service.outstanding_tenants"] = float(
+            len(snap.get("outstanding") or ()))
         return out
 
     # ------------------------------------------------------------- scheduler --
@@ -362,10 +436,16 @@ class QueryService:
             rows: Optional[List[Row]] = None
             stats: Optional[Dict] = None
             v0 = self._store_version()
+            exe = (fl.span if fl.span is not None
+                   else self.telemetry.tracer.current()).child("execute")
             try:
-                rows, stats = _direct_query_with_stats(
-                    self.store, fl.q, engine=fl.engine,
-                    tolerance=fl.tolerance)
+                # activate the execute span so the store's own query
+                # span (see ShardedAggregator.query_with_stats) parents
+                # under it — one stitched trace per request
+                with exe, self.telemetry.tracer.activate(exe):
+                    rows, stats = _direct_query_with_stats(
+                        self.store, fl.q, engine=fl.engine,
+                        tolerance=fl.tolerance)
             except BaseException as exc:  # fan the error out to waiters
                 error = exc
             v1 = self._store_version()
@@ -397,6 +477,9 @@ class QueryService:
                 if fl.priority == BATCH:
                     self._active_batch -= 1
                 self._cond.notify_all()
+            if fl.span is not None:
+                fl.span.set(waiters=len(fl.tickets))
+                fl.span.finish("error" if error is not None else None)
 
     # --------------------------------------------------------------- closing --
     def close(self, timeout: float = 5.0) -> None:

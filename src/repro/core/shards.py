@@ -64,6 +64,7 @@ from repro.core.columnar import (SCAN_MEMO_MAX, ColumnarMetricStore,
                                  ColumnScan, _empty_scan, _lru_memo_get,
                                  _lru_memo_put)
 from repro.core.schema import MetricRecord, parse_line
+from repro.core.telemetry import Telemetry
 from repro.core import splunklite
 from repro.core.splunklite import _Fallback
 
@@ -100,7 +101,8 @@ class ShardedAggregator:
                  directory: Optional[os.PathLike] = None,
                  wal_fsync: bool = False,
                  parallel: Optional[bool] = None,
-                 partial_cache_entries: int = 512) -> None:
+                 partial_cache_entries: int = 512,
+                 telemetry: Optional[Telemetry] = None) -> None:
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
         # thread-parallel shard execution pays off once there are spare
@@ -146,6 +148,12 @@ class ShardedAggregator:
                                    for i in range(num_shards)],
                 })
         self._closed = False
+        # unified telemetry (docs/observability.md): tracing defaults
+        # off (NullSpan fast path); the registry is always live — its
+        # collectors are pull-based, so registration costs nothing on
+        # the query path
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry(tracing=False)
         self.shards: List[ColumnarMetricStore] = self._make_shards(
             num_shards, seal_threshold=seal_threshold,
             dedup_horizon_s=dedup_horizon_s, wal_fsync=wal_fsync,
@@ -155,15 +163,20 @@ class ShardedAggregator:
         self.fallback_queries = 0
         self.segments_adopted = 0
         self.records_reingested = 0
-        # best-effort alias for the last query_with_stats() result —
-        # racy under concurrent callers by construction; concurrent
-        # code must use the stats returned alongside the rows
+        # Thread-unsafe debugging aid: a best-effort alias for the last
+        # query_with_stats() result.  Concurrent callers WILL observe
+        # another query's stats here — use the stats returned alongside
+        # the rows, or the telemetry tracer's trace ring
+        # (``telemetry.tracer.last_trace()``), which records the same
+        # data under a lock (docs/observability.md).
         self.last_query_stats: Optional[Dict] = None
         self._cache: Dict[str, tuple] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
         # guards the version memos, counters, and lazy pool creation so
         # the aggregator is re-entrant under a concurrent QueryService
         self._lock = threading.RLock()
+        self.telemetry.registry.register_collector(
+            "shards", self._telemetry_samples)
 
     def _make_shards(self, num_shards: int,
                      **store_kwargs) -> List[ColumnarMetricStore]:
@@ -426,9 +439,27 @@ class ShardedAggregator:
         shared attributes, so any number of threads can query one
         aggregator without cross-contaminating their stats.  The
         ``last_query_stats`` attribute is still *written* (best-effort,
-        racy) for backwards compatibility."""
+        racy) for backwards compatibility — the same stats dict is
+        also attached to the query's root span, so the tracer ring is
+        the thread-safe way to read it after the fact."""
         self._check_open()
-        stages = splunklite._split_pipeline(q)
+        tracer = self.telemetry.tracer
+        root = tracer.start_span("query", parent=tracer.current(),
+                                 attrs={"q": q})
+        with root:
+            rows, stats = self._query_traced(root, q, engine, tolerance)
+            root.set(**{k: v for k, v in stats.items()
+                        if isinstance(v, (int, float, str, bool))})
+        return rows, stats
+
+    def _query_traced(self, root, q: str, engine: Optional[str],
+                      tolerance: Optional[float]
+                      ) -> Tuple[List[Dict], Dict]:
+        with root.child("plan.compile"):
+            stages = splunklite._split_pipeline(q)
+            plan = (None if engine == "rows" else
+                    splunklite.compile_scatter_plan(stages,
+                                                    tolerance=tolerance))
         if engine == "rows":
             stats = {"mode": "rows"}
             self.last_query_stats = stats
@@ -437,7 +468,6 @@ class ShardedAggregator:
                 return rows, stats
             return splunklite.run_stages(rows, stages,
                                          implicit_first=True), stats
-        plan = splunklite.compile_scatter_plan(stages, tolerance=tolerance)
         if plan is not None:
             # one stats dict per shard *per call*: concurrent queries
             # each carry their own dicts, so the scatter fills them
@@ -445,12 +475,17 @@ class ShardedAggregator:
             # the same shard at once
             stats_by_shard = {id(s): {} for s in self.shards}
             try:
-                maps = self._map_shards(
-                    lambda shard: splunklite.scatter_partials(
-                        shard, plan, cache=shard.partial_cache,
-                        stats=stats_by_shard[id(shard)]))
-                merged = splunklite.merge_partial_maps(maps, plan.aggs)
-                rows = splunklite.finalize_partial_rows(merged, plan)
+                with root.child("scatter",
+                                attrs={"shards": self.num_shards}):
+                    maps = self._map_shards(
+                        lambda shard: splunklite.scatter_partials(
+                            shard, plan, cache=shard.partial_cache,
+                            stats=stats_by_shard[id(shard)]))
+                with root.child("merge"):
+                    merged = splunklite.merge_partial_maps(maps, plan.aggs)
+                with root.child("finalize"):
+                    rows = splunklite.finalize_partial_rows(merged, plan)
+                    rows = splunklite.run_stages(rows, plan.tail)
                 with self._lock:
                     self.scatter_queries += 1
                 stats = {"mode": "scatter_gather",
@@ -468,15 +503,18 @@ class ShardedAggregator:
                     if st.get("cache_bypassed"):
                         stats["cache_bypassed"] = True
                 self.last_query_stats = stats
-                return splunklite.run_stages(rows, plan.tail), stats
+                return rows, stats
             except _Fallback:
                 pass  # shard data defeated a partial kernel: go exact
         with self._lock:
             self.fallback_queries += 1
         stats = {"mode": "exact_gather"}
         self.last_query_stats = stats
-        rows, rest = self._gather_rows(stages)
-        return splunklite.run_stages(rows, rest), stats
+        with root.child("gather", attrs={"shards": self.num_shards}):
+            rows, rest = self._gather_rows(stages)
+        with root.child("finalize"):
+            rows = splunklite.run_stages(rows, rest)
+        return rows, stats
 
     @property
     def partial_cache_hits(self) -> int:
@@ -485,6 +523,33 @@ class ShardedAggregator:
     @property
     def partial_cache_misses(self) -> int:
         return sum(s.partial_cache.misses for s in self.shards)
+
+    def _telemetry_samples(self) -> Dict[str, float]:
+        """Registry collector: fleet query counters, partial-cache
+        totals, and storage vitals.  ``explain()`` reads its cache
+        numbers through the same per-shard accessors, so the registry
+        and the legacy dicts cannot diverge."""
+        with self._lock:
+            out = {"shards.count": self.num_shards,
+                   "shards.scatter_queries": self.scatter_queries,
+                   "shards.fallback_queries": self.fallback_queries,
+                   "shards.segments_adopted": self.segments_adopted,
+                   "shards.records_reingested": self.records_reingested}
+        out["cache.partial.hits"] = self.partial_cache_hits
+        out["cache.partial.misses"] = self.partial_cache_misses
+        out["cache.partial.entries"] = sum(
+            len(s.partial_cache) for s in self.shards)
+        out["cache.partial.evictions"] = sum(
+            getattr(s.partial_cache, "evictions", 0) for s in self.shards)
+        try:
+            storage = self.storage_stats()
+        except Exception:
+            storage = {}
+        for k in ("segments", "rows", "bytes", "buffer_rows",
+                  "quarantined_segments"):
+            if k in storage:
+                out["storage." + k] = storage[k]
+        return out
 
     def explain(self, q: str) -> Dict[str, Any]:
         """Describe how a query would execute (for tests/operators),

@@ -44,6 +44,7 @@ from repro.core import faults, remote, splunklite
 from repro.core.columnar import ColumnarMetricStore
 from repro.core.schema import encode_line, parse_line
 from repro.core.splunklite import QueryError, ScatterPlan, _Fallback
+from repro.core.telemetry import Telemetry
 
 _LEN = struct.Struct("!I")
 
@@ -108,6 +109,25 @@ class ShardWorker:
         # consistent store state even while another connection ingests
         self._op_lock = threading.RLock()
         self._conn_threads: List[threading.Thread] = []
+        # worker-side telemetry (docs/observability.md): spans are
+        # created only for requests carrying a ``trace`` context from a
+        # trace-capable coordinator (negotiated at hello) and shipped
+        # back in the reply's ``spans`` list
+        import os as _os
+        self.telemetry = Telemetry(tracing=True,
+                                   node=f"worker:{_os.getpid()}")
+        self.telemetry.registry.register_collector(
+            "worker", self._telemetry_samples)
+
+    def _telemetry_samples(self) -> Dict[str, float]:
+        with self._stats_lock:
+            out = {"worker.requests_served": float(self.requests_served),
+                   "worker.inflight": float(self._inflight)}
+        out["worker.idem_replays"] = float(self._idem_replays)
+        pc = self.store.partial_cache
+        out["worker.cache.partial.hits"] = float(pc.hits)
+        out["worker.cache.partial.misses"] = float(pc.misses)
+        return out
 
     # ------------------------------------------------------------ serving --
     def _touch(self) -> None:
@@ -254,6 +274,12 @@ class ShardWorker:
         idem = msg.get("idem")
         if not (isinstance(idem, str) and op in self.MUTATION_OPS):
             idem = None
+        # optional distributed-trace context (docs/observability.md):
+        # popped before dispatch so op handlers never see it; only
+        # trace-capable coordinators send it (negotiated at hello)
+        tctx = msg.pop("trace", None)
+        if not isinstance(tctx, dict):
+            tctx = None
         try:
             with self._op_lock:
                 if idem is not None:
@@ -265,15 +291,34 @@ class ShardWorker:
                         self._idem_replays += 1
                         return dict(hit)
                 self._maybe_kill()
-                out = fn(msg) or {}
+                if tctx is not None:
+                    span = self.telemetry.tracer.start_span(
+                        f"worker.{op}", parent_ctx=tctx)
+                    with span:
+                        out = fn(msg) or {}
+                        st = out.get("stats")
+                        if isinstance(st, dict):
+                            span.set(**{k: v for k, v in st.items()
+                                        if isinstance(v, (int, float))})
+                        for flag in ("not_modified", "fallback"):
+                            if out.get(flag):
+                                span.set(**{flag: True})
+                else:
+                    span = None
+                    out = fn(msg) or {}
                 out["ok"] = True
                 if idem is not None:
                     # success-only: a failed mutation must stay
                     # retryable under a fresh attempt, not replay its
-                    # error forever
+                    # error forever (replies are cached without spans —
+                    # a replay belongs to the retry's trace, not the
+                    # original's)
                     self._idem_cache[idem] = dict(out)
                     while len(self._idem_cache) > self.IDEM_CACHE_MAX:
                         self._idem_cache.popitem(last=False)
+                if span is not None:
+                    out["spans"] = self.telemetry.tracer.take_trace(
+                        span.trace_id)
                 return out
         except QueryError as exc:
             return {"ok": False, "kind": "QueryError", "error": str(exc)}
@@ -305,7 +350,12 @@ class ShardWorker:
         return {"proto": remote.PROTOCOL_VERSION,
                 "codec": remote.CODEC_VERSION,
                 "nrecords": len(self.store), "pid": os.getpid(),
-                "dir": str(self.store.directory)}
+                "dir": str(self.store.directory),
+                # capability flag: this worker accepts a ``trace``
+                # context on requests and returns its spans in replies;
+                # old coordinators ignore the key, old workers simply
+                # never advertise it (docs/observability.md)
+                "trace": True}
 
     def _op_ping(self, msg: Dict) -> Dict:
         return {}
@@ -420,7 +470,8 @@ class ShardWorker:
                           "evictions": pc.evictions, "entries": len(pc)},
                 "storage": self.store.storage_stats(),
                 "idem_replays": self._idem_replays,
-                "quarantined_segments": self.store.quarantined_segments}
+                "quarantined_segments": self.store.quarantined_segments,
+                "telemetry": self.telemetry.registry.flat_snapshot()}
 
     def _op_compact(self, msg: Dict) -> Dict:
         """Run segment compaction on the worker's store.  The reply

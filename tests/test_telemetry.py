@@ -1,0 +1,565 @@
+"""Telemetry: distributed tracing, the unified metrics registry, and
+fleet self-ingestion (ISSUE 10 / docs/observability.md).
+
+Acceptance contract: one remote fleet query produces a **single
+stitched trace** spanning the coordinator and at least two worker
+processes, with parent/child span IDs verified across the wire; spans
+survive retries (one ``rpc.*`` span covers every attempt), hedged
+scatters mark loser attempts cancelled, circuit-open fast-fails and
+degraded fallbacks are visible as span statuses; and a splunklite
+query over the self-ingested ``_telemetry`` store returns the fleet's
+own scatter/cache/breaker metrics — including under fault injection.
+"""
+
+import json
+
+import pytest
+
+from conftest import random_records
+from test_incremental import rows_identical
+
+from repro.core import dashboards, detectors, telemetry as tm
+from repro.core.aggregator import Aggregator, MetricStore
+from repro.core.faults import FaultPlan
+from repro.core.remote import RemoteShardedAggregator
+from repro.core.schema import MetricRecord, encode_line
+from repro.core.service import QueryService
+from repro.core.shards import ShardedAggregator
+from repro.core.splunklite import query
+from repro.core.telemetry import (NULL_SPAN, Registry, SelfMonitor,
+                                  Telemetry, Tracer, format_trace,
+                                  sanitize_metric_key)
+
+SEAL = 53
+IDLE_S = 300.0  # workers self-exit if a wedged run leaks them
+RECORDS = random_records(seed=11, n=420)
+
+FLEET_Q = ("search kind=perf gflops>10 | stats avg(gflops) p90(gflops) "
+           "count by job | sort -avg_gflops | head 10")
+
+
+def make_traced_fleet(directory, n=2, records=RECORDS, **kw):
+    agg = RemoteShardedAggregator(num_shards=n, directory=directory,
+                                  seal_threshold=SEAL,
+                                  worker_idle_timeout_s=IDLE_S,
+                                  spawn_timeout_s=60.0,
+                                  telemetry=Telemetry(tracing=True), **kw)
+    for rec in records:
+        agg.insert(rec)
+    return agg
+
+
+def spans_by_name(spans, name):
+    return [s for s in spans if s["name"] == name]
+
+
+# ===========================================================================
+# Tracer unit behavior
+# ===========================================================================
+
+def test_span_parent_child_linkage_and_ring():
+    tr = Tracer(node="t")
+    root = tr.start_span("query")
+    child = root.child("scatter", attrs={"shards": 2})
+    grand = child.child("merge")
+    grand.finish()
+    child.finish()
+    root.finish()
+    tid, spans = tr.last_trace()
+    assert tid == root.trace_id
+    assert {s["name"] for s in spans} == {"query", "scatter", "merge"}
+    by_name = {s["name"]: s for s in spans}
+    assert by_name["query"]["parent_id"] is None
+    assert by_name["scatter"]["parent_id"] == by_name["query"]["span_id"]
+    assert by_name["merge"]["parent_id"] == by_name["scatter"]["span_id"]
+    assert by_name["scatter"]["attrs"]["shards"] == 2
+    assert all(s["trace_id"] == tid for s in spans)
+    assert tr.stats()["traces_finished"] == 1
+
+
+def test_disabled_tracer_is_inert():
+    tr = Tracer(enabled=False)
+    s = tr.start_span("query")
+    assert s is NULL_SPAN and not s.recording
+    assert s.child("x") is s and s.ctx() == {}
+    with s:
+        pass
+    assert tr.last_trace() == (None, [])
+    assert tr.stats()["spans_started"] == 0
+
+
+def test_exception_inside_span_marks_error():
+    tr = Tracer()
+    with pytest.raises(ValueError):
+        with tr.start_span("query"):
+            raise ValueError("boom")
+    _tid, spans = tr.last_trace()
+    assert spans[0]["status"] == "error"
+
+
+def test_attrs_set_after_finish_are_dropped():
+    """The ring copies span dicts at finish time: late attrs must not
+    appear (callers set attrs *inside* the ``with`` block)."""
+    tr = Tracer()
+    root = tr.start_span("query")
+    root.set(early=1)
+    root.finish()
+    root.set(late=2)
+    _tid, spans = tr.last_trace()
+    assert spans[0]["attrs"] == {"early": 1}
+
+
+def test_ring_evicts_oldest_trace():
+    tr = Tracer(ring_max=2)
+    tids = []
+    for i in range(3):
+        s = tr.start_span(f"q{i}")
+        s.finish()
+        tids.append(s.trace_id)
+    assert tr.finished_traces() == tids[1:]
+    assert tr.trace(tids[0]) == []
+
+
+def test_slow_query_log_keeps_exemplar():
+    tr = Tracer(slow_threshold_s=0.0)
+    root = tr.start_span("query", attrs={"q": "stats count"})
+    root.child("scatter").finish()
+    root.finish()
+    slow = tr.slow_queries()
+    assert len(slow) == 1
+    entry = slow[0]
+    assert entry["trace_id"] == root.trace_id
+    assert entry["name"] == "query"
+    assert {s["name"] for s in entry["exemplar"]} == {"query", "scatter"}
+
+
+def test_activate_installs_thread_local_current():
+    tr = Tracer()
+    assert tr.current() is NULL_SPAN
+    root = tr.start_span("outer")
+    with tr.activate(root):
+        assert tr.current() is root
+        inner = tr.start_span("inner", parent=tr.current())
+        assert inner.trace_id == root.trace_id
+        inner.finish()
+    assert tr.current() is NULL_SPAN
+    root.finish()
+
+
+def test_format_trace_tree_marks_statuses():
+    tr = Tracer(node="n0")
+    root = tr.start_span("query")
+    root.child("ok.child").finish()
+    root.child("bad.child").finish("error")
+    root.child("lost.child").finish("cancelled")
+    root.finish()
+    _tid, spans = tr.last_trace()
+    txt = format_trace(spans)
+    assert "n0/query" in txt
+    assert "!" in txt and "x" in txt           # error + cancelled marks
+    lines = txt.splitlines()
+    assert len(lines) == 4
+    # children render indented under the root
+    assert all("  n0/" in ln for ln in lines[1:])
+
+
+# ===========================================================================
+# Registry
+# ===========================================================================
+
+def test_registry_instruments_and_flat_snapshot():
+    reg = Registry()
+    reg.counter("remote.queries").inc()
+    reg.counter("remote.queries").inc(2)
+    reg.gauge("pool.size", shard=3).set(7)
+    h = reg.histogram("latency_s")
+    h.observe(0.5)
+    h.observe(1.5)
+    flat = reg.flat_snapshot()
+    assert flat["remote.queries"] == 3.0
+    assert flat["pool.size.shard_3"] == 7.0
+    assert flat["latency_s.count"] == 2.0
+    assert flat["latency_s.sum"] == 2.0
+    assert flat["latency_s.max"] == 1.5
+
+
+def test_registry_kind_conflict_raises():
+    reg = Registry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_collector_failure_is_isolated():
+    reg = Registry()
+    reg.register_collector("good", lambda: {"good.v": 1.0})
+
+    def sick():
+        raise RuntimeError("scrape me not")
+
+    reg.register_collector("sick", sick)
+    flat = reg.flat_snapshot()
+    assert flat["good.v"] == 1.0
+    assert flat["sick.collector_errors"] == 1.0
+    reg.unregister_collector("sick")
+    assert "sick.collector_errors" not in reg.flat_snapshot()
+
+
+def test_sanitize_metric_key_preserves_dots():
+    assert sanitize_metric_key("a.b.c") == "a.b.c"
+    assert sanitize_metric_key("a b/c") == "a_b_c"
+
+
+# ===========================================================================
+# SelfMonitor + aggregator wiring
+# ===========================================================================
+
+def test_self_monitor_emits_snapshot_and_slow_events():
+    tel = Telemetry(tracing=True, slow_threshold_s=0.0)
+    tel.registry.counter("remote.queries").inc(5)
+    tel.span("query").finish()          # lands in the slow log
+    sink = MetricStore()
+    mon = SelfMonitor(tel, sink, interval_s=0.0)
+    assert mon.pump() == 2              # one fleet row + one slow event
+    fleet = query(sink, "search kind=fleet")
+    assert len(fleet) == 1
+    assert fleet[0]["remote.queries"] == 5.0
+    assert fleet[0]["tracer.traces_finished"] == 1.0
+    events = query(sink, "search kind=event")
+    assert len(events) == 1 and events[0]["event"] == "slow_query"
+    # the slow entry is consumed: a second pump emits only the snapshot
+    assert mon.pump() == 1
+
+
+def test_aggregator_self_monitor_pumps_into_telemetry_store(tmp_path):
+    inbox = tmp_path / "inbox"
+    inbox.mkdir()
+    agg = Aggregator(inbox, self_monitor=0.0)
+    try:
+        with open(inbox / "s.log", "w") as f:
+            for i in range(10):
+                f.write(encode_line(MetricRecord(
+                    ts=100.0 + i, host="h0", job="j1", kind="perf",
+                    fields={"gflops": 1.0})) + "\n")
+        assert agg.pump() == 10
+        rows = query(agg.telemetry_store, "search kind=fleet")
+        assert rows, "self-monitor never pumped"
+        # the plain store's storage collector is attached automatically
+        assert rows[-1]["storage.buffer_rows"] == 10.0
+    finally:
+        agg.close()
+
+
+# ===========================================================================
+# Local sharded tracing
+# ===========================================================================
+
+def test_local_scatter_query_trace_shape(tmp_path):
+    tel = Telemetry(tracing=True)
+    agg = ShardedAggregator(num_shards=2, directory=tmp_path / "s",
+                            seal_threshold=SEAL, telemetry=tel)
+    try:
+        for rec in RECORDS:
+            agg.insert(rec)
+        rows, stats = agg.query_with_stats(FLEET_Q)
+        assert rows
+        tid, spans = tel.tracer.last_trace()
+        root = spans_by_name(spans, "query")[0]
+        assert root["attrs"]["q"] == FLEET_Q
+        assert root["attrs"]["shards"] == 2
+        kids = {s["name"] for s in spans
+                if s["parent_id"] == root["span_id"]}
+        assert {"plan.compile", "scatter", "merge", "finalize"} <= kids
+    finally:
+        agg.close()
+
+
+# ===========================================================================
+# Remote fleet: the stitched-trace acceptance criterion
+# ===========================================================================
+
+def test_remote_trace_stitches_coordinator_and_two_workers(tmp_path):
+    agg = make_traced_fleet(tmp_path / "fleet", n=2)
+    try:
+        rows = query(agg, FLEET_Q)
+        assert rows
+        tid, spans = agg.telemetry.tracer.last_trace()
+        assert tid is not None
+        assert all(s["trace_id"] == tid for s in spans)
+        worker_spans = [s for s in spans
+                        if s["node"].startswith("worker:")]
+        worker_nodes = {s["node"] for s in worker_spans}
+        assert len(worker_nodes) >= 2, (
+            f"expected spans from >=2 worker processes, got {worker_nodes}")
+        # every worker span's parent is a coordinator-side span
+        coord_ids = {s["span_id"] for s in spans
+                     if not s["node"].startswith("worker:")}
+        for w in worker_spans:
+            assert w["parent_id"] in coord_ids, w
+        root = spans_by_name(spans, "query")[0]
+        assert root["parent_id"] is None
+        shard_spans = spans_by_name(spans, "shard.scatter")
+        assert {s["attrs"]["shard"] for s in shard_spans} == {0, 1}
+        # the tree renders without orphans: one line per span
+        assert len(format_trace(spans).splitlines()) == len(spans)
+    finally:
+        agg.close()
+
+
+def test_trace_negotiation_skips_incapable_workers(tmp_path):
+    """A worker that did not advertise trace support at hello gets no
+    trace context and ships no spans — the coordinator trace is still
+    complete on its side (old-worker interop)."""
+    agg = make_traced_fleet(tmp_path / "fleet", n=1)
+    try:
+        for sh in agg.shards:
+            assert sh.trace_capable     # negotiated at hello
+            sh.trace_capable = False    # pretend it's an old worker
+        rows = query(agg, FLEET_Q)
+        assert rows
+        _tid, spans = agg.telemetry.tracer.last_trace()
+        assert not [s for s in spans if s["node"].startswith("worker:")]
+        assert spans_by_name(spans, "shard.scatter")
+    finally:
+        agg.close()
+
+
+def test_retried_rpc_stays_one_span_with_attempt_count(tmp_path):
+    plan = FaultPlan(0)
+    agg = make_traced_fleet(tmp_path / "fleet", n=1, records=RECORDS[:60],
+                            fault_plan=plan)
+    try:
+        tracer = agg.telemetry.tracer
+        root = tracer.start_span("test.root")
+        with tracer.activate(root):
+            plan.force("recv", "drop")  # lose exactly one reply
+            agg.shards[0].rpc("explain", fingerprint="")
+        root.finish()
+        assert agg.robustness_stats()["retries"] >= 1
+        spans = tracer.trace(root.trace_id)
+        rpc = spans_by_name(spans, "rpc.explain")
+        assert len(rpc) == 1, "retries must not fork extra rpc spans"
+        assert rpc[0]["attrs"]["attempts"] >= 2
+        assert rpc[0]["status"] == "ok"
+        assert rpc[0]["parent_id"] == root.span_id
+    finally:
+        agg.close()
+
+
+def test_circuit_open_and_degraded_fallback_spans(tmp_path):
+    agg = make_traced_fleet(tmp_path / "fleet", n=2,
+                            breaker_threshold=1, breaker_reset_s=60.0)
+    try:
+        want = query(agg, FLEET_Q)
+        agg.kill_worker(1)
+        # first query: the dead worker trips the breaker, shard 1 is
+        # served degraded (read-only local fallback)
+        rows_identical(query(agg, FLEET_Q), want, FLEET_Q)
+        # second query: the open breaker fast-fails the scatter
+        rows_identical(query(agg, FLEET_Q), want, FLEET_Q)
+        assert agg.last_query_stats["degraded_shards"] == 1
+        _tid, spans = agg.telemetry.tracer.last_trace()
+        failed = [s for s in spans_by_name(spans, "shard.scatter")
+                  if s["status"] == "error"]
+        assert failed and failed[0]["attrs"]["shard"] == 1
+        assert failed[0]["attrs"]["circuit_open"] is True
+        degraded = spans_by_name(spans, "shard.degraded")
+        assert degraded and degraded[0]["attrs"]["shard"] == 1
+        assert degraded[0]["status"] == "ok"
+    finally:
+        agg.close()
+
+
+def test_hedged_scatter_cancels_loser_attempt_spans(tmp_path):
+    agg = make_traced_fleet(tmp_path / "fleet", n=2, replicas=2,
+                            hedge_delay_s=0.02)
+    try:
+        agg.sync_replicas()
+        sh = agg.shards[0]
+        slow = sh._read_order()[0]      # whoever is preferred right now
+        slow.rpc("set_delay", s=0.5)
+        rows = query(agg, FLEET_Q)
+        assert rows
+        assert agg.last_query_stats["hedged_shards"] >= 1
+        _tid, spans = agg.telemetry.tracer.last_trace()
+        hedges = spans_by_name(spans, "hedge.attempt")
+        assert hedges, "hedge fired but produced no attempt span"
+        cancelled = [s for s in spans
+                     if s["name"] in ("hedge.attempt", "attempt")
+                     and s["status"] == "cancelled"]
+        assert cancelled, "the losing attempt must be marked cancelled"
+        # the winner's worker span was adopted into the same trace
+        assert [s for s in spans if s["node"].startswith("worker:")]
+    finally:
+        agg.close()
+
+
+# ===========================================================================
+# Self-ingestion: splunklite over the fleet's own vitals
+# ===========================================================================
+
+def test_fleet_vitals_queryable_including_under_faults(tmp_path):
+    plan = FaultPlan(0)
+    agg = make_traced_fleet(tmp_path / "fleet", n=2, records=RECORDS[:120],
+                            fault_plan=plan)
+    try:
+        plan.force("recv", "drop")      # one retry on the insert path
+        assert agg.insert(MetricRecord(99999.0, "n0", "vitals.1", "perf",
+                                       {"gflops": 11.0}))
+        rows = query(agg, FLEET_Q)
+        assert rows
+        sink = MetricStore()
+        mon = SelfMonitor(agg.telemetry, sink, interval_s=0.0)
+        assert mon.pump() >= 1
+        fleet = query(sink, "search kind=fleet")
+        assert len(fleet) == 1
+        row = fleet[0]
+        # scatter, cache, breaker, and robustness metrics all present
+        assert row["remote.queries"] >= 1.0
+        assert row["remote.retries"] >= 1.0
+        assert row["shards.scatter_queries"] >= 1.0
+        assert row["breaker.breakers"] == 2.0
+        assert row["breaker.open"] == 0.0
+        assert "cache.partial.hits" in row
+        assert row["tracer.traces_finished"] >= 1.0
+        # field names survive the splunklite grammar: filter on one
+        hot = query(sink, "search kind=fleet remote.queries>0")
+        assert len(hot) == 1
+    finally:
+        agg.close()
+
+
+# ===========================================================================
+# Dashboards + detectors over the _telemetry store
+# ===========================================================================
+
+def _snapshot_record(ts, fields):
+    return MetricRecord(ts=ts, host="fleet-coordinator", job="_fleet",
+                        kind="fleet", fields=fields)
+
+
+def test_view_fleet_health_uses_latest_snapshot():
+    sink = MetricStore()
+    sink.insert(_snapshot_record(1.0, {"remote.queries": 1.0,
+                                       "breaker.open": 0.0}))
+    sink.insert(_snapshot_record(2.0, {"remote.queries": 5.0,
+                                       "breaker.open": 1.0}))
+    rows = dashboards.view_fleet_health(sink)
+    got = {r["metric"]: r["value"] for r in rows}
+    assert got == {"remote.queries": 5.0, "breaker.open": 1.0}
+    table = dashboards.markdown_table(rows)
+    assert "remote.queries" in table
+
+
+def test_streaming_fleet_health_rerenders_only_on_change():
+    sink = MetricStore()
+    sink.insert(_snapshot_record(1.0, {"remote.queries": 1.0}))
+    view = dashboards.streaming_fleet_health(sink)
+    assert view.rendered() and view.renders == 1
+    view.rendered()
+    assert view.renders == 1            # unchanged vitals: no re-render
+    sink.insert(_snapshot_record(2.0, {"remote.queries": 2.0}))
+    assert "| remote.queries | 2 |" in view.rendered()
+    assert view.renders == 2
+
+
+def test_view_slow_queries_orders_worst_first():
+    sink = MetricStore()
+    for i, dur in enumerate((0.1, 0.9, 0.5)):
+        sink.insert(MetricRecord(
+            ts=float(i), host="c", job="_fleet", kind="event",
+            fields={"event": "slow_query", "trace_id": f"t{i}",
+                    "name": "query", "duration_s": dur}))
+    rows = dashboards.view_slow_queries(sink, limit=2)
+    assert [r["duration_s"] for r in rows] == [0.9, 0.5]
+    assert rows[0]["trace_id"] == "t1"
+
+
+def test_breaker_open_detector_fires_on_latest_snapshot():
+    sink = MetricStore()
+    sink.insert(_snapshot_record(1.0, {"breaker.open": 2.0,
+                                       "breaker.opens": 3.0}))
+    sink.insert(_snapshot_record(2.0, {"breaker.open": 0.0,
+                                       "breaker.opens": 3.0}))
+    # breaker closed again by the newest snapshot: no event
+    assert detectors.BreakerOpenDetector().scan(sink) == []
+    sink.insert(_snapshot_record(3.0, {"breaker.open": 1.0,
+                                       "breaker.opens": 4.0}))
+    evs = detectors.BreakerOpenDetector().scan(sink)
+    assert len(evs) == 1
+    assert evs[0].severity == "critical"
+    assert evs[0].fields == {"open": 1, "opens": 4}
+    # events write back as queryable records
+    detectors.DetectorBank.write_back(sink, evs)
+    assert query(sink, "search kind=event")
+
+
+def test_quarantine_growth_detector_needs_actual_growth():
+    sink = MetricStore()
+    sink.insert(_snapshot_record(1.0, {"storage.quarantined_segments": 2.0}))
+    sink.insert(_snapshot_record(2.0, {"storage.quarantined_segments": 2.0}))
+    assert detectors.QuarantineGrowthDetector().scan(sink) == []
+    sink.insert(_snapshot_record(3.0, {"storage.quarantined_segments": 4.0}))
+    evs = detectors.QuarantineGrowthDetector().scan(sink)
+    assert len(evs) == 1
+    assert evs[0].severity == "warning"
+    assert evs[0].fields["growth"] == 2
+
+
+def test_telemetry_detectors_stay_out_of_default_bank():
+    assert set(detectors.TELEMETRY_DETECTORS).isdisjoint(
+        detectors.DEFAULT_DETECTORS)
+    bank = detectors.DetectorBank()
+    assert not any(isinstance(d, detectors.BreakerOpenDetector)
+                   for d in bank.detectors)
+
+
+# ===========================================================================
+# QueryService: one consistent stats snapshot
+# ===========================================================================
+
+def test_query_service_stats_is_an_independent_snapshot(tmp_path):
+    agg = ShardedAggregator(num_shards=2, directory=tmp_path / "s",
+                            seal_threshold=SEAL,
+                            telemetry=Telemetry(tracing=True))
+    svc = QueryService(agg)
+    try:
+        for rec in RECORDS[:120]:
+            agg.insert(rec)
+        svc.submit(FLEET_Q).result()
+        a = svc.stats()
+        assert a["executed"] >= 1
+        a["executed"] = 10 ** 9                 # mutate the copy
+        assert svc.stats()["executed"] < 10 ** 9
+        # the service registers on the shared registry: its numbers show
+        # up in the same flat snapshot as the shard/storage collectors
+        flat = agg.telemetry.registry.flat_snapshot()
+        assert flat["service.executed"] >= 1.0
+        assert "shards.scatter_queries" in flat
+    finally:
+        svc.close()
+        agg.close()
+
+
+# ===========================================================================
+# Ops CLI
+# ===========================================================================
+
+def test_cli_demo_prints_trace_and_self_ingestion(capsys):
+    assert tm.main(["demo", "--shards", "1"]) == 0
+    out = capsys.readouterr().out
+    assert "coordinator/query" in out
+    assert '"kind": "fleet"' in out
+
+
+def test_cli_trace_renders_span_dump(tmp_path, capsys):
+    tr = Tracer(node="n9")
+    root = tr.start_span("query")
+    root.child("scatter").finish()
+    root.finish()
+    _tid, spans = tr.last_trace()
+    path = tmp_path / "trace.json"
+    path.write_text(json.dumps({"spans": spans}))
+    assert tm.main(["trace", str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "n9/query" in out and "n9/scatter" in out
